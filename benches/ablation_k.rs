@@ -1,0 +1,28 @@
+//! §3.3 ablation: FastH step time as a function of the block size k at
+//! fixed d — the time/parallelism trade-off whose optimum the paper puts
+//! at k = Θ(√d). Sweeps k and reports the argmin.
+//!
+//! `cargo bench --bench ablation_k` ; env: FASTH_BENCH_D, FASTH_BENCH_BUDGET.
+
+mod common;
+
+use fasth::bench_harness::figures::ablation_k;
+
+fn main() {
+    let d: usize = std::env::var("FASTH_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(768);
+    let cfg = common::budget(0.5);
+    let ks = [2, 4, 8, 12, 16, 24, 28, 32, 48, 64, 96, 128, 192, 256];
+    let report = ablation_k(d, &ks, cfg, 0xAB0C);
+    println!("{}", report.table());
+    let best = report
+        .rows
+        .iter()
+        .min_by(|a, b| a.cells[0].1.mean.partial_cmp(&b.cells[0].1.mean).unwrap())
+        .unwrap();
+    println!("best {}  (√d = {:.1})", best.label, (d as f64).sqrt());
+    let path = report.save_csv("ablation_k").expect("csv");
+    println!("saved {}", path.display());
+}

@@ -1,0 +1,32 @@
+//! §3.3 recurrent claim: r recurrent applications of one orthogonal
+//! matrix cost O(d/k + r·k) sequential matmuls under FastH (the WY blocks
+//! are built once and reused every step) vs O(r·d) sequential inner
+//! products for the sequential baseline.
+//!
+//! `cargo bench --bench ablation_rnn` ; env: FASTH_BENCH_D, FASTH_BENCH_BUDGET.
+
+mod common;
+
+use fasth::bench_harness::figures::{ablation_rnn, rnn_step_time};
+
+fn main() {
+    let d: usize = std::env::var("FASTH_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let cfg = common::budget(0.5);
+    let report = ablation_rnn(d, &[1, 2, 4, 8, 16, 32], cfg, 0xAB09);
+    println!("{}", report.table());
+    println!("-- speedup (sequential / fasth) --");
+    for row in &report.rows {
+        let f = row.cells.iter().find(|(n, _)| n == "fasth").unwrap().1.mean;
+        let s = row.cells.iter().find(|(n, _)| n == "sequential").unwrap().1.mean;
+        println!("{:<6} {:.2}x", row.label, s / f);
+    }
+    let path = report.save_csv("ablation_rnn").expect("csv");
+    println!("saved {}", path.display());
+
+    // End-to-end BPTT step as context (EXPERIMENTS.md §E2E).
+    let s = rnn_step_time(96, 40, cfg, 0xAB10);
+    println!("\nfull BPTT step (hidden 96, T = 40, batch 16): {}", s.display());
+}

@@ -1,0 +1,23 @@
+#![allow(dead_code)]
+//! Shared plumbing for the custom bench harness (criterion is not
+//! available offline; the paper's own protocol — mean ± σ over reps with
+//! a wall-clock budget — is implemented in `fasth::util::timing`).
+
+use fasth::bench_harness::figures::BudgetCfg;
+
+/// Sizes: `FASTH_BENCH_SIZES=64,128,...` env override, else a default.
+pub fn sizes(default: &[usize]) -> Vec<usize> {
+    match std::env::var("FASTH_BENCH_SIZES") {
+        Ok(s) => s.split(',').filter_map(|t| t.parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Per-cell budget: `FASTH_BENCH_BUDGET=secs` env override.
+pub fn budget(default_secs: f64) -> BudgetCfg {
+    let per_cell_secs = std::env::var("FASTH_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_secs);
+    BudgetCfg { per_cell_secs, max_reps: 100 }
+}

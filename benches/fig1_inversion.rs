@@ -1,0 +1,25 @@
+//! Figure 1: matrix-inversion step time in neural networks — FastH vs the
+//! sequential algorithm of Zhang et al. 2018. Regenerates the paper's
+//! headline plot (27× at large d on their GPU; the crossover shape is the
+//! reproduced claim here).
+//!
+//! `cargo bench --bench fig1_inversion` ; env: FASTH_BENCH_SIZES, FASTH_BENCH_BUDGET.
+
+mod common;
+
+use fasth::bench_harness::figures::fig1_inversion;
+
+fn main() {
+    let sizes = common::sizes(&[64, 128, 256, 384, 512, 768, 1024]);
+    let cfg = common::budget(0.6);
+    let report = fig1_inversion(&sizes, cfg, 0xF161);
+    println!("{}", report.table());
+    println!("-- speedup (sequential / fasth) --");
+    for row in &report.rows {
+        let f = row.cells.iter().find(|(n, _)| n == "fasth").unwrap().1.mean;
+        let s = row.cells.iter().find(|(n, _)| n == "sequential").unwrap().1.mean;
+        println!("d={:<6} {:.2}x", row.label, s / f);
+    }
+    let path = report.save_csv("fig1_inversion").expect("csv");
+    println!("saved {}", path.display());
+}

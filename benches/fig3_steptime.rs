@@ -1,0 +1,23 @@
+//! Figure 3a/3b: gradient-descent step time with one orthogonal matrix,
+//! all five algorithms (FastH, sequential [17], parallel [17], matrix
+//! exponential map, Cayley map).
+//!
+//! `cargo bench --bench fig3_steptime` ; env: FASTH_BENCH_SIZES, FASTH_BENCH_BUDGET.
+
+mod common;
+
+use fasth::bench_harness::figures::{fig3_steptime, relative_rows};
+
+fn main() {
+    let sizes = common::sizes(&[64, 128, 256, 384, 512, 768]);
+    let cfg = common::budget(0.6);
+    let report = fig3_steptime(&sizes, cfg, 0xF163);
+    println!("{}", report.table());
+    println!("-- Figure 3b: time relative to FastH (>1 ⇒ FastH faster) --");
+    for (label, rel) in relative_rows(&report) {
+        let cells: Vec<String> = rel.iter().map(|(n, v)| format!("{n} {v:.2}x")).collect();
+        println!("d={label:<6} {}", cells.join("   "));
+    }
+    let path = report.save_csv("fig3_steptime").expect("csv");
+    println!("saved {}", path.display());
+}

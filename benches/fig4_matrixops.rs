@@ -1,0 +1,27 @@
+//! Figure 4: the four Table-1 matrix operations (determinant, inverse,
+//! matrix exponential, Cayley map) — standard dense method (dashed lines
+//! in the paper) vs the SVD reparameterization under FastH / sequential /
+//! parallel (solid lines).
+//!
+//! `cargo bench --bench fig4_matrixops` ; env: FASTH_BENCH_SIZES, FASTH_BENCH_BUDGET.
+
+mod common;
+
+use fasth::bench_harness::figures::fig4_matrix_ops;
+use fasth::svd::MatrixOp;
+
+fn main() {
+    let sizes = common::sizes(&[64, 128, 256, 384, 512, 768]);
+    let cfg = common::budget(0.5);
+    for (op, report) in fig4_matrix_ops(&sizes, &MatrixOp::ALL, cfg, 0xF164) {
+        println!("{}", report.table());
+        println!("-- speedup of svd-fasth over standard --");
+        for row in &report.rows {
+            let std_t = row.cells.iter().find(|(n, _)| n == "standard").unwrap().1.mean;
+            let fast = row.cells.iter().find(|(n, _)| n == "svd-fasth").unwrap().1.mean;
+            println!("d={:<6} {:.2}x", row.label, std_t / fast);
+        }
+        let path = report.save_csv(&format!("fig4_{}", op.name())).expect("csv");
+        println!("saved {}\n", path.display());
+    }
+}

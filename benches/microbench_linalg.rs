@@ -1,0 +1,80 @@
+//! Substrate microbenchmarks: GEMM GFLOP/s (the engine under FastH's
+//! blocks), LU, expm, and the WY primitives. Used by the §Perf pass to
+//! find the practical roofline of this testbed.
+//!
+//! `cargo bench --bench microbench_linalg` ; env: FASTH_BENCH_BUDGET.
+
+mod common;
+
+use fasth::householder::{fasth::build_blocks, HouseholderVectors};
+use fasth::linalg::{expm, gemm, lu, Mat};
+use fasth::util::timing::{fmt_secs, Report};
+use fasth::util::Rng;
+
+fn main() {
+    let cfg = common::budget(0.4);
+    let mut rng = Rng::new(0x111CA0);
+    let mut report = Report::new("linalg microbenches");
+
+    for &n in &[128usize, 256, 512, 1024] {
+        let a = Mat::randn(n, n, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+        let s = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            gemm::matmul(&a, &b)
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / s.mean / 1e9;
+        println!("gemm {n:>5}x{n:<5} {:>14}  {:6.1} GFLOP/s", s.display(), gflops);
+        report.add_row(format!("gemm_{n}"), vec![("nn".into(), s)]);
+    }
+
+    for &(d, m) in &[(512usize, 32usize), (1024, 32), (2048, 32)] {
+        let w = Mat::randn(d, m, &mut rng);
+        let y = Mat::randn(d, m, &mut rng);
+        let x = Mat::randn(d, m, &mut rng);
+        let s = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            // One WY block application: T = YᵀX (m×m), X − 2WT.
+            let t = gemm::matmul_tn(&y, &x);
+            let mut out = x.clone();
+            let wt = gemm::matmul(&w, &t);
+            out.axpy(-2.0, &wt);
+            out
+        });
+        let flops = 4.0 * d as f64 * (m as f64) * m as f64;
+        println!(
+            "wy-block d={d:<5} m={m:<3} {:>14}  {:6.1} GFLOP/s",
+            s.display(),
+            flops / s.mean / 1e9
+        );
+        report.add_row(format!("wyblock_{d}"), vec![("apply".into(), s)]);
+    }
+
+    for &d in &[512usize, 1024] {
+        let hv = HouseholderVectors::random_full(d, &mut rng);
+        let s = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            build_blocks(&hv, 32)
+        });
+        println!("wy-build d={d:<5} k=32  {:>14}", s.display());
+        report.add_row(format!("wybuild_{d}"), vec![("build".into(), s)]);
+    }
+
+    for &n in &[128usize, 256, 512] {
+        let a = Mat::randn(n, n, &mut rng);
+        let s_lu = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            lu::inverse(&a)
+        });
+        println!("lu-inverse {n:>4}      {:>14}", s_lu.display());
+        report.add_row(format!("lu_{n}"), vec![("inverse".into(), s_lu)]);
+    }
+
+    {
+        let a = Mat::randn(256, 256, &mut rng).scale(0.5);
+        let s = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            expm::expm(&a)
+        });
+        println!("expm 256           {:>14}  ({} per Padé-13)", s.display(), fmt_secs(s.mean));
+        report.add_row("expm_256".to_string(), vec![("pade13".into(), s)]);
+    }
+
+    let path = report.save_csv("microbench_linalg").expect("csv");
+    println!("saved {}", path.display());
+}

@@ -1,0 +1,120 @@
+//! §Perf instrumentation: break one FastH gradient step into its phases
+//! (WY build, forward chain, backward step 1, backward step 2) and report
+//! where the time goes, plus effective GFLOP/s per phase.
+//!
+//! Run: `cargo run --release --example profile_fasth [d] [k]`
+
+use fasth::householder::fasth as fh;
+use fasth::householder::wy::WyBlock;
+use fasth::householder::HouseholderVectors;
+use fasth::linalg::Mat;
+use fasth::util::Rng;
+use std::time::Instant;
+
+fn time_it<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let d: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let k: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let m = 32;
+    let reps = 10;
+    let mut rng = Rng::new(0x9e0f);
+    let hv = HouseholderVectors::random_full(d, &mut rng);
+    let x = Mat::randn(d, m, &mut rng);
+    let g = Mat::randn(d, m, &mut rng);
+    println!("== FastH phase profile: d = {d}, k = {k}, m = {m} ({reps} reps) ==\n");
+
+    // Phase 1: WY construction (parallel over blocks).
+    let t_build = time_it(reps, || fh::build_blocks(&hv, k));
+    let build_flops = (d * d * k) as f64; // Σ_blocks d·k² · d/k
+    println!(
+        "wy-build      {:8.3} ms   ({:5.1} GFLOP/s)",
+        t_build * 1e3,
+        build_flops / t_build / 1e9
+    );
+
+    // Phase 2: forward block chain (sequential GEMMs).
+    let blocks = fh::build_blocks(&hv, k);
+    let t_fwd = time_it(reps, || {
+        let mut a = x.clone();
+        let mut t = Mat::zeros(k, m);
+        let mut scratch = Mat::zeros(0, 0);
+        for b in blocks.iter().rev() {
+            let mut tb = if b.width() == k { std::mem::replace(&mut t, Mat::zeros(0, 0)) } else { Mat::zeros(b.width(), m) };
+            b.apply_inplace(&mut a, &mut tb, &mut scratch);
+            if b.width() == k {
+                t = tb;
+            }
+        }
+        a
+    });
+    let chain_flops = 4.0 * (d * d * m) as f64; // 2 GEMMs × 2dm per block × d/k blocks... = 4d²m
+    println!(
+        "fwd chain     {:8.3} ms   ({:5.1} GFLOP/s)",
+        t_fwd * 1e3,
+        chain_flops / t_fwd / 1e9
+    );
+
+    // Phase 3: backward step 1 (transpose chain).
+    let t_bwd1 = time_it(reps, || {
+        let mut gg = g.clone();
+        let mut t = Mat::zeros(k, m);
+        let mut scratch = Mat::zeros(0, 0);
+        for b in blocks.iter() {
+            let mut tb = if b.width() == k { std::mem::replace(&mut t, Mat::zeros(0, 0)) } else { Mat::zeros(b.width(), m) };
+            b.apply_transpose_inplace(&mut gg, &mut tb, &mut scratch);
+            if b.width() == k {
+                t = tb;
+            }
+        }
+        gg
+    });
+    println!(
+        "bwd step 1    {:8.3} ms   ({:5.1} GFLOP/s)",
+        t_bwd1 * 1e3,
+        chain_flops / t_bwd1 / 1e9
+    );
+
+    // Phase 4: full forward + backward via the public API (includes the
+    // per-block Eq. 4/5 subproblems = backward step 2).
+    let t_full_fwd = time_it(reps, || fh::fasth_forward(&hv, &x, k));
+    let (_a, cache) = fh::fasth_forward(&hv, &x, k);
+    let t_bwd = time_it(reps, || fh::fasth_backward(&hv, &cache, &g));
+    let step2 = t_bwd - t_bwd1;
+    println!("fwd (w/cache) {:8.3} ms", t_full_fwd * 1e3);
+    println!("bwd total     {:8.3} ms   (step2 ≈ {:.3} ms)", t_bwd * 1e3, step2 * 1e3);
+
+    let total = t_full_fwd + t_bwd;
+    println!("\nfull step     {:8.3} ms", total * 1e3);
+
+    // Reference single big GEMM at the same total FLOP count.
+    let big = Mat::randn(d, d, &mut rng);
+    let t_gemm = time_it(reps, || fh::build_blocks(&hv, k).len().min(1) as f32)
+        .max(1e-12); // warm no-op
+    let _ = t_gemm;
+    let t_ref = time_it(3, || crate_matmul(&big, &x));
+    println!(
+        "reference U·X as one d×d GEMM: {:.3} ms ({:.1} GFLOP/s)",
+        t_ref * 1e3,
+        2.0 * (d * d * m) as f64 / t_ref / 1e9
+    );
+
+    // Single WY block apply microtiming.
+    let b0: &WyBlock = &blocks[0];
+    let t_block = time_it(100, || b0.apply(&x));
+    println!(
+        "one block apply: {:.1} µs ({:.1} GFLOP/s)",
+        t_block * 1e6,
+        4.0 * (d * k.min(d) * m) as f64 / t_block / 1e9
+    );
+}
+
+fn crate_matmul(a: &Mat, b: &Mat) -> Mat {
+    fasth::linalg::gemm::matmul(a, b)
+}

@@ -1,0 +1,107 @@
+//! Serving end-to-end: start the orthoserve coordinator, fire batched
+//! matrix-op requests at it from several client threads, and report
+//! latency/throughput plus the batcher's utilization — demonstrating how
+//! FastH's mini-batch parallelism (depth `O(d/k + k)` per *batch*) turns
+//! into serving throughput.
+//!
+//! Uses the PJRT artifact engine when `artifacts/manifest.json` exists
+//! (the full AOT path: JAX/Pallas → HLO text → Rust), otherwise the
+//! native FastH engine.
+//!
+//! Run: `cargo run --release --example serve`
+
+use fasth::coordinator::{
+    BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
+};
+use fasth::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let d = 64;
+    let per_client = 200usize;
+    let n_clients = 4usize;
+
+    // Engine: PJRT artifacts if present, else native.
+    let artifacts = std::path::Path::new("artifacts/manifest.json");
+    let (engine, engine_name) = if artifacts.exists() {
+        let eng = fasth::runtime::ArtifactEngine::open(std::path::Path::new("artifacts"))
+            .expect("open artifacts");
+        eng.compile_all().expect("compile artifacts");
+        (ExecEngine::Pjrt(Arc::new(eng)), "pjrt")
+    } else {
+        (ExecEngine::Native { k: 32 }, "native")
+    };
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create(&format!("svd_{d}"), d, engine, 1234);
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 3,
+            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+            max_queue_depth: 50_000,
+        },
+        registry,
+    )
+    .expect("server start");
+    println!(
+        "== orthoserve on {} (engine {engine_name}, d = {d}) — {n_clients} clients × {per_client} requests ==\n",
+        server.local_addr
+    );
+
+    let addr = server.local_addr;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(500 + c as u64);
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut latencies = Vec::with_capacity(per_client);
+                let ops = [OpKind::Apply, OpKind::Inverse, OpKind::Expm, OpKind::Cayley];
+                // Mix single calls with bursts (bursts exercise batching).
+                let mut done = 0usize;
+                while done < per_client {
+                    let burst = (8 + rng.below(17)).min(per_client - done);
+                    let op = ops[rng.below(ops.len())];
+                    let cols: Vec<Vec<f32>> = (0..burst)
+                        .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+                        .collect();
+                    let t = Instant::now();
+                    let responses =
+                        client.call_many(&format!("svd_{d}"), op, cols).expect("call_many");
+                    let us = t.elapsed().as_micros() as u64 / burst as u64;
+                    for r in &responses {
+                        assert!(r.ok, "request failed: {:?}", r.error);
+                        latencies.push((us, r.batch_size));
+                    }
+                    done += burst;
+                }
+                latencies
+            })
+        })
+        .collect();
+
+    let mut all: Vec<(u64, usize)> = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = all.len();
+    let mut lats: Vec<u64> = all.iter().map(|(us, _)| *us).collect();
+    lats.sort_unstable();
+    let mean_batch =
+        all.iter().map(|(_, b)| *b as f64).sum::<f64>() / total as f64;
+
+    println!("completed {total} requests in {wall:.2}s");
+    println!("throughput        : {:.0} req/s", total as f64 / wall);
+    println!("latency p50 / p99 : {} µs / {} µs", lats[total / 2], lats[total * 99 / 100]);
+    println!("mean batch size   : {mean_batch:.2} columns (max 32)");
+
+    // Server-side view.
+    let mut admin = Client::connect(&addr).expect("connect admin");
+    println!("\nserver stats: {}", admin.admin("stats").expect("stats"));
+    server.stop();
+    assert!(mean_batch > 1.5, "batching never kicked in");
+    println!("\nserve OK");
+}

@@ -1,0 +1,81 @@
+//! Normalizing flow with SVD-reparameterized layers (paper §5: the
+//! Glow/emerging-convolutions use case). Trains by *exact* maximum
+//! likelihood on a Gaussian-mixture target: every training step needs
+//! `log|det W|` (here Σ log|σ| in O(d), vs O(d³) slogdet) and sampling
+//! needs `W⁻¹` (here V·Σ⁻¹·Uᵀ, vs an O(d³) inverse) — the two Table-1
+//! rows that motivated the paper's normalizing-flow discussion.
+//!
+//! Run: `cargo run --release --example train_flow [steps]`
+
+use fasth::linalg::lu;
+use fasth::nn::flow::{gaussian_mixture, Flow};
+use fasth::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let (dim, depth, modes, n_train) = (8, 4, 4, 512);
+    let mut rng = Rng::new(0xF10C);
+    let data = gaussian_mixture(dim, modes, n_train, &mut rng);
+    let mut flow = Flow::new(dim, depth, &mut rng);
+    println!(
+        "== normalizing flow: {depth} blocks of LinearSVD+leaky in d = {dim}, \
+         {modes}-mode Gaussian mixture, {n_train} samples ==\n"
+    );
+
+    let t0 = Instant::now();
+    let (nll0, _) = flow.nll_step(&data, None);
+    let mut last = nll0;
+    for step in 0..steps {
+        let (nll, grads) = flow.nll_step(&data, None);
+        flow.sgd_step(&grads, 0.03, 0.05);
+        last = nll;
+        if step % 30 == 0 || step + 1 == steps {
+            println!("step {step:>4}  nll/dim {:.4}", nll / dim as f64);
+        }
+    }
+    println!(
+        "\ntrained {steps} steps in {:.1}s; NLL/dim {:.4} → {:.4}",
+        t0.elapsed().as_secs_f64(),
+        nll0 / dim as f64,
+        last / dim as f64
+    );
+
+    // Exact invertibility after training (the property PLU/QR flows trade
+    // away and the SVD parameterization keeps for free).
+    let (z, logdet, _c) = flow.forward(&data);
+    let back = flow.inverse(&z);
+    println!(
+        "invertibility: ‖f⁻¹(f(x)) − x‖∞ = {:.3e}",
+        back.max_abs_diff(&data)
+    );
+
+    // O(d) logdet vs O(d³) LU slogdet on the first block.
+    let w = flow.blocks[0].linear.p.materialize();
+    let t_lu = Instant::now();
+    let (_s, lu_ld) = lu::slogdet(&w);
+    let lu_time = t_lu.elapsed();
+    let t_svd = Instant::now();
+    let (_s2, svd_ld) = flow.blocks[0].linear.p.slogdet();
+    let svd_time = t_svd.elapsed();
+    println!(
+        "log|det W| block 0: LU {lu_ld:.5} ({:.1} µs)  vs  spectrum {svd_ld:.5} ({:.2} µs)",
+        lu_time.as_secs_f64() * 1e6,
+        svd_time.as_secs_f64() * 1e6
+    );
+
+    // Sampling through the exact inverse.
+    let samples = flow.sample(256, &mut rng);
+    let mode_radius = 2.5f32;
+    let mean_r: f32 = (0..samples.cols())
+        .map(|j| (samples[(0, j)].powi(2) + samples[(1, j)].powi(2)).sqrt())
+        .sum::<f32>()
+        / samples.cols() as f32;
+    println!(
+        "samples: mean radius in mode plane = {mean_r:.2} (target modes at {mode_radius})"
+    );
+
+    assert!(last < nll0 - 0.5, "flow did not learn: NLL {nll0:.3} → {last:.3}");
+    assert!(back.max_abs_diff(&data) < 1e-2, "lost invertibility");
+    println!("\ntrain_flow OK");
+}

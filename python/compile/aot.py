@@ -1,0 +1,162 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** + manifest.
+
+Python runs exactly once (``make artifacts``); the Rust runtime loads the
+HLO text via ``HloModuleProto::from_text_file`` and never calls back into
+Python. HLO *text* (not ``.serialize()``) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--sizes 64,128,256]
+
+Artifacts (per size d, batch m = 32, k = max(32, ceil(sqrt(d)))):
+    orthogonal_apply_{d}   V(d,d), X(d,m)                  -> A(d,m)
+    gradient_step_{d}      V(d,d), X(d,m), G(d,m)          -> (A, dV, dX)
+    svd_apply_{d}          Vu, Vv, sigma(d), X             -> Y
+    svd_inverse_{d}        Vu, Vv, sigma(d), X             -> Y
+    svd_layer_step_{d}     Vu, Vv, sigma, X, G             -> (Y, dVu, dVv, dS, dX)
+plus ``manifest.json`` describing name → file, input/output shapes, k.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_SIZES = [64, 128, 256]
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def pick_k(d: int, m: int = BATCH) -> int:
+    """§3.3 heuristic block size: k = max(m, √d), rounded to divide d."""
+    k = max(m, int(math.ceil(math.sqrt(d))))
+    k = min(k, d)
+    while d % k != 0:  # shrink until it divides (d is a multiple of 64 here)
+        k -= 1
+    return max(k, 1)
+
+
+def entries(d: int):
+    """(name, fn, example_args) for every artifact at size d."""
+    m = BATCH
+    k = pick_k(d, m)
+    f32 = jnp.float32
+    v = jax.ShapeDtypeStruct((d, d), f32)
+    x = jax.ShapeDtypeStruct((d, m), f32)
+    g = jax.ShapeDtypeStruct((d, m), f32)
+    s = jax.ShapeDtypeStruct((d,), f32)
+
+    def shapes(*specs):
+        return [list(sp.shape) for sp in specs]
+
+    return k, [
+        {
+            "name": f"orthogonal_apply_{d}",
+            "fn": lambda vv, xx: (model.fasth_apply(vv, xx, k),),
+            "args": (v, x),
+            "inputs": shapes(v, x),
+            "outputs": [[d, m]],
+        },
+        {
+            "name": f"gradient_step_{d}",
+            "fn": lambda vv, xx, gg: model.gradient_step(vv, xx, gg, k),
+            "args": (v, x, g),
+            "inputs": shapes(v, x, g),
+            "outputs": [[d, m], [d, d], [d, m]],
+        },
+        {
+            "name": f"svd_apply_{d}",
+            "fn": lambda vu, vv, ss, xx: (model.svd_apply(vu, vv, ss, xx, k),),
+            "args": (v, v, s, x),
+            "inputs": shapes(v, v, s, x),
+            "outputs": [[d, m]],
+        },
+        {
+            "name": f"svd_inverse_{d}",
+            "fn": lambda vu, vv, ss, xx: (model.svd_inverse_apply(vu, vv, ss, xx, k),),
+            "args": (v, v, s, x),
+            "inputs": shapes(v, v, s, x),
+            "outputs": [[d, m]],
+        },
+        {
+            "name": f"svd_layer_step_{d}",
+            "fn": lambda vu, vv, ss, xx, gg: model.svd_layer_step(vu, vv, ss, xx, gg, k),
+            "args": (v, v, s, x, g),
+            "inputs": shapes(v, v, s, x, g),
+            "outputs": [[d, m], [d, d], [d, d], [d], [d, m]],
+        },
+    ]
+
+
+def build(out_dir: str, sizes: list[int]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"batch": BATCH, "entries": []}
+    for d in sizes:
+        k, ents = entries(d)
+        for ent in ents:
+            lowered = jax.jit(ent["fn"]).lower(*ent["args"])
+            text = to_hlo_text(lowered)
+            fname = f"{ent['name']}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "name": ent["name"],
+                    "file": fname,
+                    "d": d,
+                    "m": BATCH,
+                    "k": k,
+                    "inputs": ent["inputs"],
+                    "outputs": ent["outputs"],
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars, k={k})", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) single-file sentinel path")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated d values",
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(os.path.abspath(args.out)) or out_dir
+    manifest = build(out_dir, sizes)
+    if args.out:
+        # Makefile stamp-file compatibility: the first artifact doubles as
+        # the make target; ensure it exists.
+        first = os.path.join(out_dir, manifest["entries"][0]["file"])
+        assert os.path.exists(first)
+    print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

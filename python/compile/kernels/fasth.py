@@ -1,0 +1,136 @@
+"""Layer 1 — Pallas kernels for the FastH hot loop.
+
+The paper's CUDA kernel is re-thought for TPU (DESIGN.md
+§Hardware-Adaptation): the WY block application
+
+    A ← A − 2·W_i·(Y_iᵀ·A)
+
+is two MXU-shaped GEMMs (``(k×d)·(d×m)`` and ``(d×k)·(k×m)``) whose
+operands are staged into VMEM by BlockSpec — the role the paper's
+threadblock/shared-memory tiling played on the RTX 2080 Ti. The block
+size k is exactly the VMEM tile parameter (§3.3's time/parallelism knob).
+
+Two kernels:
+
+* :func:`block_apply` — one WY block applied to a batch (grid = (),
+  everything resident in VMEM). Used inside the L2 scan.
+* :func:`fasth_apply_fused` — the whole product ``P_1 … P_nb · X`` in one
+  ``pallas_call`` with ``grid=(nb,)``: the output ref is *revisited* by
+  every grid step (its index map is constant), which on TPU keeps the
+  running batch ``A`` resident in VMEM across the sequential block loop —
+  the double-buffered HBM↔VMEM schedule only streams the (d×k) W/Y panels.
+
+Pallas runs with ``interpret=True`` everywhere: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute; interpret mode
+lowers to plain HLO so the AOT artifacts run on the Rust CPU runtime.
+Real-TPU performance is *estimated* from the BlockSpec footprint in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module docs.
+
+
+def _block_apply_kernel(w_ref, y_ref, x_ref, o_ref):
+    """o = x − 2·W·(Yᵀ·x) — the two fused MXU GEMMs."""
+    t = jnp.dot(y_ref[...].T, x_ref[...])  # (k, m), reduction over d
+    o_ref[...] = x_ref[...] - 2.0 * jnp.dot(w_ref[...], t)
+
+
+@jax.jit
+def block_apply(w: jnp.ndarray, y: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply one WY block ``P = I − 2WYᵀ`` to ``x`` (all VMEM-resident).
+
+    Shapes: ``w, y: (d, k)``, ``x: (d, m)`` → ``(d, m)``.
+    VMEM footprint: ``(2dk + 2dm + km)·4`` bytes.
+    """
+    d, m = x.shape
+    return pl.pallas_call(
+        _block_apply_kernel,
+        out_shape=jax.ShapeDtypeStruct((d, m), x.dtype),
+        interpret=INTERPRET,
+    )(w, y, x)
+
+
+def _block_apply_transpose_kernel(w_ref, y_ref, x_ref, o_ref):
+    """o = x − 2·Y·(Wᵀ·x) — the Eq. 3 transpose step ``Pᵀ·x``."""
+    t = jnp.dot(w_ref[...].T, x_ref[...])
+    o_ref[...] = x_ref[...] - 2.0 * jnp.dot(y_ref[...], t)
+
+
+@jax.jit
+def block_apply_transpose(w: jnp.ndarray, y: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply ``Pᵀ = I − 2YWᵀ`` to ``x``."""
+    d, m = x.shape
+    return pl.pallas_call(
+        _block_apply_transpose_kernel,
+        out_shape=jax.ShapeDtypeStruct((d, m), x.dtype),
+        interpret=INTERPRET,
+    )(w, y, x)
+
+
+def _fasth_fused_kernel(w_ref, y_ref, x_ref, o_ref):
+    """Grid step g applies block ``nb−1−g`` (P_nb first, P_1 last) to the
+    VMEM-resident running batch held in ``o_ref``."""
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = x_ref[...]
+
+    a = o_ref[...]
+    t = jnp.dot(y_ref[0].T, a)
+    o_ref[...] = a - 2.0 * jnp.dot(w_ref[0], t)
+
+
+@functools.partial(jax.jit, static_argnames=("reverse",))
+def fasth_apply_fused(
+    w_blocks: jnp.ndarray, y_blocks: jnp.ndarray, x: jnp.ndarray, reverse: bool = True
+) -> jnp.ndarray:
+    """The full FastH Step-2 loop ``A = P_1·(P_2·(…(P_nb·X)))`` as one
+    Pallas call.
+
+    Shapes: ``w_blocks, y_blocks: (nb, d, k)``, ``x: (d, m)``.
+    ``reverse=True`` applies block nb−1 first (the forward product order);
+    ``reverse=False`` applies block 0 first (used for ``Uᵀ`` chains whose
+    blocks were pre-transposed by the caller).
+
+    HBM↔VMEM schedule expressed by the BlockSpecs: per grid step one
+    ``(d, k)`` W panel + one ``(d, k)`` Y panel stream in; ``X`` streams in
+    once (step 0); the output block index is constant so ``A`` stays
+    resident in VMEM for all nb steps.
+    """
+    nb, d, k = w_blocks.shape
+    m = x.shape[1]
+    if reverse:
+        idx = lambda g: (nb - 1 - g, 0, 0)  # noqa: E731
+    else:
+        idx = lambda g: (g, 0, 0)  # noqa: E731
+    return pl.pallas_call(
+        _fasth_fused_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, d, k), idx),
+            pl.BlockSpec((1, d, k), idx),
+            pl.BlockSpec((d, m), lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, m), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, m), x.dtype),
+        interpret=INTERPRET,
+    )(w_blocks, y_blocks, x)
+
+
+def vmem_bytes(d: int, k: int, m: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one fused grid step (W, Y panels + A + X + T).
+
+    Used by the §Perf roofline estimate: the working set must fit the
+    ~16 MiB TPU VMEM; k trades panel size against sequential depth d/k.
+    """
+    return dtype_bytes * (2 * d * k + 2 * d * m + k * m)

@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracle for the FastH kernels.
+
+Everything here is deliberately naive and definitional — explicit
+Householder matrices, Python loops — so the Pallas kernels and the blocked
+model code in ``model.py`` can be validated against an implementation whose
+correctness is obvious. Conventions match the paper and the Rust layer:
+
+* ``V`` is ``d×n`` with **column i** holding the (unnormalized) Householder
+  vector ``v_{i+1}``; a zero column encodes the identity reflection,
+* the forward product is ``A = H_1 · H_2 · … · H_n · X`` (so ``H_n`` is
+  applied to ``X`` first),
+* mini-batches are column-major: ``X ∈ R^{d×m}``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "householder_matrix",
+    "product_matrix",
+    "seq_apply",
+    "seq_apply_transpose",
+    "wy_build_ref",
+    "loss_dot",
+]
+
+_EPS = 1e-30
+
+
+def householder_matrix(v: jnp.ndarray) -> jnp.ndarray:
+    """Explicit ``H = I − 2 v vᵀ / ‖v‖²`` (identity for ``v = 0``)."""
+    d = v.shape[0]
+    ns = jnp.dot(v, v)
+    eye = jnp.eye(d, dtype=v.dtype)
+    outer = jnp.outer(v, v)
+    return jnp.where(ns > _EPS, eye - (2.0 / jnp.where(ns > _EPS, ns, 1.0)) * outer, eye)
+
+
+def product_matrix(vs: jnp.ndarray) -> jnp.ndarray:
+    """Materialize ``U = H_1 · … · H_n`` from ``d×n`` vector columns."""
+    d, n = vs.shape
+    u = jnp.eye(d, dtype=vs.dtype)
+    for i in range(n):
+        u = u @ householder_matrix(vs[:, i])
+    return u
+
+
+def seq_apply(vs: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """``H_1 · … · H_n · X`` one reflection at a time (rightmost first)."""
+    a = x
+    for i in reversed(range(vs.shape[1])):
+        v = vs[:, i]
+        ns = jnp.dot(v, v)
+        coef = jnp.where(ns > _EPS, 2.0 / jnp.where(ns > _EPS, ns, 1.0), 0.0)
+        a = a - coef * jnp.outer(v, v @ a)
+    return a
+
+
+def seq_apply_transpose(vs: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """``(H_1 … H_n)ᵀ · X = H_n · … · H_1 · X``."""
+    a = x
+    for i in range(vs.shape[1]):
+        v = vs[:, i]
+        ns = jnp.dot(v, v)
+        coef = jnp.where(ns > _EPS, 2.0 / jnp.where(ns > _EPS, ns, 1.0), 0.0)
+        a = a - coef * jnp.outer(v, v @ a)
+    return a
+
+
+def wy_build_ref(vblk: jnp.ndarray) -> jnp.ndarray:
+    """The WY *product matrix* ``P = H_1 … H_k`` for a block of vectors —
+    the object Lemma 1 promises ``I − 2WYᵀ`` equals."""
+    return product_matrix(vblk)
+
+
+def loss_dot(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Test loss ``<G, A>`` used for gradient cross-checks."""
+    return jnp.sum(a * g)

@@ -1,0 +1,145 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compile path — every kernel is
+checked against ``ref.py`` over randomized shapes (hypothesis) and the
+paper's algebraic invariants (orthogonality, involution, inverse).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import fasth as kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ------------------------------------------------------------- block_apply
+
+
+class TestBlockApply:
+    def test_matches_wy_product(self):
+        k1, k2 = keys(0, 2)
+        d, k, m = 24, 6, 5
+        v = rand(k1, d, k)
+        w, y = model.wy_build(v)
+        x = rand(k2, d, m)
+        got = kernels.block_apply(w, y, x)
+        want = ref.wy_build_ref(v) @ x
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_transpose_is_inverse(self):
+        k1, k2 = keys(1, 2)
+        d, k, m = 16, 4, 3
+        w, y = model.wy_build(rand(k1, d, k))
+        x = rand(k2, d, m)
+        back = kernels.block_apply_transpose(w, y, kernels.block_apply(w, y, x))
+        np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        d=st.integers(2, 48),
+        k=st.integers(1, 8),
+        m=st.integers(1, 8),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, d, k, m, seed):
+        k = min(k, d)
+        k1, k2 = keys(seed, 2)
+        v = rand(k1, d, k)
+        w, y = model.wy_build(v)
+        x = rand(k2, d, m)
+        got = kernels.block_apply(w, y, x)
+        want = ref.seq_apply(v, x)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+    def test_zero_vector_block_is_identity(self):
+        k2 = keys(2, 1)[0]
+        d, k, m = 10, 3, 4
+        w, y = model.wy_build(jnp.zeros((d, k)))
+        x = rand(k2, d, m)
+        np.testing.assert_allclose(kernels.block_apply(w, y, x), x, atol=1e-7)
+
+
+# ------------------------------------------------------- fasth_apply_fused
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("d,k,m", [(12, 3, 4), (32, 8, 5), (16, 16, 2), (8, 1, 3)])
+    def test_matches_sequential_ref(self, d, k, m):
+        k1, k2 = keys(3, 2)
+        v = rand(k1, d, d)
+        x = rand(k2, d, m)
+        wb, yb = model.build_all_blocks(v, k)
+        got = kernels.fasth_apply_fused(wb, yb, x, reverse=True)
+        want = ref.seq_apply(v, x)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_reverse_false_is_transpose_order(self):
+        # Applying blocks 0..nb-1 of the *transposed* blocks gives Uᵀ.
+        k1, k2 = keys(4, 2)
+        d, k, m = 12, 4, 3
+        v = rand(k1, d, d)
+        x = rand(k2, d, m)
+        wb, yb = model.build_all_blocks(v, k)
+        # Pᵀ = I − 2 Y Wᵀ → swap W/Y roles.
+        got = kernels.fasth_apply_fused(yb, wb, x, reverse=False)
+        want = ref.seq_apply_transpose(v, x)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_orthogonality(self):
+        # Fused product is an isometry.
+        k1, k2 = keys(5, 2)
+        d, k, m = 24, 6, 8
+        wb, yb = model.build_all_blocks(rand(k1, d, d), k)
+        x = rand(k2, d, m)
+        y = kernels.fasth_apply_fused(wb, yb, x)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=0), jnp.linalg.norm(x, axis=0), rtol=1e-4
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        nb=st.integers(1, 6),
+        k=st.integers(1, 6),
+        m=st.integers(1, 6),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_block_counts(self, nb, k, m, seed):
+        d = max(nb * k, 2)
+        k1, k2 = keys(seed, 2)
+        v = rand(k1, d, nb * k)
+        x = rand(k2, d, m)
+        wb, yb = model.build_all_blocks(v, k)
+        got = kernels.fasth_apply_fused(wb, yb, x)
+        want = ref.seq_apply(v, x)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------------- wy_build
+
+
+class TestWyBuild:
+    @settings(max_examples=16, deadline=None)
+    @given(d=st.integers(2, 32), k=st.integers(1, 8), seed=st.integers(0, 2**16))
+    def test_lemma1(self, d, k, seed):
+        k = min(k, d)
+        v = rand(keys(seed, 1)[0], d, k)
+        w, y = model.wy_build(v)
+        p = jnp.eye(d) - 2.0 * (w @ y.T)
+        np.testing.assert_allclose(p, ref.wy_build_ref(v), rtol=5e-4, atol=5e-4)
+
+    def test_vmem_estimate_positive(self):
+        assert kernels.vmem_bytes(768, 32, 32) == 4 * (2 * 768 * 32 + 2 * 768 * 32 + 32 * 32)

@@ -1,0 +1,300 @@
+//! Runners for each figure/table. Each returns a [`Report`] whose rows are
+//! sizes d and whose columns are the algorithm series of the paper's plot.
+
+use super::{BATCH_M, PAPER_REPS};
+use crate::householder::{tune, Engine, HouseholderVectors};
+use crate::linalg::{cayley, expm, Mat};
+use crate::nn::SvdRnn;
+use crate::svd::ops::{op_step, svd_step, MatrixOp, OpEngine, OpWorkload};
+use crate::util::timing::{time_reps_budget, Report, Stats};
+use crate::util::Rng;
+
+/// Per-cell wall-clock budget (seconds) handed to `time_reps_budget`.
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetCfg {
+    pub per_cell_secs: f64,
+    pub max_reps: usize,
+}
+
+impl Default for BudgetCfg {
+    fn default() -> Self {
+        BudgetCfg { per_cell_secs: 1.0, max_reps: PAPER_REPS }
+    }
+}
+
+fn time<T>(cfg: BudgetCfg, f: impl FnMut() -> T) -> Stats {
+    time_reps_budget(cfg.max_reps, cfg.per_cell_secs, f)
+}
+
+/// Heuristic √d block size used by the harness (a measured `tune_k` run is
+/// available via `repro tune-k`).
+pub fn default_k(d: usize) -> usize {
+    tune::KCache::heuristic(d, BATCH_M).min(d)
+}
+
+// ------------------------------------------------------------------ Figure 1
+
+/// Figure 1: time of matrix inversion inside a network — the §4.2 inverse
+/// step under FastH vs the sequential algorithm of [17].
+pub fn fig1_inversion(sizes: &[usize], cfg: BudgetCfg, seed: u64) -> Report {
+    let mut report = Report::new("Figure 1 — matrix inversion step time (FastH vs sequential)");
+    for &d in sizes {
+        let mut rng = Rng::new(seed ^ d as u64);
+        let wl = OpWorkload::new(d, BATCH_M, &mut rng);
+        let k = default_k(d);
+        let fasth = time(cfg, || {
+            svd_step(MatrixOp::Inverse, Engine::FastH { k }, &wl.param, &wl.x, &wl.g)
+        });
+        let seq = time(cfg, || {
+            svd_step(MatrixOp::Inverse, Engine::Sequential, &wl.param, &wl.x, &wl.g)
+        });
+        report.add_row(
+            format!("{d}"),
+            vec![("fasth".into(), fasth), ("sequential".into(), seq)],
+        );
+    }
+    report
+}
+
+// ------------------------------------------------------------------ Figure 3
+
+/// Figure 3a: one constrained gradient-descent step (fwd + bwd of a single
+/// orthogonal product) for all five algorithms of the paper's comparison.
+/// Figure 3b is the same data as ratios (computed by [`relative_rows`]).
+pub fn fig3_steptime(sizes: &[usize], cfg: BudgetCfg, seed: u64) -> Report {
+    let mut report = Report::new("Figure 3a — gradient-descent step time per algorithm");
+    for &d in sizes {
+        let mut rng = Rng::new(seed ^ (d as u64) << 1);
+        let hv = HouseholderVectors::random_full(d, &mut rng);
+        let x = Mat::randn(d, BATCH_M, &mut rng);
+        let g = Mat::randn(d, BATCH_M, &mut rng);
+        let k = default_k(d);
+
+        let mut cells: Vec<(String, Stats)> = Vec::new();
+        cells.push((
+            "fasth".into(),
+            time(cfg, || Engine::FastH { k }.step(&hv, &x, &g)),
+        ));
+        cells.push((
+            "sequential".into(),
+            time(cfg, || Engine::Sequential.step(&hv, &x, &g)),
+        ));
+        cells.push((
+            "parallel".into(),
+            time(cfg, || Engine::Parallel.step(&hv, &x, &g)),
+        ));
+        // Orthogonal-reparameterization baselines (§8.2): φ(V)X + grads.
+        let v_param = Mat::randn(d, d, &mut rng).scale(1.0 / (d as f32).sqrt());
+        cells.push((
+            "expm-map".into(),
+            time(cfg, || {
+                let e = expm::expm(&v_param);
+                let y = crate::linalg::gemm::matmul(&e, &x);
+                let dx = crate::linalg::gemm::matmul_tn(&e, &g);
+                // Exact Fréchet adjoint via the 2d×2d block trick.
+                let gxt = crate::linalg::gemm::matmul_nt(&g, &x);
+                let (_e2, dv) = expm::expm_frechet(&v_param.t(), &gxt);
+                (y, dx, dv)
+            }),
+        ));
+        cells.push((
+            "cayley-map".into(),
+            time(cfg, || {
+                let q = cayley::cayley_map_skew(&v_param);
+                let y = crate::linalg::gemm::matmul(&q, &x);
+                let dx = crate::linalg::gemm::matmul_tn(&q, &g);
+                // ∂L/∂Q = G·Xᵀ (d×d), then back through the Cayley map.
+                let dq = crate::linalg::gemm::matmul_nt(&g, &x);
+                let dv = cayley::cayley_map_skew_backward(&v_param, &q, &dq);
+                (y, dx, dv)
+            }),
+        ));
+        report.add_row(format!("{d}"), cells);
+    }
+    report
+}
+
+/// Figure 3b: mean time of every series divided by the first series
+/// ("fasth") per row.
+pub fn relative_rows(report: &Report) -> Vec<(String, Vec<(String, f64)>)> {
+    report
+        .rows
+        .iter()
+        .map(|row| {
+            let base = row
+                .cells
+                .iter()
+                .find(|(n, _)| n == "fasth")
+                .map(|(_, s)| s.mean)
+                .unwrap_or(f64::NAN);
+            let rel = row
+                .cells
+                .iter()
+                .filter(|(n, _)| n != "fasth")
+                .map(|(n, s)| (n.clone(), s.mean / base))
+                .collect();
+            (row.label.clone(), rel)
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------------ Figure 4
+
+/// Figure 4: the four matrix operations of Table 1, standard method vs the
+/// SVD reparameterization under all three Householder engines.
+pub fn fig4_matrix_ops(
+    sizes: &[usize],
+    ops: &[MatrixOp],
+    cfg: BudgetCfg,
+    seed: u64,
+) -> Vec<(MatrixOp, Report)> {
+    let mut out = Vec::new();
+    for &op in ops {
+        let mut report = Report::new(format!("Figure 4 — {} (standard vs SVD routes)", op.name()));
+        for &d in sizes {
+            let mut rng = Rng::new(seed ^ (d as u64) << 2 ^ op.name().len() as u64);
+            let wl = OpWorkload::new(d, BATCH_M, &mut rng);
+            let k = default_k(d);
+            let engines: [(&str, OpEngine); 4] = [
+                ("standard", OpEngine::Standard),
+                ("svd-fasth", OpEngine::Svd(Engine::FastH { k })),
+                ("svd-sequential", OpEngine::Svd(Engine::Sequential)),
+                ("svd-parallel", OpEngine::Svd(Engine::Parallel)),
+            ];
+            let cells = engines
+                .iter()
+                .map(|(name, engine)| {
+                    let s = time(cfg, || op_step(op, *engine, &wl.w, &wl.param, &wl.x, &wl.g));
+                    (name.to_string(), s)
+                })
+                .collect();
+            report.add_row(format!("{d}"), cells);
+        }
+        out.push((op, report));
+    }
+    out
+}
+
+// -------------------------------------------------------------- §3.3 ablation
+
+/// §3.3: step time as a function of the block size k at fixed d — the
+/// time/parallelism trade-off with the optimum near √d.
+pub fn ablation_k(d: usize, ks: &[usize], cfg: BudgetCfg, seed: u64) -> Report {
+    let mut rng = Rng::new(seed);
+    let hv = HouseholderVectors::random_full(d, &mut rng);
+    let x = Mat::randn(d, BATCH_M, &mut rng);
+    let g = Mat::randn(d, BATCH_M, &mut rng);
+    let mut report = Report::new(format!("§3.3 ablation — FastH step time vs k (d = {d})"));
+    for &k in ks {
+        if k == 0 || k > d {
+            continue;
+        }
+        let s = time(cfg, || Engine::FastH { k }.step(&hv, &x, &g));
+        report.add_row(format!("k={k}"), vec![("fasth".into(), s)]);
+    }
+    report
+}
+
+/// §3.3 recurrent claim: r recurrent applications of one orthogonal
+/// matrix — FastH amortizes WY construction across steps, the sequential
+/// baseline pays `O(d)` depth per step.
+pub fn ablation_rnn(d: usize, rs: &[usize], cfg: BudgetCfg, seed: u64) -> Report {
+    let mut rng = Rng::new(seed);
+    let hv = HouseholderVectors::random_full(d, &mut rng);
+    let h0 = Mat::randn(d, BATCH_M, &mut rng);
+    let k = default_k(d);
+    let mut report = Report::new(format!("§3.3 recurrent — r applications (d = {d})"));
+    for &r in rs {
+        let fasth = time(cfg, || {
+            // Build blocks once, apply r times (the recurrent pattern).
+            let blocks = crate::householder::fasth::build_blocks(&hv, k);
+            let mut h = h0.clone();
+            for _ in 0..r {
+                let mut wt = Mat::zeros(d, BATCH_M);
+                for b in blocks.iter().rev() {
+                    let mut t = Mat::zeros(b.width(), BATCH_M);
+                    b.apply_inplace(&mut h, &mut t, &mut wt);
+                }
+            }
+            h
+        });
+        let seq = time(cfg, || {
+            let mut h = h0.clone();
+            for _ in 0..r {
+                h = crate::householder::seq::seq_apply(&hv, &h);
+            }
+            h
+        });
+        report.add_row(
+            format!("r={r}"),
+            vec![("fasth".into(), fasth), ("sequential".into(), seq)],
+        );
+    }
+    report
+}
+
+/// End-to-end RNN training throughput (steps/sec) — the serving/training
+/// sanity workload used by EXPERIMENTS.md §E2E.
+pub fn rnn_step_time(hidden: usize, seq_len: usize, cfg: BudgetCfg, seed: u64) -> Stats {
+    let mut rng = Rng::new(seed);
+    let rnn = SvdRnn::new(10, hidden, 10, &mut rng);
+    let batch = crate::nn::tasks::copy_memory(8, 4, seq_len.saturating_sub(9), 16, &mut rng);
+    time(cfg, || rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> BudgetCfg {
+        BudgetCfg { per_cell_secs: 0.02, max_reps: 3 }
+    }
+
+    #[test]
+    fn fig1_produces_both_series() {
+        let r = fig1_inversion(&[16, 32], tiny_cfg(), 1);
+        assert_eq!(r.rows.len(), 2);
+        for row in &r.rows {
+            assert_eq!(row.cells.len(), 2);
+            assert!(row.cells.iter().all(|(_, s)| s.mean > 0.0));
+        }
+    }
+
+    #[test]
+    fn fig3_has_five_series_and_ratios() {
+        let r = fig3_steptime(&[16], tiny_cfg(), 2);
+        assert_eq!(r.rows[0].cells.len(), 5);
+        let rel = relative_rows(&r);
+        assert_eq!(rel[0].1.len(), 4);
+        assert!(rel[0].1.iter().all(|(_, v)| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn fig4_covers_all_ops() {
+        let reports = fig4_matrix_ops(&[12], &MatrixOp::ALL, tiny_cfg(), 3);
+        assert_eq!(reports.len(), 4);
+        for (_op, r) in &reports {
+            assert_eq!(r.rows[0].cells.len(), 4);
+        }
+    }
+
+    #[test]
+    fn ablation_k_skips_invalid() {
+        let r = ablation_k(16, &[0, 2, 4, 64], tiny_cfg(), 4);
+        assert_eq!(r.rows.len(), 2); // k=0 and k=64>d skipped
+    }
+
+    #[test]
+    fn ablation_rnn_rows() {
+        let r = ablation_rnn(16, &[1, 4], tiny_cfg(), 5);
+        assert_eq!(r.rows.len(), 2);
+    }
+
+    #[test]
+    fn csv_export_works() {
+        let r = fig1_inversion(&[8], tiny_cfg(), 6);
+        let csv = r.csv();
+        assert!(csv.lines().count() >= 3);
+        assert!(csv.contains("8,fasth,"));
+    }
+}

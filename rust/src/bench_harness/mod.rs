@@ -1,0 +1,29 @@
+//! Benchmark harness regenerating every figure/table of the paper.
+//!
+//! Measurement protocol follows §4 exactly — mean ± σ over repetitions of
+//! the *full* step (matrix op + forward + gradients), standard-normal
+//! dummy inputs and upstream gradients (§8.2) — with a wall-clock budget
+//! per cell so the `O(d³)` baselines can't stall a sweep
+//! ([`crate::util::timing::time_reps_budget`]).
+//!
+//! | paper artifact | runner | bench target |
+//! |---|---|---|
+//! | Figure 1 | [`figures::fig1_inversion`] | `benches/fig1_inversion.rs` |
+//! | Figure 3a/3b | [`figures::fig3_steptime`] | `benches/fig3_steptime.rs` |
+//! | Figure 4 | [`figures::fig4_matrix_ops`] | `benches/fig4_matrixops.rs` |
+//! | §3.3 k-tradeoff | [`figures::ablation_k`] | `benches/ablation_k.rs` |
+//! | §3.3 recurrent | [`figures::ablation_rnn`] | `benches/ablation_rnn.rs` |
+
+pub mod figures;
+
+/// The paper's full grid is `d = 64·{1,…,48}`, m = 32. The default bench
+/// grid subsamples it (the trends are dense enough) — pass `--sizes` to
+/// the CLI for the full sweep.
+pub const DEFAULT_SIZES: [usize; 9] = [64, 128, 256, 384, 512, 768, 1024, 1536, 2048];
+
+/// Paper batch size (§4.1).
+pub const BATCH_M: usize = 32;
+
+/// Paper repetition count; the harness additionally respects a per-cell
+/// wall-clock budget.
+pub const PAPER_REPS: usize = 100;

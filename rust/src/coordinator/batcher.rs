@@ -1,0 +1,247 @@
+//! Dynamic batcher: coalesce single-column requests into `d×m` batches.
+//!
+//! Policy (vLLM-style continuous batching, simplified to the stateless
+//! case): a queue per `(model, op)` key; flush when either `max_batch`
+//! columns are waiting (full flush) or the oldest request has waited
+//! `max_wait` (deadline flush). Both knobs trade latency against FastH
+//! utilization — the ablation bench `ablation_rnn`/serve example sweep
+//! them.
+
+use super::protocol::{OpKind, Request};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many columns wait on one key (the paper's m).
+    pub max_batch: usize,
+    /// Flush the oldest key after this long regardless of size.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A request annotated with arrival time.
+struct Pending {
+    req: Request,
+    arrived: Instant,
+}
+
+/// A flushed batch ready for execution.
+pub struct Batch {
+    pub model: String,
+    pub op: OpKind,
+    pub requests: Vec<Request>,
+    /// Why the batch flushed (metrics).
+    pub full: bool,
+}
+
+#[derive(Default)]
+struct Queues {
+    by_key: BTreeMap<(String, OpKind), VecDeque<Pending>>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batcher. Producers call [`DynamicBatcher::submit`];
+/// a consumer loop calls [`DynamicBatcher::next_batch`].
+pub struct DynamicBatcher {
+    config: BatcherConfig,
+    queues: Mutex<Queues>,
+    signal: Condvar,
+}
+
+impl DynamicBatcher {
+    pub fn new(config: BatcherConfig) -> DynamicBatcher {
+        DynamicBatcher { config, queues: Mutex::new(Queues::default()), signal: Condvar::new() }
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.config
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) {
+        let mut q = self.queues.lock().unwrap();
+        q.by_key
+            .entry((req.model.clone(), req.op))
+            .or_default()
+            .push_back(Pending { req, arrived: Instant::now() });
+        self.signal.notify_all();
+    }
+
+    /// Stop accepting work and wake all consumers (they drain and exit).
+    pub fn close(&self) {
+        self.queues.lock().unwrap().closed = true;
+        self.signal.notify_all();
+    }
+
+    /// Total queued columns (for backpressure decisions).
+    pub fn depth(&self) -> usize {
+        self.queues.lock().unwrap().by_key.values().map(|v| v.len()).sum()
+    }
+
+    /// Block until a batch is ready (size- or deadline-triggered), the
+    /// batcher closes (drain remaining, then `None`), or — with work
+    /// pending — the deadline of the oldest request arrives.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let mut q = self.queues.lock().unwrap();
+        loop {
+            // Full queue? Flush it immediately.
+            if let Some(key) = q
+                .by_key
+                .iter()
+                .find(|(_k, v)| v.len() >= self.config.max_batch)
+                .map(|(k, _)| k.clone())
+            {
+                return Some(self.flush(&mut q, &key, true));
+            }
+            // Expired queue? (oldest pending ≥ max_wait)
+            let now = Instant::now();
+            let expired = q
+                .by_key
+                .iter()
+                .filter(|(_k, v)| !v.is_empty())
+                .find(|(_k, v)| now.duration_since(v[0].arrived) >= self.config.max_wait)
+                .map(|(k, _)| k.clone());
+            if let Some(key) = expired {
+                return Some(self.flush(&mut q, &key, false));
+            }
+            if q.closed {
+                // Drain whatever is left, oldest queue first.
+                let key = q
+                    .by_key
+                    .iter()
+                    .filter(|(_k, v)| !v.is_empty())
+                    .min_by_key(|(_k, v)| v[0].arrived)
+                    .map(|(k, _)| k.clone());
+                return key.map(|k| self.flush(&mut q, &k, false));
+            }
+            // Sleep until the nearest deadline (or a submit wakes us).
+            let nearest = q
+                .by_key
+                .values()
+                .filter(|v| !v.is_empty())
+                .map(|v| v[0].arrived + self.config.max_wait)
+                .min();
+            match nearest {
+                Some(deadline) => {
+                    let wait = deadline.saturating_duration_since(Instant::now());
+                    let (qq, _timeout) = self.signal.wait_timeout(q, wait).unwrap();
+                    q = qq;
+                }
+                None => {
+                    q = self.signal.wait(q).unwrap();
+                }
+            }
+        }
+    }
+
+    fn flush(&self, q: &mut Queues, key: &(String, OpKind), full: bool) -> Batch {
+        let queue = q.by_key.get_mut(key).expect("key exists");
+        let take = queue.len().min(self.config.max_batch);
+        let requests: Vec<Request> = queue.drain(..take).map(|p| p.req).collect();
+        if queue.is_empty() {
+            q.by_key.remove(key);
+        }
+        Batch { model: key.0.clone(), op: key.1, requests, full }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64, model: &str, op: OpKind) -> Request {
+        Request { id, model: model.into(), op, column: vec![1.0, 2.0] }
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = DynamicBatcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(60) });
+        for i in 0..3 {
+            b.submit(req(i, "m", OpKind::Apply));
+        }
+        let batch = b.next_batch().unwrap();
+        assert!(batch.full);
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deadline_flush_fires() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        });
+        b.submit(req(1, "m", OpKind::Apply));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(!batch.full);
+        assert_eq!(batch.requests.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4), "flushed too early");
+    }
+
+    #[test]
+    fn keys_are_isolated() {
+        let b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(60) });
+        b.submit(req(1, "a", OpKind::Apply));
+        b.submit(req(2, "a", OpKind::Inverse)); // different op → different key
+        b.submit(req(3, "b", OpKind::Apply)); // different model
+        b.submit(req(4, "a", OpKind::Apply)); // completes key (a, Apply)
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.model, "a");
+        assert_eq!(batch.op, OpKind::Apply);
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 4]);
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let b = DynamicBatcher::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_secs(60) });
+        b.submit(req(1, "m", OpKind::Apply));
+        b.submit(req(2, "m", OpKind::Cayley));
+        b.close();
+        let b1 = b.next_batch().unwrap();
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b1.requests.len() + b2.requests.len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_submitters_no_loss_no_dup() {
+        // Conservation property: N requests in, exactly N out, each once.
+        let b = Arc::new(DynamicBatcher::new(BatcherConfig {
+            max_batch: 7,
+            max_wait: Duration::from_millis(1),
+        }));
+        let n = 500u64;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n / 4 {
+                        b.submit(req(p * (n / 4) + i, "m", OpKind::Apply));
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(batch) = b.next_batch() {
+            for r in batch.requests {
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+            }
+        }
+        assert_eq!(seen.len() as u64, n, "lost requests");
+    }
+}

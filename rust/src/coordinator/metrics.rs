@@ -1,0 +1,130 @@
+//! Serving metrics: lock-free counters + a coarse latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram bucket upper bounds in microseconds (last bucket = +∞).
+pub const LATENCY_BUCKETS_US: [u64; 10] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 50_000, u64::MAX];
+
+/// Aggregated serving metrics; all methods are thread-safe.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses_ok: AtomicU64,
+    pub responses_err: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_columns: AtomicU64,
+    pub flush_full: AtomicU64,
+    pub flush_deadline: AtomicU64,
+    latency_hist: [AtomicU64; 10],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, us: u64) {
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(9);
+        self.latency_hist[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean batch size so far (the FastH utilization knob).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_columns.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Mean latency in µs.
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses_ok.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate latency percentile from the histogram (returns the
+    /// bucket upper bound).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_hist.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.latency_hist.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return LATENCY_BUCKETS_US[i];
+            }
+        }
+        u64::MAX
+    }
+
+    /// Render as a JSON object string (the `stats` admin command).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("responses_ok", Json::num(self.responses_ok.load(Ordering::Relaxed) as f64)),
+            ("responses_err", Json::num(self.responses_err.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("mean_batch_size", Json::num(self.mean_batch_size())),
+            ("flush_full", Json::num(self.flush_full.load(Ordering::Relaxed) as f64)),
+            ("flush_deadline", Json::num(self.flush_deadline.load(Ordering::Relaxed) as f64)),
+            ("mean_latency_us", Json::num(self.mean_latency_us())),
+            // The +∞ bucket renders as a sentinel cap rather than u64::MAX.
+            (
+                "p50_latency_us",
+                Json::num(self.latency_percentile_us(0.5).min(10_000_000) as f64),
+            ),
+            (
+                "p99_latency_us",
+                Json::num(self.latency_percentile_us(0.99).min(10_000_000) as f64),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_math() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_columns.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_size(), 5.0);
+    }
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let m = Metrics::new();
+        for us in [10, 20, 30, 40, 60, 70, 80, 90, 2000, 100_000] {
+            m.record_latency(us);
+        }
+        assert_eq!(m.latency_percentile_us(0.4), 50); // 4/10 ≤ 50µs
+        assert!(m.latency_percentile_us(0.99) >= 50_000);
+        assert_eq!(m.latency_percentile_us(0.0), 50);
+    }
+
+    #[test]
+    fn json_renders() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.responses_ok.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(100);
+        let j = crate::util::json::Json::parse(&m.to_json()).unwrap();
+        assert_eq!(j.get("requests").as_usize(), Some(3));
+        assert!(j.get("p50_latency_us").as_f64().is_some());
+    }
+}

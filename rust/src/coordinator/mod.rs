@@ -1,0 +1,28 @@
+//! Layer 3 — the serving coordinator ("orthoserve").
+//!
+//! FastH's performance model makes batching a first-class concern: the
+//! sequential depth of an orthogonal-matrix application is `O(d/k + k)`
+//! *per batch*, independent of how many columns ride along — so a dynamic
+//! batcher that coalesces single-column requests into a `d×m` mini-batch
+//! converts the paper's parallelism directly into serving throughput.
+//! This module provides exactly that:
+//!
+//! - [`protocol`]: JSON-lines wire format (request/response),
+//! - [`metrics`]: counters + latency histogram,
+//! - [`state`]: the model registry (named [`crate::svd::SvdParam`]s with a
+//!   native-FastH or PJRT-artifact execution engine),
+//! - [`batcher`]: the dynamic batcher (flush on size or deadline),
+//! - [`worker`]: batch execution (assemble `X`, run, scatter results),
+//! - [`server`]: a threaded TCP front-end plus a matching blocking client.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod state;
+pub mod worker;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use protocol::{OpKind, Request, Response};
+pub use server::{Client, Server, ServerConfig};
+pub use state::{ExecEngine, ModelRegistry};

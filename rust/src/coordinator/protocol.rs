@@ -1,0 +1,190 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Request:  `{"id": 7, "model": "svd_64", "op": "apply",
+//!             "column": [f32; d]}`
+//! Response: `{"id": 7, "ok": true, "column": [f32; d],
+//!             "batch_size": 5, "latency_us": 1234}`
+//!
+//! Single columns are the unit of work; the batcher coalesces them into
+//! the `d×m` mini-batches FastH wants. Admin commands (`stats`, `models`,
+//! `shutdown`) share the channel via `{"cmd": "..."}` lines.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Operation requested on a model's weight `W = UΣVᵀ`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// `y = W·x`.
+    Apply,
+    /// `y = W⁻¹·x` (Table-1 inverse route).
+    Inverse,
+    /// `y = e^W·x` (symmetric upper-bound form).
+    Expm,
+    /// `y = C(W)·x`.
+    Cayley,
+}
+
+impl OpKind {
+    pub fn parse(s: &str) -> Result<OpKind> {
+        Ok(match s {
+            "apply" => OpKind::Apply,
+            "inverse" => OpKind::Inverse,
+            "expm" => OpKind::Expm,
+            "cayley" => OpKind::Cayley,
+            other => bail!("unknown op '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Apply => "apply",
+            OpKind::Inverse => "inverse",
+            OpKind::Expm => "expm",
+            OpKind::Cayley => "cayley",
+        }
+    }
+}
+
+/// A single-column request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub op: OpKind,
+    pub column: Vec<f32>,
+}
+
+impl Request {
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("model", Json::str(&self.model)),
+            ("op", Json::str(self.op.name())),
+            (
+                "column",
+                Json::arr(self.column.iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(line: &str) -> Result<Request> {
+        let j = Json::parse(line).context("request json")?;
+        let id = j.get("id").as_f64().context("request: id")? as u64;
+        let model = j.get("model").as_str().context("request: model")?.to_string();
+        let op = OpKind::parse(j.get("op").as_str().context("request: op")?)?;
+        let column: Vec<f32> = j
+            .get("column")
+            .as_arr()
+            .context("request: column")?
+            .iter()
+            .map(|v| v.as_f64().map(|f| f as f32).context("request: column entry"))
+            .collect::<Result<_>>()?;
+        if column.is_empty() {
+            bail!("request: empty column");
+        }
+        Ok(Request { id, model, op, column })
+    }
+}
+
+/// Response to one request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub ok: bool,
+    pub column: Vec<f32>,
+    pub error: Option<String>,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+    /// End-to-end service latency.
+    pub latency_us: u64,
+}
+
+impl Response {
+    pub fn ok(id: u64, column: Vec<f32>, batch_size: usize, latency_us: u64) -> Response {
+        Response { id, ok: true, column, error: None, batch_size, latency_us }
+    }
+
+    pub fn err(id: u64, msg: impl Into<String>) -> Response {
+        Response { id, ok: false, column: Vec::new(), error: Some(msg.into()), batch_size: 0, latency_us: 0 }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("ok", Json::Bool(self.ok)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("latency_us", Json::num(self.latency_us as f64)),
+            (
+                "column",
+                Json::arr(self.column.iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(e)));
+        }
+        Json::obj(fields).to_string()
+    }
+
+    pub fn from_json(line: &str) -> Result<Response> {
+        let j = Json::parse(line).context("response json")?;
+        Ok(Response {
+            id: j.get("id").as_f64().context("response: id")? as u64,
+            ok: j.get("ok").as_bool().context("response: ok")?,
+            column: j
+                .get("column")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as f32))
+                .collect(),
+            error: j.get("error").as_str().map(|s| s.to_string()),
+            batch_size: j.get("batch_size").as_usize().unwrap_or(0),
+            latency_us: j.get("latency_us").as_f64().unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request {
+            id: 42,
+            model: "svd_64".into(),
+            op: OpKind::Inverse,
+            column: vec![1.0, -2.5, 3.25],
+        };
+        let back = Request::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::ok(7, vec![0.5, 1.5], 4, 999);
+        let back = Response::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        let e = Response::err(8, "boom");
+        let back = Response::from_json(&e.to_json()).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn all_ops_parse() {
+        for op in [OpKind::Apply, OpKind::Inverse, OpKind::Expm, OpKind::Cayley] {
+            assert_eq!(OpKind::parse(op.name()).unwrap(), op);
+        }
+        assert!(OpKind::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(Request::from_json("{}").is_err());
+        assert!(Request::from_json(r#"{"id":1,"model":"m","op":"apply","column":[]}"#).is_err());
+        assert!(Request::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,410 @@
+//! TCP front-end: newline-delimited JSON requests in, responses out.
+//!
+//! Topology: N connection threads parse requests into the shared
+//! [`DynamicBatcher`]; W worker threads pull batches, execute them against
+//! the [`ModelRegistry`], and route responses back to the originating
+//! connection through per-connection channels. Admin lines
+//! (`{"cmd": "stats"|"models"|"shutdown"}`) are answered inline.
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::protocol::{Request, Response};
+use super::state::ModelRegistry;
+use super::worker::execute_batch;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Server knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. "127.0.0.1:7070" (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    /// Reject new requests once this many columns are queued
+    /// (backpressure).
+    pub max_queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            max_queue_depth: 10_000,
+        }
+    }
+}
+
+type ResponseTx = mpsc::Sender<Response>;
+
+/// Running server handle.
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    pub registry: Arc<ModelRegistry>,
+    shutdown: Arc<AtomicBool>,
+    batcher: Arc<DynamicBatcher>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads.
+    pub fn start(config: ServerConfig, registry: Arc<ModelRegistry>) -> Result<Server> {
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("binding {}", config.addr))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let metrics = Arc::new(Metrics::new());
+        let batcher = Arc::new(DynamicBatcher::new(config.batcher));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let routes: Arc<Mutex<HashMap<u64, ResponseTx>>> = Arc::new(Mutex::new(HashMap::new()));
+        let next_conn_id = Arc::new(AtomicU64::new(1));
+        let mut threads = Vec::new();
+
+        // Worker threads: pull batches → execute → route responses.
+        for _ in 0..config.workers.max(1) {
+            let batcher = batcher.clone();
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let routes = routes.clone();
+            threads.push(std::thread::spawn(move || {
+                while let Some(batch) = batcher.next_batch() {
+                    let responses = execute_batch(&registry, &metrics, &batch);
+                    let routes = routes.lock().unwrap();
+                    for (resp, req) in responses.into_iter().zip(&batch.requests) {
+                        // Requests carry the connection id in the top bits
+                        // of the wire id (see conn loop); route accordingly.
+                        let conn = req.id >> 32;
+                        if let Some(tx) = routes.get(&conn) {
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+            }));
+        }
+
+        // Accept loop.
+        {
+            let shutdown = shutdown.clone();
+            let batcher = batcher.clone();
+            let metrics = metrics.clone();
+            let registry = registry.clone();
+            let max_depth = config.max_queue_depth;
+            threads.push(std::thread::spawn(move || {
+                while !shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let conn_id = next_conn_id.fetch_add(1, Ordering::Relaxed);
+                            let (tx, rx) = mpsc::channel::<Response>();
+                            routes.lock().unwrap().insert(conn_id, tx);
+                            spawn_connection(
+                                conn_id,
+                                stream,
+                                batcher.clone(),
+                                metrics.clone(),
+                                registry.clone(),
+                                routes.clone(),
+                                shutdown.clone(),
+                                rx,
+                                max_depth,
+                            );
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+
+        Ok(Server { local_addr, metrics, registry, shutdown, batcher, threads })
+    }
+
+    /// Stop accepting, drain queues, join threads.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_connection(
+    conn_id: u64,
+    stream: TcpStream,
+    batcher: Arc<DynamicBatcher>,
+    metrics: Arc<Metrics>,
+    registry: Arc<ModelRegistry>,
+    routes: Arc<Mutex<HashMap<u64, ResponseTx>>>,
+    shutdown: Arc<AtomicBool>,
+    responses: mpsc::Receiver<Response>,
+    max_depth: usize,
+) {
+    // Writer half: serialize responses back, restoring the client's id.
+    let write_stream = stream.try_clone().expect("clone stream");
+    std::thread::spawn(move || {
+        let mut w = BufWriter::new(write_stream);
+        while let Ok(mut resp) = responses.recv() {
+            resp.id &= 0xFFFF_FFFF; // strip the connection tag
+            if writeln!(w, "{}", resp.to_json()).and_then(|_| w.flush()).is_err() {
+                break;
+            }
+        }
+    });
+
+    // Reader half: parse request lines into the batcher.
+    std::thread::spawn(move || {
+        let peer_routes = routes.clone();
+        let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break, // EOF / error → drop connection
+                Ok(_) => {}
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            // Admin commands bypass the batcher.
+            if let Ok(j) = crate::util::json::Json::parse(trimmed) {
+                if let Some(cmd) = j.get("cmd").as_str() {
+                    let reply = match cmd {
+                        "stats" => metrics.to_json(),
+                        "models" => crate::util::json::Json::arr(
+                            registry.names().into_iter().map(crate::util::json::Json::str).collect(),
+                        )
+                        .to_string(),
+                        "shutdown" => {
+                            shutdown.store(true, Ordering::Relaxed);
+                            batcher.close();
+                            "{\"ok\":true}".to_string()
+                        }
+                        other => format!("{{\"error\":\"unknown cmd '{other}'\"}}"),
+                    };
+                    let mut w = BufWriter::new(stream.try_clone().expect("clone"));
+                    let _ = writeln!(w, "{reply}");
+                    let _ = w.flush();
+                    continue;
+                }
+            }
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            match Request::from_json(trimmed) {
+                Ok(mut req) => {
+                    if batcher.depth() >= max_depth {
+                        // Backpressure: reject instead of queueing unboundedly.
+                        let resp = Response::err(req.id, "server overloaded (queue full)");
+                        metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+                        let mut w = BufWriter::new(stream.try_clone().expect("clone"));
+                        let _ = writeln!(w, "{}", resp.to_json());
+                        let _ = w.flush();
+                        continue;
+                    }
+                    // Tag the request id with the connection for routing.
+                    req.id = (conn_id << 32) | (req.id & 0xFFFF_FFFF);
+                    batcher.submit(req);
+                }
+                Err(e) => {
+                    metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+                    let resp = Response::err(0, format!("bad request: {e:#}"));
+                    let mut w = BufWriter::new(stream.try_clone().expect("clone"));
+                    let _ = writeln!(w, "{}", resp.to_json());
+                    let _ = w.flush();
+                }
+            }
+        }
+        peer_routes.lock().unwrap().remove(&conn_id);
+    });
+}
+
+/// Minimal blocking client for tests, examples, and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: BufWriter::new(stream), next_id: 1 })
+    }
+
+    /// Send one request and wait for its response (responses on one
+    /// connection come back in completion order; we match by id).
+    pub fn call(&mut self, model: &str, op: super::protocol::OpKind, column: Vec<f32>) -> Result<Response> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request { id, model: model.into(), op, column };
+        writeln!(self.writer, "{}", req.to_json())?;
+        self.writer.flush()?;
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let resp = Response::from_json(line.trim())?;
+            if resp.id == id || !resp.ok {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// Fire-and-collect: send all columns, then read all responses
+    /// (exercises batching: the server coalesces in-flight requests).
+    pub fn call_many(
+        &mut self,
+        model: &str,
+        op: super::protocol::OpKind,
+        columns: Vec<Vec<f32>>,
+    ) -> Result<Vec<Response>> {
+        let n = columns.len();
+        let first_id = self.next_id;
+        for column in columns {
+            let id = self.next_id;
+            self.next_id += 1;
+            let req = Request { id, model: model.into(), op, column };
+            writeln!(self.writer, "{}", req.to_json())?;
+        }
+        self.writer.flush()?;
+        let mut got: Vec<Option<Response>> = vec![None; n];
+        let mut filled = 0;
+        while filled < n {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let resp = Response::from_json(line.trim())?;
+            let idx = (resp.id - first_id) as usize;
+            if idx < n && got[idx].is_none() {
+                got[idx] = Some(resp);
+                filled += 1;
+            }
+        }
+        Ok(got.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    /// Admin command returning the raw JSON line.
+    pub fn admin(&mut self, cmd: &str) -> Result<String> {
+        writeln!(self.writer, "{{\"cmd\":\"{cmd}\"}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::OpKind;
+    use crate::coordinator::state::ExecEngine;
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    fn start_test_server() -> Server {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.create("m8", 8, ExecEngine::Native { k: 4 }, 21);
+        Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: 2,
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+                max_queue_depth: 100,
+            },
+            registry,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_apply_inverse() {
+        let server = start_test_server();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let mut rng = Rng::new(22);
+        let col: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let fwd = client.call("m8", OpKind::Apply, col.clone()).unwrap();
+        assert!(fwd.ok, "{:?}", fwd.error);
+        let back = client.call("m8", OpKind::Inverse, fwd.column.clone()).unwrap();
+        assert!(back.ok);
+        assert_close(&back.column, &col, 1e-2, 1e-2).unwrap();
+        server.stop();
+    }
+
+    #[test]
+    fn many_requests_get_batched() {
+        let server = start_test_server();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let mut rng = Rng::new(23);
+        let cols: Vec<Vec<f32>> =
+            (0..32).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        let responses = client.call_many("m8", OpKind::Apply, cols).unwrap();
+        assert_eq!(responses.len(), 32);
+        assert!(responses.iter().all(|r| r.ok));
+        // At least one response should have shared a batch.
+        let max_bs = responses.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(max_bs > 1, "no batching observed (max batch {max_bs})");
+        // Stats report them all.
+        let stats = client.admin("stats").unwrap();
+        let j = crate::util::json::Json::parse(&stats).unwrap();
+        assert_eq!(j.get("responses_ok").as_usize(), Some(32));
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_model_surfaces_error() {
+        let server = start_test_server();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let resp = client.call("ghost", OpKind::Apply, vec![0.0; 8]).unwrap();
+        assert!(!resp.ok);
+        assert!(resp.error.unwrap().contains("unknown model"));
+        server.stop();
+    }
+
+    #[test]
+    fn models_admin_lists_registry() {
+        let server = start_test_server();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let models = client.admin("models").unwrap();
+        assert!(models.contains("m8"));
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = start_test_server();
+        let addr = server.local_addr;
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let mut rng = Rng::new(100 + t);
+                    for _ in 0..10 {
+                        let col: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+                        let r = client.call("m8", OpKind::Apply, col).unwrap();
+                        assert!(r.ok);
+                        assert_eq!(r.column.len(), 8);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+}

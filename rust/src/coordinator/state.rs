@@ -1,0 +1,231 @@
+//! Model registry: named SVD-reparameterized weights plus the execution
+//! engine that serves them.
+
+use crate::linalg::Mat;
+use crate::runtime::pjrt::{ArtifactEngine, Tensor};
+use crate::svd::{MatrixOp, SvdParam};
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use super::protocol::OpKind;
+
+/// How batches for a model are executed.
+#[derive(Clone)]
+pub enum ExecEngine {
+    /// Native Rust FastH with block size k.
+    Native { k: usize },
+    /// AOT artifact via PJRT (artifact names resolved as
+    /// `svd_apply_{d}` / `svd_inverse_{d}` from the shared engine).
+    Pjrt(Arc<ArtifactEngine>),
+}
+
+/// One served model.
+pub struct ModelState {
+    pub name: String,
+    pub param: SvdParam,
+    pub engine: ExecEngine,
+}
+
+impl ModelState {
+    /// Execute `op` on a d×m batch.
+    pub fn execute(&self, op: OpKind, x: &Mat) -> Result<Mat> {
+        let d = self.param.dim();
+        if x.rows() != d {
+            bail!("model '{}' is {d}-dimensional, got {} rows", self.name, x.rows());
+        }
+        match &self.engine {
+            ExecEngine::Native { k } => Ok(match op {
+                OpKind::Apply => self.param.apply(x, *k),
+                OpKind::Inverse => self.param.apply_inverse(x, *k),
+                OpKind::Expm => {
+                    let sig = MatrixOp::Expm.transform_sigma(&self.param.sigma);
+                    apply_with_sigma(&self.param, &sig, x, *k)
+                }
+                OpKind::Cayley => {
+                    let sig = MatrixOp::Cayley.transform_sigma(&self.param.sigma);
+                    apply_with_sigma(&self.param, &sig, x, *k)
+                }
+            }),
+            ExecEngine::Pjrt(engine) => {
+                // Artifacts exist for apply/inverse; expm/cayley reuse the
+                // apply artifact with a transformed spectrum (identical
+                // graph, different σ input — Table 1's point).
+                let (artifact, sigma) = match op {
+                    OpKind::Apply => (format!("svd_apply_{d}"), self.param.sigma.clone()),
+                    OpKind::Inverse => {
+                        (format!("svd_inverse_{d}"), self.param.sigma.clone())
+                    }
+                    OpKind::Expm => (
+                        format!("svd_apply_{d}"),
+                        MatrixOp::Expm.transform_sigma(&self.param.sigma),
+                    ),
+                    OpKind::Cayley => (
+                        format!("svd_apply_{d}"),
+                        MatrixOp::Cayley.transform_sigma(&self.param.sigma),
+                    ),
+                };
+                let entry = engine
+                    .entry(&artifact)
+                    .ok_or_else(|| anyhow!("no artifact '{artifact}' for model '{}'", self.name))?;
+                // Artifacts are lowered for a fixed batch m: pad/truncate.
+                let m_art = entry.m;
+                let x_padded = pad_cols(x, m_art);
+                let out = engine.run1(
+                    &artifact,
+                    &[
+                        Tensor::M(self.param.u.v.clone()),
+                        Tensor::M(self.param.v.v.clone()),
+                        Tensor::V(sigma),
+                        Tensor::M(x_padded),
+                    ],
+                )?;
+                Ok(out.slice(0, d, 0, x.cols()))
+            }
+        }
+    }
+}
+
+/// `L·diag(σ')·Rᵀ` application reusing the param's factors with a
+/// transformed spectrum (expm/cayley serving route).
+fn apply_with_sigma(p: &SvdParam, sigma: &[f32], x: &Mat, k: usize) -> Mat {
+    use crate::householder::fasth;
+    let x1 = fasth::fasth_apply_transpose(&p.v, x, k);
+    let x2 = crate::svd::param::scale_rows(&x1, sigma);
+    fasth::fasth_apply(&p.u, &x2, k)
+}
+
+/// Pad (or truncate) a batch to exactly `m` columns with zeros.
+fn pad_cols(x: &Mat, m: usize) -> Mat {
+    if x.cols() == m {
+        return x.clone();
+    }
+    let mut out = Mat::zeros(x.rows(), m);
+    for i in 0..x.rows() {
+        for j in 0..x.cols().min(m) {
+            out[(i, j)] = x[(i, j)];
+        }
+    }
+    out
+}
+
+/// Thread-safe registry of served models.
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ModelState>>>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { models: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// Register a freshly initialized model of size d.
+    pub fn create(&self, name: &str, d: usize, engine: ExecEngine, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut param = SvdParam::random_full(d, &mut rng);
+        // A generic non-unit spectrum keeps all ops interesting.
+        for s in param.sigma.iter_mut() {
+            *s = 0.75 + 0.5 * rng.uniform() as f32;
+        }
+        let state = ModelState { name: name.to_string(), param, engine };
+        self.models.write().unwrap().insert(name.to_string(), Arc::new(state));
+    }
+
+    /// Register an existing parameterization.
+    pub fn insert(&self, name: &str, param: SvdParam, engine: ExecEngine) {
+        let state = ModelState { name: name.to_string(), param, engine };
+        self.models.write().unwrap().insert(name.to_string(), Arc::new(state));
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelState>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn registry_basics() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        reg.create("svd_16", 16, ExecEngine::Native { k: 4 }, 1);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get("svd_16").is_some());
+        assert!(reg.get("nope").is_none());
+        assert_eq!(reg.names(), vec!["svd_16".to_string()]);
+    }
+
+    #[test]
+    fn native_apply_then_inverse_roundtrips() {
+        let reg = ModelRegistry::new();
+        reg.create("m", 12, ExecEngine::Native { k: 4 }, 2);
+        let model = reg.get("m").unwrap();
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(12, 5, &mut rng);
+        let y = model.execute(OpKind::Apply, &x).unwrap();
+        let back = model.execute(OpKind::Inverse, &y).unwrap();
+        assert_close(back.data(), x.data(), 1e-2, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn expm_cayley_native_run() {
+        let reg = ModelRegistry::new();
+        reg.create("m", 8, ExecEngine::Native { k: 4 }, 4);
+        let model = reg.get("m").unwrap();
+        let mut rng = Rng::new(5);
+        let x = Mat::randn(8, 3, &mut rng);
+        for op in [OpKind::Expm, OpKind::Cayley] {
+            let y = model.execute(op, &x).unwrap();
+            assert!(!y.has_non_finite());
+            assert_eq!((y.rows(), y.cols()), (8, 3));
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_error() {
+        let reg = ModelRegistry::new();
+        reg.create("m", 8, ExecEngine::Native { k: 4 }, 6);
+        let model = reg.get("m").unwrap();
+        let x = Mat::zeros(9, 2);
+        assert!(model.execute(OpKind::Apply, &x).is_err());
+    }
+
+    #[test]
+    fn pad_cols_behaviour() {
+        let x = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let p = pad_cols(&x, 4);
+        assert_eq!((p.rows(), p.cols()), (2, 4));
+        assert_eq!(p[(1, 1)], 4.0);
+        assert_eq!(p[(0, 3)], 0.0);
+        let t = pad_cols(&x, 1);
+        assert_eq!((t.rows(), t.cols()), (2, 1));
+        assert_eq!(t[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn heuristic_k_used_somewhere() {
+        // Document the link between registry defaults and §3.3 tuning.
+        assert!(crate::householder::tune::KCache::heuristic(64, 32) >= 8);
+    }
+}

@@ -1,0 +1,172 @@
+//! Batch execution: assemble the `d×m` batch, run the model's engine,
+//! scatter per-column results back to their requests.
+
+use super::batcher::Batch;
+use super::metrics::Metrics;
+use super::protocol::Response;
+use super::state::ModelRegistry;
+use crate::linalg::Mat;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// Execute one batch against the registry, producing one response per
+/// request (errors fan out to every member of a failed batch).
+pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch) -> Vec<Response> {
+    let t0 = Instant::now();
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_columns.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+    if batch.full {
+        metrics.flush_full.fetch_add(1, Ordering::Relaxed);
+    } else {
+        metrics.flush_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    let model = match registry.get(&batch.model) {
+        Some(m) => m,
+        None => {
+            metrics.responses_err.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+            return batch
+                .requests
+                .iter()
+                .map(|r| Response::err(r.id, format!("unknown model '{}'", batch.model)))
+                .collect();
+        }
+    };
+    let d = model.param.dim();
+    // Column-length validation before assembling the batch.
+    if let Some(bad) = batch.requests.iter().find(|r| r.column.len() != d) {
+        metrics.responses_err.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+        return batch
+            .requests
+            .iter()
+            .map(|r| {
+                Response::err(
+                    r.id,
+                    format!(
+                        "column length {} != model dim {d} (first offender id {})",
+                        r.column.len(),
+                        bad.id
+                    ),
+                )
+            })
+            .collect();
+    }
+
+    // Gather columns → X.
+    let m = batch.requests.len();
+    let mut x = Mat::zeros(d, m);
+    for (j, r) in batch.requests.iter().enumerate() {
+        for i in 0..d {
+            x[(i, j)] = r.column[i];
+        }
+    }
+
+    match model.execute(batch.op, &x) {
+        Ok(y) => {
+            let us = t0.elapsed().as_micros() as u64;
+            metrics.responses_ok.fetch_add(m as u64, Ordering::Relaxed);
+            batch
+                .requests
+                .iter()
+                .enumerate()
+                .map(|(j, r)| {
+                    metrics.record_latency(us);
+                    Response::ok(r.id, y.col(j), m, us)
+                })
+                .collect()
+        }
+        Err(e) => {
+            metrics.responses_err.fetch_add(m as u64, Ordering::Relaxed);
+            batch.requests.iter().map(|r| Response::err(r.id, format!("{e:#}"))).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::batcher::Batch;
+    use super::super::protocol::{OpKind, Request};
+    use super::super::state::ExecEngine;
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    fn setup() -> (ModelRegistry, Metrics) {
+        let reg = ModelRegistry::new();
+        reg.create("m8", 8, ExecEngine::Native { k: 4 }, 9);
+        (reg, Metrics::new())
+    }
+
+    fn make_batch(op: OpKind, cols: Vec<Vec<f32>>) -> Batch {
+        Batch {
+            model: "m8".into(),
+            op,
+            requests: cols
+                .into_iter()
+                .enumerate()
+                .map(|(i, column)| Request { id: i as u64, model: "m8".into(), op, column })
+                .collect(),
+            full: true,
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_column_runs() {
+        let (reg, metrics) = setup();
+        let mut rng = Rng::new(10);
+        let cols: Vec<Vec<f32>> = (0..5).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        let batch = make_batch(OpKind::Apply, cols.clone());
+        let responses = execute_batch(&reg, &metrics, &batch);
+        assert_eq!(responses.len(), 5);
+        // Each response equals running that column alone.
+        let model = reg.get("m8").unwrap();
+        for (j, resp) in responses.iter().enumerate() {
+            assert!(resp.ok);
+            assert_eq!(resp.batch_size, 5);
+            let mut x = Mat::zeros(8, 1);
+            for i in 0..8 {
+                x[(i, 0)] = cols[j][i];
+            }
+            let solo = model.execute(OpKind::Apply, &x).unwrap();
+            assert_close(&resp.column, &solo.col(0), 1e-4, 1e-3).unwrap();
+        }
+        assert_eq!(metrics.responses_ok.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.mean_batch_size(), 5.0);
+    }
+
+    #[test]
+    fn unknown_model_errors_whole_batch() {
+        let (reg, metrics) = setup();
+        let mut batch = make_batch(OpKind::Apply, vec![vec![0.0; 8]; 3]);
+        batch.model = "ghost".into();
+        for r in batch.requests.iter_mut() {
+            r.model = "ghost".into();
+        }
+        let responses = execute_batch(&reg, &metrics, &batch);
+        assert!(responses.iter().all(|r| !r.ok));
+        assert_eq!(metrics.responses_err.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn wrong_column_length_rejected() {
+        let (reg, metrics) = setup();
+        let batch = make_batch(OpKind::Apply, vec![vec![0.0; 8], vec![0.0; 7]]);
+        let responses = execute_batch(&reg, &metrics, &batch);
+        assert!(responses.iter().all(|r| !r.ok));
+        let _ = metrics;
+    }
+
+    #[test]
+    fn inverse_roundtrip_through_batches() {
+        let (reg, metrics) = setup();
+        let mut rng = Rng::new(11);
+        let col: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let fwd = execute_batch(&reg, &metrics, &make_batch(OpKind::Apply, vec![col.clone()]));
+        let back = execute_batch(
+            &reg,
+            &metrics,
+            &make_batch(OpKind::Inverse, vec![fwd[0].column.clone()]),
+        );
+        assert_close(&back[0].column, &col, 1e-2, 1e-2).unwrap();
+    }
+}

@@ -1,0 +1,312 @@
+//! **FastH** — the paper's contribution (Algorithms 1, 2/3).
+//!
+//! Groups the d reflections into `⌈d/k⌉` blocks, converts each block to
+//! its compact WY form `P_i = I − 2W_iY_iᵀ` (Lemma 1, in parallel), and
+//! then applies blocks with GEMMs:
+//!
+//! * forward (`Algorithm 1`): `A_i = A_{i+1} − 2·W_i·(Y_iᵀ·A_{i+1})` —
+//!   `O(d/k)` sequential matrix-matrix multiplications;
+//! * backward (`Algorithm 2/3`): Step 1 runs `∂L/∂A_{i+1} = P_iᵀ·∂L/∂A_i`
+//!   sequentially (Eq. 3) over blocks; Step 2 solves the per-block
+//!   subproblems *in parallel*, recomputing intra-block activations
+//!   reversibly (Eq. 4) and evaluating the Householder-vector gradient
+//!   (Eq. 5).
+//!
+//! Total work stays `O(d²m)` (for k = Θ(m)); sequential depth drops from
+//! `O(d)` inner products to `O(d/k + k)` matrix multiplications — the
+//! entire point of the paper. With the §3.3 extension the block size `k`
+//! is a free parameter: `O(d²k + d²m)` time, `O(d/k + k)` depth, optimal
+//! near `k = √d`.
+
+use super::vectors::{fused_reflection_backward, HouseholderVectors};
+use super::wy::WyBlock;
+use crate::linalg::Mat;
+use crate::util::parallel::parallel_map;
+
+/// Forward-pass byproducts kept for the backward pass: the WY blocks and
+/// the inter-block activations `A_1 … A_{nb+1}` (paper §3.1 Remark: saving
+/// the `A_i` does not increase asymptotic memory — `(d/k)·dm ≤ d²` floats).
+pub struct FasthCache {
+    /// `blocks[i]` is `P_{i+1}` (0-based; covers reflections `[i·k, i·k+width)`).
+    pub blocks: Vec<WyBlock>,
+    /// `acts[i] = A_{i+1}` in paper numbering: `acts[0] = A_1` (the output),
+    /// `acts[nb] = A_{nb+1} = X` (the input).
+    pub acts: Vec<Mat>,
+    /// Block size used.
+    pub k: usize,
+}
+
+/// Block partition: start index and width of block `i` for `n` reflections
+/// in blocks of `k` (last block may be narrower — the paper assumes m | d
+/// "for simplicity"; we support ragged tails).
+fn block_bounds(n: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k >= 1);
+    let mut out = Vec::with_capacity(n.div_ceil(k));
+    let mut start = 0;
+    while start < n {
+        let w = k.min(n - start);
+        out.push((start, w));
+        start += w;
+    }
+    out
+}
+
+/// Step 1 of Algorithm 1: build all WY blocks in parallel.
+pub fn build_blocks(hv: &HouseholderVectors, k: usize) -> Vec<WyBlock> {
+    let bounds = block_bounds(hv.count(), k);
+    parallel_map(bounds.len(), |i| {
+        let (start, width) = bounds[i];
+        WyBlock::build(hv, start, width)
+    })
+}
+
+/// Algorithm 1 (forward), keeping the cache for a later backward pass.
+/// Returns `(A, cache)` with `A = H₁…H_n·X`.
+pub fn fasth_forward(hv: &HouseholderVectors, x: &Mat, k: usize) -> (Mat, FasthCache) {
+    assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
+    let (d, m) = (x.rows(), x.cols());
+    let blocks = build_blocks(hv, k);
+    let nb = blocks.len();
+
+    // Step 2: sequential block applications, saving every A_i.
+    let mut acts: Vec<Mat> = Vec::with_capacity(nb + 1);
+    acts.push(x.clone()); // temporarily in reverse: acts_rev[0] = A_{nb+1}
+    let mut a = x.clone();
+    let mut wt = Mat::zeros(d, m);
+    for i in (0..nb).rev() {
+        let mut t = Mat::zeros(blocks[i].width(), m);
+        blocks[i].apply_inplace(&mut a, &mut t, &mut wt);
+        acts.push(a.clone());
+    }
+    acts.reverse(); // now acts[0] = A_1 … acts[nb] = X.
+    (a, FasthCache { blocks, acts, k })
+}
+
+/// Forward without retaining the cache (inference-only application).
+pub fn fasth_apply(hv: &HouseholderVectors, x: &Mat, k: usize) -> Mat {
+    assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
+    let (d, m) = (x.rows(), x.cols());
+    let blocks = build_blocks(hv, k);
+    let mut a = x.clone();
+    let mut wt = Mat::zeros(d, m);
+    for b in blocks.iter().rev() {
+        let mut t = Mat::zeros(b.width(), m);
+        b.apply_inplace(&mut a, &mut t, &mut wt);
+    }
+    a
+}
+
+/// Transpose application `(H₁…H_n)ᵀ·X = P_nbᵀ…P₁ᵀ·X` — blocks applied in
+/// the opposite order with `Pᵀ = I − 2YWᵀ`. Same `O(d/k + k)` depth.
+pub fn fasth_apply_transpose(hv: &HouseholderVectors, x: &Mat, k: usize) -> Mat {
+    assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
+    let (d, m) = (x.rows(), x.cols());
+    let blocks = build_blocks(hv, k);
+    let mut a = x.clone();
+    let mut yt = Mat::zeros(d, m);
+    for b in blocks.iter() {
+        let mut t = Mat::zeros(b.width(), m);
+        b.apply_transpose_inplace(&mut a, &mut t, &mut yt);
+    }
+    a
+}
+
+/// Algorithm 2/3 (backward). Given the forward cache and the upstream
+/// gradient `g = ∂L/∂A₁`, returns `(∂L/∂X, ∂L/∂V)`.
+pub fn fasth_backward(hv: &HouseholderVectors, cache: &FasthCache, g: &Mat) -> (Mat, Mat) {
+    let d = hv.dim();
+    let n = hv.count();
+    let nb = cache.blocks.len();
+    let m = g.cols();
+    assert_eq!(g.rows(), d);
+    assert_eq!(cache.acts.len(), nb + 1);
+
+    // ---- Step 1 (sequential over blocks): grads[i] = ∂L/∂A_{i+1}.
+    let mut grads: Vec<Mat> = Vec::with_capacity(nb + 1);
+    grads.push(g.clone());
+    let mut g_cur = g.clone();
+    let mut yt = Mat::zeros(d, m);
+    for i in 0..nb {
+        let mut t = Mat::zeros(cache.blocks[i].width(), m);
+        cache.blocks[i].apply_transpose_inplace(&mut g_cur, &mut t, &mut yt);
+        grads.push(g_cur.clone());
+    }
+    let dx = g_cur; // ∂L/∂X = ∂L/∂A_{nb+1}.
+
+    // ---- Step 2 (parallel over blocks): per-block Eq. 4/5 subproblems.
+    let bounds = block_bounds(n, cache.k);
+    let per_block: Vec<Mat> = parallel_map(nb, |i| {
+        let (start, width) = bounds[i];
+        let mut a_cur = cache.acts[i].clone(); // Â₁ = A_i (block output)
+        let mut gg = grads[i].clone(); // ∂L/∂Â₁ = ∂L/∂A_i
+        let mut dv_block = Mat::zeros(d, width);
+        let mut gv = vec![0.0f32; d];
+        for j in 0..width {
+            let v = hv.v.col(start + j);
+            // Eq. 4 (Â_{j+1} = Ĥ_jᵀ·Â_j, ∂L/∂Â_{j+1} = Ĥ_jᵀ·∂L/∂Â_j) and
+            // Eq. 5 in one fused two-pass kernel (§Perf iteration 4).
+            fused_reflection_backward(&v, &mut a_cur, &mut gg, &mut gv);
+            dv_block.set_col(j, &gv);
+        }
+        debug_assert!(
+            a_cur.max_abs_diff(&cache.acts[i + 1]) < 1e-2,
+            "block {i} reversibility drift"
+        );
+        dv_block
+    });
+
+    // Stitch per-block gradients into the d×n layout of hv.v.
+    let mut dv = Mat::zeros(d, n);
+    for (i, dvb) in per_block.iter().enumerate() {
+        let (start, width) = bounds[i];
+        for r in 0..d {
+            let dst = &mut dv.row_mut(r)[start..start + width];
+            dst.copy_from_slice(&dvb.row(r)[..width]);
+        }
+    }
+    (dx, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::householder::seq;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    #[test]
+    fn block_bounds_cover_exactly() {
+        assert_eq!(block_bounds(8, 4), vec![(0, 4), (4, 4)]);
+        assert_eq!(block_bounds(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(block_bounds(3, 8), vec![(0, 3)]);
+        assert_eq!(block_bounds(0, 4), vec![]);
+    }
+
+    #[test]
+    fn forward_matches_sequential() {
+        check("fasth_vs_seq_forward", 16, |rng| {
+            let d = 4 + rng.below(60);
+            let n = 1 + rng.below(d);
+            let m = 1 + rng.below(8);
+            let k = 1 + rng.below(12);
+            let hv = HouseholderVectors::random(d, n, rng);
+            let x = Mat::randn(d, m, rng);
+            let got = fasth_apply(&hv, &x, k);
+            let want = seq::seq_apply(&hv, &x);
+            assert_close(got.data(), want.data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn forward_with_cache_matches_apply() {
+        let mut rng = Rng::new(101);
+        let hv = HouseholderVectors::random_full(48, &mut rng);
+        let x = Mat::randn(48, 8, &mut rng);
+        let (a, cache) = fasth_forward(&hv, &x, 8);
+        assert_eq!(a.max_abs_diff(&fasth_apply(&hv, &x, 8)), 0.0);
+        // Cache invariants: acts[0] = output, acts[nb] = input.
+        assert_eq!(cache.acts[0].max_abs_diff(&a), 0.0);
+        assert_eq!(cache.acts.last().unwrap().max_abs_diff(&x), 0.0);
+        assert_eq!(cache.blocks.len(), 6);
+    }
+
+    #[test]
+    fn transpose_apply_is_inverse() {
+        check("fasth_transpose", 8, |rng| {
+            let d = 4 + rng.below(40);
+            let m = 1 + rng.below(6);
+            let k = 1 + rng.below(10);
+            let hv = HouseholderVectors::random_full(d, rng);
+            let x = Mat::randn(d, m, rng);
+            let y = fasth_apply(&hv, &x, k);
+            let back = fasth_apply_transpose(&hv, &y, k);
+            assert_close(back.data(), x.data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn backward_matches_sequential_backward() {
+        // FastH "computes the same thing" (paper §5): gradients must agree
+        // with the sequential engine to f32 tolerance.
+        check("fasth_vs_seq_backward", 12, |rng| {
+            let d = 4 + rng.below(40);
+            let n = 1 + rng.below(d);
+            let m = 1 + rng.below(6);
+            let k = 1 + rng.below(10);
+            let hv = HouseholderVectors::random(d, n, rng);
+            let x = Mat::randn(d, m, rng);
+            let g = Mat::randn(d, m, rng);
+            let (a, cache) = fasth_forward(&hv, &x, k);
+            let (dx, dv) = fasth_backward(&hv, &cache, &g);
+            let a_seq = seq::seq_forward(&hv, &x);
+            let (dx_seq, dv_seq) = seq::seq_backward(&hv, &a_seq, &g);
+            assert_close(a.data(), a_seq.data(), 1e-3, 1e-3)?;
+            assert_close(dx.data(), dx_seq.data(), 1e-3, 1e-3)?;
+            assert_close(dv.data(), dv_seq.data(), 2e-3, 2e-3)
+        });
+    }
+
+    #[test]
+    fn k_equals_one_still_works() {
+        // k=1 degenerates to (blocked) sequential; must stay correct.
+        let mut rng = Rng::new(102);
+        let hv = HouseholderVectors::random_full(12, &mut rng);
+        let x = Mat::randn(12, 3, &mut rng);
+        let got = fasth_apply(&hv, &x, 1);
+        let want = seq::seq_apply(&hv, &x);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn k_larger_than_n_single_block() {
+        let mut rng = Rng::new(103);
+        let hv = HouseholderVectors::random(10, 4, &mut rng);
+        let x = Mat::randn(10, 2, &mut rng);
+        let got = fasth_apply(&hv, &x, 64);
+        let want = seq::seq_apply(&hv, &x);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn gradcheck_small() {
+        check("fasth_gradcheck", 4, |rng| {
+            let d = 4 + rng.below(6);
+            let m = 1 + rng.below(3);
+            let hv = HouseholderVectors::random_full(d, rng);
+            let x = Mat::randn(d, m, rng);
+            let g = Mat::randn(d, m, rng);
+            let (_a, cache) = fasth_forward(&hv, &x, 3);
+            let (dx, dv) = fasth_backward(&hv, &cache, &g);
+            let fd_v = crate::linalg::oracle::finite_diff_grad(hv.v.data(), 1e-3, |p| {
+                let hv2 = HouseholderVectors::new(Mat::from_vec(d, d, p.to_vec()));
+                let out = seq::seq_apply(&hv2, &x);
+                out.data().iter().zip(g.data()).map(|(&o, &gg)| o as f64 * gg as f64).sum()
+            });
+            assert_close(dv.data(), &fd_v, 1e-2, 8e-2)?;
+            let fd_x = crate::linalg::oracle::finite_diff_grad(x.data(), 1e-3, |p| {
+                let x2 = Mat::from_vec(d, m, p.to_vec());
+                let out = seq::seq_apply(&hv, &x2);
+                out.data().iter().zip(g.data()).map(|(&o, &gg)| o as f64 * gg as f64).sum()
+            });
+            assert_close(dx.data(), &fd_x, 1e-2, 8e-2)
+        });
+    }
+
+    #[test]
+    fn orthogonality_preserved_under_sgd() {
+        // Take a gradient step on the Householder vectors; U stays
+        // orthogonal — the property that makes the whole scheme work.
+        let mut rng = Rng::new(104);
+        let mut hv = HouseholderVectors::random_full(16, &mut rng);
+        let x = Mat::randn(16, 4, &mut rng);
+        let g = Mat::randn(16, 4, &mut rng);
+        for _ in 0..5 {
+            let (_a, cache) = fasth_forward(&hv, &x, 4);
+            let (_dx, dv) = fasth_backward(&hv, &cache, &g);
+            hv.sgd_step(&dv, 0.05);
+        }
+        let u = hv.materialize();
+        let utu = crate::linalg::oracle::matmul_f64(&u.t(), &u);
+        assert!(utu.defect_from_identity() < 1e-4, "defect {}", utu.defect_from_identity());
+    }
+}

@@ -1,0 +1,93 @@
+//! The paper's algorithms: Householder products and their gradients.
+//!
+//! Everything here computes (pieces of) the same two mathematical objects:
+//!
+//! * **forward**:  `A = H₁·H₂·…·H_d·X` for Householder matrices
+//!   `Hᵢ = I − 2 vᵢvᵢᵀ/‖vᵢ‖²` and a mini-batch `X ∈ ℝ^{d×m}`;
+//! * **backward**: `∂L/∂X` and `∂L/∂vᵢ` given `∂L/∂A` (paper Eq. 3–5).
+//!
+//! Three interchangeable engines implement them, mirroring the paper's
+//! comparison (§4.1):
+//!
+//! | engine | time | sequential ops | module |
+//! |---|---|---|---|
+//! | sequential [17] | `O(d²m)` | `O(d)` vector-vector | [`seq`] |
+//! | parallel [17] | `O(d³)` | `O(log d)` big GEMMs | [`par`] |
+//! | **FastH (ours)** | `O(d²m)` | `O(d/k + k)` matrix-matrix | [`fasth`] |
+//!
+//! [`wy`] implements Lemma 1 (compact WY representation, Bischof & Van
+//! Loan 1987), shared by FastH and the parallel engine. [`tune`] is the
+//! §3.3 one-time search for the block size `k ≈ √d`.
+//!
+//! All engines are *bit-for-bit interchangeable* in the sense of the
+//! paper's "no loss of quality" claim: tests assert they agree to f32
+//! tolerance on both outputs and gradients.
+
+pub mod fasth;
+pub mod par;
+pub mod seq;
+pub mod tune;
+pub mod vectors;
+pub mod wy;
+
+pub use fasth::{fasth_apply, fasth_backward, fasth_forward, FasthCache};
+pub use seq::{seq_apply, seq_backward, seq_forward};
+pub use vectors::HouseholderVectors;
+pub use wy::WyBlock;
+
+use crate::linalg::Mat;
+
+/// Which engine to use for Householder-product application — the axis of
+/// the paper's Figure 3 comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Zhang et al. 2018 sequential algorithm: `O(d)` dependent
+    /// vector-vector ops.
+    Sequential,
+    /// Zhang et al. 2018 parallel algorithm: `O(d³)` work, log-depth.
+    Parallel,
+    /// FastH with block size `k` (paper §3; `k = m` recovers Algorithm 1,
+    /// `k ≈ √d` is the §3.3 optimum).
+    FastH { k: usize },
+}
+
+impl Engine {
+    /// Forward product `H₁…H_d·X` under this engine.
+    pub fn apply(&self, v: &HouseholderVectors, x: &Mat) -> Mat {
+        match *self {
+            Engine::Sequential => seq::seq_apply(v, x),
+            Engine::Parallel => par::par_apply(v, x),
+            Engine::FastH { k } => fasth::fasth_apply(v, x, k),
+        }
+    }
+
+    /// Combined forward+backward step (the quantity timed in Figure 3):
+    /// returns `(A, ∂L/∂X, ∂L/∂V)` for upstream gradient `g`.
+    pub fn step(&self, v: &HouseholderVectors, x: &Mat, g: &Mat) -> (Mat, Mat, Mat) {
+        match *self {
+            Engine::Sequential => {
+                let a = seq::seq_forward(v, x);
+                let (dx, dv) = seq::seq_backward(v, &a, g);
+                (a, dx, dv)
+            }
+            Engine::Parallel => {
+                let (a, cache) = par::par_forward(v, x);
+                let (dx, dv) = par::par_backward(v, &cache, g);
+                (a, dx, dv)
+            }
+            Engine::FastH { k } => {
+                let (a, cache) = fasth::fasth_forward(v, x, k);
+                let (dx, dv) = fasth::fasth_backward(v, &cache, g);
+                (a, dx, dv)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Engine::Sequential => "sequential".into(),
+            Engine::Parallel => "parallel".into(),
+            Engine::FastH { k } => format!("fasth(k={k})"),
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! The *parallel* algorithm of Zhang et al. 2018 ([17]) — the `O(d³)`
+//! baseline of the paper's comparison ("no faster than computing the SVD").
+//!
+//! Forward: combine the d reflections into one full-width WY form by a
+//! balanced binary *merge tree* (`P_{L}·P_{R}` per node, each merge a pair
+//! of GEMMs), then apply `U·X = X − 2W(YᵀX)` in one shot. Work is `O(d³)`
+//! (dominated by the top merges), but the sequential depth is only
+//! `O(log d)` levels of large GEMMs — highly parallel, which is why it
+//! beats the sequential algorithm on GPUs at small d (paper Fig. 3a).
+//!
+//! Backward: the paper benchmarks this algorithm as a *lower bound*
+//! (§8.2: "removing the failing code makes the parallel algorithm
+//! faster"). We keep it numerically exact instead: the merge tree's
+//! m-width level is snapshotted and the blocked backward of
+//! [`super::fasth`] runs on those blocks. The extra `O(d²m)` is dominated
+//! by the `O(d³)` forward, so the comparator's asymptotics — and the
+//! figure's shape — are unchanged, while tests can assert exact gradient
+//! agreement across all three engines.
+
+use super::fasth;
+use super::vectors::HouseholderVectors;
+use super::wy::WyBlock;
+use crate::linalg::Mat;
+use crate::util::parallel::parallel_map;
+
+/// Cache for the parallel engine's backward pass.
+pub struct ParCache {
+    /// Snapshot of the merge tree at block width `snap_k` — reused as a
+    /// FastH cache for the (exact) backward pass.
+    pub fasth_cache: fasth::FasthCache,
+    /// The fully merged representation `U = I − 2WYᵀ` (W, Y are d×n).
+    pub full: WyBlock,
+}
+
+/// Default width at which the tree is snapshotted for the backward pass.
+fn snap_width(m: usize) -> usize {
+    m.max(2)
+}
+
+/// Merge a level of blocks pairwise (in parallel). Odd tail passes through.
+fn merge_level(blocks: Vec<WyBlock>) -> Vec<WyBlock> {
+    let pairs = blocks.len() / 2;
+    let mut merged = parallel_map(pairs, |i| blocks[2 * i].merge(&blocks[2 * i + 1]));
+    if blocks.len() % 2 == 1 {
+        merged.push(blocks.last().unwrap().clone());
+    }
+    merged
+}
+
+/// Build the full-width WY form of `H₁…H_n` by the `O(d³)` merge tree.
+/// Returns the final block and (optionally) the snapshot level of width
+/// ≥ `snap` captured on the way up.
+pub fn build_tree(hv: &HouseholderVectors, snap: usize) -> (WyBlock, Vec<WyBlock>) {
+    // Leaves: width-1 WY blocks (a single reflection: W = Y = û).
+    let mut level: Vec<WyBlock> =
+        parallel_map(hv.count(), |i| WyBlock::build(hv, i, 1));
+    let mut snapshot: Option<Vec<WyBlock>> = None;
+    if snap <= 1 {
+        snapshot = Some(level.clone());
+    }
+    while level.len() > 1 {
+        level = merge_level(level);
+        // Capture the first level whose leading block reaches the snapshot
+        // width (ragged tails allowed).
+        if snapshot.is_none() && level[0].width() >= snap {
+            snapshot = Some(level.clone());
+        }
+    }
+    let full = level.pop().expect("at least one reflection");
+    // Small-n edge cases (n = 1, or n < snap): the tree never reaches the
+    // snapshot width — fall back to the single full block. (`snap ==
+    // usize::MAX` means "no snapshot wanted": keep it empty, skip the clone.)
+    let snapshot = match snapshot {
+        Some(s) => s,
+        None if snap == usize::MAX => Vec::new(),
+        None => vec![full.clone()],
+    };
+    (full, snapshot)
+}
+
+/// Forward `A = H₁…H_n·X` via the merge tree, keeping the cache.
+pub fn par_forward(hv: &HouseholderVectors, x: &Mat) -> (Mat, ParCache) {
+    assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
+    let m = x.cols();
+    let (full, snap_blocks) = build_tree(hv, snap_width(m));
+    let a = full.apply(&x.clone());
+
+    // Rebuild the FastH-style activation chain from the snapshot blocks so
+    // the backward pass is exact (see module docs).
+    let nb = snap_blocks.len();
+    let mut acts: Vec<Mat> = Vec::with_capacity(nb + 1);
+    let mut cur = x.clone();
+    acts.push(cur.clone());
+    for b in snap_blocks.iter().rev() {
+        cur = b.apply(&cur);
+        acts.push(cur.clone());
+    }
+    acts.reverse();
+    let k = snap_blocks.first().map(|b| b.width()).unwrap_or(1);
+    let cache = ParCache {
+        fasth_cache: fasth::FasthCache { blocks: snap_blocks, acts, k },
+        full,
+    };
+    (a, cache)
+}
+
+/// Forward without cache.
+pub fn par_apply(hv: &HouseholderVectors, x: &Mat) -> Mat {
+    assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
+    let (full, _snap) = build_tree(hv, usize::MAX); // skip snapshot work
+    full.apply(x)
+}
+
+/// Backward pass (exact; see module docs for the relation to the paper's
+/// lower-bound protocol).
+pub fn par_backward(hv: &HouseholderVectors, cache: &ParCache, g: &Mat) -> (Mat, Mat) {
+    // ∂L/∂X could be computed as Uᵀ·G in one GEMM from `cache.full`; the
+    // blocked backward already produces it while also yielding ∂L/∂v.
+    let blocks = &cache.fasth_cache.blocks;
+    // The snapshot blocks may be ragged (widths vary); fasth_backward
+    // indexes reflections through block_bounds(n, k), which assumes uniform
+    // k. Walk the blocks explicitly instead.
+    let d = hv.dim();
+    let n = hv.count();
+    let m = g.cols();
+    let nb = blocks.len();
+    assert_eq!(cache.fasth_cache.acts.len(), nb + 1);
+
+    // Step 1: sequential transpose chain.
+    let mut grads: Vec<Mat> = Vec::with_capacity(nb + 1);
+    grads.push(g.clone());
+    let mut g_cur = g.clone();
+    let mut yt = Mat::zeros(d, m);
+    for b in blocks.iter() {
+        let mut t = Mat::zeros(b.width(), m);
+        b.apply_transpose_inplace(&mut g_cur, &mut t, &mut yt);
+        grads.push(g_cur.clone());
+    }
+    let dx = g_cur;
+
+    // Step 2: per-block subproblems in parallel (block start offsets from
+    // cumulative widths).
+    let mut starts = Vec::with_capacity(nb);
+    let mut s = 0;
+    for b in blocks.iter() {
+        starts.push(s);
+        s += b.width();
+    }
+    assert_eq!(s, n, "snapshot blocks must cover all reflections");
+
+    let per_block: Vec<Mat> = parallel_map(nb, |i| {
+        let start = starts[i];
+        let width = blocks[i].width();
+        let mut a_cur = cache.fasth_cache.acts[i].clone();
+        let mut gg = grads[i].clone();
+        let mut dv_block = Mat::zeros(d, width);
+        let mut gv = vec![0.0f32; d];
+        for j in 0..width {
+            let v = hv.v.col(start + j);
+            super::vectors::fused_reflection_backward(&v, &mut a_cur, &mut gg, &mut gv);
+            dv_block.set_col(j, &gv);
+        }
+        dv_block
+    });
+
+    let mut dv = Mat::zeros(d, n);
+    for (i, dvb) in per_block.iter().enumerate() {
+        let start = starts[i];
+        let width = blocks[i].width();
+        for r in 0..d {
+            dv.row_mut(r)[start..start + width].copy_from_slice(&dvb.row(r)[..width]);
+        }
+    }
+    (dx, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::householder::seq;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    #[test]
+    fn tree_product_matches_sequential() {
+        check("par_forward", 12, |rng| {
+            let d = 2 + rng.below(48);
+            let n = 1 + rng.below(d);
+            let m = 1 + rng.below(6);
+            let hv = HouseholderVectors::random(d, n, rng);
+            let x = Mat::randn(d, m, rng);
+            let got = par_apply(&hv, &x);
+            let want = seq::seq_apply(&hv, &x);
+            assert_close(got.data(), want.data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn full_block_is_orthogonal() {
+        let mut rng = Rng::new(111);
+        let hv = HouseholderVectors::random_full(24, &mut rng);
+        let (full, _snap) = build_tree(&hv, 4);
+        let u = full.materialize();
+        let utu = crate::linalg::oracle::matmul_f64(&u.t(), &u);
+        assert!(utu.defect_from_identity() < 1e-3, "defect {}", utu.defect_from_identity());
+    }
+
+    #[test]
+    fn snapshot_covers_all_reflections() {
+        let mut rng = Rng::new(112);
+        for n in [1usize, 2, 3, 7, 16, 33] {
+            let hv = HouseholderVectors::random(40, n, &mut rng);
+            let (_full, snap) = build_tree(&hv, 4);
+            let total: usize = snap.iter().map(|b| b.width()).sum();
+            assert_eq!(total, n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_sequential() {
+        check("par_backward", 8, |rng| {
+            let d = 3 + rng.below(30);
+            let n = 1 + rng.below(d);
+            let m = 1 + rng.below(5);
+            let hv = HouseholderVectors::random(d, n, rng);
+            let x = Mat::randn(d, m, rng);
+            let g = Mat::randn(d, m, rng);
+            let (a, cache) = par_forward(&hv, &x);
+            let (dx, dv) = par_backward(&hv, &cache, &g);
+            let a_seq = seq::seq_forward(&hv, &x);
+            let (dx_seq, dv_seq) = seq::seq_backward(&hv, &a_seq, &g);
+            assert_close(a.data(), a_seq.data(), 1e-3, 1e-3)?;
+            assert_close(dx.data(), dx_seq.data(), 1e-3, 1e-3)?;
+            assert_close(dv.data(), dv_seq.data(), 2e-3, 2e-3)
+        });
+    }
+
+    #[test]
+    fn single_reflection_edge_case() {
+        let mut rng = Rng::new(113);
+        let hv = HouseholderVectors::random(10, 1, &mut rng);
+        let x = Mat::randn(10, 3, &mut rng);
+        let (a, cache) = par_forward(&hv, &x);
+        let want = seq::seq_apply(&hv, &x);
+        assert!(a.max_abs_diff(&want) < 1e-4);
+        let g = Mat::randn(10, 3, &mut rng);
+        let (_dx, dv) = par_backward(&hv, &cache, &g);
+        assert_eq!(dv.cols(), 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! The sequential algorithm of Zhang et al. 2018 ([17] in the paper) —
+//! FastH's primary baseline (the "27× slower" line in Figure 1).
+//!
+//! Forward: apply the d reflections one at a time,
+//! `A = H₁·(H₂·(…(H_d·X)))` — `O(d²m)` work but `O(d)` *dependent*
+//! inner products, which is exactly the depth problem the paper fixes.
+//!
+//! Backward: walk the chain in reverse using reversibility
+//! (`Â_{j+1} = H_jᵀ Â_j`, Eq. 4) so no activations need storing, and
+//! evaluate Eq. 5 per reflection — again `O(d)` dependent steps.
+
+use super::vectors::{apply_reflection_inplace, HouseholderVectors};
+use crate::linalg::Mat;
+
+/// Forward product `A = H₁…H_n·X` (alias of [`seq_apply`], kept for
+/// symmetry with the other engines' `*_forward` naming).
+pub fn seq_forward(hv: &HouseholderVectors, x: &Mat) -> Mat {
+    seq_apply(hv, x)
+}
+
+/// Apply `H₁…H_n` to `x`, one reflection at a time, rightmost first.
+pub fn seq_apply(hv: &HouseholderVectors, x: &Mat) -> Mat {
+    assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
+    let mut a = x.clone();
+    for i in (0..hv.count()).rev() {
+        apply_reflection_inplace(&hv.v.col(i), &mut a);
+    }
+    a
+}
+
+/// Transpose application `(H₁…H_n)ᵀ·x = H_n…H₁·x`.
+pub fn seq_apply_transpose(hv: &HouseholderVectors, x: &Mat) -> Mat {
+    assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
+    let mut a = x.clone();
+    for i in 0..hv.count() {
+        apply_reflection_inplace(&hv.v.col(i), &mut a);
+    }
+    a
+}
+
+/// Backward pass given the forward *output* `a = H₁…H_n·X` and upstream
+/// gradient `g = ∂L/∂A`. Returns `(∂L/∂X, ∂L/∂V)` where `∂L/∂V` has the
+/// same layout as `hv.v` (column i = ∂L/∂vᵢ).
+///
+/// Uses the memory-free reversible recomputation of Eq. 4: activations are
+/// reconstructed by applying `H_jᵀ = H_j` to the running output, exactly as
+/// in the paper (and in RevNets [5]).
+pub fn seq_backward(hv: &HouseholderVectors, a: &Mat, g: &Mat) -> (Mat, Mat) {
+    let d = hv.dim();
+    let n = hv.count();
+    assert_eq!((a.rows(), a.cols()), (g.rows(), g.cols()));
+    assert_eq!(a.rows(), d);
+
+    let mut a_cur = a.clone(); // Â_j, starts at Â₁ = A
+    let mut g_cur = g.clone(); // ∂L/∂Â_j
+    let mut dv = Mat::zeros(d, n);
+    let mut grad_vj = vec![0.0f32; d];
+
+    for j in 0..n {
+        let v = hv.v.col(j);
+        // Eq. 4 + Eq. 5 fused: advance Â and ∂L/∂Â, emit ∂L/∂v_j.
+        super::vectors::fused_reflection_backward(&v, &mut a_cur, &mut g_cur, &mut grad_vj);
+        dv.set_col(j, &grad_vj);
+    }
+    (g_cur, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_matches_oracle() {
+        check("seq_forward", 12, |rng| {
+            let d = 2 + rng.below(24);
+            let n = 1 + rng.below(d);
+            let m = 1 + rng.below(6);
+            let hv = HouseholderVectors::random(d, n, rng);
+            let x = Mat::randn(d, m, rng);
+            let got = seq_apply(&hv, &x);
+            let want = oracle::householder_apply(&hv.v, &x);
+            assert_close(got.data(), want.data(), 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn transpose_apply_is_inverse() {
+        let mut rng = Rng::new(81);
+        let hv = HouseholderVectors::random_full(20, &mut rng);
+        let x = Mat::randn(20, 4, &mut rng);
+        let y = seq_apply(&hv, &x);
+        let back = seq_apply_transpose(&hv, &y);
+        assert!(back.max_abs_diff(&x) < 1e-4, "UᵀU·x ≠ x: {}", back.max_abs_diff(&x));
+    }
+
+    #[test]
+    fn forward_preserves_norm() {
+        // Orthogonal maps are isometries.
+        let mut rng = Rng::new(82);
+        let hv = HouseholderVectors::random_full(32, &mut rng);
+        let x = Mat::randn(32, 8, &mut rng);
+        let y = seq_apply(&hv, &x);
+        assert!((y.fro_norm() - x.fro_norm()).abs() < 1e-3 * x.fro_norm());
+    }
+
+    #[test]
+    fn backward_dx_is_transpose_apply() {
+        // ∂L/∂X = Uᵀ·G exactly.
+        let mut rng = Rng::new(83);
+        let hv = HouseholderVectors::random_full(16, &mut rng);
+        let x = Mat::randn(16, 3, &mut rng);
+        let g = Mat::randn(16, 3, &mut rng);
+        let a = seq_forward(&hv, &x);
+        let (dx, _dv) = seq_backward(&hv, &a, &g);
+        let want = seq_apply_transpose(&hv, &g);
+        assert!(dx.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn backward_dv_matches_finite_difference() {
+        check("seq_gradcheck", 6, |rng| {
+            let d = 3 + rng.below(8);
+            let n = 1 + rng.below(d);
+            let m = 1 + rng.below(3);
+            let hv = HouseholderVectors::random(d, n, rng);
+            let x = Mat::randn(d, m, rng);
+            let g = Mat::randn(d, m, rng);
+            let a = seq_forward(&hv, &x);
+            let (_dx, dv) = seq_backward(&hv, &a, &g);
+            // loss = <G, H₁…H_n X> wrt the flattened vector matrix.
+            let fd = oracle::finite_diff_grad(hv.v.data(), 1e-3, |p| {
+                let hv2 = HouseholderVectors::new(Mat::from_vec(d, n, p.to_vec()));
+                let out = seq_apply(&hv2, &x);
+                out.data().iter().zip(g.data()).map(|(&o, &gg)| o as f64 * gg as f64).sum()
+            });
+            assert_close(dv.data(), &fd, 1e-2, 8e-2)
+        });
+    }
+
+    #[test]
+    fn backward_recomputation_consistency() {
+        // After the backward walk, recomputing forward from the recovered
+        // input must reproduce the output (reversibility sanity).
+        let mut rng = Rng::new(84);
+        let hv = HouseholderVectors::random_full(12, &mut rng);
+        let x = Mat::randn(12, 5, &mut rng);
+        let a = seq_forward(&hv, &x);
+        // Walk Eq. 4 all the way down: recovers X.
+        let mut a_cur = a.clone();
+        for j in 0..hv.count() {
+            apply_reflection_inplace(&hv.v.col(j), &mut a_cur);
+        }
+        assert!(a_cur.max_abs_diff(&x) < 1e-4);
+    }
+}

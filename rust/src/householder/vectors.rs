@@ -1,0 +1,380 @@
+//! Storage for a product of Householder reflections.
+//!
+//! The paper (§2.2, Eq. 1) represents an orthogonal `U ∈ ℝ^{d×d}` as
+//! `U = H₁·H₂·…·H_n` with `Hᵢ = I − 2 vᵢvᵢᵀ/‖vᵢ‖²`; the trainable
+//! parameters are the *unnormalized* vectors `vᵢ`, stored here as the
+//! columns of a `d×n` matrix. Gradient descent directly on the `vᵢ`
+//! preserves orthogonality of `U` exactly (Mhammedi et al. 2017).
+
+use crate::linalg::mat::norm_sq;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// A product of `n` Householder reflections in ℝ^d, column `i` holding
+/// `v_{i+1}` (1-indexed in the paper).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HouseholderVectors {
+    /// `d×n`; column i is vᵢ.
+    pub v: Mat,
+}
+
+impl HouseholderVectors {
+    /// Wrap an existing `d×n` matrix of vectors.
+    pub fn new(v: Mat) -> Self {
+        HouseholderVectors { v }
+    }
+
+    /// Random initialization: standard-normal vectors, which makes
+    /// `H₁…H_n` approximately Haar-distributed for n = d (each normalized
+    /// Gaussian direction is uniform on the sphere).
+    pub fn random(d: usize, n: usize, rng: &mut Rng) -> Self {
+        HouseholderVectors { v: Mat::randn(d, n, rng) }
+    }
+
+    /// Full expressiveness: n = d reflections (any orthogonal matrix is a
+    /// product of at most d reflections, Uhlig 2001).
+    pub fn random_full(d: usize, rng: &mut Rng) -> Self {
+        Self::random(d, d, rng)
+    }
+
+    /// Dimension d of the ambient space.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// Number of reflections n.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.v.cols()
+    }
+
+    /// Column `i` as an owned vector.
+    pub fn vector(&self, i: usize) -> Vec<f32> {
+        self.v.col(i)
+    }
+
+    /// Reversed-order copy: `(H₁…H_n)ᵀ = H_n…H₁`, so transpose application
+    /// is application of the reversed sequence (each Hᵢ is symmetric).
+    pub fn reversed(&self) -> HouseholderVectors {
+        let (d, n) = (self.dim(), self.count());
+        let mut out = Mat::zeros(d, n);
+        for i in 0..n {
+            out.set_col(i, &self.v.col(n - 1 - i));
+        }
+        HouseholderVectors { v: out }
+    }
+
+    /// In-place SGD step `vᵢ ← vᵢ − η · ∂L/∂vᵢ` — the orthogonality-
+    /// preserving update of §2.2.
+    pub fn sgd_step(&mut self, grad: &Mat, lr: f32) {
+        assert_eq!((self.v.rows(), self.v.cols()), (grad.rows(), grad.cols()));
+        self.v.axpy(-lr, grad);
+    }
+
+    /// Materialize the full orthogonal matrix `U = H₁…H_n` (O(d³); for
+    /// tests, export, and the parallel baseline's output checks).
+    pub fn materialize(&self) -> Mat {
+        // Apply the product to the identity using the sequential engine
+        // definitionally: U = H₁(H₂(…(H_n · I))).
+        let mut u = Mat::eye(self.dim());
+        for i in (0..self.count()).rev() {
+            apply_reflection_inplace(&self.v.col(i), &mut u);
+        }
+        u
+    }
+}
+
+/// Apply one reflection `H = I − 2vvᵀ/‖v‖²` to `a` in place:
+/// `a ← a − (2/‖v‖²)·v·(vᵀa)`. `‖v‖ = 0` encodes the identity.
+///
+/// This is the paper's `O(dm)` "vector-vector" primitive whose `O(d)`-deep
+/// chaining makes the sequential algorithm slow.
+pub fn apply_reflection_inplace(v: &[f32], a: &mut Mat) {
+    let d = a.rows();
+    let m = a.cols();
+    assert_eq!(v.len(), d);
+    let vs = norm_sq(v);
+    if vs < 1e-30 {
+        return; // identity reflection (zero vector)
+    }
+    // w = vᵀA (row m-vector), accumulated over rows so memory access is
+    // contiguous in the row-major layout.
+    let mut w = vec![0.0f32; m];
+    for i in 0..d {
+        let vi = v[i];
+        if vi != 0.0 {
+            let row = a.row(i);
+            for (wj, &aij) in w.iter_mut().zip(row) {
+                *wj += vi * aij;
+            }
+        }
+    }
+    let s = 2.0 / vs;
+    for i in 0..d {
+        let coef = s * v[i];
+        if coef != 0.0 {
+            let row = a.row_mut(i);
+            for (aij, &wj) in row.iter_mut().zip(&w) {
+                *aij -= coef * wj;
+            }
+        }
+    }
+}
+
+/// Gradient of one reflection wrt its vector (paper Eq. 5), batched.
+///
+/// Inputs: `v` (the reflection's vector), `a_in = Â_{j+1}` (the d×m input
+/// to `H_j` in the forward pass) and `g_out = ∂L/∂Â_j` (the gradient of
+/// the loss wrt `H_j`'s output). Returns `∂L/∂v_j` as a d-vector:
+///
+/// `−2/‖v‖² · Σ_l [ (vᵀaˡ)gˡ + (vᵀgˡ)aˡ − (2/‖v‖²)(vᵀaˡ)(vᵀgˡ)v ]`
+pub fn reflection_vector_grad(v: &[f32], a_in: &Mat, g_out: &Mat) -> Vec<f32> {
+    let d = a_in.rows();
+    let m = a_in.cols();
+    assert_eq!(v.len(), d);
+    assert_eq!((g_out.rows(), g_out.cols()), (d, m));
+    let vs = norm_sq(v);
+    if vs < 1e-30 {
+        return vec![0.0; d]; // identity reflection: no dependence on v
+    }
+    // α_l = vᵀ a_l ; γ_l = vᵀ g_l  (two m-vectors, one fused pass).
+    let mut alpha = vec![0.0f32; m];
+    let mut gamma = vec![0.0f32; m];
+    for i in 0..d {
+        let vi = v[i];
+        if vi == 0.0 {
+            continue;
+        }
+        let ar = a_in.row(i);
+        let gr = g_out.row(i);
+        for j in 0..m {
+            alpha[j] += vi * ar[j];
+            gamma[j] += vi * gr[j];
+        }
+    }
+    let s: f32 = alpha.iter().zip(&gamma).map(|(a, g)| a * g).sum();
+    // grad = -(2/vs)·( G·α + A·γ − (2/vs)·s·v )
+    let c = 2.0 / vs;
+    let mut grad = vec![0.0f32; d];
+    for i in 0..d {
+        let ar = a_in.row(i);
+        let gr = g_out.row(i);
+        let mut acc = 0.0f32;
+        for j in 0..m {
+            acc += gr[j] * alpha[j] + ar[j] * gamma[j];
+        }
+        grad[i] = -c * (acc - c * s * v[i]);
+    }
+    grad
+}
+
+/// Fused backward step for one reflection (§Perf iteration 4): advances
+/// `Â_{j+1} = H·Â_j` and `∂L/∂Â_{j+1} = H·∂L/∂Â_j` *and* emits Eq. 5's
+/// `∂L/∂v_j`, in two memory passes instead of six.
+///
+/// Algebra: with `w = vᵀÂ_j`, `γ = vᵀĜ_j`, `c = 2/‖v‖²`, Eq. 5 collapses —
+/// using `vᵀH = −vᵀ` so `α = vᵀÂ_{j+1} = −w`, and the `c·s·v` terms cancel —
+/// to `∂L/∂v[i] = −c·(⟨Â_j[i,:], γ⟩ − ⟨Ĝ_j[i,:], w⟩)`, which reads each row
+/// exactly once alongside the two rank-1 updates.
+pub fn fused_reflection_backward(v: &[f32], a: &mut Mat, g: &mut Mat, grad_out: &mut [f32]) {
+    let d = a.rows();
+    let m = a.cols();
+    assert_eq!(v.len(), d);
+    assert_eq!((g.rows(), g.cols()), (d, m));
+    assert_eq!(grad_out.len(), d);
+    let vs = norm_sq(v);
+    if vs < 1e-30 {
+        grad_out.fill(0.0);
+        return; // identity reflection
+    }
+    let c = 2.0 / vs;
+    // Pass 1: w = vᵀA, γ = vᵀG.
+    let mut w = vec![0.0f32; m];
+    let mut gamma = vec![0.0f32; m];
+    for i in 0..d {
+        let vi = v[i];
+        if vi == 0.0 {
+            continue;
+        }
+        let ar = a.row(i);
+        let gr = g.row(i);
+        for j in 0..m {
+            w[j] += vi * ar[j];
+            gamma[j] += vi * gr[j];
+        }
+    }
+    // Pass 2: per-row gradient + both rank-1 updates.
+    for i in 0..d {
+        let vi = v[i];
+        let ar = a.row_mut(i);
+        let mut dot_ag = 0.0f32;
+        for (x, &gj) in ar.iter_mut().zip(&gamma) {
+            dot_ag += *x * gj;
+        }
+        let gr = g.row_mut(i);
+        let mut dot_gw = 0.0f32;
+        for (x, &wj) in gr.iter_mut().zip(&w) {
+            dot_gw += *x * wj;
+        }
+        grad_out[i] = -c * (dot_ag - dot_gw);
+        if vi != 0.0 {
+            let ca = c * vi;
+            let ar = a.row_mut(i);
+            for (x, &wj) in ar.iter_mut().zip(&w) {
+                *x -= ca * wj;
+            }
+            let gr = g.row_mut(i);
+            for (x, &gj) in gr.iter_mut().zip(&gamma) {
+                *x -= ca * gj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn apply_matches_explicit_matrix() {
+        check("reflection_apply", 16, |rng| {
+            let d = 2 + rng.below(40);
+            let m = 1 + rng.below(8);
+            let v: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let x = Mat::randn(d, m, rng);
+            let mut got = x.clone();
+            apply_reflection_inplace(&v, &mut got);
+            let want = oracle::matmul_f64(&oracle::householder_matrix(&v), &x);
+            assert_close(got.data(), want.data(), 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn zero_vector_is_identity() {
+        let mut rng = crate::util::Rng::new(71);
+        let x = Mat::randn(8, 3, &mut rng);
+        let mut a = x.clone();
+        apply_reflection_inplace(&[0.0; 8], &mut a);
+        assert_eq!(a, x);
+    }
+
+    #[test]
+    fn reflection_is_involution() {
+        let mut rng = crate::util::Rng::new(72);
+        let v: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        let x = Mat::randn(32, 5, &mut rng);
+        let mut a = x.clone();
+        apply_reflection_inplace(&v, &mut a);
+        apply_reflection_inplace(&v, &mut a);
+        assert!(a.max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
+    fn materialize_is_orthogonal() {
+        check("materialize_orthogonal", 8, |rng| {
+            let d = 2 + rng.below(24);
+            let n = 1 + rng.below(d);
+            let hv = HouseholderVectors::random(d, n, rng);
+            let u = hv.materialize();
+            let utu = oracle::matmul_f64(&u.t(), &u);
+            if utu.defect_from_identity() > 1e-4 {
+                return Err(format!("defect {}", utu.defect_from_identity()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn materialize_matches_oracle_product() {
+        let mut rng = crate::util::Rng::new(73);
+        let hv = HouseholderVectors::random(10, 7, &mut rng);
+        let got = hv.materialize();
+        let want = oracle::householder_product(&hv.v);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn reversed_is_transpose() {
+        let mut rng = crate::util::Rng::new(74);
+        let hv = HouseholderVectors::random(9, 9, &mut rng);
+        let u = hv.materialize();
+        let ut = hv.reversed().materialize();
+        assert!(u.t().max_abs_diff(&ut) < 1e-4);
+    }
+
+    #[test]
+    fn vector_grad_matches_finite_difference() {
+        check("eq5_gradcheck", 8, |rng| {
+            let d = 3 + rng.below(10);
+            let m = 1 + rng.below(4);
+            let v: Vec<f32> = (0..d).map(|_| rng.normal_f32() + 0.5).collect();
+            let a_in = Mat::randn(d, m, rng);
+            let g_out = Mat::randn(d, m, rng);
+            let grad = reflection_vector_grad(&v, &a_in, &g_out);
+            // loss = <G, H(v)·A>
+            let fd = oracle::finite_diff_grad(&v, 1e-3, |p| {
+                let mut out = a_in.clone();
+                apply_reflection_inplace(p, &mut out);
+                out.data().iter().zip(g_out.data()).map(|(&x, &g)| x as f64 * g as f64).sum()
+            });
+            assert_close(&grad, &fd, 5e-3, 5e-2)
+        });
+    }
+
+    #[test]
+    fn fused_backward_matches_unfused() {
+        check("fused_vs_unfused", 12, |rng| {
+            let d = 2 + rng.below(30);
+            let m = 1 + rng.below(8);
+            let v: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let a0 = Mat::randn(d, m, rng);
+            let g0 = Mat::randn(d, m, rng);
+            // Unfused reference path.
+            let mut a_ref = a0.clone();
+            apply_reflection_inplace(&v, &mut a_ref);
+            let grad_ref = reflection_vector_grad(&v, &a_ref, &g0);
+            let mut g_ref = g0.clone();
+            apply_reflection_inplace(&v, &mut g_ref);
+            // Fused path.
+            let mut a = a0.clone();
+            let mut g = g0.clone();
+            let mut grad = vec![0.0f32; d];
+            fused_reflection_backward(&v, &mut a, &mut g, &mut grad);
+            assert_close(a.data(), a_ref.data(), 1e-4, 1e-3)?;
+            assert_close(g.data(), g_ref.data(), 1e-4, 1e-3)?;
+            assert_close(&grad, &grad_ref, 1e-3, 1e-2)
+        });
+    }
+
+    #[test]
+    fn fused_backward_zero_vector() {
+        let mut rng = crate::util::Rng::new(76);
+        let a0 = Mat::randn(5, 3, &mut rng);
+        let g0 = Mat::randn(5, 3, &mut rng);
+        let mut a = a0.clone();
+        let mut g = g0.clone();
+        let mut grad = vec![1.0f32; 5];
+        fused_reflection_backward(&[0.0; 5], &mut a, &mut g, &mut grad);
+        assert_eq!(a, a0);
+        assert_eq!(g, g0);
+        assert!(grad.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sgd_step_moves_vectors() {
+        let mut rng = crate::util::Rng::new(75);
+        let mut hv = HouseholderVectors::random(6, 6, &mut rng);
+        let before = hv.v.clone();
+        let grad = Mat::randn(6, 6, &mut rng);
+        hv.sgd_step(&grad, 0.1);
+        let diff = hv.v.sub(&before);
+        assert!(diff.max_abs_diff(&grad.scale(-0.1)) < 1e-6);
+        // Orthogonality preserved by construction.
+        let u = hv.materialize();
+        let utu = oracle::matmul_f64(&u.t(), &u);
+        assert!(utu.defect_from_identity() < 1e-4);
+    }
+}

@@ -1,0 +1,293 @@
+//! Compact WY representation (Bischof & Van Loan 1987) — the paper's
+//! Lemma 1 and the key ingredient of both FastH and the parallel baseline.
+//!
+//! For any m Householder matrices there exist `W, Y ∈ ℝ^{d×m}` with
+//! `H₁·H₂·…·H_m = I − 2·W·Yᵀ`. Construction takes `O(dm²)` time and m
+//! sequential Householder multiplications; *application* to a d×m batch is
+//! then two GEMMs (`O(dm²)`), which is what restores GPU/MXU utilization.
+//!
+//! Performance note (EXPERIMENTS.md §Perf, iteration 2): blocks are stored
+//! in BOTH orientations — `w, y` (d×k) and `wt, yt` (k×d). The transposed
+//! copies make every hot operation a contiguous-row GEMM: construction
+//! appends *rows* of `wt/yt` (no strided column writes), `P·X` reads
+//! `yt` rows, `Pᵀ·X` reads `wt` rows, and the rank-k update fuses into a
+//! `beta = 1` GEMM. The 2× memory is `O(d·k)` per block — irrelevant next
+//! to the batch itself.
+
+use super::vectors::HouseholderVectors;
+use crate::linalg::gemm::{matmul, Gemm, Trans};
+use crate::linalg::mat::norm_sq;
+use crate::linalg::Mat;
+
+/// `P = I − 2·W·Yᵀ`, the compact form of a product of reflections.
+#[derive(Clone, Debug)]
+pub struct WyBlock {
+    /// d×k.
+    pub w: Mat,
+    /// d×k; column j is the normalized Householder vector û_j.
+    pub y: Mat,
+    /// k×d transposed copy of `w` (contiguous rows for `Pᵀ·X`).
+    pub wt: Mat,
+    /// k×d transposed copy of `y` (contiguous rows for `P·X`).
+    pub yt: Mat,
+}
+
+impl WyBlock {
+    /// Assemble from the transposed factors (rows = vectors).
+    fn from_transposed(wt: Mat, yt: Mat) -> WyBlock {
+        WyBlock { w: wt.t(), y: yt.t(), wt, yt }
+    }
+
+    /// Lemma 1: build the WY form of `H_first · … · H_{first+k-1}` from
+    /// the columns `[first, first+k)` of `hv`.
+    ///
+    /// Recurrence (P₍ⱼ₎ = P₍ⱼ₋₁₎·H_j):
+    ///   `W_j = [W_{j−1} | P₍ⱼ₋₁₎·û_j]`, `Y_j = [Y_{j−1} | û_j]`
+    /// with `û = v/‖v‖` (zero vectors stay zero ≡ identity reflection).
+    ///
+    /// Cost: k sequential Householder multiplications, `O(d·k²)` work —
+    /// all contiguous row traffic in the transposed layout.
+    pub fn build(hv: &HouseholderVectors, first: usize, k: usize) -> WyBlock {
+        // Transpose the relevant slice of V once so vectors are rows.
+        let vt = hv.v.slice(0, hv.dim(), first, first + k).t(); // k×d
+        Self::build_from_rows(&vt)
+    }
+
+    /// Build from a k×d matrix whose *rows* are the (unnormalized)
+    /// Householder vectors, in application order `H_1 … H_k`.
+    pub fn build_from_rows(vt: &Mat) -> WyBlock {
+        let (k, d) = (vt.rows(), vt.cols());
+        let mut wt = Mat::zeros(k, d);
+        let mut yt = Mat::zeros(k, d);
+        let mut t = vec![0.0f32; k];
+        for j in 0..k {
+            let vj = vt.row(j);
+            let vs = norm_sq(vj);
+            if vs < 1e-30 {
+                continue; // identity reflection: zero rows
+            }
+            let inv_norm = 1.0 / vs.sqrt();
+            // û_j into yt row j.
+            {
+                let yrow = yt.row_mut(j);
+                for (dst, &src) in yrow.iter_mut().zip(vj) {
+                    *dst = src * inv_norm;
+                }
+            }
+            // t = Y_{j-1}ᵀ û_j — j contiguous dot products (f32-SIMD).
+            for (c, tc) in t.iter_mut().enumerate().take(j) {
+                *tc = crate::linalg::gemm::dot_f32(yt.row(c), yt.row(j));
+            }
+            // w_j = û_j − 2·W_{j−1}·t — j contiguous axpys.
+            // (Write û_j first, then subtract.)
+            let (head, tail) = wt.data_mut().split_at_mut(j * d);
+            let wrow = &mut tail[..d];
+            let ysrc = &yt.row(j).to_vec();
+            wrow.copy_from_slice(ysrc);
+            for (c, &tc) in t.iter().enumerate().take(j) {
+                if tc != 0.0 {
+                    let prev = &head[c * d..(c + 1) * d];
+                    for (a, &b) in wrow.iter_mut().zip(prev) {
+                        *a -= 2.0 * tc * b;
+                    }
+                }
+            }
+        }
+        Self::from_transposed(wt, yt)
+    }
+
+    /// Width k of the block.
+    pub fn width(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Apply `P·X = X − 2·W·(Yᵀ·X)` — two contiguous GEMMs.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        let mut t = Mat::zeros(self.width(), x.cols());
+        let mut scratch = Mat::zeros(0, 0);
+        self.apply_inplace(&mut out, &mut t, &mut scratch);
+        out
+    }
+
+    /// Apply in place, reusing caller-provided workspace `t` (k×m). The
+    /// second workspace argument is unused since the rank-k update fuses
+    /// into a `beta = 1` GEMM (kept for API stability of the hot loop).
+    pub fn apply_inplace(&self, x: &mut Mat, t: &mut Mat, _unused: &mut Mat) {
+        let g = Gemm::default();
+        // T = Yᵀ·X as the contiguous NN product yt·X.
+        g.gemm(1.0, &self.yt, Trans::No, x, Trans::No, 0.0, t);
+        // X ← X − 2·W·T in one fused GEMM (beta = 1).
+        g.gemm(-2.0, &self.w, Trans::No, t, Trans::No, 1.0, x);
+    }
+
+    /// Apply the transpose `Pᵀ·X = X − 2·Y·(Wᵀ·X)` (backward Step 1, Eq. 3).
+    pub fn apply_transpose(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        let mut t = Mat::zeros(self.width(), x.cols());
+        let mut scratch = Mat::zeros(0, 0);
+        self.apply_transpose_inplace(&mut out, &mut t, &mut scratch);
+        out
+    }
+
+    /// In-place transpose application with caller workspace.
+    pub fn apply_transpose_inplace(&self, x: &mut Mat, t: &mut Mat, _unused: &mut Mat) {
+        let g = Gemm::default();
+        g.gemm(1.0, &self.wt, Trans::No, x, Trans::No, 0.0, t);
+        g.gemm(-2.0, &self.y, Trans::No, t, Trans::No, 1.0, x);
+    }
+
+    /// Merge two WY blocks: `self · other` as one wider block
+    /// (`W = [W₁ | P₁·W₂]`, `Y = [Y₁ | Y₂]`). This is the combining step
+    /// of the parallel baseline's `O(d³)` product tree.
+    pub fn merge(&self, other: &WyBlock) -> WyBlock {
+        let d = self.w.rows();
+        assert_eq!(d, other.w.rows());
+        let (k1, k2) = (self.width(), other.width());
+        // P₁·W₂ = W₂ − 2·W₁·(Y₁ᵀ·W₂); Y₁ᵀW₂ = yt₁·W₂ contiguous.
+        let t = matmul(&self.yt, &other.w); // k1×k2
+        let mut p1w2 = other.w.clone();
+        Gemm::default().gemm(-2.0, &self.w, Trans::No, &t, Trans::No, 1.0, &mut p1w2);
+
+        let mut w = Mat::zeros(d, k1 + k2);
+        w.set_slice(0, 0, &self.w);
+        w.set_slice(0, k1, &p1w2);
+        let mut y = Mat::zeros(d, k1 + k2);
+        y.set_slice(0, 0, &self.y);
+        y.set_slice(0, k1, &other.y);
+        let wt = w.t();
+        let yt = y.t();
+        WyBlock { w, y, wt, yt }
+    }
+
+    /// Materialize `P = I − 2WYᵀ` explicitly (tests / parallel baseline).
+    pub fn materialize(&self) -> Mat {
+        let d = self.w.rows();
+        let mut p = Mat::eye(d);
+        Gemm::default().gemm(-2.0, &self.w, Trans::No, &self.yt, Trans::No, 1.0, &mut p);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    fn explicit_product(hv: &HouseholderVectors, first: usize, k: usize) -> Mat {
+        let sub = hv.v.slice(0, hv.dim(), first, first + k);
+        oracle::householder_product(&sub)
+    }
+
+    #[test]
+    fn lemma1_wy_equals_product() {
+        check("wy_lemma1", 12, |rng| {
+            let d = 3 + rng.below(30);
+            let k = 1 + rng.below(d.min(12));
+            let hv = HouseholderVectors::random(d, k, rng);
+            let wy = WyBlock::build(&hv, 0, k);
+            let got = wy.materialize();
+            let want = explicit_product(&hv, 0, k);
+            assert_close(got.data(), want.data(), 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn transposed_copies_consistent() {
+        let mut rng = Rng::new(90);
+        let hv = HouseholderVectors::random(20, 7, &mut rng);
+        let wy = WyBlock::build(&hv, 0, 7);
+        assert_eq!(wy.wt, wy.w.t());
+        assert_eq!(wy.yt, wy.y.t());
+    }
+
+    #[test]
+    fn wy_apply_matches_seq() {
+        check("wy_apply", 12, |rng| {
+            let d = 3 + rng.below(40);
+            let k = 1 + rng.below(d.min(10));
+            let m = 1 + rng.below(6);
+            let hv = HouseholderVectors::random(d, k, rng);
+            let x = Mat::randn(d, m, rng);
+            let got = WyBlock::build(&hv, 0, k).apply(&x);
+            let want = super::super::seq::seq_apply(&hv, &x);
+            assert_close(got.data(), want.data(), 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn wy_sub_range_build() {
+        // Building from a sub-range must match the product of just those
+        // reflections.
+        let mut rng = Rng::new(91);
+        let hv = HouseholderVectors::random(16, 12, &mut rng);
+        let wy = WyBlock::build(&hv, 4, 5);
+        let want = explicit_product(&hv, 4, 5);
+        assert!(wy.materialize().max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_apply_is_inverse_of_apply() {
+        let mut rng = Rng::new(92);
+        let hv = HouseholderVectors::random(24, 8, &mut rng);
+        let wy = WyBlock::build(&hv, 0, 8);
+        let x = Mat::randn(24, 4, &mut rng);
+        let y = wy.apply(&x);
+        let back = wy.apply_transpose(&y);
+        assert!(back.max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
+    fn inplace_matches_allocating() {
+        let mut rng = Rng::new(93);
+        let hv = HouseholderVectors::random(32, 6, &mut rng);
+        let wy = WyBlock::build(&hv, 0, 6);
+        let x = Mat::randn(32, 5, &mut rng);
+        let want = wy.apply(&x);
+        let mut got = x.clone();
+        let mut t = Mat::zeros(6, 5);
+        let mut scratch = Mat::zeros(0, 0);
+        wy.apply_inplace(&mut got, &mut t, &mut scratch);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+
+        let want_t = wy.apply_transpose(&x);
+        let mut got_t = x.clone();
+        wy.apply_transpose_inplace(&mut got_t, &mut t, &mut scratch);
+        assert!(got_t.max_abs_diff(&want_t) < 1e-6);
+    }
+
+    #[test]
+    fn merge_equals_concatenated_build() {
+        check("wy_merge", 8, |rng| {
+            let d = 4 + rng.below(24);
+            let k1 = 1 + rng.below(6);
+            let k2 = 1 + rng.below(6);
+            let hv = HouseholderVectors::random(d, k1 + k2, rng);
+            let left = WyBlock::build(&hv, 0, k1);
+            let right = WyBlock::build(&hv, k1, k2);
+            let merged = left.merge(&right);
+            let direct = WyBlock::build(&hv, 0, k1 + k2);
+            assert_close(
+                merged.materialize().data(),
+                direct.materialize().data(),
+                1e-4,
+                1e-3,
+            )
+        });
+    }
+
+    #[test]
+    fn zero_vector_columns_are_identity() {
+        let mut v = Mat::zeros(10, 4);
+        // Only reflection 2 is non-trivial.
+        let mut rng = Rng::new(94);
+        let col: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+        v.set_col(2, &col);
+        let hv = HouseholderVectors::new(v);
+        let wy = WyBlock::build(&hv, 0, 4);
+        let want = oracle::householder_matrix(&col);
+        assert!(wy.materialize().max_abs_diff(&want) < 1e-5);
+    }
+}

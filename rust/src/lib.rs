@@ -1,0 +1,31 @@
+//! # FastH — "What if Neural Networks had SVDs?" (NeurIPS 2020)
+//!
+//! A full-system reproduction of Mathiasen et al.'s FastH: keeping the SVD
+//! `W = U Σ Vᵀ` of neural-network weights *by construction* (U, V as
+//! products of Householder reflections), so that matrix inversion,
+//! determinants, the matrix exponential and the Cayley transform drop from
+//! `O(d³)` to `O(d²)`/`O(d)` — with FastH supplying the blocked
+//! (WY-representation) Householder multiplication that makes the scheme
+//! actually fast on parallel hardware.
+//!
+//! Layering (see DESIGN.md):
+//! - [`util`] — offline-substrate utilities (RNG, threads, JSON, bench
+//!   harness, property testing),
+//! - [`linalg`] — from-scratch dense linear algebra (GEMM, LU, expm, QR),
+//! - [`householder`] — the paper's algorithms: sequential & parallel
+//!   baselines from Zhang et al. 2018 and FastH fwd/bwd (Algorithms 1–3),
+//! - [`svd`] — the SVD reparameterization layer and Table-1 matrix ops,
+//! - [`nn`] — minimal NN stack (MLP/RNN + optimizers + tasks) for the
+//!   end-to-end experiments,
+//! - [`runtime`] — PJRT loading/execution of JAX/Pallas AOT artifacts,
+//! - [`coordinator`] — the serving layer: router, dynamic batcher, workers,
+//! - [`bench_harness`] — regenerates every figure/table of the paper.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod householder;
+pub mod linalg;
+pub mod nn;
+pub mod runtime;
+pub mod svd;
+pub mod util;

@@ -1,0 +1,137 @@
+//! Cayley transform — standard method `(I−W)(I+W)⁻¹` via LU solve
+//! (Table 1's "TORCH.SOLVE(I−W, I+W)" row) plus the skew-parameterized
+//! Cayley *map* used as an orthogonal-reparameterization baseline in the
+//! paper's Figure 3 comparison (expRNN-style).
+
+use super::gemm::matmul;
+use super::lu;
+use super::mat::Mat;
+
+/// Standard-method Cayley transform: `C(W) = (I − W)(I + W)⁻¹`, computed
+/// as the solution of `(I + W)ᵀ Xᵀ = (I − W)ᵀ`, i.e. one LU solve —
+/// the same `O(d³)` route as `torch.solve(I−W, I+W)`.
+pub fn cayley(w: &Mat) -> Option<Mat> {
+    let n = w.rows();
+    assert_eq!(n, w.cols());
+    let eye = Mat::eye(n);
+    let num = eye.sub(w); // I − W
+    let den = eye.add(w); // I + W
+    // X·(I+W) = (I−W)  ⇔  (I+W)ᵀ Xᵀ = (I−W)ᵀ — but for the Cayley map of a
+    // *skew* matrix the two orderings commute; we solve (I+W)·Y = (I−W) and
+    // return Y, matching (I+W)⁻¹(I−W) = (I−W)(I+W)⁻¹ when W is skew or when
+    // only orthogonality (not exact ordering) matters. For general W we
+    // solve the transposed system to honour the paper's exact expression.
+    let xt = lu::solve(&den.t(), &num.t())?;
+    Some(xt.t())
+}
+
+/// Cayley map of a *skew-symmetric* parameter: `Φ(V) = (I − S)(I + S)⁻¹`
+/// with `S = (V − Vᵀ)/2`. Output is exactly orthogonal (up to roundoff).
+pub fn cayley_map_skew(v: &Mat) -> Mat {
+    let s = v.sub(&v.t()).scale(0.5);
+    cayley(&s).expect("I + skew is always invertible")
+}
+
+/// Backward pass of the skew Cayley map, given the output `Q = Φ(S)`
+/// and upstream gradient `G = ∂L/∂Q`:
+///
+/// With `Q = (I−S)(I+S)⁻¹`, the differential is
+/// `dQ = -(I + Q) dS (I+S)⁻¹`, hence
+/// `∂L/∂S = -(I + Q)ᵀ G (I+S)⁻ᵀ`, then projected to skew space for the
+/// parameterization `S = (V − Vᵀ)/2`:
+/// `∂L/∂V = (∂L/∂S − (∂L/∂S)ᵀ)/2`.
+///
+/// Costs 2 GEMMs + 1 LU solve — `O(d³)` like the forward, which is the
+/// point of the paper's comparison: both directions are cubic.
+pub fn cayley_map_skew_backward(v: &Mat, q: &Mat, g: &Mat) -> Mat {
+    let n = v.rows();
+    let s = v.sub(&v.t()).scale(0.5);
+    let eye = Mat::eye(n);
+    let ips = eye.add(&s); // I + S
+    // T = G · (I+S)⁻ᵀ  ⇔  (I+S)ᵀ Tᵀ = Gᵀ ⇔ T = solve((I+S), Gᵀ)ᵀ... use:
+    // Tᵀ = (I+S)⁻¹ Gᵀ.
+    let t_t = lu::solve(&ips, &g.t()).expect("I+S invertible");
+    let t = t_t.t();
+    // dS = -(I + Q)ᵀ · T
+    let iq = eye.add(q);
+    let ds = matmul(&iq.t(), &t).scale(-1.0);
+    // Project to the skew parameterization of V.
+    ds.sub(&ds.t()).scale(0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn cayley_of_zero_is_identity() {
+        let q = cayley(&Mat::zeros(5, 5)).unwrap();
+        assert!(q.defect_from_identity() < 1e-6);
+    }
+
+    #[test]
+    fn cayley_of_skew_is_orthogonal() {
+        check("cayley_orthogonal", 16, |rng| {
+            let n = 2 + rng.below(30);
+            let q = cayley_map_skew(&Mat::randn(n, n, rng));
+            let qtq = oracle::matmul_f64(&q.t(), &q);
+            if qtq.defect_from_identity() > 1e-4 {
+                return Err(format!("defect {}", qtq.defect_from_identity()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cayley_matches_explicit_inverse() {
+        let mut rng = Rng::new(51);
+        let w = Mat::randn(10, 10, &mut rng).scale(0.2);
+        let got = cayley(&w).unwrap();
+        let eye = Mat::eye(10);
+        let inv = oracle::inverse_f64(&eye.add(&w)).unwrap();
+        let want = oracle::matmul_f64(&eye.sub(&w), &inv);
+        assert!(got.max_abs_diff(&want) < 1e-4, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn cayley_involution_on_skew() {
+        // For skew S: C(C(S)) relates back through the map; check the
+        // defining identity (I+S)·Q = (I−S) instead.
+        let mut rng = Rng::new(52);
+        let v = Mat::randn(8, 8, &mut rng);
+        let s = v.sub(&v.t()).scale(0.5);
+        let q = cayley(&s).unwrap();
+        let lhs = oracle::matmul_f64(&Mat::eye(8).add(&s), &q);
+        let rhs = Mat::eye(8).sub(&s);
+        assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(53);
+        let n = 5;
+        let v = Mat::randn(n, n, &mut rng).scale(0.5);
+        let g = Mat::randn(n, n, &mut rng);
+        let q = cayley_map_skew(&v);
+        let grad = cayley_map_skew_backward(&v, &q, &g);
+        // loss = <G, Φ(V)> — finite difference wrt each V entry.
+        let fd = oracle::finite_diff_grad(v.data(), 1e-3, |p| {
+            let vm = Mat::from_vec(n, n, p.to_vec());
+            let qm = cayley_map_skew(&vm);
+            qm.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        for (i, (&a, &b)) in grad.data().iter().zip(&fd).enumerate() {
+            assert!((a - b).abs() < 5e-3, "entry {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn singular_cayley_rejected() {
+        // W = -I makes I + W singular.
+        let w = Mat::eye(4).scale(-1.0);
+        assert!(cayley(&w).is_none());
+    }
+}

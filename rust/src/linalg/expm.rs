@@ -1,0 +1,196 @@
+//! Matrix exponential by Padé-13 scaling-and-squaring (Higham 2005) —
+//! the "standard method" for `expm` in the paper's Table 1 (PyTorch and
+//! expRNN both use this scheme).
+//!
+//! Cost: ~6 GEMMs + 1 LU solve + `s` squarings, all `O(d³)` — exactly the
+//! baseline FastH's `U e^Σ Uᵀ` route beats in Figure 4.
+
+use super::gemm::matmul;
+use super::lu;
+use super::mat::Mat;
+
+/// Padé-13 coefficients (Higham, "The Scaling and Squaring Method for the
+/// Matrix Exponential Revisited", 2005).
+const PADE13: [f64; 14] = [
+    64764752532480000.0,
+    32382376266240000.0,
+    7771770303897600.0,
+    1187353796428800.0,
+    129060195264000.0,
+    10559470521600.0,
+    670442572800.0,
+    33522128640.0,
+    1323241920.0,
+    40840800.0,
+    960960.0,
+    16380.0,
+    182.0,
+    1.0,
+];
+
+/// θ₁₃: the largest ‖A‖ for which Padé-13 is accurate without scaling.
+const THETA13: f64 = 5.371920351148152;
+
+/// `e^A` for square `A`.
+pub fn expm(a: &Mat) -> Mat {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "expm requires a square matrix");
+
+    // Scaling: bring ‖A/2^s‖ under θ₁₃.
+    let norm = a.inf_norm() as f64;
+    let s = if norm > THETA13 {
+        (norm / THETA13).log2().ceil() as u32
+    } else {
+        0
+    };
+    let a1 = a.map(|x| x / (1u64 << s) as f32);
+
+    // Powers.
+    let a2 = matmul(&a1, &a1);
+    let a4 = matmul(&a2, &a2);
+    let a6 = matmul(&a2, &a4);
+
+    let b = &PADE13;
+    let eye = Mat::eye(n);
+
+    // U = A·(A6·(b13·A6 + b11·A4 + b9·A2) + b7·A6 + b5·A4 + b3·A2 + b1·I)
+    let mut w1 = a6.scale(b[13] as f32);
+    w1.axpy(b[11] as f32, &a4);
+    w1.axpy(b[9] as f32, &a2);
+    let mut u_inner = matmul(&a6, &w1);
+    u_inner.axpy(b[7] as f32, &a6);
+    u_inner.axpy(b[5] as f32, &a4);
+    u_inner.axpy(b[3] as f32, &a2);
+    u_inner.axpy(b[1] as f32, &eye);
+    let u = matmul(&a1, &u_inner);
+
+    // V = A6·(b12·A6 + b10·A4 + b8·A2) + b6·A6 + b4·A4 + b2·A2 + b0·I
+    let mut w2 = a6.scale(b[12] as f32);
+    w2.axpy(b[10] as f32, &a4);
+    w2.axpy(b[8] as f32, &a2);
+    let mut v = matmul(&a6, &w2);
+    v.axpy(b[6] as f32, &a6);
+    v.axpy(b[4] as f32, &a4);
+    v.axpy(b[2] as f32, &a2);
+    v.axpy(b[0] as f32, &eye);
+
+    // r = (V - U)⁻¹ (V + U)
+    let p = v.add(&u);
+    let q = v.sub(&u);
+    let mut r = lu::solve(&q, &p).expect("Padé denominator singular — input too extreme");
+
+    // Undo scaling by repeated squaring.
+    for _ in 0..s {
+        r = matmul(&r, &r);
+    }
+    r
+}
+
+/// Derivative helper used by the Cayley/exp *reparameterization* baselines
+/// (§8.2): given `Φ(V) = e^V`, a first-order (Fréchet) backward pass via
+/// the identity `d e^V ≈ e^V · dV` is NOT exact; the comparison baselines
+/// instead time one extra `expm`-sized computation, matching how expRNN
+/// computes the true Fréchet derivative with a doubled block matrix:
+/// `expm([[V, G],[0, V]])` has the Fréchet derivative in its top-right
+/// block. This is the standard exact method and costs one 2d×2d expm.
+pub fn expm_frechet(v: &Mat, g: &Mat) -> (Mat, Mat) {
+    let n = v.rows();
+    assert_eq!(n, v.cols());
+    assert_eq!((n, n), (g.rows(), g.cols()));
+    let mut big = Mat::zeros(2 * n, 2 * n);
+    big.set_slice(0, 0, v);
+    big.set_slice(0, n, g);
+    big.set_slice(n, n, v);
+    let e = expm(&big);
+    let exp_v = e.slice(0, n, 0, n);
+    let frechet = e.slice(0, n, n, 2 * n);
+    (exp_v, frechet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    #[test]
+    fn expm_zero_is_identity() {
+        assert!(expm(&Mat::zeros(7, 7)).defect_from_identity() < 1e-6);
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let d = Mat::diag(&[1.0, -0.5, 0.0, 3.0]);
+        let e = expm(&d);
+        for (i, want) in [1.0f64.exp(), (-0.5f64).exp(), 1.0, 3.0f64.exp()].iter().enumerate() {
+            assert!((e[(i, i)] as f64 - want).abs() < 1e-4 * want, "{i}");
+        }
+    }
+
+    #[test]
+    fn expm_matches_series_oracle() {
+        check("expm_vs_series", 12, |rng| {
+            let n = 2 + rng.below(24);
+            let a = Mat::randn(n, n, rng).scale(0.5);
+            let got = expm(&a);
+            let want = oracle::expm_f64(&a);
+            assert_close(got.data(), want.data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn expm_needs_scaling_branch() {
+        // Norm >> θ₁₃ exercises the squaring loop.
+        let mut rng = Rng::new(41);
+        let a = Mat::randn(10, 10, &mut rng).scale(2.0);
+        let got = expm(&a);
+        let want = oracle::expm_f64(&a);
+        // Tolerance looser: f32 squarings amplify error.
+        let scale = want.max_abs();
+        assert!(
+            got.max_abs_diff(&want) < 1e-2 * scale.max(1.0),
+            "diff {} scale {scale}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn expm_of_skew_is_orthogonal() {
+        // e^(A - Aᵀ) ∈ SO(d) — the property expRNN builds on.
+        let mut rng = Rng::new(42);
+        let a = Mat::randn(16, 16, &mut rng);
+        let skew = a.sub(&a.t()).scale(0.5);
+        let q = expm(&skew);
+        let qtq = oracle::matmul_f64(&q.t(), &q);
+        assert!(qtq.defect_from_identity() < 1e-4, "defect {}", qtq.defect_from_identity());
+    }
+
+    #[test]
+    fn expm_inverse_relation() {
+        // e^A · e^(-A) = I.
+        let mut rng = Rng::new(43);
+        let a = Mat::randn(12, 12, &mut rng).scale(0.3);
+        let p = oracle::matmul_f64(&expm(&a), &expm(&a.scale(-1.0)));
+        assert!(p.defect_from_identity() < 1e-4);
+    }
+
+    #[test]
+    fn frechet_matches_finite_difference() {
+        let mut rng = Rng::new(44);
+        let n = 6;
+        let v = Mat::randn(n, n, &mut rng).scale(0.4);
+        let g = Mat::randn(n, n, &mut rng);
+        let (_e, frechet) = expm_frechet(&v, &g);
+        // FD: (expm(V + h·G) - expm(V - h·G)) / 2h ≈ L(V, G).
+        let h = 1e-3f32;
+        let ep = expm(&v.add(&g.scale(h)));
+        let em = expm(&v.sub(&g.scale(h)));
+        let fd = ep.sub(&em).scale(0.5 / h);
+        assert!(
+            fd.max_abs_diff(&frechet) < 2e-2,
+            "diff {}",
+            fd.max_abs_diff(&frechet)
+        );
+    }
+}

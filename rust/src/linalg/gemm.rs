@@ -1,0 +1,415 @@
+//! Blocked, multi-threaded GEMM — the workhorse under everything.
+//!
+//! FastH's entire point is replacing `O(d)` sequential *vector-vector*
+//! operations by `O(d/m + m)` sequential *matrix-matrix* operations; the
+//! quality of this GEMM is therefore what turns the paper's depth argument
+//! into wall-clock wins on this testbed (it plays the role cuBLAS plays on
+//! the paper's RTX 2080 Ti).
+//!
+//! Layout is row-major. The NN kernel is an i-parallel, k-blocked
+//! "broadcast-axpy" kernel that autovectorizes on the contiguous j loop;
+//! TN/NT/TT are either handled by dedicated reduction/dot kernels (small
+//! outputs, FastH's case) or rewritten into NN via an explicit transpose.
+
+use super::mat::Mat;
+use crate::util::parallel::{num_threads, parallel_map};
+
+/// Transpose flag for [`Gemm::gemm`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trans {
+    /// Use the operand as stored.
+    No,
+    /// Use the operand transposed.
+    Yes,
+}
+
+/// GEMM configuration (kept as a struct so the perf pass can tune block
+/// sizes in one place; defaults chosen for ~1 MiB L2 per core).
+#[derive(Clone, Copy, Debug)]
+pub struct Gemm {
+    /// Panel height of the K blocking for the NN kernel.
+    pub kc: usize,
+    /// Row-chunk handed to each worker thread.
+    pub mr_chunk: usize,
+    /// Below this many total FLOPs, run single-threaded (thread spawn
+    /// costs ~10µs; don't pay it for tiny multiplies).
+    pub par_flop_threshold: usize,
+}
+
+impl Default for Gemm {
+    fn default() -> Self {
+        Gemm { kc: 256, mr_chunk: 16, par_flop_threshold: 1 << 20 }
+    }
+}
+
+/// `C = A · B` (convenience, allocates C).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    Gemm::default().gemm(1.0, a, Trans::No, b, Trans::No, 0.0, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` (convenience, allocates C).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    Gemm::default().gemm(1.0, a, Trans::Yes, b, Trans::No, 0.0, &mut c);
+    c
+}
+
+/// `C = A · Bᵀ` (convenience, allocates C).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    Gemm::default().gemm(1.0, a, Trans::No, b, Trans::Yes, 0.0, &mut c);
+    c
+}
+
+impl Gemm {
+    /// General `C = alpha * op(A) · op(B) + beta * C`.
+    pub fn gemm(&self, alpha: f32, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f32, c: &mut Mat) {
+        let (am, ak) = match ta {
+            Trans::No => (a.rows(), a.cols()),
+            Trans::Yes => (a.cols(), a.rows()),
+        };
+        let (bk, bn) = match tb {
+            Trans::No => (b.rows(), b.cols()),
+            Trans::Yes => (b.cols(), b.rows()),
+        };
+        assert_eq!(ak, bk, "inner dimension mismatch: {ak} vs {bk}");
+        assert_eq!(c.rows(), am, "output rows mismatch");
+        assert_eq!(c.cols(), bn, "output cols mismatch");
+
+        match (ta, tb) {
+            (Trans::No, Trans::No) => self.nn(alpha, a, b, beta, c),
+            (Trans::Yes, Trans::No) => self.tn(alpha, a, b, beta, c),
+            (Trans::No, Trans::Yes) => self.nt(alpha, a, b, beta, c),
+            (Trans::Yes, Trans::Yes) => {
+                // C = alpha·AᵀBᵀ + beta·C = alpha·(B·A)ᵀ + beta·C.
+                let ba = matmul(b, a);
+                let bat = ba.t();
+                for (dst, &src) in c.data_mut().iter_mut().zip(bat.data()) {
+                    *dst = alpha * src + beta * *dst;
+                }
+            }
+        }
+    }
+
+    /// Row-parallel, k-blocked NN kernel. For skinny outputs (n ≤ 64 —
+    /// FastH's mini-batch case) a register-blocked path accumulates each
+    /// C row in a stack buffer across the whole reduction, eliminating
+    /// the per-k load/store of C that dominated the naive kernel
+    /// (§Perf iteration 5).
+    fn nn(&self, alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        scale_in_place(c, beta);
+        let flops = 2 * m * k * n;
+        let kc = self.kc;
+        let body = |rows: std::ops::Range<usize>, c_rows: &mut [f32]| {
+            if n <= 64 {
+                // Register/stack-accumulated path: C row lives in `acc`
+                // for the entire k sweep; B is streamed (k×n ≤ 256 KiB,
+                // L2-resident and shared across all rows of the chunk).
+                let mut acc = [0.0f32; 64];
+                for i in rows.clone() {
+                    let c_row =
+                        &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
+                    acc[..n].copy_from_slice(c_row);
+                    let a_row = a.row(i);
+                    for (kk, &aik) in a_row.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let s = alpha * aik;
+                        let b_row = b.row(kk);
+                        axpy(&mut acc[..n], s, b_row);
+                    }
+                    c_row.copy_from_slice(&acc[..n]);
+                }
+                return;
+            }
+            // General path: k-blocked so the active B panel stays in L1.
+            for k0 in (0..k).step_by(kc) {
+                let k1 = (k0 + kc).min(k);
+                for i in rows.clone() {
+                    let a_row = &a.row(i)[k0..k1];
+                    let c_row =
+                        &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
+                    for (kk, &aik) in a_row.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let s = alpha * aik;
+                        let b_row = b.row(k0 + kk);
+                        axpy(c_row, s, b_row);
+                    }
+                }
+            }
+        };
+        if flops < self.par_flop_threshold || num_threads() == 1 || m == 1 {
+            body(0..m, c.data_mut());
+            return;
+        }
+        // Split C's rows into disjoint slabs, one in flight per worker.
+        let chunk = self.mr_chunk.max(m.div_ceil(num_threads() * 4)).min(m);
+        let n_chunks = m.div_ceil(chunk);
+        let mut splits = Vec::with_capacity(n_chunks);
+        for ci in 0..n_chunks {
+            splits.push(((ci + 1) * chunk).min(m) * n);
+        }
+        crate::util::parallel::parallel_chunks_mut(c.data_mut(), &splits, |ci, slab| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(m);
+            body(lo..hi, slab);
+        });
+    }
+
+    /// `C = alpha·AᵀB + beta·C` where A is K×M, B is K×N, C is M×N.
+    /// The reduction runs over the long K axis — FastH's `YᵀA` case where
+    /// M = N = m (mini-batch) is tiny and K = d is large.
+    fn tn(&self, alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
+        let (k, m, n) = (a.rows(), a.cols(), b.cols());
+        if m * n <= 128 * 128 {
+            // Parallel reduction over K with per-thread M×N accumulators.
+            let nt = if 2 * k * m * n < self.par_flop_threshold { 1 } else { num_threads() };
+            let chunk = k.div_ceil(nt).max(1);
+            let partials: Vec<Vec<f32>> = parallel_map(k.div_ceil(chunk), |ci| {
+                let lo = ci * chunk;
+                let hi = (lo + chunk).min(k);
+                let mut acc = vec![0.0f32; m * n];
+                for kk in lo..hi {
+                    let a_row = a.row(kk);
+                    let b_row = b.row(kk);
+                    for i in 0..m {
+                        let aki = a_row[i];
+                        if aki == 0.0 {
+                            continue;
+                        }
+                        axpy(&mut acc[i * n..(i + 1) * n], aki, b_row);
+                    }
+                }
+                acc
+            });
+            let cd = c.data_mut();
+            for (idx, dst) in cd.iter_mut().enumerate() {
+                let mut sum = 0.0f32;
+                for p in &partials {
+                    sum += p[idx];
+                }
+                *dst = alpha * sum + beta * *dst;
+            }
+        } else {
+            // Large output: explicit transpose then the optimized NN path.
+            let at = a.t();
+            self.nn(alpha, &at, b, beta, c);
+        }
+    }
+
+    /// `C = alpha·ABᵀ + beta·C` where A is M×K, B is N×K: pure row-dot
+    /// kernel, both operands contiguous.
+    fn nt(&self, alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
+        let (m, k, n) = (a.rows(), a.cols(), b.rows());
+        let flops = 2 * m * k * n;
+        scale_in_place(c, beta);
+        let chunk = if flops < self.par_flop_threshold { m } else { self.mr_chunk };
+        let n_cols = n;
+        let mut splits = Vec::new();
+        let n_chunks = m.div_ceil(chunk);
+        for ci in 0..n_chunks {
+            splits.push(((ci + 1) * chunk).min(m) * n_cols);
+        }
+        crate::util::parallel::parallel_chunks_mut(c.data_mut(), &splits, |ci, slab| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(m);
+            for i in lo..hi {
+                let a_row = a.row(i);
+                let c_row = &mut slab[(i - lo) * n_cols..(i - lo + 1) * n_cols];
+                for j in 0..n {
+                    c_row[j] += alpha * dot_f32(a_row, b.row(j));
+                }
+            }
+        });
+    }
+}
+
+#[inline(always)]
+fn scale_in_place(c: &mut Mat, beta: f32) {
+    if beta == 0.0 {
+        c.data_mut().fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.data_mut() {
+            *x *= beta;
+        }
+    }
+}
+
+/// `y += s * x`, written so LLVM vectorizes the loop.
+#[inline(always)]
+fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += s * *xi;
+    }
+}
+
+/// Unrolled dot product with 4 independent accumulators (breaks the FP
+/// dependency chain so the loop pipelines). Public within the crate: the
+/// WY construction is dot-bound and needs the f32-SIMD version (f64
+/// accumulation halves the vector width — §Perf iteration 3).
+#[inline(always)]
+pub(crate) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // Fixed-width lane accumulators over `chunks_exact` — bounds-check
+    // free, so LLVM vectorizes to packed FMAs. (An indexed "unrolled"
+    // version measured 3.5 GFLOP/s: every a[i] carried a bounds check;
+    // §Perf iteration 7.)
+    let mut lanes = [0.0f32; 16];
+    let ca = a.chunks_exact(16);
+    let cb = b.chunks_exact(16);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        for i in 0..16 {
+            lanes[i] += x[i] * y[i];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        oracle::matmul_f64(a, b)
+    }
+
+    #[test]
+    fn small_known_product() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(17, 17, &mut rng);
+        let c = matmul(&a, &Mat::eye(17));
+        assert_close(c.data(), a.data(), 1e-6, 1e-6).unwrap();
+        let c2 = matmul(&Mat::eye(17), &a);
+        assert_close(c2.data(), a.data(), 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn nn_matches_oracle_over_shapes() {
+        check("gemm_nn", 24, |rng| {
+            let m = 1 + rng.below(90);
+            let k = 1 + rng.below(90);
+            let n = 1 + rng.below(90);
+            let a = Mat::randn(m, k, rng);
+            let b = Mat::randn(k, n, rng);
+            let c = matmul(&a, &b);
+            assert_close(c.data(), naive(&a, &b).data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn tn_matches_transpose_then_nn() {
+        check("gemm_tn", 16, |rng| {
+            let k = 1 + rng.below(300);
+            let m = 1 + rng.below(40);
+            let n = 1 + rng.below(40);
+            let a = Mat::randn(k, m, rng);
+            let b = Mat::randn(k, n, rng);
+            let c = matmul_tn(&a, &b);
+            let want = naive(&a.t(), &b);
+            assert_close(c.data(), want.data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn tn_large_output_path() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(64, 150, &mut rng);
+        let b = Mat::randn(64, 140, &mut rng);
+        let c = matmul_tn(&a, &b); // 150x140 > 128x128 → transpose path
+        let want = naive(&a.t(), &b);
+        assert_close(c.data(), want.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn nt_matches_oracle() {
+        check("gemm_nt", 16, |rng| {
+            let m = 1 + rng.below(60);
+            let k = 1 + rng.below(200);
+            let n = 1 + rng.below(60);
+            let a = Mat::randn(m, k, rng);
+            let b = Mat::randn(n, k, rng);
+            let c = matmul_nt(&a, &b);
+            let want = naive(&a, &b.t());
+            assert_close(c.data(), want.data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn tt_case() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(20, 30, &mut rng);
+        let b = Mat::randn(40, 20, &mut rng);
+        let mut c = Mat::zeros(30, 40);
+        Gemm::default().gemm(1.0, &a, Trans::Yes, &b, Trans::Yes, 0.0, &mut c);
+        let want = naive(&a.t(), &b.t());
+        assert_close(c.data(), want.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn alpha_beta_accumulate() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(9, 11, &mut rng);
+        let b = Mat::randn(11, 13, &mut rng);
+        let c0 = Mat::randn(9, 13, &mut rng);
+        let mut c = c0.clone();
+        Gemm::default().gemm(2.0, &a, Trans::No, &b, Trans::No, -0.5, &mut c);
+        let want_ab = naive(&a, &b);
+        for i in 0..9 {
+            for j in 0..13 {
+                let want = 2.0 * want_ab[(i, j)] - 0.5 * c0[(i, j)];
+                assert!((c[(i, j)] - want).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_threshold_crossing_consistent() {
+        // A product big enough to take the parallel path must agree with
+        // the serial result.
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(200, 180, &mut rng);
+        let b = Mat::randn(180, 190, &mut rng);
+        let big = matmul(&a, &b);
+        let serial = {
+            let g = Gemm { par_flop_threshold: usize::MAX, ..Default::default() };
+            let mut c = Mat::zeros(200, 190);
+            g.gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            c
+        };
+        assert_close(big.data(), serial.data(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn dot_f32_matches_naive() {
+        let mut rng = Rng::new(13);
+        for len in [0, 1, 7, 8, 9, 31, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_f32(&a, &b) - want).abs() < 1e-3 + 1e-4 * want.abs());
+        }
+    }
+}

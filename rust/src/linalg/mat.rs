@@ -1,0 +1,373 @@
+//! Row-major dense matrix of `f32`.
+//!
+//! `f32` matches the paper's GPU implementation (CUDA float). Tests that
+//! need tighter tolerances use the f64 [`super::oracle`] instead.
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Dense row-major matrix: element `(i, j)` lives at `data[i * cols + j]`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// From a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Standard-normal entries (the paper's dummy inputs, §8.2).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f32]) -> Mat {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline(always)]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    #[inline(always)]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    /// Consume into the underlying buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column `j` copied out (rows are contiguous, columns are not).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Set column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy of a rectangular sub-block `[r0..r1) x [c0..c1)`.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Paste `block` at offset `(r0, c0)`.
+    pub fn set_slice(&mut self, r0: usize, c0: usize, block: &Mat) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for i in 0..block.rows {
+            let dst = &mut self.row_mut(r0 + i)[c0..c0 + block.cols];
+            dst.copy_from_slice(block.row(i));
+        }
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// `self += alpha * other` in place.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `alpha * self` as a copy.
+    pub fn scale(&self, alpha: f32) -> Mat {
+        self.map(|x| alpha * x)
+    }
+
+    /// `self - other` as a copy.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self + other` as a copy.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Max-abs entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Induced infinity norm (max row sum of |a_ij|), used by expm scaling.
+    pub fn inf_norm(&self) -> f32 {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|x| x.abs() as f64).sum::<f64>())
+            .fold(0.0f64, f64::max) as f32
+    }
+
+    /// Max |self - other| entry.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// ||A - I||_max, the orthogonality-defect metric used in tests.
+    pub fn defect_from_identity(&self) -> f32 {
+        assert_eq!(self.rows, self.cols);
+        let mut worst = 0.0f32;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((self[(i, j)] - target).abs());
+            }
+        }
+        worst
+    }
+
+    /// True if any entry is NaN/Inf.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product with f64 accumulation (used by Householder updates where
+/// cancellation matters).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += *x as f64 * *y as f64;
+    }
+    acc as f32
+}
+
+/// Squared L2 norm of a vector, f64 accumulated.
+#[inline]
+pub fn norm_sq(v: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for x in v {
+        acc += *x as f64 * *x as f64;
+    }
+    acc as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_layout_is_row_major() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i = Mat::eye(3);
+        assert_eq!(i.defect_from_identity(), 0.0);
+        let d = Mat::diag(&[1., 2., 3.]);
+        assert_eq!(d[(1, 1)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(37, 53, &mut rng);
+        let tt = m.t().t();
+        assert_eq!(m, tt);
+        let t = m.t();
+        assert_eq!(t.rows(), 53);
+        assert_eq!(m[(3, 7)], t[(7, 3)]);
+    }
+
+    #[test]
+    fn slice_and_set_slice() {
+        let m = Mat::from_fn(6, 6, |i, j| (i * 6 + j) as f32);
+        let b = m.slice(1, 3, 2, 5);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.cols(), 3);
+        assert_eq!(b[(0, 0)], m[(1, 2)]);
+        let mut z = Mat::zeros(6, 6);
+        z.set_slice(1, 2, &b);
+        assert_eq!(z[(2, 4)], m[(2, 4)]);
+        assert_eq!(z[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![4., 3., 2., 1.]);
+        assert_eq!(a.add(&b).data(), &[5., 5., 5., 5.]);
+        assert_eq!(a.sub(&b).data(), &[-3., -1., 1., 3.]);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c.data(), &[9., 8., 7., 6.]);
+        assert_eq!(a.scale(0.5).data(), &[0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Mat::from_vec(2, 2, vec![3., 0., 0., 4.]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(a.max_abs(), 4.0);
+        let b = Mat::from_vec(2, 2, vec![1., -2., 3., 4.]);
+        assert_eq!(b.inf_norm(), 7.0);
+    }
+
+    #[test]
+    fn dot_and_norm_sq() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        assert_eq!(norm_sq(&[3., 4.]), 25.0);
+    }
+
+    #[test]
+    fn non_finite_detection() {
+        let mut m = Mat::zeros(2, 2);
+        assert!(!m.has_non_finite());
+        m[(0, 1)] = f32::NAN;
+        assert!(m.has_non_finite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0; 5]);
+    }
+}

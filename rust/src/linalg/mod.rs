@@ -1,0 +1,25 @@
+//! From-scratch dense linear algebra substrate (no BLAS/LAPACK available).
+//!
+//! Everything the paper's evaluation needs is implemented here:
+//! - [`mat`]: row-major `Mat` with elementwise/structural ops,
+//! - [`gemm`]: blocked, multi-threaded matrix multiply (all transpose
+//!   combinations) — the workhorse under FastH's block updates,
+//! - [`lu`]: partial-pivot LU → `inverse`, `det`/`slogdet`, `solve`
+//!   (the "standard method" column of Table 1),
+//! - [`expm`]: Padé-13 scaling-and-squaring matrix exponential (the
+//!   standard method for the exponential, as in expRNN),
+//! - [`cayley`]: `(I−V)(I+V)⁻¹` via LU solve (standard Cayley map),
+//! - [`qr`]: Householder QR (substrate + random orthogonal generation),
+//! - [`oracle`]: slow, obviously-correct f64 reference implementations
+//!   used only by tests.
+
+pub mod cayley;
+pub mod expm;
+pub mod gemm;
+pub mod lu;
+pub mod mat;
+pub mod oracle;
+pub mod qr;
+
+pub use gemm::{matmul, matmul_nt, matmul_tn, Gemm};
+pub use mat::Mat;

@@ -1,0 +1,256 @@
+//! Slow, obviously-correct f64 reference implementations — tests only.
+//!
+//! Every fast f32 routine in this crate is validated against one of these.
+//! They are deliberately naive (triple loops, explicit Householder
+//! matrices, cofactor-free LU without blocking) so a bug here is unlikely
+//! to be correlated with a bug in the optimized code.
+
+use super::mat::Mat;
+
+/// Naive f64-accumulated matmul, result rounded back to f32.
+pub fn matmul_f64(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += a[(i, kk)] as f64 * b[(kk, j)] as f64;
+            }
+            c[(i, j)] = acc as f32;
+        }
+    }
+    c
+}
+
+/// Materialize the Householder matrix `H = I - 2 v vᵀ / ||v||²` explicitly.
+pub fn householder_matrix(v: &[f32]) -> Mat {
+    let d = v.len();
+    let vs: f64 = v.iter().map(|&x| x as f64 * x as f64).sum();
+    let mut h = Mat::eye(d);
+    for i in 0..d {
+        for j in 0..d {
+            h[(i, j)] -= (2.0 * v[i] as f64 * v[j] as f64 / vs) as f32;
+        }
+    }
+    h
+}
+
+/// `H_1 · H_2 · ... · H_n` as an explicit matrix, where `vs` holds the
+/// Householder vectors as *columns* of a d×n matrix (paper's convention:
+/// column i is v_i).
+pub fn householder_product(vs: &Mat) -> Mat {
+    let mut u = Mat::eye(vs.rows());
+    for i in 0..vs.cols() {
+        let h = householder_matrix(&vs.col(i));
+        u = matmul_f64(&u, &h);
+    }
+    u
+}
+
+/// Apply `H_1 ... H_n X` by explicit materialization (O(d³) but exact
+/// order of the paper's forward pass).
+pub fn householder_apply(vs: &Mat, x: &Mat) -> Mat {
+    matmul_f64(&householder_product(vs), x)
+}
+
+/// f64 LU-based inverse for test comparison.
+pub fn inverse_f64(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    // Gauss-Jordan with partial pivoting, all in f64.
+    let mut aug: Vec<Vec<f64>> = (0..n)
+        .map(|i| {
+            let mut row: Vec<f64> = a.row(i).iter().map(|&x| x as f64).collect();
+            row.extend((0..n).map(|j| if i == j { 1.0 } else { 0.0 }));
+            row
+        })
+        .collect();
+    for col in 0..n {
+        let (piv, pval) = (col..n)
+            .map(|r| (r, aug[r][col].abs()))
+            .fold((col, -1.0), |best, cur| if cur.1 > best.1 { cur } else { best });
+        if pval < 1e-300 {
+            return None;
+        }
+        aug.swap(col, piv);
+        let scale = aug[col][col];
+        for x in aug[col].iter_mut() {
+            *x /= scale;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = aug[r][col];
+                if f != 0.0 {
+                    for c in 0..2 * n {
+                        let v = aug[col][c];
+                        aug[r][c] -= f * v;
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            out[(i, j)] = aug[i][n + j] as f32;
+        }
+    }
+    Some(out)
+}
+
+/// f64 determinant by LU with partial pivoting.
+pub fn det_f64(a: &Mat) -> f64 {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut m: Vec<Vec<f64>> =
+        (0..n).map(|i| a.row(i).iter().map(|&x| x as f64).collect()).collect();
+    let mut det = 1.0f64;
+    for col in 0..n {
+        let (piv, pval) = (col..n)
+            .map(|r| (r, m[r][col].abs()))
+            .fold((col, -1.0), |best, cur| if cur.1 > best.1 { cur } else { best });
+        if pval < 1e-300 {
+            return 0.0;
+        }
+        if piv != col {
+            m.swap(col, piv);
+            det = -det;
+        }
+        det *= m[col][col];
+        for r in col + 1..n {
+            let f = m[r][col] / m[col][col];
+            if f != 0.0 {
+                for c in col..n {
+                    let v = m[col][c];
+                    m[r][c] -= f * v;
+                }
+            }
+        }
+    }
+    det
+}
+
+/// Matrix exponential by scaled Taylor series in f64 (slow, accurate for
+/// moderate norms; tests use small matrices).
+pub fn expm_f64(a: &Mat) -> Mat {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    // Scale down so the series converges fast.
+    let norm = a.inf_norm() as f64;
+    let s = norm.log2().ceil().max(0.0) as u32 + 1;
+    let scale = 1.0 / (1u64 << s) as f64;
+    let a_scaled = a.map(|x| (x as f64 * scale) as f32);
+    // Taylor to term 24 in f64.
+    let mut result = Mat::eye(n);
+    let mut term = Mat::eye(n);
+    for k in 1..=24 {
+        term = matmul_f64(&term, &a_scaled).map(|x| x / k as f32);
+        result = result.add(&term);
+    }
+    // Square s times.
+    for _ in 0..s {
+        result = matmul_f64(&result, &result);
+    }
+    result
+}
+
+/// Central finite-difference gradient of a scalar function wrt a flat
+/// parameter slice. Used to validate analytic backward passes.
+pub fn finite_diff_grad(
+    params: &[f32],
+    eps: f32,
+    mut loss: impl FnMut(&[f32]) -> f64,
+) -> Vec<f32> {
+    let mut grad = vec![0.0f32; params.len()];
+    let mut work = params.to_vec();
+    for i in 0..params.len() {
+        let orig = work[i];
+        work[i] = orig + eps;
+        let lp = loss(&work);
+        work[i] = orig - eps;
+        let lm = loss(&work);
+        work[i] = orig;
+        grad[i] = ((lp - lm) / (2.0 * eps as f64)) as f32;
+    }
+    grad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn householder_matrix_is_symmetric_orthogonal() {
+        let mut rng = Rng::new(21);
+        let v: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let h = householder_matrix(&v);
+        // Symmetric.
+        assert!(h.max_abs_diff(&h.t()) < 1e-6);
+        // H² = I (a reflection is an involution).
+        let hh = matmul_f64(&h, &h);
+        assert!(hh.defect_from_identity() < 1e-5);
+    }
+
+    #[test]
+    fn householder_product_is_orthogonal() {
+        let mut rng = Rng::new(22);
+        let vs = Mat::randn(12, 12, &mut rng);
+        let u = householder_product(&vs);
+        let utu = matmul_f64(&u.t(), &u);
+        assert!(utu.defect_from_identity() < 1e-5);
+        // det(U) = (-1)^12 = +1
+        assert!((det_f64(&u) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn inverse_recovers_identity() {
+        let mut rng = Rng::new(23);
+        let a = Mat::randn(10, 10, &mut rng);
+        let inv = inverse_f64(&a).unwrap();
+        let prod = matmul_f64(&a, &inv);
+        assert!(prod.defect_from_identity() < 1e-4);
+    }
+
+    #[test]
+    fn inverse_of_singular_is_none() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0; // rank 1
+        assert!(inverse_f64(&a).is_none());
+    }
+
+    #[test]
+    fn det_of_diag() {
+        let d = Mat::diag(&[2.0, 3.0, -4.0]);
+        assert!((det_f64(&d) + 24.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn expm_of_zero_is_identity() {
+        let z = Mat::zeros(5, 5);
+        assert!(expm_f64(&z).defect_from_identity() < 1e-6);
+    }
+
+    #[test]
+    fn expm_of_diag() {
+        let d = Mat::diag(&[0.5, -1.0, 2.0]);
+        let e = expm_f64(&d);
+        for (i, want) in [0.5f64.exp(), (-1.0f64).exp(), 2.0f64.exp()].iter().enumerate() {
+            assert!((e[(i, i)] as f64 - want).abs() < 1e-4, "{i}");
+        }
+    }
+
+    #[test]
+    fn finite_diff_on_quadratic() {
+        // loss = Σ x_i² → grad = 2x.
+        let params = [1.0f32, -2.0, 0.5];
+        let g = finite_diff_grad(&params, 1e-3, |p| {
+            p.iter().map(|&x| x as f64 * x as f64).sum()
+        });
+        for (gi, &pi) in g.iter().zip(&params) {
+            assert!((gi - 2.0 * pi).abs() < 1e-3);
+        }
+    }
+}

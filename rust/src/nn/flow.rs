@@ -1,0 +1,293 @@
+//! Normalizing flows with SVD-reparameterized linear layers — the paper's
+//! §5 use case (Glow [7] / emerging convolutions [6]): a flow needs
+//! `log|det ∂f/∂x|` and `f⁻¹` at every layer; with `W = U·Σ·Vᵀ` both come
+//! from the live spectrum in `O(d)` / `O(d²m)` instead of `O(d³)`
+//! (Table 1), and the layer stays exactly invertible during training.
+//!
+//! Each flow block is `x ↦ leaky(W·x + b)` with an invertible elementwise
+//! nonlinearity; `log|det|` accumulates Σ log|σᵢ| from the linear part
+//! plus Σ log f'(pre) from the nonlinearity. Density fitting by exact
+//! maximum likelihood under a standard-normal base.
+
+use super::layers::LinearSvd;
+use crate::linalg::Mat;
+use crate::svd::param::SvdGrads;
+use crate::util::Rng;
+
+/// Invertible leaky ReLU slope for the negative half.
+const LEAK: f32 = 0.4;
+
+/// One flow block: SVD-linear + invertible leaky ReLU.
+pub struct FlowBlock {
+    pub linear: LinearSvd,
+}
+
+/// A stack of flow blocks mapping data `x` to latent `z`.
+pub struct Flow {
+    pub blocks: Vec<FlowBlock>,
+    pub dim: usize,
+}
+
+/// Caches for one forward pass (per block: linear cache + pre-activation).
+pub struct FlowCache {
+    linears: Vec<super::layers::LinearSvdCache>,
+    pres: Vec<Mat>,
+}
+
+/// Gradients for one block.
+pub struct FlowGrads {
+    pub per_block: Vec<(SvdGrads, Vec<f32>)>,
+}
+
+fn leaky(x: f32) -> f32 {
+    if x >= 0.0 {
+        x
+    } else {
+        LEAK * x
+    }
+}
+
+fn leaky_inv(y: f32) -> f32 {
+    if y >= 0.0 {
+        y
+    } else {
+        y / LEAK
+    }
+}
+
+fn leaky_logderiv(x: f32) -> f32 {
+    if x >= 0.0 {
+        0.0
+    } else {
+        LEAK.ln()
+    }
+}
+
+impl Flow {
+    pub fn new(dim: usize, depth: usize, rng: &mut Rng) -> Flow {
+        let blocks = (0..depth)
+            .map(|_| FlowBlock { linear: LinearSvd::new(dim, rng) })
+            .collect();
+        Flow { blocks, dim }
+    }
+
+    /// Forward `x → (z, per-sample log|det J|, cache)`.
+    pub fn forward(&self, x: &Mat) -> (Mat, Vec<f64>, FlowCache) {
+        let b = x.cols();
+        let mut cur = x.clone();
+        let mut logdet = vec![0.0f64; b];
+        let mut linears = Vec::with_capacity(self.blocks.len());
+        let mut pres = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            // Linear part: logdet contribution Σ log|σ| (same ∀ samples).
+            let (_sign, lin_ld) = blk.linear.p.slogdet();
+            let (pre, cache) = blk.linear.forward(&cur);
+            // Nonlinearity: per-sample Σ log f'(pre).
+            for j in 0..b {
+                let mut ld = lin_ld;
+                for i in 0..self.dim {
+                    ld += leaky_logderiv(pre[(i, j)]) as f64;
+                }
+                logdet[j] += ld;
+            }
+            cur = pre.map(leaky);
+            linears.push(cache);
+            pres.push(pre);
+        }
+        (cur, logdet, FlowCache { linears, pres })
+    }
+
+    /// Exact inverse `z → x` (sampling path), using the Table-1 inverse
+    /// `W⁻¹ = V·Σ⁻¹·Uᵀ` — no LU, no iterative solve.
+    pub fn inverse(&self, z: &Mat) -> Mat {
+        let mut cur = z.clone();
+        for blk in self.blocks.iter().rev() {
+            let mut pre = cur.map(leaky_inv);
+            // Undo bias, then W⁻¹.
+            for i in 0..self.dim {
+                let bi = blk.linear.b[i];
+                for v in pre.row_mut(i) {
+                    *v -= bi;
+                }
+            }
+            cur = blk.linear.p.apply_inverse(&pre, blk.linear.k);
+        }
+        cur
+    }
+
+    /// Negative log-likelihood under N(0, I) base + change of variables,
+    /// averaged over the batch: `NLL = E[ ½‖z‖² + (d/2)·log 2π − log|det J| ]`.
+    /// Returns `(nll, grads)` — one full backward pass.
+    pub fn nll_step(&self, x: &Mat, cache_out: Option<&mut Option<FlowCache>>) -> (f64, FlowGrads) {
+        let b = x.cols();
+        let (z, logdet, cache) = self.forward(x);
+        let half_log2pi = 0.5 * (2.0 * std::f64::consts::PI).ln();
+        let mut nll = 0.0f64;
+        for j in 0..b {
+            let mut sq = 0.0f64;
+            for i in 0..self.dim {
+                sq += (z[(i, j)] as f64).powi(2);
+            }
+            nll += 0.5 * sq + self.dim as f64 * half_log2pi - logdet[j];
+        }
+        nll /= b as f64;
+
+        // Backward: ∂NLL/∂z = z / b ;  logdet terms contribute directly to
+        // σ-gradients (∂Σlog|σ|/∂σ = 1/σ) and to pre-activation grads
+        // (leaky has piecewise-constant derivative → zero grad from its
+        // logdet term except measure-zero kink).
+        let mut g = z.scale(1.0 / b as f32);
+        let mut per_block: Vec<(SvdGrads, Vec<f32>)> = Vec::with_capacity(self.blocks.len());
+        for (bi, blk) in self.blocks.iter().enumerate().rev() {
+            let pre = &cache.pres[bi];
+            // Through the nonlinearity: g_pre = g ⊙ f'(pre).
+            let mut g_pre = g.clone();
+            for (v, &p) in g_pre.data_mut().iter_mut().zip(pre.data()) {
+                if p < 0.0 {
+                    *v *= LEAK;
+                }
+            }
+            // Through the linear layer.
+            let (dx, mut grads, db) = blk.linear.backward(&cache.linears[bi], &g_pre);
+            // logdet gradient wrt σ: −(1/b)·Σ_samples ∂logdet/∂σ = −1/σ
+            // (one per sample, averaged — the linear logdet is sample-
+            // independent so the mean keeps the full −1/σ).
+            for (ds, &s) in grads.dsigma.iter_mut().zip(&blk.linear.p.sigma) {
+                *ds -= 1.0 / s;
+            }
+            per_block.push((grads, db));
+            g = dx;
+        }
+        per_block.reverse();
+        if let Some(slot) = cache_out {
+            *slot = Some(cache);
+        }
+        (nll, FlowGrads { per_block })
+    }
+
+    /// SGD step on every block; σ kept away from 0 (invertibility) by
+    /// clamping |σ| ≥ floor.
+    pub fn sgd_step(&mut self, grads: &FlowGrads, lr: f32, sigma_floor: f32) {
+        for (blk, (g, db)) in self.blocks.iter_mut().zip(&grads.per_block) {
+            blk.linear.sgd_step(g, db, lr);
+            for s in blk.linear.p.sigma.iter_mut() {
+                if s.abs() < sigma_floor {
+                    *s = sigma_floor * if *s < 0.0 { -1.0 } else { 1.0 };
+                }
+            }
+        }
+    }
+
+    /// Draw samples by pushing base noise through the inverse.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Mat {
+        let z = Mat::randn(self.dim, n, rng);
+        self.inverse(&z)
+    }
+}
+
+/// Gaussian-mixture toy target in d dims: `n_modes` means on a circle in
+/// the first two coordinates, isotropic noise elsewhere.
+pub fn gaussian_mixture(dim: usize, n_modes: usize, n: usize, rng: &mut Rng) -> Mat {
+    let mut x = Mat::zeros(dim, n);
+    for j in 0..n {
+        let mode = rng.below(n_modes);
+        let theta = 2.0 * std::f32::consts::PI * mode as f32 / n_modes as f32;
+        for i in 0..dim {
+            let mean = match i {
+                0 => 2.5 * theta.cos(),
+                1 => 2.5 * theta.sin(),
+                _ => 0.0,
+            };
+            x[(i, j)] = mean + 0.35 * rng.normal_f32();
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{lu, oracle};
+
+    #[test]
+    fn inverse_roundtrips() {
+        let mut rng = Rng::new(0xF1);
+        let flow = Flow::new(6, 3, &mut rng);
+        let x = Mat::randn(6, 5, &mut rng);
+        let (z, _ld, _c) = flow.forward(&x);
+        let back = flow.inverse(&z);
+        assert!(back.max_abs_diff(&x) < 1e-3, "diff {}", back.max_abs_diff(&x));
+    }
+
+    #[test]
+    fn logdet_matches_dense_jacobian_for_linear_block() {
+        // With inputs forced positive through the leaky region the block
+        // is pure linear+identity: logdet must equal LU slogdet(W).
+        let mut rng = Rng::new(0xF2);
+        let flow = Flow::new(5, 1, &mut rng);
+        // Push a sample through; compare against materialized W.
+        let x = Mat::randn(5, 3, &mut rng);
+        let (_z, logdet, _c) = flow.forward(&x);
+        let w = flow.blocks[0].linear.p.materialize();
+        let (_s, lu_ld) = lu::slogdet(&w);
+        let pre = {
+            let (p, _) = flow.blocks[0].linear.forward(&x);
+            p
+        };
+        for j in 0..3 {
+            let mut want = lu_ld;
+            for i in 0..5 {
+                if pre[(i, j)] < 0.0 {
+                    want += (LEAK as f64).ln();
+                }
+            }
+            assert!(
+                (logdet[j] - want).abs() < 1e-3,
+                "sample {j}: {} vs {want}",
+                logdet[j]
+            );
+        }
+    }
+
+    #[test]
+    fn nll_gradcheck_sigma() {
+        let mut rng = Rng::new(0xF3);
+        let mut flow = Flow::new(4, 2, &mut rng);
+        let x = Mat::randn(4, 6, &mut rng);
+        let (_nll, grads) = flow.nll_step(&x, None);
+        // Finite differences on block 0's σ.
+        let fd = oracle::finite_diff_grad(&flow.blocks[0].linear.p.sigma.clone(), 1e-3, |s| {
+            flow.blocks[0].linear.p.sigma = s.to_vec();
+            flow.nll_step(&x, None).0
+        });
+        crate::util::prop::assert_close(&grads.per_block[0].0.dsigma, &fd, 2e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn training_reduces_nll() {
+        let mut rng = Rng::new(0xF4);
+        let mut flow = Flow::new(4, 3, &mut rng);
+        let data = gaussian_mixture(4, 3, 128, &mut rng);
+        let (nll0, _) = flow.nll_step(&data, None);
+        let mut last = nll0;
+        for _ in 0..60 {
+            let (nll, grads) = flow.nll_step(&data, None);
+            flow.sgd_step(&grads, 0.05, 0.05);
+            last = nll;
+        }
+        assert!(last < nll0 - 0.1, "NLL {nll0:.3} → {last:.3}");
+        // Still exactly invertible after training.
+        let (z, _ld, _c) = flow.forward(&data);
+        let back = flow.inverse(&z);
+        assert!(back.max_abs_diff(&data) < 1e-2);
+    }
+
+    #[test]
+    fn samples_have_reasonable_scale() {
+        let mut rng = Rng::new(0xF5);
+        let flow = Flow::new(4, 2, &mut rng);
+        let s = flow.sample(64, &mut rng);
+        assert_eq!((s.rows(), s.cols()), (4, 64));
+        assert!(!s.has_non_finite());
+    }
+}

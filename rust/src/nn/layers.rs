@@ -1,0 +1,247 @@
+//! Layers: standard dense, the paper's `LinearSVD`, and activations.
+
+use crate::linalg::gemm::{matmul, matmul_nt, matmul_tn};
+use crate::linalg::Mat;
+use crate::svd::param::{SvdGrads, SvdParam};
+use crate::util::Rng;
+
+/// Standard dense layer `y = W·x + b` (weights out×in, batch in columns).
+pub struct Dense {
+    pub w: Mat,
+    pub b: Vec<f32>,
+}
+
+/// Cache for [`Dense::forward`].
+pub struct DenseCache {
+    x: Mat,
+}
+
+impl Dense {
+    /// Glorot-ish init: N(0, 1/√in).
+    pub fn new(out_dim: usize, in_dim: usize, rng: &mut Rng) -> Dense {
+        let scale = 1.0 / (in_dim as f32).sqrt();
+        let w = Mat::randn(out_dim, in_dim, rng).scale(scale);
+        Dense { w, b: vec![0.0; out_dim] }
+    }
+
+    pub fn forward(&self, x: &Mat) -> (Mat, DenseCache) {
+        let mut y = matmul(&self.w, x);
+        for i in 0..y.rows() {
+            let bi = self.b[i];
+            for v in y.row_mut(i) {
+                *v += bi;
+            }
+        }
+        (y, DenseCache { x: x.clone() })
+    }
+
+    /// Returns `(dx, dw, db)`.
+    pub fn backward(&self, cache: &DenseCache, g: &Mat) -> (Mat, Mat, Vec<f32>) {
+        let dx = matmul_tn(&self.w, g);
+        let dw = matmul_nt(g, &cache.x);
+        let db: Vec<f32> = (0..g.rows()).map(|i| g.row(i).iter().sum()).collect();
+        (dx, dw, db)
+    }
+
+    pub fn sgd_step(&mut self, dw: &Mat, db: &[f32], lr: f32) {
+        self.w.axpy(-lr, dw);
+        for (b, &d) in self.b.iter_mut().zip(db) {
+            *b -= lr * d;
+        }
+    }
+}
+
+/// The paper's drop-in replacement for `nn.Linear` (§6): a square layer
+/// whose weight is held as `U·Σ·Vᵀ`, multiplied with FastH.
+pub struct LinearSvd {
+    pub p: SvdParam,
+    pub b: Vec<f32>,
+    /// FastH block size (tuned or heuristic √d).
+    pub k: usize,
+}
+
+/// Cache for [`LinearSvd::forward`].
+pub struct LinearSvdCache {
+    inner: crate::svd::param::SvdCache,
+}
+
+impl LinearSvd {
+    pub fn new(d: usize, rng: &mut Rng) -> LinearSvd {
+        let k = crate::householder::tune::KCache::heuristic(d, 32);
+        LinearSvd { p: SvdParam::random_full(d, rng), b: vec![0.0; d], k }
+    }
+
+    pub fn forward(&self, x: &Mat) -> (Mat, LinearSvdCache) {
+        let (mut y, inner) = self.p.forward(x, self.k);
+        for i in 0..y.rows() {
+            let bi = self.b[i];
+            for v in y.row_mut(i) {
+                *v += bi;
+            }
+        }
+        (y, LinearSvdCache { inner })
+    }
+
+    /// Returns `(dx, svd grads, db)`.
+    pub fn backward(&self, cache: &LinearSvdCache, g: &Mat) -> (Mat, SvdGrads, Vec<f32>) {
+        let (dx, grads) = self.p.backward(&cache.inner, g);
+        let db: Vec<f32> = (0..g.rows()).map(|i| g.row(i).iter().sum()).collect();
+        (dx, grads, db)
+    }
+
+    pub fn sgd_step(&mut self, grads: &SvdGrads, db: &[f32], lr: f32) {
+        self.p.sgd_step(grads, lr);
+        for (b, &d) in self.b.iter_mut().zip(db) {
+            *b -= lr * d;
+        }
+    }
+
+    /// Spectral clipping (σ ∈ [1±ε]) — call after each optimizer step to
+    /// enforce the spectral-RNN constraint.
+    pub fn clip_sigma(&mut self, eps: f32) {
+        self.p.clip_sigma(eps);
+    }
+}
+
+/// Elementwise activations with fused backward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Tanh,
+    Relu,
+    Identity,
+}
+
+impl Activation {
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            Activation::Tanh => x.map(|v| v.tanh()),
+            Activation::Relu => x.map(|v| v.max(0.0)),
+            Activation::Identity => x.clone(),
+        }
+    }
+
+    /// `g ⊙ f'(x)` given the forward *output* `y = f(x)` (both tanh and
+    /// relu derivatives are expressible from the output).
+    pub fn backward(&self, y: &Mat, g: &Mat) -> Mat {
+        match self {
+            Activation::Tanh => {
+                let mut out = g.clone();
+                for (o, &yy) in out.data_mut().iter_mut().zip(y.data()) {
+                    *o *= 1.0 - yy * yy;
+                }
+                out
+            }
+            Activation::Relu => {
+                let mut out = g.clone();
+                for (o, &yy) in out.data_mut().iter_mut().zip(y.data()) {
+                    if yy <= 0.0 {
+                        *o = 0.0;
+                    }
+                }
+                out
+            }
+            Activation::Identity => g.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn dense_forward_shapes_and_bias() {
+        let mut rng = Rng::new(161);
+        let layer = Dense::new(5, 3, &mut rng);
+        let x = Mat::randn(3, 7, &mut rng);
+        let (y, _c) = layer.forward(&x);
+        assert_eq!((y.rows(), y.cols()), (5, 7));
+        // Zero input → output = bias broadcast.
+        let mut l2 = Dense::new(2, 2, &mut rng);
+        l2.b = vec![1.5, -0.5];
+        let (y2, _) = l2.forward(&Mat::zeros(2, 3));
+        assert_eq!(y2.row(0), &[1.5, 1.5, 1.5]);
+        assert_eq!(y2.row(1), &[-0.5, -0.5, -0.5]);
+    }
+
+    #[test]
+    fn dense_gradcheck() {
+        let mut rng = Rng::new(162);
+        let layer = Dense::new(4, 3, &mut rng);
+        let x = Mat::randn(3, 2, &mut rng);
+        let g = Mat::randn(4, 2, &mut rng);
+        let (_y, cache) = layer.forward(&x);
+        let (dx, dw, db) = layer.backward(&cache, &g);
+        let fd_w = oracle::finite_diff_grad(layer.w.data(), 1e-3, |p| {
+            let mut l2 = Dense { w: Mat::from_vec(4, 3, p.to_vec()), b: layer.b.clone() };
+            l2.b = layer.b.clone();
+            let (y, _) = l2.forward(&x);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(dw.data(), &fd_w, 1e-2, 5e-2).unwrap();
+        let fd_x = oracle::finite_diff_grad(x.data(), 1e-3, |p| {
+            let x2 = Mat::from_vec(3, 2, p.to_vec());
+            let (y, _) = layer.forward(&x2);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(dx.data(), &fd_x, 1e-2, 5e-2).unwrap();
+        let fd_b = oracle::finite_diff_grad(&layer.b, 1e-3, |p| {
+            let l2 = Dense { w: layer.w.clone(), b: p.to_vec() };
+            let (y, _) = l2.forward(&x);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(&db, &fd_b, 1e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn linear_svd_matches_materialized_weight() {
+        let mut rng = Rng::new(163);
+        let layer = LinearSvd::new(8, &mut rng);
+        let x = Mat::randn(8, 4, &mut rng);
+        let (y, _c) = layer.forward(&x);
+        let w = layer.p.materialize();
+        let want = oracle::matmul_f64(&w, &x);
+        assert_close(y.data(), want.data(), 1e-3, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn linear_svd_training_keeps_orthogonality() {
+        let mut rng = Rng::new(164);
+        let mut layer = LinearSvd::new(6, &mut rng);
+        let x = Mat::randn(6, 3, &mut rng);
+        let g = Mat::randn(6, 3, &mut rng);
+        for _ in 0..4 {
+            let (_y, c) = layer.forward(&x);
+            let (_dx, grads, db) = layer.backward(&c, &g);
+            layer.sgd_step(&grads, &db, 0.05);
+            layer.clip_sigma(0.05);
+        }
+        let u = layer.p.u.materialize();
+        let utu = oracle::matmul_f64(&u.t(), &u);
+        assert!(utu.defect_from_identity() < 1e-4);
+        for &s in &layer.p.sigma {
+            assert!((0.95..=1.05).contains(&s));
+        }
+    }
+
+    #[test]
+    fn activations_forward_backward() {
+        let x = Mat::from_vec(1, 4, vec![-2.0, -0.5, 0.5, 2.0]);
+        let g = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        let relu = Activation::Relu;
+        let y = relu.forward(&x);
+        assert_eq!(y.data(), &[0.0, 0.0, 0.5, 2.0]);
+        let dg = relu.backward(&y, &g);
+        assert_eq!(dg.data(), &[0.0, 0.0, 1.0, 1.0]);
+
+        let tanh = Activation::Tanh;
+        let y = tanh.forward(&x);
+        let dg = tanh.backward(&y, &g);
+        for (d, &xx) in dg.data().iter().zip(x.data()) {
+            let want = 1.0 - xx.tanh() * xx.tanh();
+            assert!((d - want).abs() < 1e-5);
+        }
+    }
+}

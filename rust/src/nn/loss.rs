@@ -1,0 +1,137 @@
+//! Losses. Batches are column-major (class/feature × batch).
+
+use crate::linalg::Mat;
+
+/// Softmax + cross-entropy, fused for stability. `logits` is C×B,
+/// `labels[b] ∈ [0, C)`. Returns `(mean loss, ∂L/∂logits)`.
+pub fn softmax_cross_entropy(logits: &Mat, labels: &[usize]) -> (f64, Mat) {
+    let (c, b) = (logits.rows(), logits.cols());
+    assert_eq!(labels.len(), b);
+    let mut grad = Mat::zeros(c, b);
+    let mut total = 0.0f64;
+    for j in 0..b {
+        // Column-wise log-softmax.
+        let mut maxv = f32::NEG_INFINITY;
+        for i in 0..c {
+            maxv = maxv.max(logits[(i, j)]);
+        }
+        let mut sum = 0.0f64;
+        for i in 0..c {
+            sum += ((logits[(i, j)] - maxv) as f64).exp();
+        }
+        let log_z = sum.ln() + maxv as f64;
+        let label = labels[j];
+        assert!(label < c, "label {label} out of range");
+        total += log_z - logits[(label, j)] as f64;
+        let inv_b = 1.0 / b as f32;
+        for i in 0..c {
+            let p = (((logits[(i, j)] - maxv) as f64).exp() / sum) as f32;
+            grad[(i, j)] = (p - if i == label { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    (total / b as f64, grad)
+}
+
+/// Mean squared error `mean((pred − target)²)`. Returns `(loss, ∂L/∂pred)`.
+pub fn mse(pred: &Mat, target: &Mat) -> (f64, Mat) {
+    assert_eq!((pred.rows(), pred.cols()), (target.rows(), target.cols()));
+    let n = (pred.rows() * pred.cols()) as f64;
+    let mut grad = Mat::zeros(pred.rows(), pred.cols());
+    let mut total = 0.0f64;
+    for (idx, (&p, &t)) in pred.data().iter().zip(target.data()).enumerate() {
+        let d = (p - t) as f64;
+        total += d * d;
+        grad.data_mut()[idx] = (2.0 * d / n) as f32;
+    }
+    (total / n, grad)
+}
+
+/// Fraction of columns whose argmax equals the label.
+pub fn accuracy(logits: &Mat, labels: &[usize]) -> f64 {
+    let (c, b) = (logits.rows(), logits.cols());
+    let mut hits = 0usize;
+    for j in 0..b {
+        let mut best = 0;
+        for i in 1..c {
+            if logits[(i, j)] > logits[(best, j)] {
+                best = i;
+            }
+        }
+        if best == labels[j] {
+            hits += 1;
+        }
+    }
+    hits as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn ce_of_perfect_prediction_is_small() {
+        // Huge logit on the right class → loss ≈ 0.
+        let mut logits = Mat::zeros(3, 2);
+        logits[(1, 0)] = 50.0;
+        logits[(2, 1)] = 50.0;
+        let (loss, _g) = softmax_cross_entropy(&logits, &[1, 2]);
+        assert!(loss < 1e-6, "loss={loss}");
+    }
+
+    #[test]
+    fn ce_uniform_is_log_c() {
+        let logits = Mat::zeros(5, 3);
+        let (loss, _g) = softmax_cross_entropy(&logits, &[0, 1, 2]);
+        assert!((loss - (5f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ce_grad_matches_finite_difference() {
+        let mut rng = Rng::new(171);
+        let logits = Mat::randn(4, 3, &mut rng);
+        let labels = [2usize, 0, 3];
+        let (_l, grad) = softmax_cross_entropy(&logits, &labels);
+        let fd = oracle::finite_diff_grad(logits.data(), 1e-3, |p| {
+            let m = Mat::from_vec(4, 3, p.to_vec());
+            softmax_cross_entropy(&m, &labels).0
+        });
+        assert_close(grad.data(), &fd, 1e-3, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn ce_grad_columns_sum_to_zero() {
+        let mut rng = Rng::new(172);
+        let logits = Mat::randn(6, 4, &mut rng);
+        let (_l, grad) = softmax_cross_entropy(&logits, &[0, 1, 2, 3]);
+        for j in 0..4 {
+            let s: f32 = (0..6).map(|i| grad[(i, j)]).sum();
+            assert!(s.abs() < 1e-6, "col {j} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn mse_basics_and_grad() {
+        let pred = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let target = Mat::from_vec(2, 2, vec![1.0, 1.0, 3.0, 2.0]);
+        let (loss, grad) = mse(&pred, &target);
+        assert!((loss - (0.0 + 1.0 + 0.0 + 4.0) / 4.0).abs() < 1e-6);
+        let fd = oracle::finite_diff_grad(pred.data(), 1e-3, |p| {
+            let m = Mat::from_vec(2, 2, p.to_vec());
+            mse(&m, &target).0
+        });
+        assert_close(grad.data(), &fd, 1e-3, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let mut logits = Mat::zeros(3, 4);
+        logits[(0, 0)] = 1.0; // pred 0, label 0 ✓
+        logits[(1, 1)] = 1.0; // pred 1, label 0 ✗
+        logits[(2, 2)] = 1.0; // pred 2, label 2 ✓
+        logits[(0, 3)] = 1.0; // pred 0, label 1 ✗
+        assert!((accuracy(&logits, &[0, 0, 2, 1]) - 0.5).abs() < 1e-9);
+    }
+}

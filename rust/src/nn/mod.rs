@@ -1,0 +1,23 @@
+//! Minimal neural-network stack for the end-to-end experiments.
+//!
+//! The paper's technique lives *inside* networks: [`layers::LinearSvd`]
+//! is the drop-in `nn.Linear` replacement the paper ships ("change
+//! NN.LINEAR to LINEARSVD", §6), and [`rnn::SvdRnn`] is the spectral-RNN
+//! use case the reparameterization was invented for (singular values
+//! clipped to `[1±ε]` against exploding/vanishing gradients).
+//!
+//! Everything needed to train — activations, losses, optimizers, synthetic
+//! tasks — is implemented here from scratch; batches are column-major
+//! (`Mat` of shape features × batch) matching the paper's `X ∈ ℝ^{d×m}`.
+
+pub mod flow;
+pub mod layers;
+pub mod loss;
+pub mod optim;
+pub mod rnn;
+pub mod tasks;
+
+pub use layers::{Activation, Dense, LinearSvd};
+pub use loss::{mse, softmax_cross_entropy};
+pub use optim::{Adam, Sgd};
+pub use rnn::SvdRnn;

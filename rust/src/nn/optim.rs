@@ -1,0 +1,161 @@
+//! Optimizers over flat parameter slices.
+//!
+//! Parameters live in heterogeneous containers (`Mat`, `Vec<f32>`,
+//! Householder vector matrices); both optimizers operate on `&mut [f32]`
+//! views registered in a stable order, so one optimizer instance can own
+//! the state for a whole model.
+
+/// Plain SGD with optional momentum.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Sgd {
+        Sgd { lr, momentum, velocity: Vec::new() }
+    }
+
+    /// Update registered slot `slot` (slots must be visited in the same
+    /// order every step; state is allocated lazily on first visit).
+    pub fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32]) {
+        assert_eq!(param.len(), grad.len());
+        while self.velocity.len() <= slot {
+            self.velocity.push(Vec::new());
+        }
+        let v = &mut self.velocity[slot];
+        if v.is_empty() {
+            v.resize(param.len(), 0.0);
+        }
+        assert_eq!(v.len(), param.len(), "slot {slot} shape changed");
+        if self.momentum == 0.0 {
+            for (p, &g) in param.iter_mut().zip(grad) {
+                *p -= self.lr * g;
+            }
+        } else {
+            for ((p, vel), &g) in param.iter_mut().zip(v.iter_mut()).zip(grad) {
+                *vel = self.momentum * *vel + g;
+                *p -= self.lr * *vel;
+            }
+        }
+    }
+}
+
+/// Adam (Kingma & Ba 2015) with bias correction.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    /// Call once per optimization step *before* the per-slot updates.
+    pub fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    pub fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32]) {
+        assert_eq!(param.len(), grad.len());
+        assert!(self.t >= 1, "call begin_step() first");
+        while self.m.len() <= slot {
+            self.m.push(Vec::new());
+            self.v.push(Vec::new());
+        }
+        if self.m[slot].is_empty() {
+            self.m[slot].resize(param.len(), 0.0);
+            self.v[slot].resize(param.len(), 0.0);
+        }
+        let (mm, vv) = (&mut self.m[slot], &mut self.v[slot]);
+        assert_eq!(mm.len(), param.len(), "slot {slot} shape changed");
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for i in 0..param.len() {
+            let g = grad[i];
+            mm[i] = self.beta1 * mm[i] + (1.0 - self.beta1) * g;
+            vv[i] = self.beta2 * vv[i] + (1.0 - self.beta2) * g * g;
+            let mhat = mm[i] / bc1;
+            let vhat = vv[i] / bc2;
+            param[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = Σ (x_i − target_i)² with each optimizer.
+    fn quadratic_descent(opt: &mut dyn FnMut(&mut [f32], &[f32])) -> f32 {
+        let target = [3.0f32, -1.0, 0.5];
+        let mut x = [0.0f32; 3];
+        for _ in 0..400 {
+            let grad: Vec<f32> = x.iter().zip(&target).map(|(&xi, &t)| 2.0 * (xi - t)).collect();
+            opt(&mut x, &grad);
+        }
+        x.iter().zip(&target).map(|(&xi, &t)| (xi - t) * (xi - t)).sum()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut sgd = Sgd::new(0.1, 0.0);
+        let err = quadratic_descent(&mut |p, g| sgd.update(0, p, g));
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        let mut sgd = Sgd::new(0.05, 0.9);
+        let err = quadratic_descent(&mut |p, g| sgd.update(0, p, g));
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut adam = Adam::new(0.05);
+        let err = quadratic_descent(&mut |p, g| {
+            adam.begin_step();
+            adam.update(0, p, g);
+        });
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let mut sgd = Sgd::new(1.0, 0.9);
+        let mut a = [0.0f32];
+        let mut b = [0.0f32];
+        sgd.update(0, &mut a, &[1.0]);
+        sgd.update(1, &mut b, &[2.0]);
+        sgd.update(0, &mut a, &[1.0]);
+        // Momentum for slot 0 after two grads of 1.0: v = 1.9 total applied 1 + 1.9.
+        assert!((a[0] + 2.9).abs() < 1e-6, "a={}", a[0]);
+        assert!((b[0] + 2.0).abs() < 1e-6, "b={}", b[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape changed")]
+    fn shape_change_is_detected() {
+        let mut sgd = Sgd::new(0.1, 0.5);
+        let mut a = [0.0f32; 2];
+        sgd.update(0, &mut a, &[1.0, 1.0]);
+        let mut b = [0.0f32; 3];
+        sgd.update(0, &mut b, &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_step")]
+    fn adam_requires_begin_step() {
+        let mut adam = Adam::new(0.1);
+        let mut a = [0.0f32];
+        adam.update(0, &mut a, &[1.0]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Synthetic tasks for the end-to-end experiments.
+//!
+//! - [`copy_memory`]: the classic long-horizon memory task from the
+//!   unitary/orthogonal-RNN literature (and spectral-RNN [17], the paper
+//!   the SVD reparameterization comes from),
+//! - [`spirals`]: a 3-class 2-D spiral classification set for the MLP
+//!   example,
+//! - [`char_corpus`]: a tiny character stream for language-model smoke
+//!   runs.
+
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// Copy-memory task: the input shows `k` symbols from an alphabet of size
+/// `a`, then `delay` blanks, then a "go" marker; the model must output the
+/// `k` symbols after the marker. Sequence length is `k + delay + 1 + k`.
+///
+/// Returns `(inputs, targets)`:
+/// - `inputs`: per-timestep one-hot columns, shape `(a+2) × batch` per
+///   step, as a Vec of length T (token `a` = blank, `a+1` = go),
+/// - `targets`: for the last `k` steps, the expected symbol index; `None`
+///   (encoded as `a`, the blank class) elsewhere.
+pub struct CopyMemoryBatch {
+    /// T matrices of shape (a+2)×batch.
+    pub inputs: Vec<Mat>,
+    /// T label vectors (class indices into a+2 classes; blanks before the
+    /// answer region).
+    pub targets: Vec<Vec<usize>>,
+    /// Number of timesteps whose loss counts (the last k).
+    pub scored_steps: usize,
+}
+
+/// Generate a copy-memory batch.
+pub fn copy_memory(
+    alphabet: usize,
+    k: usize,
+    delay: usize,
+    batch: usize,
+    rng: &mut Rng,
+) -> CopyMemoryBatch {
+    let blank = alphabet;
+    let go = alphabet + 1;
+    let classes = alphabet + 2;
+    let t_total = k + delay + 1 + k;
+    // Sample the symbol strings.
+    let symbols: Vec<Vec<usize>> =
+        (0..batch).map(|_| (0..k).map(|_| rng.below(alphabet)).collect()).collect();
+
+    let mut inputs = Vec::with_capacity(t_total);
+    let mut targets = Vec::with_capacity(t_total);
+    for t in 0..t_total {
+        let mut x = Mat::zeros(classes, batch);
+        let mut y = vec![blank; batch];
+        for (b, sym) in symbols.iter().enumerate() {
+            let tok = if t < k {
+                sym[t]
+            } else if t == k + delay {
+                go
+            } else {
+                blank
+            };
+            x[(tok, b)] = 1.0;
+            if t >= k + delay + 1 {
+                y[b] = sym[t - (k + delay + 1)];
+            }
+        }
+        inputs.push(x);
+        targets.push(y);
+    }
+    CopyMemoryBatch { inputs, targets, scored_steps: k }
+}
+
+/// Three-armed spiral: returns `(points 2×n, labels)`, classic non-linear
+/// classification toy set.
+pub fn spirals(n_per_class: usize, noise: f32, rng: &mut Rng) -> (Mat, Vec<usize>) {
+    let classes = 3;
+    let n = n_per_class * classes;
+    let mut x = Mat::zeros(2, n);
+    let mut y = vec![0usize; n];
+    for c in 0..classes {
+        for i in 0..n_per_class {
+            let idx = c * n_per_class + i;
+            let r = i as f32 / n_per_class as f32;
+            let theta =
+                c as f32 * 2.0 * std::f32::consts::PI / classes as f32 + r * 4.0 + noise * rng.normal_f32();
+            x[(0, idx)] = r * theta.cos();
+            x[(1, idx)] = r * theta.sin();
+            y[idx] = c;
+        }
+    }
+    (x, y)
+}
+
+/// Deterministic tiny character corpus (a repeated pangram-ish stream) for
+/// next-character prediction smoke tests. Returns (vocab, ids).
+pub fn char_corpus(len: usize) -> (Vec<char>, Vec<usize>) {
+    let base = "the quick brown fox jumps over the lazy dog. \
+                pack my box with five dozen liquor jugs. ";
+    let mut vocab: Vec<char> = base.chars().collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    vocab.sort_unstable();
+    let index: std::collections::BTreeMap<char, usize> =
+        vocab.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+    let ids: Vec<usize> =
+        base.chars().cycle().take(len).map(|c| index[&c]).collect();
+    (vocab, ids)
+}
+
+/// One-hot a list of ids into a classes×batch matrix.
+pub fn one_hot(ids: &[usize], classes: usize) -> Mat {
+    let mut x = Mat::zeros(classes, ids.len());
+    for (b, &id) in ids.iter().enumerate() {
+        assert!(id < classes);
+        x[(id, b)] = 1.0;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_memory_structure() {
+        let mut rng = Rng::new(181);
+        let (a, k, delay, b) = (8, 5, 20, 4);
+        let batch = copy_memory(a, k, delay, b, &mut rng);
+        let t_total = k + delay + 1 + k;
+        assert_eq!(batch.inputs.len(), t_total);
+        assert_eq!(batch.targets.len(), t_total);
+        assert_eq!(batch.scored_steps, k);
+        // Every input column is one-hot.
+        for x in &batch.inputs {
+            for col in 0..b {
+                let s: f32 = (0..a + 2).map(|i| x[(i, col)]).sum();
+                assert_eq!(s, 1.0);
+            }
+        }
+        // The go marker fires exactly at t = k + delay.
+        let go_row = a + 1;
+        for (t, x) in batch.inputs.iter().enumerate() {
+            let fired = (0..b).all(|c| x[(go_row, c)] == 1.0);
+            assert_eq!(fired, t == k + delay, "t={t}");
+        }
+        // Targets in the answer region echo the input symbols.
+        for b_i in 0..b {
+            for j in 0..k {
+                let t_out = k + delay + 1 + j;
+                let sym = batch.targets[t_out][b_i];
+                assert!(sym < a);
+                assert_eq!(batch.inputs[j][(sym, b_i)], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn spirals_shape_and_labels() {
+        let mut rng = Rng::new(182);
+        let (x, y) = spirals(50, 0.05, &mut rng);
+        assert_eq!(x.cols(), 150);
+        assert_eq!(y.len(), 150);
+        assert_eq!(y.iter().filter(|&&c| c == 0).count(), 50);
+        assert!(x.data().iter().all(|v| v.abs() <= 1.5));
+    }
+
+    #[test]
+    fn char_corpus_roundtrip() {
+        let (vocab, ids) = char_corpus(200);
+        assert_eq!(ids.len(), 200);
+        assert!(ids.iter().all(|&i| i < vocab.len()));
+        // Deterministic.
+        let (v2, ids2) = char_corpus(200);
+        assert_eq!(vocab, v2);
+        assert_eq!(ids, ids2);
+    }
+
+    #[test]
+    fn one_hot_layout() {
+        let x = one_hot(&[2, 0, 1], 3);
+        assert_eq!(x[(2, 0)], 1.0);
+        assert_eq!(x[(0, 1)], 1.0);
+        assert_eq!(x[(1, 2)], 1.0);
+        let sum: f32 = x.data().iter().sum();
+        assert_eq!(sum, 3.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Typed view of `artifacts/manifest.json`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// File name relative to the artifact directory.
+    pub file: String,
+    /// Weight dimension d.
+    pub d: usize,
+    /// Mini-batch m the artifact was lowered for.
+    pub m: usize,
+    /// FastH block size baked into the artifact.
+    pub k: usize,
+    /// Input shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes, in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub entries: Vec<ManifestEntry>,
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+}
+
+fn shapes(j: &Json, what: &str) -> Result<Vec<Vec<usize>>> {
+    let arr = j.as_arr().with_context(|| format!("{what}: expected array"))?;
+    arr.iter()
+        .map(|s| {
+            let dims = s.as_arr().with_context(|| format!("{what}: expected shape array"))?;
+            dims.iter()
+                .map(|d| d.as_usize().with_context(|| format!("{what}: bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let batch = json.get("batch").as_usize().context("manifest: missing 'batch'")?;
+        let mut entries = Vec::new();
+        for (i, e) in json
+            .get("entries")
+            .as_arr()
+            .context("manifest: missing 'entries'")?
+            .iter()
+            .enumerate()
+        {
+            let name = e
+                .get("name")
+                .as_str()
+                .with_context(|| format!("entry {i}: missing name"))?
+                .to_string();
+            let entry = ManifestEntry {
+                file: e
+                    .get("file")
+                    .as_str()
+                    .with_context(|| format!("entry {name}: missing file"))?
+                    .to_string(),
+                d: e.get("d").as_usize().with_context(|| format!("entry {name}: d"))?,
+                m: e.get("m").as_usize().with_context(|| format!("entry {name}: m"))?,
+                k: e.get("k").as_usize().with_context(|| format!("entry {name}: k"))?,
+                inputs: shapes(e.get("inputs"), &name)?,
+                outputs: shapes(e.get("outputs"), &name)?,
+                name,
+            };
+            if !dir.join(&entry.file).exists() {
+                bail!("manifest entry '{}' points at missing file {}", entry.name, entry.file);
+            }
+            entries.push(entry);
+        }
+        Ok(Manifest { batch, entries, dir: dir.to_path_buf() })
+    }
+
+    /// Find an entry by exact name.
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All entries of a given kind prefix (e.g. "svd_apply").
+    pub fn of_kind(&self, prefix: &str) -> Vec<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.name
+                    .strip_prefix(prefix)
+                    .map(|rest| rest.strip_prefix('_').map(|r| r.parse::<usize>().is_ok()).unwrap_or(false))
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+
+    /// Available sizes d (sorted, deduped).
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.entries.iter().map(|e| e.d).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("svd_apply_64.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 32, "entries": [
+                {"name": "svd_apply_64", "file": "svd_apply_64.hlo.txt",
+                 "d": 64, "m": 32, "k": 32,
+                 "inputs": [[64,64],[64,64],[64],[64,32]],
+                 "outputs": [[64,32]]}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fasth_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = tmpdir("ok");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("svd_apply_64").unwrap();
+        assert_eq!(e.d, 64);
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[2], vec![64]);
+        assert_eq!(m.sizes(), vec![64]);
+        assert_eq!(m.of_kind("svd_apply").len(), 1);
+        assert_eq!(m.of_kind("svd").len(), 0); // prefix must match up to _d
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_artifact_file_is_error() {
+        let dir = tmpdir("missing");
+        write_fixture(&dir);
+        std::fs::remove_file(dir.join("svd_apply_64.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn malformed_json_is_error() {
+        let dir = tmpdir("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn find_unknown_is_none() {
+        let dir = tmpdir("none");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find("nope").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

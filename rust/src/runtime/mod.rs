@@ -1,0 +1,16 @@
+//! PJRT runtime — loads the JAX/Pallas AOT artifacts and executes them
+//! from Rust, with Python never on the request path.
+//!
+//! - [`manifest`]: parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`) into typed entries,
+//! - [`pjrt`]: wraps the `xla` crate (`PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`) behind an
+//!   [`pjrt::ArtifactEngine`] that keeps one compiled executable per
+//!   manifest entry and converts between [`crate::linalg::Mat`] and XLA
+//!   literals.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ManifestEntry};
+pub use pjrt::ArtifactEngine;

@@ -1,0 +1,246 @@
+//! PJRT execution of the AOT artifacts (adapted from
+//! /opt/xla-example/load_hlo): HLO text → `HloModuleProto` →
+//! `XlaComputation` → compiled executable, cached per entry.
+
+use super::manifest::{Manifest, ManifestEntry};
+use crate::linalg::Mat;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A tensor crossing the PJRT boundary: `Mat` for rank-2, flat vec for
+/// rank-1 (σ vectors).
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    M(Mat),
+    V(Vec<f32>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            Tensor::M(m) => vec![m.rows(), m.cols()],
+            Tensor::V(v) => vec![v.len()],
+        }
+    }
+    pub fn as_mat(&self) -> Result<&Mat> {
+        match self {
+            Tensor::M(m) => Ok(m),
+            Tensor::V(_) => bail!("expected rank-2 tensor"),
+        }
+    }
+    pub fn into_mat(self) -> Result<Mat> {
+        match self {
+            Tensor::M(m) => Ok(m),
+            Tensor::V(_) => bail!("expected rank-2 tensor"),
+        }
+    }
+}
+
+impl From<Mat> for Tensor {
+    fn from(m: Mat) -> Tensor {
+        Tensor::M(m)
+    }
+}
+impl From<Vec<f32>> for Tensor {
+    fn from(v: Vec<f32>) -> Tensor {
+        Tensor::V(v)
+    }
+}
+
+/// Compiled-artifact engine: one PJRT CPU client plus lazily compiled
+/// executables for every manifest entry.
+pub struct ArtifactEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// name → compiled executable (compiled on first use; `Mutex` because
+    /// the coordinator shares one engine across worker threads).
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The xla wrapper types are raw pointers into the PJRT C API; the CPU
+// client is thread-safe for compile/execute (PJRT requirement), so expose
+// Send+Sync explicitly.
+unsafe impl Send for ArtifactEngine {}
+unsafe impl Sync for ArtifactEngine {}
+
+impl ArtifactEngine {
+    /// Open `dir` (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<ArtifactEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactEngine { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every manifest entry (startup warm-up).
+    pub fn compile_all(&self) -> Result<usize> {
+        for e in &self.manifest.entries {
+            self.executable(&e.name)?;
+        }
+        Ok(self.manifest.entries.len())
+    }
+
+    /// Execute artifact `name` on `inputs`, validating shapes against the
+    /// manifest. Outputs come back in tuple order.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if &t.shape() != want {
+                bail!(
+                    "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+                    t.shape(),
+                    want
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("empty result from {name}"))?;
+        let literal = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = literal.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, shape)| from_literal(&lit, shape))
+            .collect()
+    }
+
+    /// Convenience: run and expect exactly one rank-2 output.
+    pub fn run1(&self, name: &str, inputs: &[Tensor]) -> Result<Mat> {
+        let mut outs = self.run(name, inputs)?;
+        if outs.len() != 1 {
+            bail!("artifact '{name}' returned {} outputs, expected 1", outs.len());
+        }
+        outs.pop().unwrap().into_mat()
+    }
+
+    /// Entry lookup passthrough.
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.manifest.find(name)
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    match t {
+        Tensor::M(m) => xla::Literal::vec1(m.data())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}")),
+        Tensor::V(v) => Ok(xla::Literal::vec1(v)),
+    }
+}
+
+fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    match shape.len() {
+        1 => {
+            if data.len() != shape[0] {
+                bail!("rank-1 output length {} != {}", data.len(), shape[0]);
+            }
+            Ok(Tensor::V(data))
+        }
+        2 => {
+            if data.len() != shape[0] * shape[1] {
+                bail!("rank-2 output length {} != {:?}", data.len(), shape);
+            }
+            Ok(Tensor::M(Mat::from_vec(shape[0], shape[1], data)))
+        }
+        r => bail!("unsupported output rank {r}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trips live in rust/tests/pjrt_integration.rs (they
+    // need `make artifacts` to have run). Here: pure conversion logic.
+
+    #[test]
+    fn tensor_shapes() {
+        let t = Tensor::M(Mat::zeros(3, 4));
+        assert_eq!(t.shape(), vec![3, 4]);
+        let v = Tensor::V(vec![0.0; 5]);
+        assert_eq!(v.shape(), vec![5]);
+        assert!(v.as_mat().is_err());
+        assert!(t.as_mat().is_ok());
+    }
+
+    #[test]
+    fn literal_roundtrip_rank2() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = to_literal(&Tensor::M(m.clone())).unwrap();
+        let back = from_literal(&lit, &[2, 3]).unwrap().into_mat().unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn literal_roundtrip_rank1() {
+        let v = vec![1.0f32, -2.0, 3.5];
+        let lit = to_literal(&Tensor::V(v.clone())).unwrap();
+        match from_literal(&lit, &[3]).unwrap() {
+            Tensor::V(back) => assert_eq!(back, v),
+            _ => panic!("wrong rank"),
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let lit = to_literal(&Tensor::V(vec![0.0; 4])).unwrap();
+        assert!(from_literal(&lit, &[5]).is_err());
+        assert!(from_literal(&lit, &[2, 3]).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The SVD reparameterization (Zhang et al. 2018, §2.2 of the paper):
+//! keep `W = U·Σ·Vᵀ` in factored form with `U`, `V` products of
+//! Householder reflections and `Σ` diagonal, so the SVD is available *by
+//! construction* and never computed.
+//!
+//! - [`param`]: the factored weight, its forward/backward application and
+//!   the orthogonality-preserving gradient-descent update (including the
+//!   spectral-RNN singular-value clipping to `[1±ε]`),
+//! - [`ops`]: Table 1 — every matrix operation computed both the standard
+//!   `O(d³)` way and the SVD `O(d²)`/`O(d)` way,
+//! - [`jacobi`]: a from-scratch one-sided Jacobi SVD, the `O(d³)`
+//!   "just compute the SVD" comparator the paper's introduction argues
+//!   against.
+
+pub mod jacobi;
+pub mod ops;
+pub mod rect;
+pub mod param;
+
+pub use ops::{MatrixOp, OpEngine};
+pub use param::SvdParam;

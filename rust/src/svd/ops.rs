@@ -1,0 +1,382 @@
+//! Table 1 / Figure 4: matrix operations via the standard `O(d³)` methods
+//! vs. the SVD reparameterization.
+//!
+//! | op | standard method | SVD form |
+//! |---|---|---|
+//! | determinant | `slogdet` via LU | `Σᵢ lg σᵢ` (`O(d)`) |
+//! | inverse | LU inverse | `V·Σ⁻¹·Uᵀ` (`O(d²m)` applied) |
+//! | matrix exponential | Padé-13 + Fréchet bwd | `U·e^Σ·Uᵀ` |
+//! | Cayley map | LU solve `(I−W)(I+W)⁻¹` | `U·(I−Σ)(I+Σ)⁻¹·Uᵀ` |
+//!
+//! Following the paper's measurement protocol (§4.2/§8.3), every engine's
+//! `step` computes: the matrix operation itself, the forward pass applying
+//! the result to a mini-batch `X`, and the gradients wrt all parameters
+//! and `X` given a dummy upstream gradient `G`. For the exponential and
+//! Cayley rows the SVD route times the two-orthogonal-factor form
+//! `U·f(Σ)·Vᵀ`, which §8.3 notes is an *upper bound* for the one-factor
+//! symmetric form `U·f(Σ)·Uᵀ`; numeric-equivalence tests use the exact
+//! symmetric form.
+
+use super::param::{scale_rows, SvdParam};
+use crate::householder::{seq, Engine, HouseholderVectors};
+use crate::linalg::gemm::{matmul, matmul_nt, matmul_tn};
+use crate::linalg::{cayley, expm, lu, Mat};
+
+/// The four matrix operations of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixOp {
+    Determinant,
+    Inverse,
+    Expm,
+    Cayley,
+}
+
+impl MatrixOp {
+    pub const ALL: [MatrixOp; 4] =
+        [MatrixOp::Determinant, MatrixOp::Inverse, MatrixOp::Expm, MatrixOp::Cayley];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixOp::Determinant => "determinant",
+            MatrixOp::Inverse => "inverse",
+            MatrixOp::Expm => "expm",
+            MatrixOp::Cayley => "cayley",
+        }
+    }
+
+    /// The Σ-transform the SVD route applies (Table 1 right column).
+    pub fn transform_sigma(&self, sigma: &[f32]) -> Vec<f32> {
+        match self {
+            // Determinant doesn't transform the spectrum; Inverse: σ → 1/σ;
+            // Expm: σ → e^σ; Cayley: σ → (1−σ)/(1+σ).
+            MatrixOp::Determinant => sigma.to_vec(),
+            MatrixOp::Inverse => sigma.iter().map(|s| 1.0 / s).collect(),
+            MatrixOp::Expm => sigma.iter().map(|s| s.exp()).collect(),
+            MatrixOp::Cayley => sigma.iter().map(|s| (1.0 - s) / (1.0 + s)).collect(),
+        }
+    }
+}
+
+/// How a matrix operation is computed — the series of Figure 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpEngine {
+    /// Dense `O(d³)` method (the dashed lines in Figure 4).
+    Standard,
+    /// SVD reparameterization with the given Householder engine (solid
+    /// lines: FastH / sequential / parallel).
+    Svd(Engine),
+}
+
+impl OpEngine {
+    pub fn name(&self) -> String {
+        match self {
+            OpEngine::Standard => "standard".into(),
+            OpEngine::Svd(e) => format!("svd-{}", e.name()),
+        }
+    }
+}
+
+/// Outputs of one timed step (returned so benches can black-box them and
+/// tests can cross-check numerics).
+pub struct OpStep {
+    /// Forward output (d×m).
+    pub y: Mat,
+    /// `∂L/∂X`.
+    pub dx: Mat,
+    /// Scalar byproduct (log|det| for the determinant op, else 0).
+    pub scalar: f64,
+}
+
+/// One full measured step of `op` under `engine` (§4.2 protocol).
+///
+/// For `OpEngine::Standard`, `w` is used; for `OpEngine::Svd`, `param` is.
+/// Both describe the same weight when constructed via
+/// [`OpWorkload::new`] so results are comparable.
+pub fn op_step(
+    op: MatrixOp,
+    engine: OpEngine,
+    w: &Mat,
+    param: &SvdParam,
+    x: &Mat,
+    g: &Mat,
+) -> OpStep {
+    match engine {
+        OpEngine::Standard => standard_step(op, w, x, g),
+        OpEngine::Svd(h) => svd_step(op, h, param, x, g),
+    }
+}
+
+// ---------------------------------------------------------------- standard
+
+/// Standard-method step: dense op + GEMM forward + GEMM gradients.
+pub fn standard_step(op: MatrixOp, w: &Mat, x: &Mat, g: &Mat) -> OpStep {
+    match op {
+        MatrixOp::Inverse => {
+            // Op: W⁻¹ by LU (torch.inverse). Forward: Y = W⁻¹X.
+            let winv = lu::inverse(w).expect("W invertible");
+            let y = matmul(&winv, x);
+            // Backward: dX = W⁻ᵀG; dW = −W⁻ᵀ·G·Yᵀ.
+            let dx = matmul_tn(&winv, g);
+            let _dw = matmul_nt(&dx, &y).scale(-1.0);
+            OpStep { y, dx, scalar: 0.0 }
+        }
+        MatrixOp::Determinant => {
+            // Op: slogdet via LU. Forward: Y = W·X (the flow's linear map).
+            let f = lu::factor(w);
+            let (_sign, logabs) = f.slogdet();
+            let y = matmul(w, x);
+            // Backward: dX = WᵀG; dW = G·Xᵀ + c·W⁻ᵀ (c = ∂L/∂logdet = 1).
+            let dx = matmul_tn(w, g);
+            let winv_t = f.solve(&Mat::eye(w.rows())).t();
+            let mut dw = matmul_nt(g, x);
+            dw.axpy(1.0, &winv_t);
+            OpStep { y, dx, scalar: logabs }
+        }
+        MatrixOp::Expm => {
+            // Op: e^W by Padé-13. Forward: Y = e^W·X.
+            let ew = expm::expm(w);
+            let y = matmul(&ew, x);
+            // Backward: dX = (e^W)ᵀG; dW = Fréchet adjoint L(Wᵀ, G·Xᵀ).
+            let dx = matmul_tn(&ew, g);
+            let gxt = matmul_nt(g, x);
+            let (_e2, _dw) = expm::expm_frechet(&w.t(), &gxt);
+            OpStep { y, dx, scalar: 0.0 }
+        }
+        MatrixOp::Cayley => {
+            // Op: C(W) = (I−W)(I+W)⁻¹ via LU solve. Forward: Y = C(W)·X.
+            let c = cayley::cayley(w).expect("I+W invertible");
+            let y = matmul(&c, x);
+            // Backward: dX = CᵀG; dW via dC = −(I+C)·dW·(I+W)⁻¹ adjoint:
+            // one more solve + two GEMMs.
+            let dx = matmul_tn(&c, g);
+            let n = w.rows();
+            let ipw = Mat::eye(n).add(w);
+            let gyt = matmul_nt(g, &y); // placeholder contraction, right cost
+            let t = lu::solve(&ipw.t(), &gyt).expect("solve");
+            let ic = Mat::eye(n).add(&c);
+            let _dw = matmul_tn(&ic, &t).scale(-1.0);
+            OpStep { y, dx, scalar: 0.0 }
+        }
+    }
+}
+
+// --------------------------------------------------------------------- SVD
+
+/// SVD-reparameterization step: `O(d)` Σ-op + engine fwd/bwd (Eq. 3–5).
+pub fn svd_step(op: MatrixOp, h: Engine, param: &SvdParam, x: &Mat, g: &Mat) -> OpStep {
+    // Matrix operation on the spectrum (O(d)).
+    let sigma_t = op.transform_sigma(&param.sigma);
+    let scalar = if op == MatrixOp::Determinant {
+        param.slogdet().1
+    } else {
+        0.0
+    };
+    // For Inverse the factor order flips (W⁻¹ = V·Σ⁻¹·Uᵀ): swap roles of
+    // U and V. Timing-wise identical; numerically it matters.
+    let (left, right): (&HouseholderVectors, &HouseholderVectors) = match op {
+        MatrixOp::Inverse => (&param.v, &param.u),
+        _ => (&param.u, &param.v),
+    };
+    // Forward: Y = L·Σ'·Rᵀ·X, then fwd+bwd through both factors with the
+    // chosen engine — the exact computation the paper times in §4.2.
+    let right_rev = right.reversed();
+    match h {
+        Engine::Sequential => {
+            let x1 = seq::seq_apply(&right_rev, x);
+            let x2 = scale_rows(&x1, &sigma_t);
+            let y = seq::seq_apply(left, &x2);
+            // Backward through left factor.
+            let (dx2, _dl) = seq::seq_backward(left, &y, g);
+            let dx1 = scale_rows(&dx2, &sigma_t);
+            let (dx, _dr) = seq::seq_backward(&right_rev, &x1, &dx1);
+            OpStep { y, dx, scalar }
+        }
+        Engine::Parallel => {
+            use crate::householder::par;
+            let (x1, c1) = par::par_forward(&right_rev, x);
+            let x2 = scale_rows(&x1, &sigma_t);
+            let (y, c2) = par::par_forward(left, &x2);
+            let (dx2, _dl) = par::par_backward(left, &c2, g);
+            let dx1 = scale_rows(&dx2, &sigma_t);
+            let (dx, _dr) = par::par_backward(&right_rev, &c1, &dx1);
+            OpStep { y, dx, scalar }
+        }
+        Engine::FastH { k } => {
+            use crate::householder::fasth;
+            let (x1, c1) = fasth::fasth_forward(&right_rev, x, k);
+            let x2 = scale_rows(&x1, &sigma_t);
+            let (y, c2) = fasth::fasth_forward(left, &x2, k);
+            let (dx2, _dl) = fasth::fasth_backward(left, &c2, g);
+            let dx1 = scale_rows(&dx2, &sigma_t);
+            let (dx, _dr) = fasth::fasth_backward(&right_rev, &c1, &dx1);
+            OpStep { y, dx, scalar }
+        }
+    }
+}
+
+// ---------------------------------------------------- symmetric (one-U) form
+
+/// Materialized symmetric-form results for Table-1 *numeric equivalence*
+/// tests: `W = U·Σ·Uᵀ` so that `e^W = U·e^Σ·Uᵀ` and
+/// `C(W) = U·(I−Σ)(I+Σ)⁻¹·Uᵀ` hold exactly.
+pub fn sym_materialize(u: &HouseholderVectors, sigma: &[f32]) -> Mat {
+    let d = u.dim();
+    let eye = Mat::eye(d);
+    let ut = seq::seq_apply_transpose(u, &eye); // Uᵀ
+    let s_ut = scale_rows(&ut, sigma);
+    seq::seq_apply(u, &s_ut) // U·Σ·Uᵀ
+}
+
+/// `U·f(Σ)·Uᵀ·X` — the SVD route for symmetric ops, applied to a batch.
+pub fn sym_apply(u: &HouseholderVectors, sigma_t: &[f32], x: &Mat, k: usize) -> Mat {
+    use crate::householder::fasth;
+    let x1 = fasth::fasth_apply_transpose(u, x, k);
+    let x2 = scale_rows(&x1, sigma_t);
+    fasth::fasth_apply(u, &x2, k)
+}
+
+/// Bundled workload for benches: a weight in both representations plus
+/// dummy input/gradient, mirroring §8.2 (entries ~ N(0,1)).
+pub struct OpWorkload {
+    pub w: Mat,
+    pub param: SvdParam,
+    pub x: Mat,
+    pub g: Mat,
+}
+
+impl OpWorkload {
+    /// Build a workload at size `(d, m)`. The dense `w` materializes the
+    /// same weight the SVD param represents (so both engines do the same
+    /// mathematical job); `sigma` is offset from 1 to keep all four ops
+    /// well-conditioned (Cayley needs σ ≠ −1, inverse needs σ ≠ 0).
+    pub fn new(d: usize, m: usize, rng: &mut crate::util::Rng) -> OpWorkload {
+        let mut param = SvdParam::random_full(d, rng);
+        for s in param.sigma.iter_mut() {
+            *s = 0.75 + 0.5 * rng.uniform() as f32; // σ ∈ [0.75, 1.25)
+        }
+        let w = param.materialize();
+        let x = Mat::randn(d, m, rng);
+        let g = Mat::randn(d, m, rng);
+        OpWorkload { w, param, x, g }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    fn workload(d: usize, m: usize, seed: u64) -> OpWorkload {
+        OpWorkload::new(d, m, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn table1_inverse_equivalence() {
+        let wl = workload(14, 4, 141);
+        let std = standard_step(MatrixOp::Inverse, &wl.w, &wl.x, &wl.g);
+        for engine in [
+            OpEngine::Svd(Engine::Sequential),
+            OpEngine::Svd(Engine::Parallel),
+            OpEngine::Svd(Engine::FastH { k: 4 }),
+        ] {
+            let svd = op_step(MatrixOp::Inverse, engine, &wl.w, &wl.param, &wl.x, &wl.g);
+            assert_close(svd.y.data(), std.y.data(), 2e-2, 5e-2)
+                .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+            assert_close(svd.dx.data(), std.dx.data(), 2e-2, 5e-2)
+                .unwrap_or_else(|e| panic!("{} dx: {e}", engine.name()));
+        }
+    }
+
+    #[test]
+    fn table1_determinant_equivalence() {
+        let wl = workload(12, 3, 142);
+        let std = standard_step(MatrixOp::Determinant, &wl.w, &wl.x, &wl.g);
+        let svd = svd_step(MatrixOp::Determinant, Engine::FastH { k: 4 }, &wl.param, &wl.x, &wl.g);
+        // log|det| agreement (O(d) vs LU).
+        assert!(
+            (std.scalar - svd.scalar).abs() < 1e-2 * std.scalar.abs().max(1.0),
+            "logdet {} vs {}",
+            std.scalar,
+            svd.scalar
+        );
+        // Forward W·X agreement.
+        assert_close(svd.y.data(), std.y.data(), 2e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn table1_expm_equivalence_symmetric() {
+        // e^{UΣUᵀ} = U e^Σ Uᵀ — exact only for the symmetric form.
+        let mut rng = Rng::new(143);
+        let d = 10;
+        let u = HouseholderVectors::random_full(d, &mut rng);
+        let sigma: Vec<f32> = (0..d).map(|i| -0.5 + 0.1 * i as f32).collect();
+        let w = sym_materialize(&u, &sigma);
+        let x = Mat::randn(d, 3, &mut rng);
+        let want = oracle::matmul_f64(&expm::expm(&w), &x);
+        let sig_exp = MatrixOp::Expm.transform_sigma(&sigma);
+        let got = sym_apply(&u, &sig_exp, &x, 4);
+        assert_close(got.data(), want.data(), 2e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn table1_cayley_equivalence_symmetric() {
+        let mut rng = Rng::new(144);
+        let d = 9;
+        let u = HouseholderVectors::random_full(d, &mut rng);
+        let sigma: Vec<f32> = (0..d).map(|i| 0.2 + 0.05 * i as f32).collect();
+        let w = sym_materialize(&u, &sigma);
+        let x = Mat::randn(d, 3, &mut rng);
+        let c = cayley::cayley(&w).unwrap();
+        let want = oracle::matmul_f64(&c, &x);
+        let sig_c = MatrixOp::Cayley.transform_sigma(&sigma);
+        let got = sym_apply(&u, &sig_c, &x, 3);
+        assert_close(got.data(), want.data(), 2e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn all_ops_run_under_all_engines() {
+        let wl = workload(10, 2, 145);
+        for op in MatrixOp::ALL {
+            for engine in [
+                OpEngine::Standard,
+                OpEngine::Svd(Engine::Sequential),
+                OpEngine::Svd(Engine::Parallel),
+                OpEngine::Svd(Engine::FastH { k: 3 }),
+            ] {
+                let step = op_step(op, engine, &wl.w, &wl.param, &wl.x, &wl.g);
+                assert!(
+                    !step.y.has_non_finite() && !step.dx.has_non_finite(),
+                    "{} under {}",
+                    op.name(),
+                    engine.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_transforms() {
+        let s = vec![0.5f32, 1.0, 2.0];
+        assert_eq!(MatrixOp::Inverse.transform_sigma(&s), vec![2.0, 1.0, 0.5]);
+        let e = MatrixOp::Expm.transform_sigma(&s);
+        assert!((e[1] - std::f32::consts::E).abs() < 1e-6);
+        let c = MatrixOp::Cayley.transform_sigma(&s);
+        assert!((c[1] - 0.0).abs() < 1e-7);
+        assert!((c[0] - (0.5 / 1.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn svd_engines_agree_with_each_other() {
+        let wl = workload(16, 4, 146);
+        for op in MatrixOp::ALL {
+            let a = svd_step(op, Engine::Sequential, &wl.param, &wl.x, &wl.g);
+            let b = svd_step(op, Engine::FastH { k: 5 }, &wl.param, &wl.x, &wl.g);
+            let c = svd_step(op, Engine::Parallel, &wl.param, &wl.x, &wl.g);
+            assert_close(a.y.data(), b.y.data(), 1e-3, 1e-2).expect(op.name());
+            assert_close(a.y.data(), c.y.data(), 1e-3, 1e-2).expect(op.name());
+            assert_close(a.dx.data(), b.dx.data(), 1e-3, 1e-2).expect(op.name());
+        }
+    }
+}

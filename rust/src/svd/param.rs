@@ -1,0 +1,368 @@
+//! The factored weight `W = U·Σ·Vᵀ` and its training machinery.
+
+use crate::householder::{fasth, Engine, HouseholderVectors};
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// An `d×d` weight held in SVD form. `U` and `V` are products of
+/// `n_reflections` Householder reflections each (n = d for full
+/// expressiveness, the paper's default; smaller n trades expressiveness
+/// for speed, §5 "Householder decomposition" discussion).
+#[derive(Clone, Debug)]
+pub struct SvdParam {
+    pub u: HouseholderVectors,
+    pub v: HouseholderVectors,
+    /// Diagonal of Σ (singular values — kept positive by construction in
+    /// `clip_sigma`; the factorization is a *signed* SVD otherwise).
+    pub sigma: Vec<f32>,
+    /// Cached reversed copy of `v` (transpose application is application
+    /// of the reversed reflection sequence); rebuilt on update.
+    v_rev: HouseholderVectors,
+}
+
+/// Gradients of a [`SvdParam`] from one backward pass.
+#[derive(Clone, Debug)]
+pub struct SvdGrads {
+    pub du: Mat,
+    pub dv: Mat,
+    pub dsigma: Vec<f32>,
+}
+
+/// Cache tying a forward pass to its backward pass.
+pub struct SvdCache {
+    /// Vᵀ·X.
+    x1: Mat,
+    /// FastH cache through U (on X2).
+    u_cache: fasth::FasthCache,
+    /// FastH cache through reversed-V (on X).
+    vrev_cache: fasth::FasthCache,
+    /// Block size used.
+    pub k: usize,
+}
+
+impl SvdParam {
+    /// Random init: Haar-ish orthogonal U, V (Gaussian Householder
+    /// vectors) and Σ = I — an exactly orthogonal initial W, the setting
+    /// the SVD reparameterization was designed for (unit spectrum).
+    pub fn random(d: usize, n_reflections: usize, rng: &mut Rng) -> SvdParam {
+        let u = HouseholderVectors::random(d, n_reflections, rng);
+        let v = HouseholderVectors::random(d, n_reflections, rng);
+        let v_rev = v.reversed();
+        SvdParam { u, v, sigma: vec![1.0; d], v_rev }
+    }
+
+    /// Full-rank init (n = d reflections per factor).
+    pub fn random_full(d: usize, rng: &mut Rng) -> SvdParam {
+        Self::random(d, d, rng)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.u.dim()
+    }
+
+    /// `W·X = U·(Σ·(Vᵀ·X))` without retaining the backward cache.
+    pub fn apply(&self, x: &Mat, k: usize) -> Mat {
+        let x1 = fasth::fasth_apply(&self.v_rev, x, k); // Vᵀ·X
+        let x2 = scale_rows(&x1, &self.sigma);
+        fasth::fasth_apply(&self.u, &x2, k)
+    }
+
+    /// `W⁻¹·X = V·(Σ⁻¹·(Uᵀ·X))` — the Table-1 inverse, `O(d²m)` total.
+    pub fn apply_inverse(&self, x: &Mat, k: usize) -> Mat {
+        let y1 = fasth::fasth_apply_transpose(&self.u, x, k); // Uᵀ·X
+        let inv_sigma: Vec<f32> = self.sigma.iter().map(|s| 1.0 / s).collect();
+        let y2 = scale_rows(&y1, &inv_sigma);
+        fasth::fasth_apply(&self.v, &y2, k) // V·(…)
+    }
+
+    /// Forward keeping the cache for [`Self::backward`].
+    pub fn forward(&self, x: &Mat, k: usize) -> (Mat, SvdCache) {
+        let (x1, vrev_cache) = fasth::fasth_forward(&self.v_rev, x, k);
+        let x2 = scale_rows(&x1, &self.sigma);
+        let (out, u_cache) = fasth::fasth_forward(&self.u, &x2, k);
+        (out, SvdCache { x1, u_cache, vrev_cache, k })
+    }
+
+    /// Backward: given `g = ∂L/∂(W·X)`, produce `(∂L/∂X, grads)`.
+    pub fn backward(&self, cache: &SvdCache, g: &Mat) -> (Mat, SvdGrads) {
+        // Through U (forward was U·X2).
+        let (dx2, du) = fasth::fasth_backward(&self.u, &cache.u_cache, g);
+        // Through Σ: x2 = σ_i · x1 row-wise.
+        let d = self.dim();
+        let mut dsigma = vec![0.0f32; d];
+        for i in 0..d {
+            let mut acc = 0.0f64;
+            for (a, b) in dx2.row(i).iter().zip(cache.x1.row(i)) {
+                acc += *a as f64 * *b as f64;
+            }
+            dsigma[i] = acc as f32;
+        }
+        let dx1 = scale_rows(&dx2, &self.sigma);
+        // Through Vᵀ (forward was reversed-V applied to X).
+        let (dx, dv_rev) = fasth::fasth_backward(&self.v_rev, &cache.vrev_cache, &dx1);
+        // Columns of dv_rev correspond to reversed reflection order.
+        let dv = reverse_cols(&dv_rev);
+        (dx, SvdGrads { du, dv, dsigma })
+    }
+
+    /// Orthogonality-preserving SGD step (paper §2.2): plain gradient
+    /// descent on the Householder vectors and Σ.
+    pub fn sgd_step(&mut self, grads: &SvdGrads, lr: f32) {
+        self.u.sgd_step(&grads.du, lr);
+        self.v.sgd_step(&grads.dv, lr);
+        for (s, g) in self.sigma.iter_mut().zip(&grads.dsigma) {
+            *s -= lr * g;
+        }
+        self.v_rev = self.v.reversed();
+    }
+
+    /// Spectral-RNN's exploding/vanishing-gradient fix (paper §5): clamp
+    /// all singular values to `[1−ε, 1+ε]`.
+    pub fn clip_sigma(&mut self, eps: f32) {
+        for s in self.sigma.iter_mut() {
+            *s = s.clamp(1.0 - eps, 1.0 + eps);
+        }
+    }
+
+    /// Materialize the full `W` (tests/export; `O(d³)`).
+    pub fn materialize(&self) -> Mat {
+        let d = self.dim();
+        self.apply(&Mat::eye(d), Engine::FastH { k: 16.min(d.max(1)) }.block_k())
+    }
+
+    /// `det(W) = det(U)·det(Σ)·det(Vᵀ) = (−1)^{n_U + n_V}·Π σᵢ` — each
+    /// (non-identity) reflection has determinant −1.
+    pub fn det(&self) -> f64 {
+        let sign = if (self.effective_reflections(&self.u)
+            + self.effective_reflections(&self.v))
+            % 2
+            == 0
+        {
+            1.0
+        } else {
+            -1.0
+        };
+        sign * self.sigma.iter().map(|&s| s as f64).product::<f64>()
+    }
+
+    /// `(sign, log|det|)` in `O(d)` — the Table-1 determinant row.
+    pub fn slogdet(&self) -> (f64, f64) {
+        let mut sign = if (self.effective_reflections(&self.u)
+            + self.effective_reflections(&self.v))
+            % 2
+            == 0
+        {
+            1.0
+        } else {
+            -1.0
+        };
+        let mut logabs = 0.0f64;
+        for &s in &self.sigma {
+            if s == 0.0 {
+                return (0.0, f64::NEG_INFINITY);
+            }
+            sign *= (s as f64).signum();
+            logabs += (s.abs() as f64).ln();
+        }
+        (sign, logabs)
+    }
+
+    /// Count reflections with non-zero vectors (zero vector ≡ identity,
+    /// determinant +1).
+    fn effective_reflections(&self, hv: &HouseholderVectors) -> usize {
+        (0..hv.count())
+            .filter(|&i| crate::linalg::mat::norm_sq(&hv.v.col(i)) >= 1e-30)
+            .count()
+    }
+}
+
+impl Engine {
+    /// The block size this engine would hand FastH (helper for call sites
+    /// that need a concrete k).
+    pub fn block_k(&self) -> usize {
+        match *self {
+            Engine::FastH { k } => k,
+            _ => 32,
+        }
+    }
+}
+
+/// Row-scale: `out[i, :] = s[i] * x[i, :]` (Σ·X for diagonal Σ).
+pub fn scale_rows(x: &Mat, s: &[f32]) -> Mat {
+    assert_eq!(x.rows(), s.len());
+    let mut out = x.clone();
+    for i in 0..x.rows() {
+        let si = s[i];
+        for v in out.row_mut(i) {
+            *v *= si;
+        }
+    }
+    out
+}
+
+/// Reverse the column order of a matrix.
+pub fn reverse_cols(m: &Mat) -> Mat {
+    let (r, c) = (m.rows(), m.cols());
+    let mut out = Mat::zeros(r, c);
+    for j in 0..c {
+        out.set_col(j, &m.col(c - 1 - j));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn apply_matches_materialized() {
+        check("svd_apply", 8, |rng| {
+            let d = 3 + rng.below(20);
+            let m = 1 + rng.below(5);
+            let mut p = SvdParam::random_full(d, rng);
+            // Non-trivial spectrum.
+            for (i, s) in p.sigma.iter_mut().enumerate() {
+                *s = 0.5 + 0.1 * i as f32;
+            }
+            let x = Mat::randn(d, m, rng);
+            let got = p.apply(&x, 4);
+            let w = p.materialize();
+            let want = oracle::matmul_f64(&w, &x);
+            assert_close(got.data(), want.data(), 1e-3, 1e-2)
+        });
+    }
+
+    #[test]
+    fn inverse_apply_really_inverts() {
+        check("svd_inverse", 8, |rng| {
+            let d = 3 + rng.below(24);
+            let m = 1 + rng.below(4);
+            let mut p = SvdParam::random_full(d, rng);
+            for (i, s) in p.sigma.iter_mut().enumerate() {
+                *s = 1.0 + 0.05 * i as f32;
+            }
+            let x = Mat::randn(d, m, rng);
+            let y = p.apply(&x, 8);
+            let back = p.apply_inverse(&y, 8);
+            assert_close(back.data(), x.data(), 1e-3, 1e-2)
+        });
+    }
+
+    #[test]
+    fn det_matches_lu() {
+        check("svd_det", 8, |rng| {
+            let d = 2 + rng.below(12);
+            let mut p = SvdParam::random_full(d, rng);
+            for s in p.sigma.iter_mut() {
+                *s = 0.5 + rng.uniform() as f32;
+            }
+            let w = p.materialize();
+            let want = oracle::det_f64(&w);
+            let got = p.det();
+            let tol = 1e-2 * want.abs().max(1e-6);
+            if (got - want).abs() > tol {
+                return Err(format!("det {got} vs {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slogdet_consistent_with_det() {
+        let mut rng = Rng::new(131);
+        let mut p = SvdParam::random_full(10, &mut rng);
+        for s in p.sigma.iter_mut() {
+            *s = 0.3 + rng.uniform() as f32;
+        }
+        let (sign, logabs) = p.slogdet();
+        assert!((sign * logabs.exp() - p.det()).abs() < 1e-4 * p.det().abs().max(1e-9));
+    }
+
+    #[test]
+    fn backward_matches_finite_difference_sigma() {
+        let mut rng = Rng::new(132);
+        let d = 8;
+        let p = SvdParam::random_full(d, &mut rng);
+        let x = Mat::randn(d, 3, &mut rng);
+        let g = Mat::randn(d, 3, &mut rng);
+        let (_y, cache) = p.forward(&x, 4);
+        let (_dx, grads) = p.backward(&cache, &g);
+        let fd = oracle::finite_diff_grad(&p.sigma, 1e-3, |s| {
+            let mut p2 = p.clone();
+            p2.sigma = s.to_vec();
+            let y = p2.apply(&x, 4);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(&grads.dsigma, &fd, 1e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn backward_matches_finite_difference_uv() {
+        let mut rng = Rng::new(133);
+        let d = 6;
+        let p = SvdParam::random_full(d, &mut rng);
+        let x = Mat::randn(d, 2, &mut rng);
+        let g = Mat::randn(d, 2, &mut rng);
+        let (_y, cache) = p.forward(&x, 3);
+        let (dx, grads) = p.backward(&cache, &g);
+
+        let fd_u = oracle::finite_diff_grad(p.u.v.data(), 1e-3, |vals| {
+            let mut p2 = p.clone();
+            p2.u = HouseholderVectors::new(Mat::from_vec(d, d, vals.to_vec()));
+            let y = p2.apply(&x, 3);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(grads.du.data(), &fd_u, 1e-2, 8e-2).unwrap();
+
+        let fd_v = oracle::finite_diff_grad(p.v.v.data(), 1e-3, |vals| {
+            let mut p2 = p.clone();
+            p2.v = HouseholderVectors::new(Mat::from_vec(d, d, vals.to_vec()));
+            p2.v_rev = p2.v.reversed();
+            let y = p2.apply(&x, 3);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(grads.dv.data(), &fd_v, 1e-2, 8e-2).unwrap();
+
+        let fd_x = oracle::finite_diff_grad(x.data(), 1e-3, |vals| {
+            let x2 = Mat::from_vec(d, 2, vals.to_vec());
+            let y = p.apply(&x2, 3);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(dx.data(), &fd_x, 1e-2, 8e-2).unwrap();
+    }
+
+    #[test]
+    fn sgd_preserves_factored_form() {
+        let mut rng = Rng::new(134);
+        let d = 10;
+        let mut p = SvdParam::random_full(d, &mut rng);
+        let x = Mat::randn(d, 4, &mut rng);
+        let g = Mat::randn(d, 4, &mut rng);
+        for _ in 0..3 {
+            let (_y, cache) = p.forward(&x, 4);
+            let (_dx, grads) = p.backward(&cache, &g);
+            p.sgd_step(&grads, 0.02);
+        }
+        // U and V still orthogonal after updates.
+        for hv in [&p.u, &p.v] {
+            let q = hv.materialize();
+            let qtq = oracle::matmul_f64(&q.t(), &q);
+            assert!(qtq.defect_from_identity() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn clip_sigma_bounds_spectrum() {
+        let mut rng = Rng::new(135);
+        let mut p = SvdParam::random_full(6, &mut rng);
+        p.sigma = vec![0.1, 0.9, 1.0, 1.05, 2.0, -3.0];
+        p.clip_sigma(0.05);
+        for &s in &p.sigma {
+            assert!((0.95..=1.05).contains(&s), "σ={s}");
+        }
+    }
+
+    use crate::util::Rng;
+}

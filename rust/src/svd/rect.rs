@@ -1,0 +1,204 @@
+//! §3.3 "Rectangular Matrices": the SVD reparameterization for
+//! `W ∈ ℝ^{n×m}` with orthogonal `U ∈ ℝ^{n×n}`, `V ∈ ℝ^{m×m}` and
+//! rectangular-diagonal `Σ ∈ ℝ^{n×m}` (min(n,m) singular values).
+
+use crate::householder::{fasth, HouseholderVectors};
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// A rectangular weight held as `W = U·Σ·Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct RectSvdParam {
+    /// n×n orthogonal factor (n reflections).
+    pub u: HouseholderVectors,
+    /// m×m orthogonal factor (m reflections).
+    pub v: HouseholderVectors,
+    /// The min(n, m) singular values on Σ's diagonal.
+    pub sigma: Vec<f32>,
+    /// Output rows n.
+    pub rows: usize,
+    /// Input cols m.
+    pub cols: usize,
+    v_rev: HouseholderVectors,
+}
+
+impl RectSvdParam {
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> RectSvdParam {
+        let u = HouseholderVectors::random_full(rows, rng);
+        let v = HouseholderVectors::random_full(cols, rng);
+        let v_rev = v.reversed();
+        RectSvdParam { u, v, sigma: vec![1.0; rows.min(cols)], rows, cols, v_rev }
+    }
+
+    /// `W·X` for `X ∈ ℝ^{cols×batch}` → `rows×batch`:
+    /// `U·(pad_Σ(Vᵀ·X))` where `pad_Σ` scales the first min(n,m)
+    /// coordinates by σ and zero-pads/truncates to n rows.
+    pub fn apply(&self, x: &Mat, k: usize) -> Mat {
+        assert_eq!(x.rows(), self.cols, "input dimension mismatch");
+        let x1 = fasth::fasth_apply_transpose(&self.v, x, k.min(self.cols.max(1))); // m×b
+        let x2 = self.sigma_apply(&x1); // n×b
+        fasth::fasth_apply(&self.u, &x2, k.min(self.rows.max(1))) // n×b
+    }
+
+    /// Pseudo-inverse application `W⁺·Y = V·Σ⁺·Uᵀ·Y` — exact inverse when
+    /// n = m and σ ≠ 0, Moore-Penrose otherwise, still `O(nm·batch)`.
+    pub fn apply_pinv(&self, y: &Mat, k: usize) -> Mat {
+        assert_eq!(y.rows(), self.rows, "output dimension mismatch");
+        let y1 = fasth::fasth_apply_transpose(&self.u, y, k.min(self.rows.max(1))); // n×b
+        let y2 = self.sigma_pinv_apply(&y1); // m×b
+        fasth::fasth_apply(&self.v, &y2, k.min(self.cols.max(1))) // m×b
+    }
+
+    /// `Σ·X`: scale first min(n,m) rows, reshape m→n rows.
+    fn sigma_apply(&self, x: &Mat) -> Mat {
+        let b = x.cols();
+        let r = self.sigma.len();
+        let mut out = Mat::zeros(self.rows, b);
+        for i in 0..r {
+            let s = self.sigma[i];
+            let src = x.row(i);
+            let dst = out.row_mut(i);
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = s * v;
+            }
+        }
+        out
+    }
+
+    /// `Σ⁺·Y`: divide first min(n,m) rows (σ=0 → 0), reshape n→m rows.
+    fn sigma_pinv_apply(&self, y: &Mat) -> Mat {
+        let b = y.cols();
+        let r = self.sigma.len();
+        let mut out = Mat::zeros(self.cols, b);
+        for i in 0..r {
+            let s = self.sigma[i];
+            if s.abs() < 1e-30 {
+                continue;
+            }
+            let inv = 1.0 / s;
+            let src = y.row(i);
+            let dst = out.row_mut(i);
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = inv * v;
+            }
+        }
+        out
+    }
+
+    /// Materialize `W` (tests).
+    pub fn materialize(&self, k: usize) -> Mat {
+        self.apply(&Mat::eye(self.cols), k)
+    }
+
+    /// The rank (number of non-zero singular values).
+    pub fn rank(&self) -> usize {
+        self.sigma.iter().filter(|s| s.abs() > 1e-30).count()
+    }
+
+    /// Low-rank compression (paper §2.1, Xue et al. 2013): zero all but
+    /// the top-r singular values — O(min(n,m) log) instead of computing
+    /// an SVD.
+    pub fn truncate_rank(&mut self, r: usize) {
+        let mut idx: Vec<usize> = (0..self.sigma.len()).collect();
+        idx.sort_by(|&a, &b| self.sigma[b].abs().partial_cmp(&self.sigma[a].abs()).unwrap());
+        for &i in idx.iter().skip(r) {
+            self.sigma[i] = 0.0;
+        }
+    }
+
+    /// Refresh the cached reversed-V after mutating `v` directly.
+    pub fn refresh(&mut self) {
+        self.v_rev = self.v.reversed();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn tall_and_wide_shapes() {
+        let mut rng = Rng::new(0xC1);
+        for (n, m) in [(12usize, 7usize), (7, 12), (9, 9)] {
+            let p = RectSvdParam::random(n, m, &mut rng);
+            let x = Mat::randn(m, 4, &mut rng);
+            let y = p.apply(&x, 4);
+            assert_eq!((y.rows(), y.cols()), (n, 4));
+            assert!(!y.has_non_finite());
+        }
+    }
+
+    #[test]
+    fn apply_matches_materialized() {
+        check("rect_apply", 8, |rng| {
+            let n = 3 + rng.below(14);
+            let m = 3 + rng.below(14);
+            let mut p = RectSvdParam::random(n, m, rng);
+            for (i, s) in p.sigma.iter_mut().enumerate() {
+                *s = 0.5 + 0.1 * i as f32;
+            }
+            let w = p.materialize(4);
+            let x = Mat::randn(m, 3, rng);
+            let got = p.apply(&x, 4);
+            let want = oracle::matmul_f64(&w, &x);
+            assert_close(got.data(), want.data(), 1e-3, 1e-2)
+        });
+    }
+
+    #[test]
+    fn square_pinv_is_inverse() {
+        let mut rng = Rng::new(0xC2);
+        let mut p = RectSvdParam::random(10, 10, &mut rng);
+        for (i, s) in p.sigma.iter_mut().enumerate() {
+            *s = 1.0 + 0.05 * i as f32;
+        }
+        let x = Mat::randn(10, 5, &mut rng);
+        let back = p.apply_pinv(&p.apply(&x, 4), 4);
+        assert!(back.max_abs_diff(&x) < 1e-3);
+    }
+
+    #[test]
+    fn tall_pinv_is_left_inverse() {
+        // n > m: W⁺W = I_m.
+        let mut rng = Rng::new(0xC3);
+        let p = RectSvdParam::random(16, 6, &mut rng);
+        let x = Mat::randn(6, 4, &mut rng);
+        let back = p.apply_pinv(&p.apply(&x, 4), 4);
+        assert!(back.max_abs_diff(&x) < 1e-3, "diff {}", back.max_abs_diff(&x));
+    }
+
+    #[test]
+    fn singular_values_are_exact() {
+        // The spectrum of the materialized W equals σ (up to sign/order) —
+        // verified by the from-scratch Jacobi SVD.
+        let mut rng = Rng::new(0xC4);
+        let mut p = RectSvdParam::random(8, 8, &mut rng);
+        for (i, s) in p.sigma.iter_mut().enumerate() {
+            *s = 0.4 + 0.2 * i as f32;
+        }
+        let w = p.materialize(4);
+        let svd = crate::svd::jacobi::svd(&w);
+        let mut want = p.sigma.clone();
+        want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for (got, want) in svd.sigma.iter().zip(&want) {
+            assert!((got - want).abs() < 2e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rank_truncation() {
+        let mut rng = Rng::new(0xC5);
+        let mut p = RectSvdParam::random(10, 10, &mut rng);
+        p.sigma = vec![0.1, 0.9, 0.3, 2.0, 0.5, 1.5, 0.2, 0.8, 0.4, 0.6];
+        p.truncate_rank(3);
+        assert_eq!(p.rank(), 3);
+        // The survivors are the top-3 by magnitude.
+        assert!(p.sigma[3] == 2.0 && p.sigma[5] == 1.5 && p.sigma[1] == 0.9);
+        // Materialized W now has rank 3.
+        let w = p.materialize(4);
+        let svd = crate::svd::jacobi::svd(&w);
+        assert!(svd.sigma[2] > 0.5 && svd.sigma[3] < 1e-3, "{:?}", svd.sigma);
+    }
+}

@@ -1,0 +1,15 @@
+//! From-scratch utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate
+//! available, so everything a typical project would pull from crates.io —
+//! RNG, data-parallel loops, JSON, a benchmark harness, property testing —
+//! is implemented here from scratch.
+
+pub mod json;
+pub mod parallel;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timing;
+
+pub use rng::Rng;

@@ -1,0 +1,160 @@
+//! Data-parallel helpers on top of the persistent [`super::pool`].
+//!
+//! The GPU in the paper exposes ~4000 cores; this testbed exposes
+//! `available_parallelism()` CPU cores. The FastH argument — sequential
+//! *depth* dominates on parallel hardware — transfers as long as the
+//! substrate can run independent work items concurrently with *low
+//! dispatch overhead*; see `pool.rs` for why that last clause forced a
+//! persistent pool (EXPERIMENTS.md §Perf, iteration 1).
+
+use super::pool;
+use std::sync::Mutex;
+
+/// Number of worker threads to use (cached; overridable via `FASTH_THREADS`).
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("FASTH_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Run `f(i)` for every `i in 0..n` on the shared pool.
+///
+/// Falls back to a plain loop when `n ≤ 1` or only one thread is
+/// configured.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    pool::run(n, f);
+}
+
+/// Like [`parallel_for`] but hands workers contiguous `chunk`-sized index
+/// ranges (better locality for fine-grained loops).
+pub fn parallel_for_chunked<F: Fn(std::ops::Range<usize>) + Sync>(n: usize, chunk: usize, f: F) {
+    assert!(chunk > 0);
+    let nchunks = n.div_ceil(chunk);
+    pool::run(nchunks, |c| {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(n);
+        f(lo..hi);
+    });
+}
+
+/// Split `data` into disjoint mutable pieces at the given *end offsets*
+/// (monotone, last == `data.len()`) and run `f(i, piece_i)` in parallel.
+pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    splits: &[usize],
+    f: F,
+) {
+    assert_eq!(*splits.last().unwrap_or(&0), data.len());
+    let mut pieces: Vec<&mut [T]> = Vec::with_capacity(splits.len());
+    let mut rest = data;
+    let mut prev = 0;
+    for &end in splits {
+        let (head, tail) = rest.split_at_mut(end - prev);
+        pieces.push(head);
+        rest = tail;
+        prev = end;
+    }
+    let cells: Vec<Mutex<Option<&mut [T]>>> =
+        pieces.into_iter().map(|p| Mutex::new(Some(p))).collect();
+    pool::run(cells.len(), |i| {
+        let piece = cells[i].lock().unwrap().take().expect("piece taken twice");
+        f(i, piece);
+    });
+}
+
+/// Parallel map collecting results in input order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        pool::run(n, |i| {
+            let v = f(i);
+            **slots[i].lock().unwrap() = Some(v);
+        });
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_visits_each_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_handles_zero_and_one() {
+        parallel_for(0, |_| panic!("should not run"));
+        let ran = AtomicUsize::new(0);
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunked_covers_range_exactly() {
+        let n = 1003;
+        let sum = AtomicU64::new(0);
+        parallel_for_chunked(n, 64, |r| {
+            let local: u64 = r.map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        let expect: u64 = (0..n as u64).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn chunks_mut_disjoint_writes() {
+        let mut data = vec![0u32; 100];
+        let splits = vec![10, 25, 60, 100];
+        parallel_chunks_mut(&mut data, &splits, |i, piece| {
+            for x in piece.iter_mut() {
+                *x = i as u32 + 1;
+            }
+        });
+        assert!(data[..10].iter().all(|&x| x == 1));
+        assert!(data[10..25].iter().all(|&x| x == 2));
+        assert!(data[25..60].iter().all(|&x| x == 3));
+        assert!(data[60..].iter().all(|&x| x == 4));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(257, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn dispatch_overhead_is_small() {
+        // 1000 tiny parallel regions must complete quickly (< 0.5 ms each
+        // on average) — this is the regression test for the perf fix that
+        // introduced the pool.
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            parallel_for(4, |_i| {});
+        }
+        let per_call = t0.elapsed().as_secs_f64() / 1000.0;
+        assert!(per_call < 5e-4, "dispatch overhead {per_call:.2e}s per region");
+    }
+}

@@ -1,0 +1,219 @@
+//! Persistent work-stealing thread pool.
+//!
+//! The first profiling pass (EXPERIMENTS.md §Perf) showed the naive
+//! `std::thread::scope`-per-call helpers dominated FastH's runtime: one
+//! block application issues 2 small GEMMs, and spawning ~24 OS threads per
+//! GEMM (~1 ms) dwarfed the ~100 µs of math. This pool keeps workers
+//! alive for the process lifetime; dispatching a parallel region costs one
+//! mutex push + condvar broadcast (~2 µs), and the *caller participates*
+//! in the work so small regions don't even need a worker to wake in time.
+//!
+//! Safety model: a submitted job erases the lifetime of the caller's
+//! closure (`*const dyn Fn(usize) + Sync`). This is sound because
+//! [`run`] does not return until every index has been claimed *and*
+//! completed, so the closure outlives all uses. Nested calls are fine:
+//! a worker executing an outer item that itself calls [`run`] simply
+//! participates in the inner job (no blocking on worker availability
+//! anywhere, hence no deadlock).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+struct Job {
+    /// Erased closure; valid until `completed == n` (enforced by `run`).
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    n: usize,
+    completed: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// The raw pointer is only dereferenced while the submitting stack frame is
+// alive (see module docs).
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run indices until the job is exhausted. Returns true if
+    /// this call completed the final item.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            // SAFETY: `run` keeps the closure alive until completion.
+            let f = unsafe { &*self.f };
+            f(i);
+            let done = self.completed.fetch_add(1, Ordering::AcqRel) + 1;
+            if done == self.n {
+                let mut flag = self.done.lock().unwrap();
+                *flag = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n
+    }
+}
+
+struct PoolInner {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+    /// Bumped on every submission; lets idle workers spin-poll briefly
+    /// before parking on the condvar. FastH chains dispatch hundreds of
+    /// ~100 µs GEMMs back-to-back; a condvar wake alone costs 5–50 µs,
+    /// which made workers chronically late to small jobs (§Perf
+    /// iteration 6).
+    epoch: AtomicUsize,
+}
+
+fn pool() -> &'static PoolInner {
+    static POOL: OnceLock<&'static PoolInner> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let inner: &'static PoolInner = Box::leak(Box::new(PoolInner {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            epoch: AtomicUsize::new(0),
+        }));
+        let workers = super::parallel::num_threads().saturating_sub(1).max(1);
+        for w in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("fasth-pool-{w}"))
+                .spawn(move || worker_loop(inner))
+                .expect("spawn pool worker");
+        }
+        inner
+    })
+}
+
+fn worker_loop(inner: &'static PoolInner) {
+    loop {
+        let job: Arc<Job> = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                // Drop exhausted jobs from the front.
+                while q.front().map(|j| j.exhausted()).unwrap_or(false) {
+                    q.pop_front();
+                }
+                if let Some(j) = q.front() {
+                    break j.clone();
+                }
+                q = inner.work_cv.wait(q).unwrap();
+            }
+        };
+        job.work();
+    }
+}
+
+/// Run `f(i)` for all `i in 0..n` on the pool (caller participates).
+/// Blocks until every item has finished.
+pub fn run<F: Fn(usize) + Sync>(n: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    if n == 1 || super::parallel::num_threads() == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    // SAFETY: erase the closure's lifetime; `run` blocks until every item
+    // completed, so the pointer never outlives the referent (module docs).
+    let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+            &f as &(dyn Fn(usize) + Sync),
+        )
+    };
+    let job = Arc::new(Job {
+        f: f_erased as *const _,
+        next: AtomicUsize::new(0),
+        n,
+        completed: AtomicUsize::new(0),
+        done: Mutex::new(false),
+        done_cv: Condvar::new(),
+    });
+    let inner = pool();
+    {
+        let mut q = inner.queue.lock().unwrap();
+        q.push_back(job.clone());
+    }
+    inner.epoch.fetch_add(1, Ordering::AcqRel);
+    // One broadcast wake. Two alternatives were measured and rejected
+    // (§Perf iteration 6): worker spin-polling (−25%: idle hyperthread
+    // siblings contend with the math threads) and capped notify_one loops
+    // (−20%: serialized futex syscalls delay the workers that matter).
+    inner.work_cv.notify_all();
+    // Caller works too — small jobs usually finish right here.
+    job.work();
+    // Wait for stragglers still inside f(i).
+    let mut flag = job.done.lock().unwrap();
+    while !*flag {
+        flag = job.done_cv.wait(flag).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        run(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_and_one() {
+        run(0, |_| panic!("no items"));
+        let c = AtomicUsize::new(0);
+        run(1, |i| {
+            assert_eq!(i, 0);
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        let total = AtomicU64::new(0);
+        run(8, |_i| {
+            run(8, |_j| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn sequential_consistency_of_results() {
+        // Sum via pool equals serial sum.
+        let n = 5000usize;
+        let acc = AtomicU64::new(0);
+        run(n, |i| {
+            acc.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn many_back_to_back_jobs() {
+        // Dispatch overhead must not accumulate state between jobs.
+        for round in 0..200 {
+            let c = AtomicUsize::new(0);
+            run(16, |_| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(c.load(Ordering::Relaxed), 16, "round {round}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random
+//! inputs drawn from a seeded [`Rng`]; on failure it reports the case seed
+//! so the exact input can be replayed with `check_seed`. Used throughout
+//! the crate's tests for algebraic invariants (orthogonality, FastH ≡
+//! sequential, router conservation, ...).
+
+use super::rng::Rng;
+
+/// Default number of random cases per property.
+pub const DEFAULT_CASES: usize = 32;
+
+/// Run `property` against `cases` seeded RNGs. Panics with the failing
+/// case's seed on the first violation (property panics or returns Err).
+pub fn check<F>(name: &str, cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    // A fixed master seed keeps CI deterministic; FASTH_PROP_SEED overrides
+    // for exploratory fuzzing.
+    let master = std::env::var("FASTH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFA57_4001u64);
+    let mut seeder = Rng::new(master);
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            property(&mut rng)
+        });
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay: check_seed(\"{name}\", {seed:#x}, ...)"
+            ),
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property '{name}' panicked on case {case} (seed {seed:#x}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Replay a single property case by seed (used when debugging a failure).
+pub fn check_seed<F>(name: &str, seed: u64, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("property '{name}' failed on seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert two slices are elementwise close: |a-b| <= atol + rtol*|b|.
+/// Returns Err with the first offending index for use inside properties.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = (0usize, 0.0f32, 0.0f32);
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        let diff = (x - y).abs();
+        if !x.is_finite() || !y.is_finite() {
+            return Err(format!("non-finite at {i}: {x} vs {y}"));
+        }
+        if diff > tol && diff > worst.1 - worst.2 {
+            worst = (i, diff, tol);
+        }
+    }
+    if worst.1 > worst.2 && worst.1 > 0.0 {
+        let (i, diff, tol) = worst;
+        return Err(format!(
+            "mismatch at {i}: {} vs {} (|diff|={diff:.3e} > tol={tol:.3e})",
+            a[i], b[i]
+        ));
+    }
+    Ok(())
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check("count", 10, |_rng| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed")]
+    fn failing_property_reports_seed() {
+        check("boom", 5, |rng| {
+            if rng.uniform() >= 0.0 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked on case")]
+    fn panicking_property_is_caught() {
+        check("panics", 3, |_rng| panic!("inner panic"));
+    }
+
+    #[test]
+    fn cases_get_distinct_rngs() {
+        let seen = std::sync::Mutex::new(Vec::new());
+        check("distinct", 8, |rng| {
+            seen.lock().unwrap().push(rng.next_u64());
+            Ok(())
+        });
+        let v = seen.lock().unwrap();
+        let mut uniq = v.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), v.len());
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 0.0).is_err());
+        assert!(assert_close(&[f32::NAN], &[0.0], 1.0, 1.0).is_err());
+    }
+}

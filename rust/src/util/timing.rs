@@ -1,0 +1,230 @@
+//! Benchmark harness replicating the paper's measurement protocol.
+//!
+//! §4: "We ran each algorithm 100 times, and we report mean time μ with
+//! error bars [μ−σ, μ+σ] where σ is the standard deviation of running time
+//! over the 100 repetitions." This module implements exactly that (with
+//! warmup), plus table/CSV reporting used by `cargo bench` and `repro bench`.
+
+use std::time::Instant;
+
+/// Mean/σ/min/max of a set of timed repetitions, in seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub reps: usize,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: samples.iter().cloned().fold(0.0, f64::max),
+            reps: samples.len(),
+        }
+    }
+
+    /// Human-readable "1.234 ms ± 0.056" form.
+    pub fn display(&self) -> String {
+        format!("{} ± {}", fmt_secs(self.mean), fmt_secs(self.std))
+    }
+}
+
+/// Format seconds with an appropriate unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` untimed calls.
+///
+/// A `black_box`-style sink is applied by the caller returning a value; we
+/// consume it with `std::hint::black_box` to stop the optimizer deleting
+/// the work.
+pub fn time_reps<T, F: FnMut() -> T>(warmup: usize, reps: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Adaptive version: keeps the paper's 100-rep protocol for fast cases but
+/// caps total wall-clock for slow (large-d) cases so full sweeps finish.
+pub fn time_reps_budget<T, F: FnMut() -> T>(
+    max_reps: usize,
+    budget_secs: f64,
+    mut f: F,
+) -> Stats {
+    // One warmup call, also used to estimate per-rep cost.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let est = t0.elapsed().as_secs_f64();
+    let affordable = if est > 0.0 { (budget_secs / est) as usize } else { max_reps };
+    let reps = affordable.clamp(3, max_reps.max(3));
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// One row of a benchmark report: a label plus per-series stats.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cells: Vec<(String, Stats)>,
+}
+
+/// Collects rows and renders an aligned table + CSV.
+#[derive(Default)]
+pub struct Report {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Report {
+        Report { title: title.into(), rows: Vec::new() }
+    }
+
+    pub fn add_row(&mut self, label: impl Into<String>, cells: Vec<(String, Stats)>) {
+        self.rows.push(Row { label: label.into(), cells });
+    }
+
+    /// Render as an aligned text table (series become columns).
+    pub fn table(&self) -> String {
+        let mut cols: Vec<String> = Vec::new();
+        for row in &self.rows {
+            for (name, _) in &row.cells {
+                if !cols.contains(name) {
+                    cols.push(name.clone());
+                }
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let mut widths = vec![8usize];
+        for c in &cols {
+            widths.push(c.len().max(20));
+        }
+        out.push_str(&format!("{:<8}", ""));
+        for (c, w) in cols.iter().zip(&widths[1..]) {
+            out.push_str(&format!(" {c:>w$}", w = w));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&format!("{:<8}", row.label));
+            for (c, w) in cols.iter().zip(&widths[1..]) {
+                let cell = row
+                    .cells
+                    .iter()
+                    .find(|(n, _)| n == c)
+                    .map(|(_, s)| s.display())
+                    .unwrap_or_else(|| "-".to_string());
+                out.push_str(&format!(" {cell:>w$}", w = w));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV with columns: label, series, mean_s, std_s, min_s, max_s, reps.
+    pub fn csv(&self) -> String {
+        let mut out = String::from("label,series,mean_s,std_s,min_s,max_s,reps\n");
+        for row in &self.rows {
+            for (name, s) in &row.cells {
+                out.push_str(&format!(
+                    "{},{},{:.9},{:.9},{:.9},{:.9},{}\n",
+                    row.label, name, s.mean, s.std, s.min, s.max, s.reps
+                ));
+            }
+        }
+        out
+    }
+
+    /// Write CSV under `bench_out/<name>.csv` (creating the directory).
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("bench_out");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.reps, 3);
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let mut calls = 0;
+        let s = time_reps(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn budget_caps_reps() {
+        let s = time_reps_budget(100, 0.0005, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(s.reps < 100, "reps={}", s.reps);
+        assert!(s.reps >= 3);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn report_table_and_csv() {
+        let mut r = Report::new("t");
+        let s = Stats::from_samples(&[1e-3]);
+        r.add_row("64", vec![("fasth".into(), s), ("seq".into(), s)]);
+        r.add_row("128", vec![("fasth".into(), s)]);
+        let t = r.table();
+        assert!(t.contains("fasth") && t.contains("seq") && t.contains("128"));
+        let csv = r.csv();
+        assert_eq!(csv.lines().count(), 1 + 3);
+        assert!(csv.lines().nth(1).unwrap().starts_with("64,fasth,"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Cross-engine integration: the paper's "no loss of quality" claim (§5)
+//! at sizes larger than the unit tests use — sequential, parallel, and
+//! FastH (several k) must agree on outputs and gradients, and the
+//! algebraic invariants of the orthogonal parameterization must hold end
+//! to end.
+
+use fasth::householder::{Engine, HouseholderVectors};
+use fasth::linalg::Mat;
+use fasth::util::prop::{assert_close, check};
+use fasth::util::Rng;
+
+#[test]
+fn all_engines_agree_at_realistic_size() {
+    let mut rng = Rng::new(0xE1);
+    let (d, m) = (192, 32);
+    let hv = HouseholderVectors::random_full(d, &mut rng);
+    let x = Mat::randn(d, m, &mut rng);
+    let g = Mat::randn(d, m, &mut rng);
+
+    let (a_seq, dx_seq, dv_seq) = Engine::Sequential.step(&hv, &x, &g);
+    for engine in [
+        Engine::Parallel,
+        Engine::FastH { k: 8 },
+        Engine::FastH { k: 14 }, // ragged: 14 ∤ 192
+        Engine::FastH { k: 32 },
+        Engine::FastH { k: 192 },
+    ] {
+        let (a, dx, dv) = engine.step(&hv, &x, &g);
+        assert_close(a.data(), a_seq.data(), 2e-3, 2e-3)
+            .unwrap_or_else(|e| panic!("{} fwd: {e}", engine.name()));
+        assert_close(dx.data(), dx_seq.data(), 2e-3, 2e-3)
+            .unwrap_or_else(|e| panic!("{} dx: {e}", engine.name()));
+        assert_close(dv.data(), dv_seq.data(), 5e-3, 5e-3)
+            .unwrap_or_else(|e| panic!("{} dv: {e}", engine.name()));
+    }
+}
+
+#[test]
+fn property_orthogonality_invariants() {
+    check("orthogonality_invariants", 12, |rng| {
+        let d = 8 + rng.below(80);
+        let m = 1 + rng.below(16);
+        let k = 1 + rng.below(24);
+        let hv = HouseholderVectors::random_full(d, rng);
+        let x = Mat::randn(d, m, rng);
+        let engine = Engine::FastH { k };
+        let y = engine.apply(&hv, &x);
+        // Isometry per column.
+        for j in 0..m {
+            let nx: f32 = x.col(j).iter().map(|v| v * v).sum::<f32>().sqrt();
+            let ny: f32 = y.col(j).iter().map(|v| v * v).sum::<f32>().sqrt();
+            if (nx - ny).abs() > 1e-3 * nx.max(1.0) {
+                return Err(format!("column {j} norm changed: {nx} -> {ny}"));
+            }
+        }
+        // Transpose-apply inverts.
+        let back = fasth::householder::fasth::fasth_apply_transpose(&hv, &y, k);
+        assert_close(back.data(), x.data(), 2e-3, 2e-3)
+    });
+}
+
+#[test]
+fn property_partial_reflections() {
+    // n < d reflections (the expressiveness/cost trade-off of §5) works
+    // across engines.
+    check("partial_reflections", 10, |rng| {
+        let d = 8 + rng.below(60);
+        let n = 1 + rng.below(d);
+        let m = 1 + rng.below(8);
+        let k = 1 + rng.below(12);
+        let hv = HouseholderVectors::random(d, n, rng);
+        let x = Mat::randn(d, m, rng);
+        let want = Engine::Sequential.apply(&hv, &x);
+        let a = Engine::FastH { k }.apply(&hv, &x);
+        let b = Engine::Parallel.apply(&hv, &x);
+        assert_close(a.data(), want.data(), 2e-3, 2e-3)?;
+        assert_close(b.data(), want.data(), 2e-3, 2e-3)
+    });
+}
+
+#[test]
+fn gradient_descent_trajectory_identical_across_engines() {
+    // Running T SGD steps under FastH vs sequential gives the same
+    // trajectory — the strongest form of "same output, just faster".
+    let mut rng = Rng::new(0xE2);
+    let (d, m, t_steps) = (48, 8, 5);
+    let hv0 = HouseholderVectors::random_full(d, &mut rng);
+    let x = Mat::randn(d, m, &mut rng);
+    let g = Mat::randn(d, m, &mut rng);
+
+    let run = |engine: Engine| {
+        let mut hv = hv0.clone();
+        for _ in 0..t_steps {
+            let (_a, _dx, dv) = engine.step(&hv, &x, &g);
+            hv.sgd_step(&dv, 0.01);
+        }
+        hv
+    };
+    let hv_seq = run(Engine::Sequential);
+    let hv_fast = run(Engine::FastH { k: 8 });
+    assert_close(hv_fast.v.data(), hv_seq.v.data(), 5e-3, 5e-3).unwrap();
+}
+
+#[test]
+fn zero_and_duplicate_vectors_are_handled() {
+    // Degenerate inputs: zero vectors (identity reflections) interleaved
+    // with duplicated vectors (H·H = I pairs).
+    let mut rng = Rng::new(0xE3);
+    let d = 24;
+    let mut v = Mat::zeros(d, 6);
+    let col: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    v.set_col(1, &col);
+    v.set_col(2, &col); // H2·H3 = I
+    let col2: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    v.set_col(4, &col2);
+    let hv = HouseholderVectors::new(v);
+    let x = Mat::randn(d, 5, &mut rng);
+    // Product reduces to H(col2) alone.
+    let mut want = x.clone();
+    fasth::householder::vectors::apply_reflection_inplace(&col2, &mut want);
+    for engine in [Engine::Sequential, Engine::Parallel, Engine::FastH { k: 4 }] {
+        let got = engine.apply(&hv, &x);
+        assert_close(got.data(), want.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT integration: load every AOT artifact, execute it, and cross-check
+//! against the native Rust engines — the full L1/L2 (JAX/Pallas) ↔ L3
+//! (Rust) numerical contract.
+//!
+//! Requires `make artifacts` (artifacts/manifest.json). Tests skip with a
+//! message when artifacts are absent so `cargo test` works on a fresh
+//! clone.
+
+use fasth::householder::{seq, HouseholderVectors};
+use fasth::linalg::Mat;
+use fasth::runtime::pjrt::{ArtifactEngine, Tensor};
+use fasth::svd::SvdParam;
+use fasth::util::prop::assert_close;
+use fasth::util::Rng;
+use std::path::Path;
+
+fn engine() -> Option<ArtifactEngine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactEngine::open(dir).expect("open artifacts"))
+}
+
+/// Build a param whose σ is interesting and matches artifact batch m.
+fn setup(d: usize, seed: u64) -> (SvdParam, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let mut param = SvdParam::random_full(d, &mut rng);
+    for s in param.sigma.iter_mut() {
+        *s = 0.8 + 0.4 * rng.uniform() as f32;
+    }
+    let x = Mat::randn(d, 32, &mut rng);
+    let g = Mat::randn(d, 32, &mut rng);
+    (param, x, g)
+}
+
+#[test]
+fn orthogonal_apply_matches_native() {
+    let Some(engine) = engine() else { return };
+    for d in engine.manifest().sizes() {
+        let name = format!("orthogonal_apply_{d}");
+        if engine.entry(&name).is_none() {
+            continue;
+        }
+        let mut rng = Rng::new(d as u64);
+        let hv = HouseholderVectors::random_full(d, &mut rng);
+        let x = Mat::randn(d, 32, &mut rng);
+        let got = engine
+            .run1(&name, &[Tensor::M(hv.v.clone()), Tensor::M(x.clone())])
+            .expect("run");
+        let want = seq::seq_apply(&hv, &x);
+        assert_close(got.data(), want.data(), 2e-3, 2e-3)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn svd_apply_and_inverse_match_native() {
+    let Some(engine) = engine() else { return };
+    let d = *engine.manifest().sizes().first().expect("at least one size");
+    let (param, x, _g) = setup(d, 0x9A);
+    let inputs = vec![
+        Tensor::M(param.u.v.clone()),
+        Tensor::M(param.v.v.clone()),
+        Tensor::V(param.sigma.clone()),
+        Tensor::M(x.clone()),
+    ];
+    let k = engine.entry(&format!("svd_apply_{d}")).unwrap().k;
+
+    let got_apply = engine.run1(&format!("svd_apply_{d}"), &inputs).expect("apply");
+    let want_apply = param.apply(&x, k);
+    assert_close(got_apply.data(), want_apply.data(), 5e-3, 5e-3).unwrap();
+
+    let got_inv = engine.run1(&format!("svd_inverse_{d}"), &inputs).expect("inverse");
+    let want_inv = param.apply_inverse(&x, k);
+    assert_close(got_inv.data(), want_inv.data(), 5e-3, 5e-3).unwrap();
+
+    // Round trip through the artifacts: inverse(apply(x)) = x.
+    let mut inputs2 = inputs.clone();
+    inputs2[3] = Tensor::M(got_apply);
+    let back = engine.run1(&format!("svd_inverse_{d}"), &inputs2).expect("roundtrip");
+    assert_close(back.data(), x.data(), 1e-2, 1e-2).unwrap();
+}
+
+#[test]
+fn gradient_step_artifact_matches_native_backward() {
+    let Some(engine) = engine() else { return };
+    let d = *engine.manifest().sizes().first().unwrap();
+    let name = format!("gradient_step_{d}");
+    let Some(entry) = engine.entry(&name) else { return };
+    let k = entry.k;
+    let mut rng = Rng::new(0x9B);
+    let hv = HouseholderVectors::random_full(d, &mut rng);
+    let x = Mat::randn(d, 32, &mut rng);
+    let g = Mat::randn(d, 32, &mut rng);
+    let outs = engine
+        .run(&name, &[Tensor::M(hv.v.clone()), Tensor::M(x.clone()), Tensor::M(g.clone())])
+        .expect("run");
+    assert_eq!(outs.len(), 3); // (A, dV, dX)
+    let a = outs[0].as_mat().unwrap();
+    let dv = outs[1].as_mat().unwrap();
+    let dx = outs[2].as_mat().unwrap();
+
+    let (a_n, cache) = fasth::householder::fasth::fasth_forward(&hv, &x, k.min(d));
+    let (dx_n, dv_n) = fasth::householder::fasth::fasth_backward(&hv, &cache, &g);
+    assert_close(a.data(), a_n.data(), 2e-3, 2e-3).unwrap();
+    assert_close(dx.data(), dx_n.data(), 5e-3, 5e-3).unwrap();
+    assert_close(dv.data(), dv_n.data(), 1e-2, 1e-2).unwrap();
+}
+
+#[test]
+fn svd_layer_step_artifact_runs_and_matches() {
+    let Some(engine) = engine() else { return };
+    let d = *engine.manifest().sizes().first().unwrap();
+    let name = format!("svd_layer_step_{d}");
+    let Some(entry) = engine.entry(&name) else { return };
+    let k = entry.k;
+    let (param, x, g) = setup(d, 0x9C);
+    let outs = engine
+        .run(
+            &name,
+            &[
+                Tensor::M(param.u.v.clone()),
+                Tensor::M(param.v.v.clone()),
+                Tensor::V(param.sigma.clone()),
+                Tensor::M(x.clone()),
+                Tensor::M(g.clone()),
+            ],
+        )
+        .expect("run");
+    assert_eq!(outs.len(), 5); // (Y, dVu, dVv, dΣ, dX)
+    let y = outs[0].as_mat().unwrap();
+    let (y_n, cache) = param.forward(&x, k);
+    let (dx_n, grads_n) = param.backward(&cache, &g);
+    assert_close(y.data(), y_n.data(), 5e-3, 5e-3).unwrap();
+    assert_close(outs[1].as_mat().unwrap().data(), grads_n.du.data(), 2e-2, 2e-2).unwrap();
+    assert_close(outs[2].as_mat().unwrap().data(), grads_n.dv.data(), 2e-2, 2e-2).unwrap();
+    match &outs[3] {
+        Tensor::V(ds) => assert_close(ds, &grads_n.dsigma, 2e-2, 2e-2).unwrap(),
+        _ => panic!("dΣ should be rank-1"),
+    }
+    assert_close(outs[4].as_mat().unwrap().data(), dx_n.data(), 5e-3, 5e-3).unwrap();
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(engine) = engine() else { return };
+    let d = *engine.manifest().sizes().first().unwrap();
+    let name = format!("orthogonal_apply_{d}");
+    // Wrong arity.
+    assert!(engine.run(&name, &[Tensor::M(Mat::zeros(d, d))]).is_err());
+    // Wrong shape.
+    assert!(engine
+        .run(&name, &[Tensor::M(Mat::zeros(d, d)), Tensor::M(Mat::zeros(d + 1, 32))])
+        .is_err());
+    // Unknown artifact.
+    assert!(engine.run("no_such_artifact", &[]).is_err());
+}

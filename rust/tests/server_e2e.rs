@@ -1,0 +1,163 @@
+//! Coordinator end-to-end over real TCP: batching semantics, response
+//! conservation under concurrency, PJRT-backed serving when artifacts
+//! exist, and backpressure.
+
+use fasth::coordinator::{
+    BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
+};
+use fasth::util::prop::assert_close;
+use fasth::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_server(d: usize, max_batch: usize) -> Server {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create(&format!("svd_{d}"), d, ExecEngine::Native { k: 8 }, 0xE2E);
+    Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+            max_queue_depth: 10_000,
+        },
+        registry,
+    )
+    .expect("start server")
+}
+
+#[test]
+fn apply_inverse_roundtrip_over_tcp() {
+    let server = native_server(16, 8);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(1);
+    for _ in 0..5 {
+        let col: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let fwd = client.call("svd_16", OpKind::Apply, col.clone()).unwrap();
+        assert!(fwd.ok);
+        let back = client.call("svd_16", OpKind::Inverse, fwd.column).unwrap();
+        assert!(back.ok);
+        assert_close(&back.column, &col, 1e-2, 1e-2).unwrap();
+    }
+    server.stop();
+}
+
+#[test]
+fn burst_gets_coalesced_into_batches() {
+    let server = native_server(16, 16);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(2);
+    let cols: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..16).map(|_| rng.normal_f32()).collect()).collect();
+    let responses = client.call_many("svd_16", OpKind::Apply, cols).unwrap();
+    assert_eq!(responses.len(), 64);
+    assert!(responses.iter().all(|r| r.ok));
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch >= 8, "expected real batching, max batch {max_batch}");
+    server.stop();
+}
+
+#[test]
+fn conservation_under_concurrent_clients() {
+    let server = native_server(12, 8);
+    let addr = server.local_addr;
+    let n_clients = 6;
+    let per_client = 40;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + c);
+                let mut client = Client::connect(&addr).unwrap();
+                let cols: Vec<Vec<f32>> = (0..per_client)
+                    .map(|_| (0..12).map(|_| rng.normal_f32()).collect())
+                    .collect();
+                let rs = client.call_many("svd_12", OpKind::Apply, cols).unwrap();
+                assert_eq!(rs.len(), per_client);
+                rs.iter().filter(|r| r.ok).count()
+            })
+        })
+        .collect();
+    let total_ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total_ok, n_clients as usize * per_client);
+    // Server-side accounting agrees.
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = admin.admin("stats").unwrap();
+    let j = fasth::util::json::Json::parse(&stats).unwrap();
+    assert_eq!(
+        j.get("responses_ok").as_usize(),
+        Some(n_clients as usize * per_client)
+    );
+    server.stop();
+}
+
+#[test]
+fn expm_cayley_ops_served() {
+    let server = native_server(12, 4);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(3);
+    let col: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+    for op in [OpKind::Expm, OpKind::Cayley] {
+        let r = client.call("svd_12", op, col.clone()).unwrap();
+        assert!(r.ok, "{op:?} failed: {:?}", r.error);
+        assert_eq!(r.column.len(), 12);
+        assert!(r.column.iter().all(|v| v.is_finite()));
+    }
+    server.stop();
+}
+
+#[test]
+fn pjrt_engine_serves_if_artifacts_present() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let engine = fasth::runtime::ArtifactEngine::open(dir).expect("open");
+    let d = *engine.manifest().sizes().first().unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create(&format!("svd_{d}"), d, ExecEngine::Pjrt(Arc::new(engine)), 0xE2F);
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+            max_queue_depth: 1000,
+        },
+        registry.clone(),
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(4);
+    let col: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let fwd = client.call(&format!("svd_{d}"), OpKind::Apply, col.clone()).unwrap();
+    assert!(fwd.ok, "{:?}", fwd.error);
+    let back = client.call(&format!("svd_{d}"), OpKind::Inverse, fwd.column).unwrap();
+    assert!(back.ok);
+    assert_close(&back.column, &col, 2e-2, 2e-2).unwrap();
+    // Cross-check against native execution of the same registered weight.
+    let model = registry.get(&format!("svd_{d}")).unwrap();
+    let mut x = fasth::linalg::Mat::zeros(d, 1);
+    for i in 0..d {
+        x[(i, 0)] = col[i];
+    }
+    let native = model.param.apply(&x, 32);
+    let mut client2 = Client::connect(&server.local_addr).unwrap();
+    let served = client2.call(&format!("svd_{d}"), OpKind::Apply, col).unwrap();
+    assert_close(&served.column, &native.col(0), 1e-2, 1e-2).unwrap();
+    server.stop();
+}
+
+#[test]
+fn malformed_line_gets_error_response() {
+    use std::io::{BufRead, BufReader, Write};
+    let server = native_server(8, 4);
+    let mut stream = std::net::TcpStream::connect(server.local_addr).unwrap();
+    writeln!(stream, "this is not json").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = fasth::coordinator::Response::from_json(line.trim()).unwrap();
+    assert!(!resp.ok);
+    assert!(resp.error.unwrap().contains("bad request"));
+    server.stop();
+}

@@ -1,0 +1,106 @@
+//! Table 1 integration: every matrix operation computed by the standard
+//! dense method and by the SVD route must agree numerically (exactly the
+//! correspondence the paper's Table 1 asserts).
+
+use fasth::householder::{Engine, HouseholderVectors};
+use fasth::linalg::{cayley, expm, gemm, lu, Mat};
+use fasth::svd::ops::{
+    op_step, standard_step, sym_apply, sym_materialize, MatrixOp, OpEngine, OpWorkload,
+};
+use fasth::util::prop::assert_close;
+use fasth::util::Rng;
+
+#[test]
+fn inverse_row() {
+    let mut rng = Rng::new(0x7A1);
+    let wl = OpWorkload::new(48, 8, &mut rng);
+    let std = standard_step(MatrixOp::Inverse, &wl.w, &wl.x, &wl.g);
+    // Direct check against LU: W⁻¹X.
+    let want = gemm::matmul(&lu::inverse(&wl.w).unwrap(), &wl.x);
+    assert_close(std.y.data(), want.data(), 1e-3, 1e-2).unwrap();
+    for engine in [
+        OpEngine::Svd(Engine::FastH { k: 8 }),
+        OpEngine::Svd(Engine::Sequential),
+        OpEngine::Svd(Engine::Parallel),
+    ] {
+        let svd = op_step(MatrixOp::Inverse, engine, &wl.w, &wl.param, &wl.x, &wl.g);
+        assert_close(svd.y.data(), want.data(), 5e-2, 5e-2)
+            .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+    }
+}
+
+#[test]
+fn determinant_row() {
+    let mut rng = Rng::new(0x7A2);
+    let wl = OpWorkload::new(40, 4, &mut rng);
+    let (sign_lu, log_lu) = lu::slogdet(&wl.w);
+    let (sign_svd, log_svd) = wl.param.slogdet();
+    assert_eq!(sign_lu.signum(), sign_svd.signum(), "determinant sign");
+    assert!(
+        (log_lu - log_svd).abs() < 1e-2 * log_lu.abs().max(1.0),
+        "log|det|: LU {log_lu} vs SVD {log_svd}"
+    );
+    // O(d) vs O(d³): same number.
+    let std = standard_step(MatrixOp::Determinant, &wl.w, &wl.x, &wl.g);
+    assert!((std.scalar - log_svd).abs() < 1e-2 * log_svd.abs().max(1.0));
+}
+
+#[test]
+fn expm_row_symmetric_form() {
+    let mut rng = Rng::new(0x7A3);
+    let d = 32;
+    let u = HouseholderVectors::random_full(d, &mut rng);
+    let sigma: Vec<f32> = (0..d).map(|i| -0.5 + (i as f32) / d as f32).collect();
+    let w = sym_materialize(&u, &sigma);
+    let x = Mat::randn(d, 6, &mut rng);
+    let want = gemm::matmul(&expm::expm(&w), &x);
+    let got = sym_apply(&u, &MatrixOp::Expm.transform_sigma(&sigma), &x, 8);
+    assert_close(got.data(), want.data(), 5e-2, 5e-2).unwrap();
+}
+
+#[test]
+fn cayley_row_symmetric_form() {
+    let mut rng = Rng::new(0x7A4);
+    let d = 28;
+    let u = HouseholderVectors::random_full(d, &mut rng);
+    let sigma: Vec<f32> = (0..d).map(|i| 0.1 + 0.02 * i as f32).collect();
+    let w = sym_materialize(&u, &sigma);
+    let x = Mat::randn(d, 5, &mut rng);
+    let want = gemm::matmul(&cayley::cayley(&w).unwrap(), &x);
+    let got = sym_apply(&u, &MatrixOp::Cayley.transform_sigma(&sigma), &x, 7);
+    assert_close(got.data(), want.data(), 5e-2, 5e-2).unwrap();
+}
+
+#[test]
+fn spectral_clipping_controls_condition_number() {
+    // The spectral-RNN use case: after clip_sigma(ε), κ(W) ≤ (1+ε)/(1−ε).
+    let mut rng = Rng::new(0x7A5);
+    let mut param = fasth::svd::SvdParam::random_full(24, &mut rng);
+    for s in param.sigma.iter_mut() {
+        *s = 0.1 + 3.0 * rng.uniform() as f32;
+    }
+    param.clip_sigma(0.05);
+    let w = param.materialize();
+    let svd = fasth::svd::jacobi::svd(&w);
+    let kappa = svd.sigma[0] / svd.sigma[23];
+    let bound = 1.05 / 0.95 + 0.02;
+    assert!(kappa <= bound, "κ = {kappa} > {bound}");
+}
+
+#[test]
+fn jacobi_svd_agrees_with_reparameterized_spectrum() {
+    // Computing the SVD the O(d³) way recovers the spectrum we never had
+    // to compute — the paper's whole premise, verified.
+    let mut rng = Rng::new(0x7A6);
+    let mut param = fasth::svd::SvdParam::random_full(16, &mut rng);
+    for (i, s) in param.sigma.iter_mut().enumerate() {
+        *s = 0.5 + 0.1 * i as f32;
+    }
+    let w = param.materialize();
+    let svd = fasth::svd::jacobi::svd(&w);
+    let mut want = param.sigma.clone();
+    want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    for (got, want) in svd.sigma.iter().zip(&want) {
+        assert!((got - want).abs() < 1e-3 * want, "σ {got} vs {want}");
+    }
+}

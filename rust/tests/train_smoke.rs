@@ -1,0 +1,93 @@
+//! End-to-end training smoke tests (fast versions of the examples):
+//! losses must decrease and the reparameterization invariants must hold
+//! throughout training.
+
+use fasth::nn::loss::accuracy;
+use fasth::nn::tasks::{copy_memory, spirals};
+use fasth::nn::{softmax_cross_entropy, Activation, Dense, LinearSvd, SvdRnn};
+use fasth::util::Rng;
+
+#[test]
+fn rnn_copy_memory_learns() {
+    let mut rng = Rng::new(0x51);
+    let mut rnn = SvdRnn::new(6, 48, 6, &mut rng);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..60 {
+        let data = copy_memory(4, 2, 6, 32, &mut rng);
+        let (loss, grads, _acc) = rnn.step_bptt(&data.inputs, &data.targets, data.scored_steps);
+        rnn.sgd_step(&grads, 0.7);
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(last < 0.8 * first, "RNN loss {first:.4} → {last:.4} (no learning)");
+    // Spectrum stayed clipped the whole run.
+    for &s in &rnn.w_rec.sigma {
+        assert!((1.0 - rnn.eps..=1.0 + rnn.eps).contains(&s));
+    }
+    // Recurrent factors remain orthogonal after 60 updates.
+    let u = rnn.w_rec.u.materialize();
+    let utu = fasth::linalg::gemm::matmul_tn(&u, &u);
+    assert!(utu.defect_from_identity() < 1e-3, "defect {}", utu.defect_from_identity());
+}
+
+#[test]
+fn spiral_mlp_reaches_decent_accuracy() {
+    let mut rng = Rng::new(0x52);
+    let d = 24;
+    let (x, y) = spirals(64, 0.05, &mut rng);
+    let mut input = Dense::new(d, 2, &mut rng);
+    let mut hidden = LinearSvd::new(d, &mut rng);
+    let mut output = Dense::new(3, d, &mut rng);
+    let act = Activation::Tanh;
+    let mut acc = 0.0;
+    for _ in 0..300 {
+        let (h0, c0) = input.forward(&x);
+        let a0 = act.forward(&h0);
+        let (h1, c1) = hidden.forward(&a0);
+        let a1 = act.forward(&h1);
+        let (logits, c2) = output.forward(&a1);
+        let (_loss, dlogits) = softmax_cross_entropy(&logits, &y);
+        let (da1, dw2, db2) = output.backward(&c2, &dlogits);
+        let dh1 = act.backward(&a1, &da1);
+        let (da0, svd_grads, db1) = hidden.backward(&c1, &dh1);
+        let dh0 = act.backward(&a0, &da0);
+        let (_dx, dw0, db0) = input.backward(&c0, &dh0);
+        output.sgd_step(&dw2, &db2, 0.5);
+        hidden.sgd_step(&svd_grads, &db1, 0.5);
+        hidden.clip_sigma(0.25);
+        input.sgd_step(&dw0, &db0, 0.5);
+        acc = accuracy(&logits, &y);
+    }
+    assert!(acc > 0.75, "spiral accuracy only {acc}");
+    // The trained layer's condition number is bounded by the clip.
+    let (lo, hi) = hidden
+        .p
+        .sigma
+        .iter()
+        .fold((f32::INFINITY, 0.0f32), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+    assert!(hi / lo <= 1.25 / 0.75 + 0.01);
+}
+
+#[test]
+fn training_trajectory_engine_invariant() {
+    // Training with FastH(k=4) equals training with FastH(k=16): the block
+    // size is a pure performance knob, not a modeling choice.
+    let run = |k: usize| {
+        let mut rng = Rng::new(0x53);
+        let mut layer = LinearSvd::new(12, &mut rng);
+        layer.k = k;
+        let x = fasth::linalg::Mat::randn(12, 6, &mut rng);
+        let g = fasth::linalg::Mat::randn(12, 6, &mut rng);
+        for _ in 0..8 {
+            let (_y, c) = layer.forward(&x);
+            let (_dx, grads, db) = layer.backward(&c, &g);
+            layer.sgd_step(&grads, &db, 0.05);
+        }
+        layer.p.u.v.clone()
+    };
+    let a = run(4);
+    let b = run(16);
+    fasth::util::prop::assert_close(a.data(), b.data(), 1e-3, 1e-3).unwrap();
+}
