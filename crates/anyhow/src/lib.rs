@@ -1,0 +1,221 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored path
+//! crate provides the (small) subset of `anyhow`'s API the workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result` and
+//! `Option`, and the [`anyhow!`] / [`bail!`] macros. Error values carry a
+//! flattened context/cause chain of strings; `{e}` prints the outermost
+//! message and `{e:#}` prints the full chain joined with `": "`, matching
+//! the real crate's display behaviour closely enough for logs and tests.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same defaulted error parameter as
+/// the real crate, so `Result<T>` and `collect::<Result<_>>()` both work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: an outermost message plus its cause chain.
+pub struct Error {
+    /// `chain[0]` is the outermost message, later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion (and
+// therefore `?` on any std error type) coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(context()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: disk on fire");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(e.chain().count(), 2);
+        assert_eq!(e.root_cause(), "disk on fire");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key '{}'", "batch")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key 'batch'");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "svd_64";
+        let e = anyhow!("unknown artifact '{name}'");
+        assert_eq!(format!("{e}"), "unknown artifact 'svd_64'");
+        let e = anyhow!("wants {} inputs, got {}", 4, 2);
+        assert_eq!(format!("{e}"), "wants 4 inputs, got 2");
+
+        fn fails() -> Result<()> {
+            bail!("boom {}", 7)
+        }
+        assert_eq!(format!("{}", fails().unwrap_err()), "boom 7");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("disk on fire"));
+    }
+}

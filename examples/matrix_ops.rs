@@ -30,7 +30,9 @@ fn main() {
         let svd = op_step(op, OpEngine::Svd(Engine::FastH { k }), &wl.w, &wl.param, &wl.x, &wl.g);
         let t_svd = t1.elapsed();
         let agreement = match op {
-            MatrixOp::Determinant => format!("Δlogdet {:.1e}", (std_step.scalar - svd.scalar).abs()),
+            MatrixOp::Determinant => {
+                format!("Δlogdet {:.1e}", (std_step.scalar - svd.scalar).abs())
+            }
             MatrixOp::Inverse => format!("Δfwd {:.1e}", svd.y.max_abs_diff(&std_step.y)),
             // expm/cayley SVD route times the two-factor upper bound
             // (§8.3); exact equivalence is shown below in the symmetric

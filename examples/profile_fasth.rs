@@ -46,7 +46,11 @@ fn main() {
         let mut t = Mat::zeros(k, m);
         let mut scratch = Mat::zeros(0, 0);
         for b in blocks.iter().rev() {
-            let mut tb = if b.width() == k { std::mem::replace(&mut t, Mat::zeros(0, 0)) } else { Mat::zeros(b.width(), m) };
+            let mut tb = if b.width() == k {
+                std::mem::replace(&mut t, Mat::zeros(0, 0))
+            } else {
+                Mat::zeros(b.width(), m)
+            };
             b.apply_inplace(&mut a, &mut tb, &mut scratch);
             if b.width() == k {
                 t = tb;
@@ -67,7 +71,11 @@ fn main() {
         let mut t = Mat::zeros(k, m);
         let mut scratch = Mat::zeros(0, 0);
         for b in blocks.iter() {
-            let mut tb = if b.width() == k { std::mem::replace(&mut t, Mat::zeros(0, 0)) } else { Mat::zeros(b.width(), m) };
+            let mut tb = if b.width() == k {
+                std::mem::replace(&mut t, Mat::zeros(0, 0))
+            } else {
+                Mat::zeros(b.width(), m)
+            };
             b.apply_transpose_inplace(&mut gg, &mut tb, &mut scratch);
             if b.width() == k {
                 t = tb;

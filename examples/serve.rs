@@ -22,15 +22,22 @@ fn main() {
     let per_client = 200usize;
     let n_clients = 4usize;
 
-    // Engine: PJRT artifacts if present, else native.
+    // Engine: PJRT artifacts if present (and a backend is compiled in),
+    // else native.
     let artifacts = std::path::Path::new("artifacts/manifest.json");
-    let (engine, engine_name) = if artifacts.exists() {
+    let pjrt_engine = if artifacts.exists() {
         let eng = fasth::runtime::ArtifactEngine::open(std::path::Path::new("artifacts"))
             .expect("open artifacts");
-        eng.compile_all().expect("compile artifacts");
-        (ExecEngine::Pjrt(Arc::new(eng)), "pjrt")
+        eng.backend_available().then(|| {
+            eng.compile_all().expect("compile artifacts");
+            eng
+        })
     } else {
-        (ExecEngine::Native { k: 32 }, "native")
+        None
+    };
+    let (engine, engine_name) = match pjrt_engine {
+        Some(eng) => (ExecEngine::Pjrt(Arc::new(eng)), "pjrt"),
+        None => (ExecEngine::Native { k: 32 }, "native"),
     };
 
     let registry = Arc::new(ModelRegistry::new());
@@ -90,8 +97,7 @@ fn main() {
     let total = all.len();
     let mut lats: Vec<u64> = all.iter().map(|(us, _)| *us).collect();
     lats.sort_unstable();
-    let mean_batch =
-        all.iter().map(|(_, b)| *b as f64).sum::<f64>() / total as f64;
+    let mean_batch = all.iter().map(|(_, b)| *b as f64).sum::<f64>() / total as f64;
 
     println!("completed {total} requests in {wall:.2}s");
     println!("throughput        : {:.0} req/s", total as f64 / wall);

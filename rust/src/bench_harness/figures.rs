@@ -64,51 +64,43 @@ pub fn fig1_inversion(sizes: &[usize], cfg: BudgetCfg, seed: u64) -> Report {
 pub fn fig3_steptime(sizes: &[usize], cfg: BudgetCfg, seed: u64) -> Report {
     let mut report = Report::new("Figure 3a — gradient-descent step time per algorithm");
     for &d in sizes {
-        let mut rng = Rng::new(seed ^ (d as u64) << 1);
+        let mut rng = Rng::new(seed ^ ((d as u64) << 1));
         let hv = HouseholderVectors::random_full(d, &mut rng);
         let x = Mat::randn(d, BATCH_M, &mut rng);
         let g = Mat::randn(d, BATCH_M, &mut rng);
         let k = default_k(d);
-
-        let mut cells: Vec<(String, Stats)> = Vec::new();
-        cells.push((
-            "fasth".into(),
-            time(cfg, || Engine::FastH { k }.step(&hv, &x, &g)),
-        ));
-        cells.push((
-            "sequential".into(),
-            time(cfg, || Engine::Sequential.step(&hv, &x, &g)),
-        ));
-        cells.push((
-            "parallel".into(),
-            time(cfg, || Engine::Parallel.step(&hv, &x, &g)),
-        ));
         // Orthogonal-reparameterization baselines (§8.2): φ(V)X + grads.
         let v_param = Mat::randn(d, d, &mut rng).scale(1.0 / (d as f32).sqrt());
-        cells.push((
-            "expm-map".into(),
-            time(cfg, || {
-                let e = expm::expm(&v_param);
-                let y = crate::linalg::gemm::matmul(&e, &x);
-                let dx = crate::linalg::gemm::matmul_tn(&e, &g);
-                // Exact Fréchet adjoint via the 2d×2d block trick.
-                let gxt = crate::linalg::gemm::matmul_nt(&g, &x);
-                let (_e2, dv) = expm::expm_frechet(&v_param.t(), &gxt);
-                (y, dx, dv)
-            }),
-        ));
-        cells.push((
-            "cayley-map".into(),
-            time(cfg, || {
-                let q = cayley::cayley_map_skew(&v_param);
-                let y = crate::linalg::gemm::matmul(&q, &x);
-                let dx = crate::linalg::gemm::matmul_tn(&q, &g);
-                // ∂L/∂Q = G·Xᵀ (d×d), then back through the Cayley map.
-                let dq = crate::linalg::gemm::matmul_nt(&g, &x);
-                let dv = cayley::cayley_map_skew_backward(&v_param, &q, &dq);
-                (y, dx, dv)
-            }),
-        ));
+
+        let cells: Vec<(String, Stats)> = vec![
+            ("fasth".into(), time(cfg, || Engine::FastH { k }.step(&hv, &x, &g))),
+            ("sequential".into(), time(cfg, || Engine::Sequential.step(&hv, &x, &g))),
+            ("parallel".into(), time(cfg, || Engine::Parallel.step(&hv, &x, &g))),
+            (
+                "expm-map".into(),
+                time(cfg, || {
+                    let e = expm::expm(&v_param);
+                    let y = crate::linalg::gemm::matmul(&e, &x);
+                    let dx = crate::linalg::gemm::matmul_tn(&e, &g);
+                    // Exact Fréchet adjoint via the 2d×2d block trick.
+                    let gxt = crate::linalg::gemm::matmul_nt(&g, &x);
+                    let (_e2, dv) = expm::expm_frechet(&v_param.t(), &gxt);
+                    (y, dx, dv)
+                }),
+            ),
+            (
+                "cayley-map".into(),
+                time(cfg, || {
+                    let q = cayley::cayley_map_skew(&v_param);
+                    let y = crate::linalg::gemm::matmul(&q, &x);
+                    let dx = crate::linalg::gemm::matmul_tn(&q, &g);
+                    // ∂L/∂Q = G·Xᵀ (d×d), then back through the Cayley map.
+                    let dq = crate::linalg::gemm::matmul_nt(&g, &x);
+                    let dv = cayley::cayley_map_skew_backward(&v_param, &q, &dq);
+                    (y, dx, dv)
+                }),
+            ),
+        ];
         report.add_row(format!("{d}"), cells);
     }
     report
@@ -152,7 +144,7 @@ pub fn fig4_matrix_ops(
     for &op in ops {
         let mut report = Report::new(format!("Figure 4 — {} (standard vs SVD routes)", op.name()));
         for &d in sizes {
-            let mut rng = Rng::new(seed ^ (d as u64) << 2 ^ op.name().len() as u64);
+            let mut rng = Rng::new(seed ^ ((d as u64) << 2) ^ op.name().len() as u64);
             let wl = OpWorkload::new(d, BATCH_M, &mut rng);
             let k = default_k(d);
             let engines: [(&str, OpEngine); 4] = [

@@ -164,7 +164,10 @@ mod tests {
 
     #[test]
     fn full_batch_flushes_immediately() {
-        let b = DynamicBatcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(60) });
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(60),
+        });
         for i in 0..3 {
             b.submit(req(i, "m", OpKind::Apply));
         }
@@ -190,7 +193,10 @@ mod tests {
 
     #[test]
     fn keys_are_isolated() {
-        let b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(60) });
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+        });
         b.submit(req(1, "a", OpKind::Apply));
         b.submit(req(2, "a", OpKind::Inverse)); // different op → different key
         b.submit(req(3, "b", OpKind::Apply)); // different model
@@ -204,7 +210,10 @@ mod tests {
 
     #[test]
     fn close_drains_then_ends() {
-        let b = DynamicBatcher::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_secs(60) });
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 10,
+            max_wait: Duration::from_secs(60),
+        });
         b.submit(req(1, "m", OpKind::Apply));
         b.submit(req(2, "m", OpKind::Cayley));
         b.close();

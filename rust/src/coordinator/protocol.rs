@@ -107,7 +107,14 @@ impl Response {
     }
 
     pub fn err(id: u64, msg: impl Into<String>) -> Response {
-        Response { id, ok: false, column: Vec::new(), error: Some(msg.into()), batch_size: 0, latency_us: 0 }
+        Response {
+            id,
+            ok: false,
+            column: Vec::new(),
+            error: Some(msg.into()),
+            batch_size: 0,
+            latency_us: 0,
+        }
     }
 
     pub fn to_json(&self) -> String {

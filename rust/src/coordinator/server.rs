@@ -184,10 +184,11 @@ fn spawn_connection(
                 if let Some(cmd) = j.get("cmd").as_str() {
                     let reply = match cmd {
                         "stats" => metrics.to_json(),
-                        "models" => crate::util::json::Json::arr(
-                            registry.names().into_iter().map(crate::util::json::Json::str).collect(),
-                        )
-                        .to_string(),
+                        "models" => {
+                            let names = registry.names();
+                            let items = names.into_iter().map(crate::util::json::Json::str);
+                            crate::util::json::Json::arr(items.collect()).to_string()
+                        }
                         "shutdown" => {
                             shutdown.store(true, Ordering::Relaxed);
                             batcher.close();
@@ -246,7 +247,12 @@ impl Client {
 
     /// Send one request and wait for its response (responses on one
     /// connection come back in completion order; we match by id).
-    pub fn call(&mut self, model: &str, op: super::protocol::OpKind, column: Vec<f32>) -> Result<Response> {
+    pub fn call(
+        &mut self,
+        model: &str,
+        op: super::protocol::OpKind,
+        column: Vec<f32>,
+    ) -> Result<Response> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request { id, model: model.into(), op, column };

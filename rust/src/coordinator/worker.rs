@@ -114,7 +114,8 @@ mod tests {
     fn batch_matches_single_column_runs() {
         let (reg, metrics) = setup();
         let mut rng = Rng::new(10);
-        let cols: Vec<Vec<f32>> = (0..5).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        let cols: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
         let batch = make_batch(OpKind::Apply, cols.clone());
         let responses = execute_batch(&reg, &metrics, &batch);
         assert_eq!(responses.len(), 5);

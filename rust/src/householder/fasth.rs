@@ -180,6 +180,9 @@ mod tests {
         assert_eq!(block_bounds(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
         assert_eq!(block_bounds(3, 8), vec![(0, 3)]);
         assert_eq!(block_bounds(0, 4), vec![]);
+        // k = 1 (one reflection per block) and k = n (single block).
+        assert_eq!(block_bounds(3, 1), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(block_bounds(8, 8), vec![(0, 8)]);
     }
 
     #[test]

@@ -52,8 +52,7 @@ fn merge_level(blocks: Vec<WyBlock>) -> Vec<WyBlock> {
 /// ≥ `snap` captured on the way up.
 pub fn build_tree(hv: &HouseholderVectors, snap: usize) -> (WyBlock, Vec<WyBlock>) {
     // Leaves: width-1 WY blocks (a single reflection: W = Y = û).
-    let mut level: Vec<WyBlock> =
-        parallel_map(hv.count(), |i| WyBlock::build(hv, i, 1));
+    let mut level: Vec<WyBlock> = parallel_map(hv.count(), |i| WyBlock::build(hv, i, 1));
     let mut snapshot: Option<Vec<WyBlock>> = None;
     if snap <= 1 {
         snapshot = Some(level.clone());
@@ -83,7 +82,7 @@ pub fn par_forward(hv: &HouseholderVectors, x: &Mat) -> (Mat, ParCache) {
     assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
     let m = x.cols();
     let (full, snap_blocks) = build_tree(hv, snap_width(m));
-    let a = full.apply(&x.clone());
+    let a = full.apply(x);
 
     // Rebuild the FastH-style activation chain from the snapshot blocks so
     // the backward pass is exact (see module docs).

@@ -113,7 +113,7 @@ mod tests {
     fn tuned_k_is_in_range() {
         let mut rng = Rng::new(121);
         let t = tune_k(64, 8, 2, 0.2, &mut rng);
-        assert!(t.k >= 2 && t.k <= 64, "k={}", t.k);
+        assert!((2..=64).contains(&t.k), "k={}", t.k);
         assert!(t.step_secs.is_finite() && t.step_secs > 0.0);
     }
 

@@ -110,8 +110,7 @@ impl Gemm {
                 // L2-resident and shared across all rows of the chunk).
                 let mut acc = [0.0f32; 64];
                 for i in rows.clone() {
-                    let c_row =
-                        &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
+                    let c_row = &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
                     acc[..n].copy_from_slice(c_row);
                     let a_row = a.row(i);
                     for (kk, &aik) in a_row.iter().enumerate() {
@@ -131,8 +130,7 @@ impl Gemm {
                 let k1 = (k0 + kc).min(k);
                 for i in rows.clone() {
                     let a_row = &a.row(i)[k0..k1];
-                    let c_row =
-                        &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
+                    let c_row = &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
                     for (kk, &aik) in a_row.iter().enumerate() {
                         if aik == 0.0 {
                             continue;

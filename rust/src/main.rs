@@ -128,8 +128,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         println!("{}", r.table());
         println!("-- Figure 3b (time relative to FastH; >1 means FastH faster) --");
         for (label, rel) in figures::relative_rows(&r) {
-            let cells: Vec<String> =
-                rel.iter().map(|(n, v)| format!("{n}: {v:.2}x")).collect();
+            let cells: Vec<String> = rel.iter().map(|(n, v)| format!("{n}: {v:.2}x")).collect();
             println!("d={label:<6} {}", cells.join("  "));
         }
         println!("saved {}", r.save_csv("fig3_steptime")?.display());
@@ -189,6 +188,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "pjrt" => {
             let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
             let eng = fasth::runtime::ArtifactEngine::open(std::path::Path::new(&dir))?;
+            if !eng.backend_available() {
+                bail!("--engine pjrt requires a build with a PJRT backend (stubbed here)");
+            }
             eng.compile_all()?;
             ExecEngine::Pjrt(Arc::new(eng))
         }
@@ -351,6 +353,9 @@ fn cmd_tune_k(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_selftest(flags: &HashMap<String, String>) -> Result<()> {
     let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
     let engine = fasth::runtime::ArtifactEngine::open(std::path::Path::new(&dir))?;
+    if !engine.backend_available() {
+        bail!("selftest requires a build with a PJRT backend (stubbed here)");
+    }
     let n = engine.compile_all()?;
     println!("compiled {n} artifacts from {dir}");
     let mut rng = Rng::new(19);

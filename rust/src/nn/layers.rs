@@ -175,8 +175,7 @@ mod tests {
         let (_y, cache) = layer.forward(&x);
         let (dx, dw, db) = layer.backward(&cache, &g);
         let fd_w = oracle::finite_diff_grad(layer.w.data(), 1e-3, |p| {
-            let mut l2 = Dense { w: Mat::from_vec(4, 3, p.to_vec()), b: layer.b.clone() };
-            l2.b = layer.b.clone();
+            let l2 = Dense { w: Mat::from_vec(4, 3, p.to_vec()), b: layer.b.clone() };
             let (y, _) = l2.forward(&x);
             y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
         });

@@ -81,8 +81,8 @@ pub fn spirals(n_per_class: usize, noise: f32, rng: &mut Rng) -> (Mat, Vec<usize
         for i in 0..n_per_class {
             let idx = c * n_per_class + i;
             let r = i as f32 / n_per_class as f32;
-            let theta =
-                c as f32 * 2.0 * std::f32::consts::PI / classes as f32 + r * 4.0 + noise * rng.normal_f32();
+            let arm = c as f32 * 2.0 * std::f32::consts::PI / classes as f32;
+            let theta = arm + r * 4.0 + noise * rng.normal_f32();
             x[(0, idx)] = r * theta.cos();
             x[(1, idx)] = r * theta.sin();
             y[idx] = c;
@@ -102,8 +102,7 @@ pub fn char_corpus(len: usize) -> (Vec<char>, Vec<usize>) {
     vocab.sort_unstable();
     let index: std::collections::BTreeMap<char, usize> =
         vocab.iter().enumerate().map(|(i, &c)| (c, i)).collect();
-    let ids: Vec<usize> =
-        base.chars().cycle().take(len).map(|c| index[&c]).collect();
+    let ids: Vec<usize> = base.chars().cycle().take(len).map(|c| index[&c]).collect();
     (vocab, ids)
 }
 

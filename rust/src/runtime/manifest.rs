@@ -97,7 +97,8 @@ impl Manifest {
             .filter(|e| {
                 e.name
                     .strip_prefix(prefix)
-                    .map(|rest| rest.strip_prefix('_').map(|r| r.parse::<usize>().is_ok()).unwrap_or(false))
+                    .and_then(|rest| rest.strip_prefix('_'))
+                    .map(|r| r.parse::<usize>().is_ok())
                     .unwrap_or(false)
             })
             .collect()

@@ -3,11 +3,11 @@
 //!
 //! - [`manifest`]: parses `artifacts/manifest.json` (written by
 //!   `python/compile/aot.py`) into typed entries,
-//! - [`pjrt`]: wraps the `xla` crate (`PjRtClient::cpu()` →
-//!   `HloModuleProto::from_text_file` → `compile` → `execute`) behind an
-//!   [`pjrt::ArtifactEngine`] that keeps one compiled executable per
-//!   manifest entry and converts between [`crate::linalg::Mat`] and XLA
-//!   literals.
+//! - [`pjrt`]: the [`pjrt::ArtifactEngine`] that resolves manifest
+//!   entries, validates shapes, and (in a build with a PJRT backend)
+//!   executes them. In this offline workspace the execution path is
+//!   stubbed — see the module docs of [`pjrt`] for what it would take to
+//!   restore the real `xla`-crate-backed path.
 
 pub mod manifest;
 pub mod pjrt;

@@ -1,13 +1,23 @@
-//! PJRT execution of the AOT artifacts (adapted from
-//! /opt/xla-example/load_hlo): HLO text → `HloModuleProto` →
-//! `XlaComputation` → compiled executable, cached per entry.
+//! PJRT execution of the AOT artifacts.
+//!
+//! The real backend wraps the `xla` crate (HLO text → `HloModuleProto` →
+//! `XlaComputation` → compiled executable, cached per entry). That crate
+//! is not available in this offline workspace, so execution is stubbed:
+//! [`ArtifactEngine::open`] still loads and validates the manifest, and
+//! [`ArtifactEngine::run`] still validates arity and shapes against it,
+//! but actually executing an artifact returns a clear "backend
+//! unavailable" error. Integration tests gate on the presence of
+//! `artifacts/manifest.json`, so a tree without generated artifacts tests
+//! the native engines only — exactly the tier-1 configuration.
+//!
+//! Restoring the real backend is a matter of replacing [`execute_stub`]
+//! with the PJRT calls (see `python/compile/aot.py` for the producer side
+//! and the git history of this file for the original wrapper).
 
 use super::manifest::{Manifest, ManifestEntry};
 use crate::linalg::Mat;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use anyhow::{bail, Context, Result};
 use std::path::Path;
-use std::sync::Mutex;
 
 /// A tensor crossing the PJRT boundary: `Mat` for rank-2, flat vec for
 /// rank-1 (σ vectors).
@@ -49,60 +59,37 @@ impl From<Vec<f32>> for Tensor {
     }
 }
 
-/// Compiled-artifact engine: one PJRT CPU client plus lazily compiled
-/// executables for every manifest entry.
+/// Compiled-artifact engine: manifest plus (in the real backend) one PJRT
+/// CPU client and lazily compiled executables per manifest entry.
 pub struct ArtifactEngine {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    /// name → compiled executable (compiled on first use; `Mutex` because
-    /// the coordinator shares one engine across worker threads).
-    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
-
-// The xla wrapper types are raw pointers into the PJRT C API; the CPU
-// client is thread-safe for compile/execute (PJRT requirement), so expose
-// Send+Sync explicitly.
-unsafe impl Send for ArtifactEngine {}
-unsafe impl Sync for ArtifactEngine {}
 
 impl ArtifactEngine {
     /// Open `dir` (must contain `manifest.json`).
     pub fn open(dir: &Path) -> Result<ArtifactEngine> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(ArtifactEngine { client, manifest, compiled: Mutex::new(HashMap::new()) })
+        Ok(ArtifactEngine { manifest })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Compile (or fetch the cached) executable for `name`.
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
-        let entry = self
-            .manifest
-            .find(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?;
-        let path = self.manifest.dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+    /// Whether an execution backend is compiled in. `false` in this
+    /// offline build: tests that need to *run* artifacts (not just
+    /// resolve them) should skip when this returns `false`.
+    pub fn backend_available(&self) -> bool {
+        false
     }
 
-    /// Eagerly compile every manifest entry (startup warm-up).
+    /// Eagerly compile every manifest entry (startup warm-up). With the
+    /// stubbed backend this only checks the entries resolve.
     pub fn compile_all(&self) -> Result<usize> {
         for e in &self.manifest.entries {
-            self.executable(&e.name)?;
+            let path = self.manifest.dir.join(&e.file);
+            std::fs::metadata(&path)
+                .with_context(|| format!("artifact file {}", path.display()))?;
         }
         Ok(self.manifest.entries.len())
     }
@@ -113,8 +100,7 @@ impl ArtifactEngine {
         let entry = self
             .manifest
             .find(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?
-            .clone();
+            .with_context(|| format!("unknown artifact '{name}'"))?;
         if inputs.len() != entry.inputs.len() {
             bail!(
                 "artifact '{name}' wants {} inputs, got {}",
@@ -131,32 +117,7 @@ impl ArtifactEngine {
                 );
             }
         }
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let first = result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("empty result from {name}"))?;
-        let literal = first
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the tuple.
-        let parts = literal.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
-        if parts.len() != entry.outputs.len() {
-            bail!(
-                "artifact '{name}' returned {} outputs, manifest says {}",
-                parts.len(),
-                entry.outputs.len()
-            );
-        }
-        parts
-            .into_iter()
-            .zip(&entry.outputs)
-            .map(|(lit, shape)| from_literal(&lit, shape))
-            .collect()
+        execute_stub(name)
     }
 
     /// Convenience: run and expect exactly one rank-2 output.
@@ -174,32 +135,13 @@ impl ArtifactEngine {
     }
 }
 
-fn to_literal(t: &Tensor) -> Result<xla::Literal> {
-    match t {
-        Tensor::M(m) => xla::Literal::vec1(m.data())
-            .reshape(&[m.rows() as i64, m.cols() as i64])
-            .map_err(|e| anyhow!("reshape literal: {e:?}")),
-        Tensor::V(v) => Ok(xla::Literal::vec1(v)),
-    }
-}
-
-fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
-    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
-    match shape.len() {
-        1 => {
-            if data.len() != shape[0] {
-                bail!("rank-1 output length {} != {}", data.len(), shape[0]);
-            }
-            Ok(Tensor::V(data))
-        }
-        2 => {
-            if data.len() != shape[0] * shape[1] {
-                bail!("rank-2 output length {} != {:?}", data.len(), shape);
-            }
-            Ok(Tensor::M(Mat::from_vec(shape[0], shape[1], data)))
-        }
-        r => bail!("unsupported output rank {r}"),
-    }
+/// The stub's execution path: always an error explaining what is missing.
+fn execute_stub(name: &str) -> Result<Vec<Tensor>> {
+    bail!(
+        "PJRT backend unavailable: this build has no `xla` crate (offline \
+         workspace); cannot execute artifact '{name}' — use the native \
+         FastH engine instead"
+    )
 }
 
 #[cfg(test)]
@@ -207,7 +149,8 @@ mod tests {
     use super::*;
 
     // Full PJRT round-trips live in rust/tests/pjrt_integration.rs (they
-    // need `make artifacts` to have run). Here: pure conversion logic.
+    // need `make artifacts` to have run). Here: conversion and shape
+    // validation logic that does not require a backend.
 
     #[test]
     fn tensor_shapes() {
@@ -220,27 +163,66 @@ mod tests {
     }
 
     #[test]
-    fn literal_roundtrip_rank2() {
-        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
-        let lit = to_literal(&Tensor::M(m.clone())).unwrap();
-        let back = from_literal(&lit, &[2, 3]).unwrap().into_mat().unwrap();
-        assert_eq!(back, m);
+    fn tensor_from_impls() {
+        let t: Tensor = Mat::zeros(2, 2).into();
+        assert_eq!(t.shape(), vec![2, 2]);
+        let v: Tensor = vec![1.0f32, 2.0].into();
+        assert_eq!(v.shape(), vec![2]);
+        assert!(v.into_mat().is_err());
     }
 
     #[test]
-    fn literal_roundtrip_rank1() {
-        let v = vec![1.0f32, -2.0, 3.5];
-        let lit = to_literal(&Tensor::V(v.clone())).unwrap();
-        match from_literal(&lit, &[3]).unwrap() {
-            Tensor::V(back) => assert_eq!(back, v),
-            _ => panic!("wrong rank"),
-        }
+    fn stubbed_execution_reports_missing_backend() {
+        let err = execute_stub("svd_apply_64").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+        assert!(msg.contains("svd_apply_64"));
     }
 
     #[test]
-    fn shape_mismatch_detected() {
-        let lit = to_literal(&Tensor::V(vec![0.0; 4])).unwrap();
-        assert!(from_literal(&lit, &[5]).is_err());
-        assert!(from_literal(&lit, &[2, 3]).is_err());
+    fn open_missing_dir_is_error() {
+        let dir = std::env::temp_dir().join("fasth_pjrt_no_such_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ArtifactEngine::open(&dir).is_err());
+    }
+
+    #[test]
+    fn run_validates_against_manifest() {
+        // Reuse the manifest fixture format from runtime::manifest tests.
+        let dir = std::env::temp_dir()
+            .join(format!("fasth_pjrt_stub_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("orthogonal_apply_8.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 4, "entries": [
+                {"name": "orthogonal_apply_8", "file": "orthogonal_apply_8.hlo.txt",
+                 "d": 8, "m": 4, "k": 4,
+                 "inputs": [[8,8],[8,4]],
+                 "outputs": [[8,4]]}
+            ]}"#,
+        )
+        .unwrap();
+        let engine = ArtifactEngine::open(&dir).unwrap();
+        assert_eq!(engine.compile_all().unwrap(), 1);
+        assert!(engine.entry("orthogonal_apply_8").is_some());
+
+        // Wrong arity and wrong shape are caught before the backend.
+        let bad_arity = engine.run("orthogonal_apply_8", &[Tensor::M(Mat::zeros(8, 8))]);
+        assert!(format!("{:#}", bad_arity.unwrap_err()).contains("wants 2 inputs"));
+        let bad_shape = engine.run(
+            "orthogonal_apply_8",
+            &[Tensor::M(Mat::zeros(8, 8)), Tensor::M(Mat::zeros(9, 4))],
+        );
+        assert!(format!("{:#}", bad_shape.unwrap_err()).contains("shape"));
+
+        // Correct inputs reach the stub and report the missing backend.
+        let stubbed = engine.run(
+            "orthogonal_apply_8",
+            &[Tensor::M(Mat::zeros(8, 8)), Tensor::M(Mat::zeros(8, 4))],
+        );
+        assert!(format!("{:#}", stubbed.unwrap_err()).contains("backend unavailable"));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -35,7 +35,8 @@ impl RectSvdParam {
     /// coordinates by σ and zero-pads/truncates to n rows.
     pub fn apply(&self, x: &Mat, k: usize) -> Mat {
         assert_eq!(x.rows(), self.cols, "input dimension mismatch");
-        let x1 = fasth::fasth_apply_transpose(&self.v, x, k.min(self.cols.max(1))); // m×b
+        // `Vᵀ·X` via the cached reversed sequence: (H₁…H_n)ᵀ = H_n…H₁.
+        let x1 = fasth::fasth_apply(&self.v_rev, x, k.min(self.cols.max(1))); // m×b
         let x2 = self.sigma_apply(&x1); // n×b
         fasth::fasth_apply(&self.u, &x2, k.min(self.rows.max(1))) // n×b
     }

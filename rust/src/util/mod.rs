@@ -1,9 +1,9 @@
 //! From-scratch utility substrates.
 //!
-//! The build environment is fully offline with only the `xla` crate
-//! available, so everything a typical project would pull from crates.io —
-//! RNG, data-parallel loops, JSON, a benchmark harness, property testing —
-//! is implemented here from scratch.
+//! The build environment is fully offline (no crates.io; only a vendored
+//! `anyhow` stand-in), so everything a typical project would pull from
+//! crates.io — RNG, data-parallel loops, JSON, a benchmark harness,
+//! property testing — is implemented here from scratch.
 
 pub mod json;
 pub mod parallel;

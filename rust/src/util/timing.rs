@@ -202,7 +202,8 @@ mod tests {
 
     #[test]
     fn budget_caps_reps() {
-        let s = time_reps_budget(100, 0.0005, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        let sleep = || std::thread::sleep(std::time::Duration::from_millis(1));
+        let s = time_reps_budget(100, 0.0005, sleep);
         assert!(s.reps < 100, "reps={}", s.reps);
         assert!(s.reps >= 3);
     }

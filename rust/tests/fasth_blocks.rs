@@ -1,0 +1,97 @@
+//! Edge-case coverage beneath `engines_equivalence.rs`: the FastH block
+//! partition (ragged tails, `k = 1`, `k = d`, `k > n`) observed through
+//! the public [`build_blocks`] API, plus an [`Engine`] facade spot-check
+//! (`name` strings, and `step` agreeing with `apply` and with the
+//! sequential reference on outputs and gradients).
+
+use fasth::householder::fasth::build_blocks;
+use fasth::householder::{Engine, HouseholderVectors};
+use fasth::linalg::Mat;
+use fasth::util::prop::assert_close;
+use fasth::util::Rng;
+
+fn widths(d: usize, n: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let hv = HouseholderVectors::random(d, n, &mut rng);
+    build_blocks(&hv, k).iter().map(|b| b.width()).collect()
+}
+
+#[test]
+fn partition_with_ragged_tail() {
+    // d = 10 reflections, k = 4: blocks of 4, 4, and a ragged tail of 2.
+    assert_eq!(widths(10, 10, 4, 1), vec![4, 4, 2]);
+    // d = 192, k = 14 (14 ∤ 192): 13 full blocks + tail of 10.
+    let w = widths(192, 192, 14, 2);
+    assert_eq!(w.len(), 14);
+    assert!(w[..13].iter().all(|&x| x == 14));
+    assert_eq!(w[13], 192 - 13 * 14);
+    assert_eq!(w.iter().sum::<usize>(), 192);
+}
+
+#[test]
+fn partition_k_equals_one() {
+    // k = 1 degenerates to one reflection per block.
+    let w = widths(9, 9, 1, 3);
+    assert_eq!(w, vec![1; 9]);
+}
+
+#[test]
+fn partition_k_equals_d() {
+    // k = d is a single full-width block (Algorithm 1 with one P).
+    assert_eq!(widths(12, 12, 12, 4), vec![12]);
+}
+
+#[test]
+fn partition_k_larger_than_n() {
+    // Oversized k clamps to the number of reflections.
+    assert_eq!(widths(10, 4, 64, 5), vec![4]);
+}
+
+#[test]
+fn partition_covers_every_reflection_exactly_once() {
+    for (n, k) in [(1usize, 1usize), (1, 7), (5, 2), (16, 4), (17, 4), (33, 8)] {
+        let w = widths(40, n, k, 0xC0FE ^ (n as u64) ^ ((k as u64) << 8));
+        assert_eq!(w.iter().sum::<usize>(), n, "n={n} k={k}");
+        assert!(w.iter().all(|&x| (1..=k).contains(&x)), "n={n} k={k} widths {w:?}");
+        assert!(w[..w.len() - 1].iter().all(|&x| x == k), "only the tail may be ragged");
+    }
+}
+
+#[test]
+fn engine_names_are_stable() {
+    assert_eq!(Engine::Sequential.name(), "sequential");
+    assert_eq!(Engine::Parallel.name(), "parallel");
+    assert_eq!(Engine::FastH { k: 8 }.name(), "fasth(k=8)");
+    assert_eq!(Engine::FastH { k: 1 }.name(), "fasth(k=1)");
+}
+
+#[test]
+fn engine_step_agrees_with_apply_and_sequential() {
+    let mut rng = Rng::new(0xB10C);
+    let (d, m) = (24, 5);
+    let hv = HouseholderVectors::random_full(d, &mut rng);
+    let x = Mat::randn(d, m, &mut rng);
+    let g = Mat::randn(d, m, &mut rng);
+
+    let (a_ref, dx_ref, dv_ref) = Engine::Sequential.step(&hv, &x, &g);
+    for engine in [
+        Engine::Sequential,
+        Engine::Parallel,
+        Engine::FastH { k: 1 },
+        Engine::FastH { k: 5 }, // ragged: 5 ∤ 24
+        Engine::FastH { k: 24 },
+    ] {
+        // step's forward output must equal the engine's own apply…
+        let (a, dx, dv) = engine.step(&hv, &x, &g);
+        let applied = engine.apply(&hv, &x);
+        assert_close(a.data(), applied.data(), 1e-4, 1e-4)
+            .unwrap_or_else(|e| panic!("{} step-vs-apply: {e}", engine.name()));
+        // …and everything must match the sequential reference.
+        assert_close(a.data(), a_ref.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("{} fwd: {e}", engine.name()));
+        assert_close(dx.data(), dx_ref.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("{} dx: {e}", engine.name()));
+        assert_close(dv.data(), dv_ref.data(), 3e-3, 3e-3)
+            .unwrap_or_else(|e| panic!("{} dv: {e}", engine.name()));
+    }
+}

@@ -20,7 +20,12 @@ fn engine() -> Option<ArtifactEngine> {
         eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
         return None;
     }
-    Some(ArtifactEngine::open(dir).expect("open artifacts"))
+    let engine = ArtifactEngine::open(dir).expect("open artifacts");
+    if !engine.backend_available() {
+        eprintln!("SKIP: PJRT execution backend not compiled into this build");
+        return None;
+    }
+    Some(engine)
 }
 
 /// Build a param whose σ is interesting and matches artifact batch m.
