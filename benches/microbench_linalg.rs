@@ -27,6 +27,31 @@ fn main() {
         report.add_row(format!("gemm_{n}"), vec![("nn".into(), s)]);
     }
 
+    // TN/NT square products — since PR 2 these route through the packed
+    // microkernel (no materialized transpose), so they should track NN.
+    for &n in &[512usize, 1024] {
+        let a = Mat::randn(n, n, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+        let s_tn = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            gemm::matmul_tn(&a, &b)
+        });
+        let s_nt = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            gemm::matmul_nt(&a, &b)
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        println!(
+            "gemm-tn {n:>5}     {:>14}  {:6.1} GFLOP/s",
+            s_tn.display(),
+            flops / s_tn.mean / 1e9
+        );
+        println!(
+            "gemm-nt {n:>5}     {:>14}  {:6.1} GFLOP/s",
+            s_nt.display(),
+            flops / s_nt.mean / 1e9
+        );
+        report.add_row(format!("gemm_t_{n}"), vec![("tn".into(), s_tn), ("nt".into(), s_nt)]);
+    }
+
     for &(d, m) in &[(512usize, 32usize), (1024, 32), (2048, 32)] {
         let w = Mat::randn(d, m, &mut rng);
         let y = Mat::randn(d, m, &mut rng);

@@ -39,22 +39,13 @@ fn main() {
         build_flops / t_build / 1e9
     );
 
-    // Phase 2: forward block chain (sequential GEMMs).
+    // Phase 2: forward block chain (sequential GEMMs, hoisted workspace).
     let blocks = fh::build_blocks(&hv, k);
     let t_fwd = time_it(reps, || {
         let mut a = x.clone();
-        let mut t = Mat::zeros(k, m);
-        let mut scratch = Mat::zeros(0, 0);
+        let mut t = Mat::zeros(0, 0);
         for b in blocks.iter().rev() {
-            let mut tb = if b.width() == k {
-                std::mem::replace(&mut t, Mat::zeros(0, 0))
-            } else {
-                Mat::zeros(b.width(), m)
-            };
-            b.apply_inplace(&mut a, &mut tb, &mut scratch);
-            if b.width() == k {
-                t = tb;
-            }
+            b.apply_inplace(&mut a, &mut t);
         }
         a
     });
@@ -68,18 +59,9 @@ fn main() {
     // Phase 3: backward step 1 (transpose chain).
     let t_bwd1 = time_it(reps, || {
         let mut gg = g.clone();
-        let mut t = Mat::zeros(k, m);
-        let mut scratch = Mat::zeros(0, 0);
+        let mut t = Mat::zeros(0, 0);
         for b in blocks.iter() {
-            let mut tb = if b.width() == k {
-                std::mem::replace(&mut t, Mat::zeros(0, 0))
-            } else {
-                Mat::zeros(b.width(), m)
-            };
-            b.apply_transpose_inplace(&mut gg, &mut tb, &mut scratch);
-            if b.width() == k {
-                t = tb;
-            }
+            b.apply_transpose_inplace(&mut gg, &mut t);
         }
         gg
     });
@@ -103,9 +85,6 @@ fn main() {
 
     // Reference single big GEMM at the same total FLOP count.
     let big = Mat::randn(d, d, &mut rng);
-    let t_gemm = time_it(reps, || fh::build_blocks(&hv, k).len().min(1) as f32)
-        .max(1e-12); // warm no-op
-    let _ = t_gemm;
     let t_ref = time_it(3, || crate_matmul(&big, &x));
     println!(
         "reference U·X as one d×d GEMM: {:.3} ms ({:.1} GFLOP/s)",

@@ -26,10 +26,14 @@ fn time<T>(cfg: BudgetCfg, f: impl FnMut() -> T) -> Stats {
     time_reps_budget(cfg.max_reps, cfg.per_cell_secs, f)
 }
 
-/// Heuristic √d block size used by the harness (a measured `tune_k` run is
-/// available via `repro tune-k`).
+/// Block size used by the harness: warm-started from the persistent
+/// tuned-k store (`bench_out/tuned_k.json`, populated by `repro tune-k`),
+/// falling back to the √d heuristic when no measurement exists.
 pub fn default_k(d: usize) -> usize {
-    tune::KCache::heuristic(d, BATCH_M).min(d)
+    match tune::KCache::global().lookup(d, BATCH_M) {
+        Some(t) => t.k.clamp(1, d.max(1)),
+        None => tune::KCache::heuristic(d, BATCH_M).min(d),
+    }
 }
 
 // ------------------------------------------------------------------ Figure 1
@@ -198,14 +202,14 @@ pub fn ablation_rnn(d: usize, rs: &[usize], cfg: BudgetCfg, seed: u64) -> Report
     let mut report = Report::new(format!("§3.3 recurrent — r applications (d = {d})"));
     for &r in rs {
         let fasth = time(cfg, || {
-            // Build blocks once, apply r times (the recurrent pattern).
+            // Build blocks once, apply r times (the recurrent pattern);
+            // one hoisted workspace serves every block of every step.
             let blocks = crate::householder::fasth::build_blocks(&hv, k);
             let mut h = h0.clone();
+            let mut t = Mat::zeros(0, 0);
             for _ in 0..r {
-                let mut wt = Mat::zeros(d, BATCH_M);
                 for b in blocks.iter().rev() {
-                    let mut t = Mat::zeros(b.width(), BATCH_M);
-                    b.apply_inplace(&mut h, &mut t, &mut wt);
+                    b.apply_inplace(&mut h, &mut t);
                 }
             }
             h

@@ -64,18 +64,19 @@ pub fn build_blocks(hv: &HouseholderVectors, k: usize) -> Vec<WyBlock> {
 /// Returns `(A, cache)` with `A = H₁…H_n·X`.
 pub fn fasth_forward(hv: &HouseholderVectors, x: &Mat, k: usize) -> (Mat, FasthCache) {
     assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
-    let (d, m) = (x.rows(), x.cols());
     let blocks = build_blocks(hv, k);
     let nb = blocks.len();
 
-    // Step 2: sequential block applications, saving every A_i.
+    // Step 2: sequential block applications, saving every A_i. The k×m
+    // workspace is hoisted out of the loop (the callee reshapes it per
+    // block), so the steady-state loop does not touch the heap beyond the
+    // activation cache itself.
     let mut acts: Vec<Mat> = Vec::with_capacity(nb + 1);
     acts.push(x.clone()); // temporarily in reverse: acts_rev[0] = A_{nb+1}
     let mut a = x.clone();
-    let mut wt = Mat::zeros(d, m);
+    let mut t = Mat::zeros(0, 0);
     for i in (0..nb).rev() {
-        let mut t = Mat::zeros(blocks[i].width(), m);
-        blocks[i].apply_inplace(&mut a, &mut t, &mut wt);
+        blocks[i].apply_inplace(&mut a, &mut t);
         acts.push(a.clone());
     }
     acts.reverse(); // now acts[0] = A_1 … acts[nb] = X.
@@ -85,13 +86,11 @@ pub fn fasth_forward(hv: &HouseholderVectors, x: &Mat, k: usize) -> (Mat, FasthC
 /// Forward without retaining the cache (inference-only application).
 pub fn fasth_apply(hv: &HouseholderVectors, x: &Mat, k: usize) -> Mat {
     assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
-    let (d, m) = (x.rows(), x.cols());
     let blocks = build_blocks(hv, k);
     let mut a = x.clone();
-    let mut wt = Mat::zeros(d, m);
+    let mut t = Mat::zeros(0, 0);
     for b in blocks.iter().rev() {
-        let mut t = Mat::zeros(b.width(), m);
-        b.apply_inplace(&mut a, &mut t, &mut wt);
+        b.apply_inplace(&mut a, &mut t);
     }
     a
 }
@@ -100,13 +99,11 @@ pub fn fasth_apply(hv: &HouseholderVectors, x: &Mat, k: usize) -> Mat {
 /// the opposite order with `Pᵀ = I − 2YWᵀ`. Same `O(d/k + k)` depth.
 pub fn fasth_apply_transpose(hv: &HouseholderVectors, x: &Mat, k: usize) -> Mat {
     assert_eq!(hv.dim(), x.rows(), "dimension mismatch");
-    let (d, m) = (x.rows(), x.cols());
     let blocks = build_blocks(hv, k);
     let mut a = x.clone();
-    let mut yt = Mat::zeros(d, m);
+    let mut t = Mat::zeros(0, 0);
     for b in blocks.iter() {
-        let mut t = Mat::zeros(b.width(), m);
-        b.apply_transpose_inplace(&mut a, &mut t, &mut yt);
+        b.apply_transpose_inplace(&mut a, &mut t);
     }
     a
 }
@@ -117,18 +114,17 @@ pub fn fasth_backward(hv: &HouseholderVectors, cache: &FasthCache, g: &Mat) -> (
     let d = hv.dim();
     let n = hv.count();
     let nb = cache.blocks.len();
-    let m = g.cols();
     assert_eq!(g.rows(), d);
     assert_eq!(cache.acts.len(), nb + 1);
 
     // ---- Step 1 (sequential over blocks): grads[i] = ∂L/∂A_{i+1}.
+    // Workspace hoisted — no per-block heap traffic in the chain.
     let mut grads: Vec<Mat> = Vec::with_capacity(nb + 1);
     grads.push(g.clone());
     let mut g_cur = g.clone();
-    let mut yt = Mat::zeros(d, m);
+    let mut t = Mat::zeros(0, 0);
     for i in 0..nb {
-        let mut t = Mat::zeros(cache.blocks[i].width(), m);
-        cache.blocks[i].apply_transpose_inplace(&mut g_cur, &mut t, &mut yt);
+        cache.blocks[i].apply_transpose_inplace(&mut g_cur, &mut t);
         grads.push(g_cur.clone());
     }
     let dx = g_cur; // ∂L/∂X = ∂L/∂A_{nb+1}.

@@ -121,18 +121,17 @@ pub fn par_backward(hv: &HouseholderVectors, cache: &ParCache, g: &Mat) -> (Mat,
     // k. Walk the blocks explicitly instead.
     let d = hv.dim();
     let n = hv.count();
-    let m = g.cols();
     let nb = blocks.len();
     assert_eq!(cache.fasth_cache.acts.len(), nb + 1);
 
-    // Step 1: sequential transpose chain.
+    // Step 1: sequential transpose chain (workspace hoisted — the callee
+    // reshapes it per block, so ragged widths cost no allocations).
     let mut grads: Vec<Mat> = Vec::with_capacity(nb + 1);
     grads.push(g.clone());
     let mut g_cur = g.clone();
-    let mut yt = Mat::zeros(d, m);
+    let mut t = Mat::zeros(0, 0);
     for b in blocks.iter() {
-        let mut t = Mat::zeros(b.width(), m);
-        b.apply_transpose_inplace(&mut g_cur, &mut t, &mut yt);
+        b.apply_transpose_inplace(&mut g_cur, &mut t);
         grads.push(g_cur.clone());
     }
     let dx = g_cur;

@@ -9,10 +9,12 @@
 use super::vectors::HouseholderVectors;
 use super::Engine;
 use crate::linalg::Mat;
+use crate::util::json::Json;
 use crate::util::timing::time_reps_budget;
 use crate::util::Rng;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
 
 /// Result of a tuning run for one `(d, m)` pair.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -60,10 +62,18 @@ pub fn tune_k(d: usize, m: usize, c: usize, budget_secs: f64, rng: &mut Rng) -> 
     best
 }
 
+/// Default location of the persistent tuned-k store (same directory the
+/// bench CSVs land in; override with `FASTH_TUNE_CACHE`).
+pub const DEFAULT_CACHE_PATH: &str = "bench_out/tuned_k.json";
+
 /// Process-wide cache: "we never need to search for k more than one time"
-/// (§3.3). Keyed by (d, m).
+/// (§3.3). Keyed by (d, m). Optionally backed by a JSON file so the
+/// search survives the *process* too — the server and benches warm-start
+/// from earlier runs instead of re-measuring.
 pub struct KCache {
     map: Mutex<BTreeMap<(usize, usize), TunedK>>,
+    /// Backing JSON file; `None` = in-memory only.
+    path: Option<PathBuf>,
 }
 
 impl Default for KCache {
@@ -74,16 +84,70 @@ impl Default for KCache {
 
 impl KCache {
     pub fn new() -> KCache {
-        KCache { map: Mutex::new(BTreeMap::new()) }
+        KCache { map: Mutex::new(BTreeMap::new()), path: None }
     }
 
-    /// Fetch the tuned k, running the search on a miss.
+    /// File-backed cache: entries are loaded now (a missing or corrupt
+    /// file yields an empty cache) and the map is rewritten on update.
+    pub fn persistent(path: impl Into<PathBuf>) -> KCache {
+        let path = path.into();
+        let map = load_entries(&path).unwrap_or_default();
+        KCache { map: Mutex::new(map), path: Some(path) }
+    }
+
+    /// The shared process-wide cache, backed by [`DEFAULT_CACHE_PATH`]
+    /// (or `FASTH_TUNE_CACHE` when set).
+    pub fn global() -> &'static KCache {
+        static GLOBAL: OnceLock<KCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let path = std::env::var("FASTH_TUNE_CACHE")
+                .unwrap_or_else(|_| DEFAULT_CACHE_PATH.to_string());
+            KCache::persistent(path)
+        })
+    }
+
+    /// Backing file, if this cache persists.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Cache hit without triggering a search.
+    pub fn lookup(&self, d: usize, m: usize) -> Option<TunedK> {
+        self.map.lock().unwrap().get(&(d, m)).copied()
+    }
+
+    /// Record a tuning result (write-through to the backing file).
+    pub fn insert(&self, d: usize, m: usize, tuned: TunedK) {
+        self.map.lock().unwrap().insert((d, m), tuned);
+        if let Err(e) = self.save() {
+            eprintln!("warning: could not persist tuned-k cache: {e}");
+        }
+    }
+
+    /// Rewrite the backing file from the current map (no-op when
+    /// in-memory only). Written via temp-file + rename so a concurrent
+    /// reader (another server/bench process) never sees a truncated file.
+    pub fn save(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let doc = entries_json(&self.map.lock().unwrap());
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, doc.pretty())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Fetch the tuned k, running the search on a miss (and persisting
+    /// the result when file-backed).
     pub fn get_or_tune(&self, d: usize, m: usize, rng: &mut Rng) -> TunedK {
-        if let Some(hit) = self.map.lock().unwrap().get(&(d, m)) {
-            return *hit;
+        if let Some(hit) = self.lookup(d, m) {
+            return hit;
         }
         let tuned = tune_k(d, m, 2, 0.5, rng);
-        self.map.lock().unwrap().insert((d, m), tuned);
+        self.insert(d, m, tuned);
         tuned
     }
 
@@ -103,6 +167,40 @@ impl KCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// Parse `{"entries": [{"d", "m", "k", "step_secs"}, ...]}`; malformed
+/// entries are skipped, a malformed document yields `None`.
+fn load_entries(path: &Path) -> Option<BTreeMap<(usize, usize), TunedK>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let doc = Json::parse(&text).ok()?;
+    let mut map = BTreeMap::new();
+    for e in doc.get("entries").as_arr()? {
+        let d = e.get("d").as_usize().unwrap_or(0);
+        let m = e.get("m").as_usize().unwrap_or(0);
+        let k = e.get("k").as_usize().unwrap_or(0);
+        let step_secs = e.get("step_secs").as_f64().unwrap_or(f64::INFINITY);
+        if d == 0 || k == 0 || k > d {
+            continue; // skip malformed entries (a tampered k could panic us)
+        }
+        map.insert((d, m), TunedK { k, step_secs });
+    }
+    Some(map)
+}
+
+fn entries_json(map: &BTreeMap<(usize, usize), TunedK>) -> Json {
+    let entries = map
+        .iter()
+        .map(|(&(d, m), t)| {
+            Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("m", Json::num(m as f64)),
+                ("k", Json::num(t.k as f64)),
+                ("step_secs", Json::num(t.step_secs)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("entries", Json::arr(entries))])
 }
 
 #[cfg(test)]
@@ -135,6 +233,53 @@ mod tests {
         let b = cache.get_or_tune(48, 4, &mut rng);
         assert_eq!(a, b, "second call must be a cache hit with identical result");
         assert_eq!(cache.len(), 1);
+    }
+
+    fn temp_cache_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fasth_tuned_k_{}_{tag}.json", std::process::id()))
+    }
+
+    #[test]
+    fn persistent_cache_roundtrips() {
+        let path = temp_cache_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        {
+            let cache = KCache::persistent(&path);
+            assert!(cache.is_empty(), "fresh file must start empty");
+            cache.insert(128, 32, TunedK { k: 24, step_secs: 1.5e-3 });
+            cache.insert(64, 8, TunedK { k: 16, step_secs: 0.5e-3 });
+        }
+        let reloaded = KCache::persistent(&path);
+        assert_eq!(reloaded.len(), 2);
+        let hit = reloaded.lookup(128, 32).expect("persisted entry");
+        assert_eq!(hit.k, 24);
+        assert!((hit.step_secs - 1.5e-3).abs() < 1e-12);
+        assert_eq!(reloaded.lookup(64, 8).unwrap().k, 16);
+        assert_eq!(reloaded.lookup(256, 32), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_or_hostile_cache_files_are_ignored() {
+        let path = temp_cache_path("corrupt");
+        std::fs::write(&path, "not json at all {{{").unwrap();
+        assert!(KCache::persistent(&path).is_empty());
+        // k = 0 and k > d entries must be dropped, valid ones kept.
+        let doc = r#"{"entries":[{"d":32,"m":4,"k":0,"step_secs":1.0},
+                      {"d":32,"m":8,"k":64,"step_secs":1.0},
+                      {"d":32,"m":16,"k":8,"step_secs":1.0}]}"#;
+        std::fs::write(&path, doc).unwrap();
+        let cache = KCache::persistent(&path);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.lookup(32, 16).unwrap().k, 8);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn in_memory_cache_has_no_path() {
+        let cache = KCache::new();
+        assert!(cache.path().is_none());
+        cache.save().unwrap(); // no-op, must not error
     }
 
     #[test]

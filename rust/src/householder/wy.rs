@@ -104,16 +104,17 @@ impl WyBlock {
     /// Apply `P·X = X − 2·W·(Yᵀ·X)` — two contiguous GEMMs.
     pub fn apply(&self, x: &Mat) -> Mat {
         let mut out = x.clone();
-        let mut t = Mat::zeros(self.width(), x.cols());
-        let mut scratch = Mat::zeros(0, 0);
-        self.apply_inplace(&mut out, &mut t, &mut scratch);
+        let mut t = Mat::zeros(0, 0);
+        self.apply_inplace(&mut out, &mut t);
         out
     }
 
-    /// Apply in place, reusing caller-provided workspace `t` (k×m). The
-    /// second workspace argument is unused since the rank-k update fuses
-    /// into a `beta = 1` GEMM (kept for API stability of the hot loop).
-    pub fn apply_inplace(&self, x: &mut Mat, t: &mut Mat, _unused: &mut Mat) {
+    /// Apply in place, reusing caller-provided workspace `t`: the callee
+    /// reshapes it to k×m in place, so a single `t` hoisted outside a
+    /// block loop serves every block (including ragged tails) without a
+    /// heap allocation after the first iteration.
+    pub fn apply_inplace(&self, x: &mut Mat, t: &mut Mat) {
+        t.reshape_reuse(self.width(), x.cols());
         let g = Gemm::default();
         // T = Yᵀ·X as the contiguous NN product yt·X.
         g.gemm(1.0, &self.yt, Trans::No, x, Trans::No, 0.0, t);
@@ -124,14 +125,15 @@ impl WyBlock {
     /// Apply the transpose `Pᵀ·X = X − 2·Y·(Wᵀ·X)` (backward Step 1, Eq. 3).
     pub fn apply_transpose(&self, x: &Mat) -> Mat {
         let mut out = x.clone();
-        let mut t = Mat::zeros(self.width(), x.cols());
-        let mut scratch = Mat::zeros(0, 0);
-        self.apply_transpose_inplace(&mut out, &mut t, &mut scratch);
+        let mut t = Mat::zeros(0, 0);
+        self.apply_transpose_inplace(&mut out, &mut t);
         out
     }
 
-    /// In-place transpose application with caller workspace.
-    pub fn apply_transpose_inplace(&self, x: &mut Mat, t: &mut Mat, _unused: &mut Mat) {
+    /// In-place transpose application with caller workspace (same reuse
+    /// contract as [`Self::apply_inplace`]).
+    pub fn apply_transpose_inplace(&self, x: &mut Mat, t: &mut Mat) {
+        t.reshape_reuse(self.width(), x.cols());
         let g = Gemm::default();
         g.gemm(1.0, &self.wt, Trans::No, x, Trans::No, 0.0, t);
         g.gemm(-2.0, &self.y, Trans::No, t, Trans::No, 1.0, x);
@@ -247,14 +249,15 @@ mod tests {
         let x = Mat::randn(32, 5, &mut rng);
         let want = wy.apply(&x);
         let mut got = x.clone();
-        let mut t = Mat::zeros(6, 5);
-        let mut scratch = Mat::zeros(0, 0);
-        wy.apply_inplace(&mut got, &mut t, &mut scratch);
+        // Deliberately mis-shaped workspace: the callee reshapes in place.
+        let mut t = Mat::zeros(1, 1);
+        wy.apply_inplace(&mut got, &mut t);
         assert!(got.max_abs_diff(&want) < 1e-6);
+        assert_eq!((t.rows(), t.cols()), (6, 5));
 
         let want_t = wy.apply_transpose(&x);
         let mut got_t = x.clone();
-        wy.apply_transpose_inplace(&mut got_t, &mut t, &mut scratch);
+        wy.apply_transpose_inplace(&mut got_t, &mut t);
         assert!(got_t.max_abs_diff(&want_t) < 1e-6);
     }
 

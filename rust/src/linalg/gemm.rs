@@ -6,13 +6,40 @@
 //! into wall-clock wins on this testbed (it plays the role cuBLAS plays on
 //! the paper's RTX 2080 Ti).
 //!
-//! Layout is row-major. The NN kernel is an i-parallel, k-blocked
-//! "broadcast-axpy" kernel that autovectorizes on the contiguous j loop;
-//! TN/NT/TT are either handled by dedicated reduction/dot kernels (small
-//! outputs, FastH's case) or rewritten into NN via an explicit transpose.
+//! Layout is row-major. Two kernels cover the workload:
+//!
+//! * **Skinny NN** (`n ≤ 64`, FastH's mini-batch case): each C row is
+//!   accumulated in a stack buffer across the whole reduction, B streamed
+//!   from L2 — the per-k C load/store that dominated the naive kernel is
+//!   gone (§Perf iteration 5).
+//! * **Packed microkernel** (everything else, §Perf iteration 8): a
+//!   BLIS-style MR×NR register tile fed by *packed panels*. B is packed
+//!   once per `(nc, kc)` window into kk-major NR-wide panels and reused by
+//!   every row tile of every thread; each worker packs its A row slab into
+//!   kk-major MR-tall panels (contiguous loads for the inner kernel in
+//!   both operands, no strided traffic inside the FMA loop). The MR×NR
+//!   accumulator tile lives in registers for the entire kb sweep. Packing
+//!   buffers are thread-local and reused across calls, so steady-state
+//!   GEMMs allocate nothing.
+//!
+//! The packed driver reads either operand directly in transposed storage,
+//! so TN large outputs, NT large outputs, and TT no longer materialize
+//! `a.t()` / intermediate products — they pack straight from the stored
+//! layout (TN's packed-A reads are in fact *more* contiguous than NN's).
+//! Small TN outputs (FastH's `YᵀA`, m = n = mini-batch, K = d large) keep
+//! the dedicated parallel K-reduction; small NT keeps the row-dot kernel.
+//!
+//! §Perf iteration 8 register math: MR = NR = 8 gives an 8×8 f32 tile —
+//! 16 SSE2 xmm accumulators (the portable baseline target), leaving the
+//! broadcast register and B loads to the renamer; with AVX2 enabled the
+//! same tile is 8 ymm accumulators + 1 B vector, comfortably in register.
+//! 6×16 was rejected: 24 xmm accumulators spill ~13 slots per kk on the
+//! baseline target.
 
 use super::mat::Mat;
 use crate::util::parallel::{num_threads, parallel_map};
+use std::cell::Cell;
+use std::ops::Range;
 
 /// Transpose flag for [`Gemm::gemm`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,13 +50,26 @@ pub enum Trans {
     Yes,
 }
 
+/// Microkernel tile height (C rows per register tile).
+const MR: usize = 8;
+/// Microkernel tile width (C columns per register tile).
+const NR: usize = 8;
+/// Widest output the skinny stack-accumulated NN path handles.
+const SKINNY_N: usize = 64;
+/// Output area above which TN/NT route to the packed kernel instead of
+/// their dedicated small-output kernels.
+const SMALL_OUT: usize = 128 * 128;
+
 /// GEMM configuration (kept as a struct so the perf pass can tune block
 /// sizes in one place; defaults chosen for ~1 MiB L2 per core).
 #[derive(Clone, Copy, Debug)]
 pub struct Gemm {
-    /// Panel height of the K blocking for the NN kernel.
+    /// Panel depth of the K blocking (packed panels are `kc` deep).
     pub kc: usize,
-    /// Row-chunk handed to each worker thread.
+    /// Column window of the packed-B panel (`kc × nc` floats stay
+    /// L2-resident: 256 × 512 × 4 B = 512 KiB).
+    pub nc: usize,
+    /// Row-chunk handed to each worker thread (rounded up to MR).
     pub mr_chunk: usize,
     /// Below this many total FLOPs, run single-threaded (thread spawn
     /// costs ~10µs; don't pay it for tiny multiplies).
@@ -38,7 +78,7 @@ pub struct Gemm {
 
 impl Default for Gemm {
     fn default() -> Self {
-        Gemm { kc: 256, mr_chunk: 16, par_flop_threshold: 1 << 20 }
+        Gemm { kc: 256, nc: 512, mr_chunk: 16, par_flop_threshold: 1 << 20 }
     }
 }
 
@@ -82,64 +122,43 @@ impl Gemm {
             (Trans::No, Trans::No) => self.nn(alpha, a, b, beta, c),
             (Trans::Yes, Trans::No) => self.tn(alpha, a, b, beta, c),
             (Trans::No, Trans::Yes) => self.nt(alpha, a, b, beta, c),
-            (Trans::Yes, Trans::Yes) => {
-                // C = alpha·AᵀBᵀ + beta·C = alpha·(B·A)ᵀ + beta·C.
-                let ba = matmul(b, a);
-                let bat = ba.t();
-                for (dst, &src) in c.data_mut().iter_mut().zip(bat.data()) {
-                    *dst = alpha * src + beta * *dst;
-                }
-            }
+            // Both packed operand readers handle transposed storage, so TT
+            // goes straight through the packed kernel — no B·A temporary.
+            (Trans::Yes, Trans::Yes) => self.packed(alpha, a, true, b, true, beta, c),
         }
     }
 
-    /// Row-parallel, k-blocked NN kernel. For skinny outputs (n ≤ 64 —
-    /// FastH's mini-batch case) a register-blocked path accumulates each
-    /// C row in a stack buffer across the whole reduction, eliminating
-    /// the per-k load/store of C that dominated the naive kernel
-    /// (§Perf iteration 5).
+    /// NN dispatch: skinny outputs (n ≤ 64 — FastH's mini-batch case) take
+    /// the stack-accumulated row kernel; everything else takes the packed
+    /// microkernel.
     fn nn(&self, alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        if n > SKINNY_N {
+            return self.packed(alpha, a, false, b, false, beta, c);
+        }
         scale_in_place(c, beta);
+        if k == 0 || n == 0 {
+            return;
+        }
         let flops = 2 * m * k * n;
-        let kc = self.kc;
-        let body = |rows: std::ops::Range<usize>, c_rows: &mut [f32]| {
-            if n <= 64 {
-                // Register/stack-accumulated path: C row lives in `acc`
-                // for the entire k sweep; B is streamed (k×n ≤ 256 KiB,
-                // L2-resident and shared across all rows of the chunk).
-                let mut acc = [0.0f32; 64];
-                for i in rows.clone() {
-                    let c_row = &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
-                    acc[..n].copy_from_slice(c_row);
-                    let a_row = a.row(i);
-                    for (kk, &aik) in a_row.iter().enumerate() {
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let s = alpha * aik;
-                        let b_row = b.row(kk);
-                        axpy(&mut acc[..n], s, b_row);
+        let body = |rows: Range<usize>, c_rows: &mut [f32]| {
+            // Register/stack-accumulated path: C row lives in `acc` for
+            // the entire k sweep; B is streamed (k×n ≤ 256 KiB,
+            // L2-resident and shared across all rows of the chunk).
+            let mut acc = [0.0f32; SKINNY_N];
+            for i in rows.clone() {
+                let c_row = &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
+                acc[..n].copy_from_slice(c_row);
+                let a_row = a.row(i);
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
                     }
-                    c_row.copy_from_slice(&acc[..n]);
+                    let s = alpha * aik;
+                    let b_row = b.row(kk);
+                    axpy(&mut acc[..n], s, b_row);
                 }
-                return;
-            }
-            // General path: k-blocked so the active B panel stays in L1.
-            for k0 in (0..k).step_by(kc) {
-                let k1 = (k0 + kc).min(k);
-                for i in rows.clone() {
-                    let a_row = &a.row(i)[k0..k1];
-                    let c_row = &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
-                    for (kk, &aik) in a_row.iter().enumerate() {
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let s = alpha * aik;
-                        let b_row = b.row(k0 + kk);
-                        axpy(c_row, s, b_row);
-                    }
-                }
+                c_row.copy_from_slice(&acc[..n]);
             }
         };
         if flops < self.par_flop_threshold || num_threads() == 1 || m == 1 {
@@ -165,52 +184,56 @@ impl Gemm {
     /// M = N = m (mini-batch) is tiny and K = d is large.
     fn tn(&self, alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
         let (k, m, n) = (a.rows(), a.cols(), b.cols());
-        if m * n <= 128 * 128 {
-            // Parallel reduction over K with per-thread M×N accumulators.
-            let nt = if 2 * k * m * n < self.par_flop_threshold { 1 } else { num_threads() };
-            let chunk = k.div_ceil(nt).max(1);
-            let partials: Vec<Vec<f32>> = parallel_map(k.div_ceil(chunk), |ci| {
-                let lo = ci * chunk;
-                let hi = (lo + chunk).min(k);
-                let mut acc = vec![0.0f32; m * n];
-                for kk in lo..hi {
-                    let a_row = a.row(kk);
-                    let b_row = b.row(kk);
-                    for i in 0..m {
-                        let aki = a_row[i];
-                        if aki == 0.0 {
-                            continue;
-                        }
-                        axpy(&mut acc[i * n..(i + 1) * n], aki, b_row);
+        if m * n > SMALL_OUT {
+            // Large output: pack A straight from its K×M storage (each
+            // packed panel is a contiguous row slice of A — no `a.t()`).
+            return self.packed(alpha, a, true, b, false, beta, c);
+        }
+        // Parallel reduction over K with per-thread M×N accumulators.
+        let nt = if 2 * k * m * n < self.par_flop_threshold { 1 } else { num_threads() };
+        let chunk = k.div_ceil(nt).max(1);
+        let partials: Vec<Vec<f32>> = parallel_map(k.div_ceil(chunk), |ci| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(k);
+            let mut acc = vec![0.0f32; m * n];
+            for kk in lo..hi {
+                let a_row = a.row(kk);
+                let b_row = b.row(kk);
+                for i in 0..m {
+                    let aki = a_row[i];
+                    if aki == 0.0 {
+                        continue;
                     }
+                    axpy(&mut acc[i * n..(i + 1) * n], aki, b_row);
                 }
-                acc
-            });
-            let cd = c.data_mut();
-            for (idx, dst) in cd.iter_mut().enumerate() {
-                let mut sum = 0.0f32;
-                for p in &partials {
-                    sum += p[idx];
-                }
-                *dst = alpha * sum + beta * *dst;
             }
-        } else {
-            // Large output: explicit transpose then the optimized NN path.
-            let at = a.t();
-            self.nn(alpha, &at, b, beta, c);
+            acc
+        });
+        let cd = c.data_mut();
+        for (idx, dst) in cd.iter_mut().enumerate() {
+            let mut sum = 0.0f32;
+            for p in &partials {
+                sum += p[idx];
+            }
+            *dst = alpha * sum + beta * *dst;
         }
     }
 
-    /// `C = alpha·ABᵀ + beta·C` where A is M×K, B is N×K: pure row-dot
-    /// kernel, both operands contiguous.
+    /// `C = alpha·ABᵀ + beta·C` where A is M×K, B is N×K. Small outputs
+    /// take the row-dot kernel (both operands contiguous); large outputs
+    /// route through the packed kernel, which packs B straight from its
+    /// N×K storage.
     fn nt(&self, alpha: f32, a: &Mat, b: &Mat, beta: f32, c: &mut Mat) {
         let (m, k, n) = (a.rows(), a.cols(), b.rows());
+        if m * n > SMALL_OUT {
+            return self.packed(alpha, a, false, b, true, beta, c);
+        }
         let flops = 2 * m * k * n;
         scale_in_place(c, beta);
         let chunk = if flops < self.par_flop_threshold { m } else { self.mr_chunk };
         let n_cols = n;
         let mut splits = Vec::new();
-        let n_chunks = m.div_ceil(chunk);
+        let n_chunks = m.div_ceil(chunk.max(1));
         for ci in 0..n_chunks {
             splits.push(((ci + 1) * chunk).min(m) * n_cols);
         }
@@ -225,6 +248,189 @@ impl Gemm {
                 }
             }
         });
+    }
+
+    /// The packed-panel microkernel driver: `C = alpha·op(A)·op(B) + beta·C`
+    /// with `op` selected per operand by `ta`/`tb` (true reads the operand
+    /// in transposed storage — no materialized transpose anywhere).
+    ///
+    /// Loop nest (BLIS order, jc → pc → ic):
+    /// ```text
+    /// for j0 in n step nc:            // B window, L2 budget
+    ///   for k0 in k step kc:          // panel depth
+    ///     pack B[k0±kb, j0±nb]        // once, shared by all row slabs
+    ///     parallel for row slab:      // one slab per worker
+    ///       pack A[slab, k0±kb]       // thread-local buffer
+    ///       for each MR row panel × NR col panel: microkernel
+    /// ```
+    fn packed(&self, alpha: f32, a: &Mat, ta: bool, b: &Mat, tb: bool, beta: f32, c: &mut Mat) {
+        let (m, n) = (c.rows(), c.cols());
+        let k = if ta { a.rows() } else { a.cols() };
+        scale_in_place(c, beta);
+        if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+            return;
+        }
+        let flops = 2 * m * k * n;
+        let serial = flops < self.par_flop_threshold || num_threads() == 1 || m <= MR;
+        let kc = self.kc.max(1);
+        let nc = self.nc.max(NR);
+        let cn = n; // C row stride
+        let mut bbuf = PACK_B_BUF.take();
+        for j0 in (0..n).step_by(nc) {
+            let nb = nc.min(n - j0);
+            for k0 in (0..k).step_by(kc) {
+                let kb = kc.min(k - k0);
+                pack_b(b, tb, j0, nb, k0, kb, &mut bbuf);
+                let bpan = &bbuf[..nb.div_ceil(NR) * NR * kb];
+                let body = |rows: Range<usize>, c_rows: &mut [f32]| {
+                    let mut abuf = PACK_A_BUF.take();
+                    pack_a(a, ta, rows.clone(), k0, kb, &mut abuf);
+                    let panels_a = rows.len().div_ceil(MR);
+                    for p in 0..panels_a {
+                        let i = rows.start + p * MR;
+                        let i_lim = MR.min(rows.end - i);
+                        let ap = &abuf[p * MR * kb..(p + 1) * MR * kb];
+                        for (q, bp) in bpan.chunks_exact(NR * kb).enumerate() {
+                            let j = j0 + q * NR;
+                            let j_lim = NR.min(j0 + nb - j);
+                            let mut acc = [[0.0f32; NR]; MR];
+                            microkernel(ap, bp, &mut acc);
+                            // Accumulate the valid part of the register
+                            // tile (padding rows/cols are discarded).
+                            for (r, arow) in acc.iter().enumerate().take(i_lim) {
+                                let off = (i - rows.start + r) * cn + j;
+                                let c_row = &mut c_rows[off..off + j_lim];
+                                for (dst, &v) in c_row.iter_mut().zip(arow) {
+                                    *dst += alpha * v;
+                                }
+                            }
+                        }
+                    }
+                    PACK_A_BUF.set(abuf);
+                };
+                if serial {
+                    body(0..m, c.data_mut());
+                } else {
+                    // Row slabs in MR multiples, one in flight per worker.
+                    let target = self.mr_chunk.max(m.div_ceil(num_threads() * 4));
+                    let chunk = target.div_ceil(MR) * MR;
+                    let n_chunks = m.div_ceil(chunk);
+                    let mut splits = Vec::with_capacity(n_chunks);
+                    for ci in 0..n_chunks {
+                        splits.push(((ci + 1) * chunk).min(m) * cn);
+                    }
+                    crate::util::parallel::parallel_chunks_mut(c.data_mut(), &splits, |ci, slab| {
+                        let lo = ci * chunk;
+                        let hi = (lo + chunk).min(m);
+                        body(lo..hi, slab);
+                    });
+                }
+            }
+        }
+        PACK_B_BUF.set(bbuf);
+    }
+}
+
+// Thread-local packing scratch, reused across GEMM calls (taken/restored
+// around each use so reentrant calls — e.g. a GEMM issued from inside a
+// pool worker — simply fall back to a fresh allocation).
+thread_local! {
+    static PACK_A_BUF: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+    static PACK_B_BUF: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+}
+
+/// MR×NR register-tiled inner kernel. `ap` is a kk-major MR-tall packed
+/// panel (`kb × MR`), `bp` a kk-major NR-wide packed panel (`kb × NR`);
+/// the `acc` tile stays in registers for the whole sweep. Iterator-only
+/// indexing keeps the loop bounds-check free so LLVM vectorizes the NR
+/// axis into packed FMAs.
+#[inline(always)]
+fn microkernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for (row, &ar) in acc.iter_mut().zip(a) {
+            for (accv, &bv) in row.iter_mut().zip(b) {
+                *accv += ar * bv;
+            }
+        }
+    }
+}
+
+/// Pack logical-A rows `rows` × depth `[k0, k0+kb)` into kk-major MR-tall
+/// panels (`buf[p][kk][r]`), zero-padding the ragged last panel.
+/// `trans == false`: `src` is M×K row-major. `trans == true`: `src` is
+/// K×M storage (logical A = srcᵀ), so each kk reads a contiguous row
+/// slice of `src` — the TN case packs with unit-stride loads.
+fn pack_a(src: &Mat, trans: bool, rows: Range<usize>, k0: usize, kb: usize, buf: &mut Vec<f32>) {
+    let panels = rows.len().div_ceil(MR);
+    let need = panels * MR * kb;
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+    for p in 0..panels {
+        let i_base = rows.start + p * MR;
+        let i_lim = MR.min(rows.end - i_base);
+        let panel = &mut buf[p * MR * kb..(p + 1) * MR * kb];
+        if trans {
+            for kk in 0..kb {
+                let srow = &src.row(k0 + kk)[i_base..i_base + i_lim];
+                let dst = &mut panel[kk * MR..(kk + 1) * MR];
+                dst[..i_lim].copy_from_slice(srow);
+                dst[i_lim..].fill(0.0);
+            }
+        } else {
+            for r in 0..MR {
+                if r < i_lim {
+                    let srow = &src.row(i_base + r)[k0..k0 + kb];
+                    for (kk, &v) in srow.iter().enumerate() {
+                        panel[kk * MR + r] = v;
+                    }
+                } else {
+                    for kk in 0..kb {
+                        panel[kk * MR + r] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack logical-B window `[j0, j0+nb)` × depth `[k0, k0+kb)` into kk-major
+/// NR-wide panels (`buf[q][kk][c]`), zero-padding the ragged last panel.
+/// `trans == false`: `src` is K×N row-major (contiguous reads per kk).
+/// `trans == true`: `src` is N×K storage (logical B = srcᵀ), packed by
+/// walking each source row over kk — the NT case.
+fn pack_b(src: &Mat, trans: bool, j0: usize, nb: usize, k0: usize, kb: usize, buf: &mut Vec<f32>) {
+    let panels = nb.div_ceil(NR);
+    let need = panels * NR * kb;
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+    for q in 0..panels {
+        let j_base = j0 + q * NR;
+        let j_lim = NR.min(j0 + nb - j_base);
+        let panel = &mut buf[q * NR * kb..(q + 1) * NR * kb];
+        if trans {
+            for c in 0..NR {
+                if c < j_lim {
+                    let srow = &src.row(j_base + c)[k0..k0 + kb];
+                    for (kk, &v) in srow.iter().enumerate() {
+                        panel[kk * NR + c] = v;
+                    }
+                } else {
+                    for kk in 0..kb {
+                        panel[kk * NR + c] = 0.0;
+                    }
+                }
+            }
+        } else {
+            for kk in 0..kb {
+                let srow = &src.row(k0 + kk)[j_base..j_base + j_lim];
+                let dst = &mut panel[kk * NR..(kk + 1) * NR];
+                dst[..j_lim].copy_from_slice(srow);
+                dst[j_lim..].fill(0.0);
+            }
+        }
     }
 }
 
@@ -318,6 +524,39 @@ mod tests {
     }
 
     #[test]
+    fn packed_path_matches_oracle() {
+        // n > 64 forces the packed microkernel; cover serial and threaded.
+        let mut rng = Rng::new(21);
+        let a = Mat::randn(70, 130, &mut rng);
+        let b = Mat::randn(130, 100, &mut rng);
+        let want = naive(&a, &b);
+        let threaded = matmul(&a, &b);
+        assert_close(threaded.data(), want.data(), 1e-3, 1e-3).unwrap();
+        let serial = {
+            let g = Gemm { par_flop_threshold: usize::MAX, ..Default::default() };
+            let mut c = Mat::zeros(70, 100);
+            g.gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            c
+        };
+        assert_close(serial.data(), want.data(), 1e-3, 1e-3).unwrap();
+        assert_close(serial.data(), threaded.data(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn packed_tile_boundaries() {
+        // Exercise MR/NR-exact and ragged edges around the 8×8 tile.
+        let mut rng = Rng::new(22);
+        for &(m, n) in &[(8usize, 72usize), (9, 71), (7, 73), (16, 80), (1, 65)] {
+            let k = 33;
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            assert_close(c.data(), naive(&a, &b).data(), 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("m={m} n={n}: {e}"));
+        }
+    }
+
+    #[test]
     fn tn_matches_transpose_then_nn() {
         check("gemm_tn", 16, |rng| {
             let k = 1 + rng.below(300);
@@ -336,7 +575,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = Mat::randn(64, 150, &mut rng);
         let b = Mat::randn(64, 140, &mut rng);
-        let c = matmul_tn(&a, &b); // 150x140 > 128x128 → transpose path
+        let c = matmul_tn(&a, &b); // 150x140 > 128x128 → packed path
         let want = naive(&a.t(), &b);
         assert_close(c.data(), want.data(), 1e-3, 1e-3).unwrap();
     }
@@ -353,6 +592,16 @@ mod tests {
             let want = naive(&a, &b.t());
             assert_close(c.data(), want.data(), 1e-3, 1e-3)
         });
+    }
+
+    #[test]
+    fn nt_large_output_path() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(150, 48, &mut rng);
+        let b = Mat::randn(145, 48, &mut rng);
+        let c = matmul_nt(&a, &b); // 150x145 > 128x128 → packed path
+        let want = naive(&a, &b.t());
+        assert_close(c.data(), want.data(), 1e-3, 1e-3).unwrap();
     }
 
     #[test]
@@ -379,6 +628,23 @@ mod tests {
             for j in 0..13 {
                 let want = 2.0 * want_ab[(i, j)] - 0.5 * c0[(i, j)];
                 assert!((c[(i, j)] - want).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_beta_on_packed_path() {
+        let mut rng = Rng::new(8);
+        let a = Mat::randn(40, 90, &mut rng);
+        let b = Mat::randn(90, 100, &mut rng);
+        let c0 = Mat::randn(40, 100, &mut rng);
+        let mut c = c0.clone();
+        Gemm::default().gemm(-1.5, &a, Trans::No, &b, Trans::No, 0.25, &mut c);
+        let want_ab = naive(&a, &b);
+        for i in 0..40 {
+            for j in 0..100 {
+                let want = -1.5 * want_ab[(i, j)] + 0.25 * c0[(i, j)];
+                assert!((c[(i, j)] - want).abs() < 2e-3, "({i},{j})");
             }
         }
     }

@@ -103,6 +103,17 @@ impl Mat {
         self.data
     }
 
+    /// Reshape in place, reusing the allocation (contents unspecified —
+    /// intended for workspaces that are fully overwritten, e.g. a GEMM
+    /// output with `beta = 0`). Allocation-free once the buffer has grown
+    /// to the largest shape seen, which is what keeps the FastH block
+    /// loops heap-quiet in steady state.
+    pub fn reshape_reuse(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Row `i` as a slice.
     #[inline(always)]
     pub fn row(&self, i: usize) -> &[f32] {
@@ -355,6 +366,18 @@ mod tests {
     fn dot_and_norm_sq() {
         assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
         assert_eq!(norm_sq(&[3., 4.]), 25.0);
+    }
+
+    #[test]
+    fn reshape_reuse_keeps_capacity() {
+        let mut m = Mat::zeros(8, 8);
+        let cap = m.data.capacity();
+        m.reshape_reuse(4, 6);
+        assert_eq!((m.rows(), m.cols()), (4, 6));
+        assert_eq!(m.data().len(), 24);
+        assert_eq!(m.data.capacity(), cap, "shrinking must not reallocate");
+        m.reshape_reuse(8, 8);
+        assert_eq!(m.data().len(), 64);
     }
 
     #[test]

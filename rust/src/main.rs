@@ -345,6 +345,12 @@ fn cmd_tune_k(flags: &HashMap<String, String>) -> Result<()> {
         t0.elapsed().as_secs_f64(),
         (d as f64).sqrt()
     );
+    // Persist so later `repro serve` / bench runs warm-start this result.
+    let cache = fasth::householder::tune::KCache::global();
+    cache.insert(d, m, tuned);
+    if let Some(path) = cache.path() {
+        println!("cached in {} (warm-starts serve/bench k selection)", path.display());
+    }
     Ok(())
 }
 

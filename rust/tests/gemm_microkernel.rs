@@ -1,0 +1,181 @@
+//! Edge coverage for the packed-panel register-tiled GEMM microkernel:
+//! the skinny→packed register-path boundary (n = 63/64/65), K panels
+//! straddling `kc` (255/256/257), MR/NR ragged tails, threaded-vs-serial
+//! agreement on the rerouted TN/NT paths, TT honoring the receiver's
+//! config, and a packed-panel-vs-f64-oracle property sweep over all four
+//! transpose combinations with random `alpha`/`beta`.
+
+use fasth::linalg::gemm::{matmul, matmul_nt, matmul_tn, Gemm, Trans};
+use fasth::linalg::{oracle, Mat};
+use fasth::util::prop::{assert_close, check};
+use fasth::util::Rng;
+
+fn serial() -> Gemm {
+    Gemm { par_flop_threshold: usize::MAX, ..Default::default() }
+}
+
+fn run_gemm(g: &Gemm, alpha: f32, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f32) -> Mat {
+    let (m, n) = match (ta, tb) {
+        (Trans::No, Trans::No) => (a.rows(), b.cols()),
+        (Trans::Yes, Trans::No) => (a.cols(), b.cols()),
+        (Trans::No, Trans::Yes) => (a.rows(), b.rows()),
+        (Trans::Yes, Trans::Yes) => (a.cols(), b.rows()),
+    };
+    let mut c = Mat::zeros(m, n);
+    g.gemm(alpha, a, ta, b, tb, beta, &mut c);
+    c
+}
+
+/// `alpha·op(A)·op(B) + beta·C₀` through the f64 oracle.
+fn reference(alpha: f32, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f32, c0: &Mat) -> Mat {
+    let am = if ta == Trans::Yes { a.t() } else { a.clone() };
+    let bm = if tb == Trans::Yes { b.t() } else { b.clone() };
+    let mut out = oracle::matmul_f64(&am, &bm).scale(alpha);
+    out.axpy(beta, c0);
+    out
+}
+
+#[test]
+fn register_path_boundary_n_63_64_65() {
+    // n ≤ 64 takes the stack-accumulated skinny kernel, n > 64 the packed
+    // microkernel; both sides of the boundary must match the oracle.
+    let mut rng = Rng::new(0xB0);
+    for n in [63usize, 64, 65] {
+        let a = Mat::randn(50, 77, &mut rng);
+        let b = Mat::randn(77, n, &mut rng);
+        let got = matmul(&a, &b);
+        let want = oracle::matmul_f64(&a, &b);
+        assert_close(got.data(), want.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("n={n}: {e}"));
+    }
+}
+
+#[test]
+fn kc_panel_straddling() {
+    // K one below / exactly at / one above the default kc = 256 panel
+    // depth, on the packed path (n > 64), threaded and serial.
+    let mut rng = Rng::new(0xB1);
+    for k in [255usize, 256, 257] {
+        let a = Mat::randn(24, k, &mut rng);
+        let b = Mat::randn(k, 96, &mut rng);
+        let want = oracle::matmul_f64(&a, &b);
+        let threaded = matmul(&a, &b);
+        assert_close(threaded.data(), want.data(), 2e-3, 2e-3)
+            .unwrap_or_else(|e| panic!("k={k} threaded: {e}"));
+        let ser = run_gemm(&serial(), 1.0, &a, Trans::No, &b, Trans::No, 0.0);
+        assert_close(ser.data(), want.data(), 2e-3, 2e-3)
+            .unwrap_or_else(|e| panic!("k={k} serial: {e}"));
+        // Row-slab threading must not change each row's summation order.
+        assert_close(threaded.data(), ser.data(), 1e-6, 1e-6)
+            .unwrap_or_else(|e| panic!("k={k} threaded vs serial: {e}"));
+    }
+}
+
+#[test]
+fn mr_nr_ragged_tails() {
+    // Row counts around the MR = 8 tile height and widths around NR = 8
+    // panel multiples (all > 64 so the packed path is taken).
+    let mut rng = Rng::new(0xB2);
+    for &m in &[1usize, 5, 7, 8, 9, 15, 16, 17] {
+        for &n in &[65usize, 71, 72, 73, 80, 81] {
+            let k = 40;
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let got = matmul(&a, &b);
+            let want = oracle::matmul_f64(&a, &b);
+            assert_close(got.data(), want.data(), 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("m={m} n={n}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn tn_threaded_vs_serial_large_output() {
+    // Large TN outputs route through the packed kernel (packing A
+    // straight from K×M storage, no a.t() materialization).
+    let mut rng = Rng::new(0xB3);
+    let a = Mat::randn(600, 150, &mut rng); // K×M
+    let b = Mat::randn(600, 140, &mut rng); // K×N
+    let want = oracle::matmul_f64(&a.t(), &b);
+    let threaded = matmul_tn(&a, &b);
+    assert_close(threaded.data(), want.data(), 2e-3, 2e-3).unwrap();
+    let ser = run_gemm(&serial(), 1.0, &a, Trans::Yes, &b, Trans::No, 0.0);
+    assert_close(ser.data(), want.data(), 2e-3, 2e-3).unwrap();
+    assert_close(threaded.data(), ser.data(), 1e-6, 1e-6).unwrap();
+}
+
+#[test]
+fn tn_threaded_vs_serial_small_output() {
+    // FastH's YᵀA shape: tiny output, long K reduction (dedicated kernel;
+    // the parallel reduction reorders sums, so agreement is approximate).
+    let mut rng = Rng::new(0xB4);
+    let a = Mat::randn(4000, 32, &mut rng);
+    let b = Mat::randn(4000, 32, &mut rng);
+    let threaded = matmul_tn(&a, &b);
+    let ser = run_gemm(&serial(), 1.0, &a, Trans::Yes, &b, Trans::No, 0.0);
+    assert_close(threaded.data(), ser.data(), 1e-3, 1e-3).unwrap();
+    let want = oracle::matmul_f64(&a.t(), &b);
+    assert_close(threaded.data(), want.data(), 5e-3, 5e-3).unwrap();
+}
+
+#[test]
+fn nt_threaded_vs_serial_large_output() {
+    let mut rng = Rng::new(0xB5);
+    let a = Mat::randn(150, 90, &mut rng); // M×K
+    let b = Mat::randn(145, 90, &mut rng); // N×K
+    let want = oracle::matmul_f64(&a, &b.t());
+    let threaded = matmul_nt(&a, &b);
+    assert_close(threaded.data(), want.data(), 2e-3, 2e-3).unwrap();
+    let ser = run_gemm(&serial(), 1.0, &a, Trans::No, &b, Trans::Yes, 0.0);
+    assert_close(ser.data(), want.data(), 2e-3, 2e-3).unwrap();
+    assert_close(threaded.data(), ser.data(), 1e-6, 1e-6).unwrap();
+}
+
+#[test]
+fn tt_respects_gemm_config() {
+    // TT used to route through `matmul`'s default config; it must now
+    // honor the receiver — including deliberately odd kc/nc blockings.
+    let mut rng = Rng::new(0xB6);
+    let a = Mat::randn(30, 70, &mut rng); // stored K×M → C = AᵀBᵀ is 70×90
+    let b = Mat::randn(90, 30, &mut rng); // stored N×K
+    let want = oracle::matmul_f64(&a.t(), &b.t());
+    for cfg in [
+        serial(),
+        Gemm { kc: 16, nc: 24, mr_chunk: 8, par_flop_threshold: usize::MAX },
+        Gemm { kc: 7, nc: 13, mr_chunk: 8, par_flop_threshold: 0 },
+    ] {
+        let got = run_gemm(&cfg, 1.0, &a, Trans::Yes, &b, Trans::Yes, 0.0);
+        assert_close(got.data(), want.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("kc={} nc={}: {e}", cfg.kc, cfg.nc));
+    }
+}
+
+#[test]
+fn packed_vs_oracle_property_sweep() {
+    check("gemm_packed_sweep", 24, |rng| {
+        let m = 1 + rng.below(120);
+        let k = 1 + rng.below(160);
+        let n = 65 + rng.below(90); // force the packed path on NN
+        let alpha = rng.normal_f32();
+        let beta = if rng.below(2) == 0 { 0.0 } else { rng.normal_f32() };
+        let (ta, tb) = match rng.below(4) {
+            0 => (Trans::No, Trans::No),
+            1 => (Trans::Yes, Trans::No),
+            2 => (Trans::No, Trans::Yes),
+            _ => (Trans::Yes, Trans::Yes),
+        };
+        let a = match ta {
+            Trans::No => Mat::randn(m, k, rng),
+            Trans::Yes => Mat::randn(k, m, rng),
+        };
+        let b = match tb {
+            Trans::No => Mat::randn(k, n, rng),
+            Trans::Yes => Mat::randn(n, k, rng),
+        };
+        let c0 = Mat::randn(m, n, rng);
+        let mut got = c0.clone();
+        Gemm::default().gemm(alpha, &a, ta, &b, tb, beta, &mut got);
+        let want = reference(alpha, &a, ta, &b, tb, beta, &c0);
+        assert_close(got.data(), want.data(), 5e-3, 5e-3)
+    });
+}
