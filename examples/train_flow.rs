@@ -9,6 +9,7 @@
 
 use fasth::linalg::lu;
 use fasth::nn::flow::{gaussian_mixture, Flow};
+use fasth::nn::{Params, Sgd};
 use fasth::util::Rng;
 use std::time::Instant;
 
@@ -24,11 +25,12 @@ fn main() {
     );
 
     let t0 = Instant::now();
-    let (nll0, _) = flow.nll_step(&data, None);
+    let mut opt = Sgd::new(0.03, 0.0);
+    flow.zero_grads();
+    let nll0 = flow.nll_step(&data);
     let mut last = nll0;
     for step in 0..steps {
-        let (nll, grads) = flow.nll_step(&data, None);
-        flow.sgd_step(&grads, 0.03, 0.05);
+        let nll = flow.train_step(&data, &mut opt);
         last = nll;
         if step % 30 == 0 || step + 1 == steps {
             println!("step {step:>4}  nll/dim {:.4}", nll / dim as f64);
@@ -43,7 +45,7 @@ fn main() {
 
     // Exact invertibility after training (the property PLU/QR flows trade
     // away and the SVD parameterization keeps for free).
-    let (z, logdet, _c) = flow.forward(&data);
+    let (z, _logdet, _c) = flow.forward(&data);
     let back = flow.inverse(&z);
     println!(
         "invertibility: ‖f⁻¹(f(x)) − x‖∞ = {:.3e}",

@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example train_rnn [steps]`
 
 use fasth::nn::tasks::copy_memory;
-use fasth::nn::SvdRnn;
+use fasth::nn::{Sgd, SvdRnn};
 use fasth::util::Rng;
 use std::time::Instant;
 
@@ -21,11 +21,12 @@ fn main() {
 
     let mut rng = Rng::new(4242);
     let mut rnn = SvdRnn::new(alphabet + 2, hidden, alphabet + 2, &mut rng);
+    let mut opt = Sgd::new(lr, 0.0);
     println!(
         "== copy-memory: alphabet {alphabet}, {sym_len} symbols, delay {delay} \
          (T = {}), hidden {hidden}, batch {batch}, lr {lr}, ε = {} ==",
         sym_len + delay + 1 + sym_len,
-        rnn.eps
+        rnn.eps()
     );
     // Two reference lines: uniform over all classes, and the
     // "ignore-memory plateau" — predicting uniformly over the alphabet
@@ -44,15 +45,15 @@ fn main() {
     let mut curve: Vec<(usize, f64, f64)> = Vec::new();
     for step in 0..steps {
         let data = copy_memory(alphabet, sym_len, delay, batch, &mut rng);
-        let (loss, grads, acc) = rnn.step_bptt(&data.inputs, &data.targets, data.scored_steps);
-        rnn.sgd_step(&grads, lr);
+        let (loss, acc) =
+            rnn.train_step(&data.inputs, &data.targets, data.scored_steps, &mut opt);
         first_loss.get_or_insert(loss);
         last_loss = loss;
         if step % 20 == 0 || step + 1 == steps {
             println!(
                 "step {step:>4}  loss {loss:.4}  answer-acc {acc:.3}  σ∈[{:.3},{:.3}]",
-                rnn.w_rec.sigma.iter().cloned().fold(f32::INFINITY, f32::min),
-                rnn.w_rec.sigma.iter().cloned().fold(0.0, f32::max),
+                rnn.w_rec.p.sigma.iter().cloned().fold(f32::INFINITY, f32::min),
+                rnn.w_rec.p.sigma.iter().cloned().fold(0.0, f32::max),
             );
             curve.push((step, loss, acc));
         }

@@ -1,11 +1,15 @@
 //! The paper's §6 pitch — "change NN.LINEAR to LINEARSVD" — on a small
-//! classifier: 3-armed spiral, MLP with an SVD-reparameterized hidden
-//! layer whose spectrum we clip, trained to high accuracy.
+//! classifier: 3-armed spiral, an MLP built with the `Sequential`
+//! container where the hidden block is an SVD-reparameterized layer
+//! (swapping it for `Dense::new(d, d, ..)` is a one-line change), trained
+//! with Adam through the unified `Layer`/`Params` traits.
 //!
 //! Run: `cargo run --release --example train_spiral [steps]`
 
 use fasth::nn::loss::accuracy;
-use fasth::nn::{softmax_cross_entropy, Activation, Dense, LinearSvd};
+use fasth::nn::{
+    softmax_cross_entropy, Activation, Adam, Dense, LinearSvd, Params, Sequential, SigmaClip,
+};
 use fasth::util::Rng;
 
 fn main() {
@@ -15,33 +19,30 @@ fn main() {
     let (x_train, y_train) = fasth::nn::tasks::spirals(160, 0.08, &mut rng);
     let (x_test, y_test) = fasth::nn::tasks::spirals(60, 0.08, &mut rng);
 
-    let mut input = Dense::new(d, 2, &mut rng);
-    let mut hidden = LinearSvd::new(d, &mut rng);
-    let mut output = Dense::new(3, d, &mut rng);
-    let act = Activation::Tanh;
-    let lr = 0.5;
-    println!("== spiral classifier: 2 → {d} → {d} (LinearSVD) → 3, {steps} steps ==\n");
+    // The whole network is one Sequential; the SVD layer keeps its
+    // spectrum in [0.75, 1.25] via the shared post-update hook.
+    let mut model = Sequential::new()
+        .push(Dense::new(d, 2, &mut rng))
+        .push(Activation::Tanh)
+        // was: .push(Dense::new(d, d, &mut rng))  — the §6 one-line swap
+        .push(LinearSvd::new(d, &mut rng).with_clip(SigmaClip::Band(0.25)))
+        .push(Activation::Tanh)
+        .push(Dense::new(3, d, &mut rng));
+    let n_params = {
+        let mut n = 0;
+        model.visit(&mut |pv| n += pv.param.len());
+        n
+    };
+    let mut opt = Adam::new(0.01);
+    println!(
+        "== spiral classifier: 2 → {d} → {d} (LinearSVD) → 3, {steps} steps, \
+         {n_params} params, Adam ==\n"
+    );
 
     let mut final_train_acc = 0.0;
     for step in 0..steps {
-        let (h0, c0) = input.forward(&x_train);
-        let a0 = act.forward(&h0);
-        let (h1, c1) = hidden.forward(&a0);
-        let a1 = act.forward(&h1);
-        let (logits, c2) = output.forward(&a1);
-        let (loss, dlogits) = softmax_cross_entropy(&logits, &y_train);
-
-        let (da1, dw2, db2) = output.backward(&c2, &dlogits);
-        let dh1 = act.backward(&a1, &da1);
-        let (da0, svd_grads, db1) = hidden.backward(&c1, &dh1);
-        let dh0 = act.backward(&a0, &da0);
-        let (_dx, dw0, db0) = input.backward(&c0, &dh0);
-
-        output.sgd_step(&dw2, &db2, lr);
-        hidden.sgd_step(&svd_grads, &db1, lr);
-        hidden.clip_sigma(0.25); // keep the layer well-conditioned
-        input.sgd_step(&dw0, &db0, lr);
-
+        let (loss, logits) =
+            model.train_step(&x_train, |l| softmax_cross_entropy(l, &y_train), &mut opt);
         final_train_acc = accuracy(&logits, &y_train);
         if step % 40 == 0 || step + 1 == steps {
             println!("step {step:>4}  loss {loss:.4}  train-acc {final_train_acc:.3}");
@@ -49,18 +50,21 @@ fn main() {
     }
 
     // Evaluate.
-    let (h0, _) = input.forward(&x_test);
-    let a0 = act.forward(&h0);
-    let (h1, _) = hidden.forward(&a0);
-    let a1 = act.forward(&h1);
-    let (logits, _) = output.forward(&a1);
+    let (logits, _ctxs) = model.forward(&x_test);
     let test_acc = accuracy(&logits, &y_test);
     println!("\ntest accuracy: {test_acc:.3}");
 
-    // The SVD view of the trained layer comes for free:
-    let (lo, hi) = hidden.p.sigma.iter().fold((f32::INFINITY, 0.0f32), |(lo, hi), &s| {
-        (lo.min(s), hi.max(s))
+    // The SVD view of the trained layer comes for free: reach into layer
+    // index 2 via its parameter key.
+    let mut sigma = Vec::new();
+    model.visit(&mut |pv| {
+        if pv.key == "2.sigma" {
+            sigma = pv.param.to_vec();
+        }
     });
+    let (lo, hi) = sigma
+        .iter()
+        .fold((f32::INFINITY, 0.0f32), |(lo, hi), &s| (lo.min(s), hi.max(s)));
     println!("trained hidden layer spectrum: σ ∈ [{lo:.3}, {hi:.3}] (clipped to [0.75, 1.25])");
     println!("condition number κ(W) = {:.3} — read off in O(d)", hi / lo);
 

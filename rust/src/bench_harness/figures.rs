@@ -232,10 +232,16 @@ pub fn ablation_rnn(d: usize, rs: &[usize], cfg: BudgetCfg, seed: u64) -> Report
 /// End-to-end RNN training throughput (steps/sec) — the serving/training
 /// sanity workload used by EXPERIMENTS.md §E2E.
 pub fn rnn_step_time(hidden: usize, seq_len: usize, cfg: BudgetCfg, seed: u64) -> Stats {
+    use crate::nn::Params;
     let mut rng = Rng::new(seed);
-    let rnn = SvdRnn::new(10, hidden, 10, &mut rng);
+    let mut rnn = SvdRnn::new(10, hidden, 10, &mut rng);
     let batch = crate::nn::tasks::copy_memory(8, 4, seq_len.saturating_sub(9), 16, &mut rng);
-    time(cfg, || rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps))
+    // Zero per rep: step_bptt accumulates into the layers' grad buffers,
+    // and a real training step always starts from zeroed gradients.
+    time(cfg, || {
+        rnn.zero_grads();
+        rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps)
+    })
 }
 
 #[cfg(test)]

@@ -230,12 +230,12 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
             let lr: f32 = flags.get("lr").map(|s| s.parse()).transpose()?.unwrap_or(0.1);
             let mut rng = Rng::new(7);
             let mut rnn = fasth::nn::SvdRnn::new(10, hidden, 10, &mut rng);
+            let mut opt = fasth::nn::Sgd::new(lr, 0.0);
             println!("training SvdRnn(hidden={hidden}) on copy-memory, {steps} steps, lr={lr}");
             for step in 0..steps {
                 let batch = fasth::nn::tasks::copy_memory(8, 5, 20, 32, &mut rng);
-                let (loss, grads, acc) =
-                    rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
-                rnn.sgd_step(&grads, lr);
+                let (loss, acc) =
+                    rnn.train_step(&batch.inputs, &batch.targets, batch.scored_steps, &mut opt);
                 if step % 10 == 0 || step + 1 == steps {
                     println!("step {step:>5}  loss {loss:.4}  acc {acc:.3}");
                 }
@@ -250,34 +250,26 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// Spiral MLP with a LinearSVD hidden block (shared with the example).
+/// Spiral MLP with a LinearSVD hidden block (shared with the example):
+/// one `Sequential` trained through the unified `Layer`/`Params` traits.
 fn train_spiral(steps: usize) -> Result<()> {
-    use fasth::nn::{softmax_cross_entropy, Activation, Dense, LinearSvd};
+    use fasth::nn::{
+        softmax_cross_entropy, Activation, Adam, Dense, LinearSvd, Sequential, SigmaClip,
+    };
     let mut rng = Rng::new(11);
     let d = 32;
     let (x_all, y_all) = fasth::nn::tasks::spirals(128, 0.08, &mut rng);
-    let mut input = Dense::new(d, 2, &mut rng);
-    let mut hidden = LinearSvd::new(d, &mut rng);
-    let mut output = Dense::new(3, d, &mut rng);
-    let act = Activation::Tanh;
-    println!("training spiral MLP (2→{d}→{d}(SVD)→3), {steps} steps");
+    let mut model = Sequential::new()
+        .push(Dense::new(d, 2, &mut rng))
+        .push(Activation::Tanh)
+        .push(LinearSvd::new(d, &mut rng).with_clip(SigmaClip::Band(0.2)))
+        .push(Activation::Tanh)
+        .push(Dense::new(3, d, &mut rng));
+    let mut opt = Adam::new(0.01);
+    println!("training spiral MLP (2→{d}→{d}(SVD)→3), {steps} steps, Adam");
     for step in 0..steps {
-        let (h0, c0) = input.forward(&x_all);
-        let a0 = act.forward(&h0);
-        let (h1, c1) = hidden.forward(&a0);
-        let a1 = act.forward(&h1);
-        let (logits, c2) = output.forward(&a1);
-        let (loss, dlogits) = softmax_cross_entropy(&logits, &y_all);
-        let (da1, dw2, db2) = output.backward(&c2, &dlogits);
-        let dh1 = act.backward(&a1, &da1);
-        let (da0, svd_grads, db1) = hidden.backward(&c1, &dh1);
-        let dh0 = act.backward(&a0, &da0);
-        let (_dx, dw0, db0) = input.backward(&c0, &dh0);
-        let lr = 0.5;
-        output.sgd_step(&dw2, &db2, lr);
-        hidden.sgd_step(&svd_grads, &db1, lr);
-        hidden.clip_sigma(0.2);
-        input.sgd_step(&dw0, &db0, lr);
+        let (loss, logits) =
+            model.train_step(&x_all, |l| softmax_cross_entropy(l, &y_all), &mut opt);
         if step % 25 == 0 || step + 1 == steps {
             let acc = fasth::nn::loss::accuracy(&logits, &y_all);
             println!("step {step:>5}  loss {loss:.4}  acc {acc:.3}");

@@ -8,35 +8,39 @@
 //! nonlinearity; `log|det|` accumulates Σ log|σᵢ| from the linear part
 //! plus Σ log f'(pre) from the nonlinearity. Density fitting by exact
 //! maximum likelihood under a standard-normal base.
+//!
+//! The blocks are ordinary [`Layer`]s; the flow is an ordinary [`Params`]
+//! container, so any [`Optimizer`] trains it. Invertibility is kept by
+//! the shared [`SigmaClip::Floor`] post-update hook (|σ| ≥ floor) instead
+//! of ad-hoc clamping in the update path.
 
 use super::layers::LinearSvd;
+use super::module::{visit_prefixed, Ctx, Layer, ParamView, Params, SigmaClip};
+use super::optim::Optimizer;
 use crate::linalg::Mat;
-use crate::svd::param::SvdGrads;
 use crate::util::Rng;
 
 /// Invertible leaky ReLU slope for the negative half.
 const LEAK: f32 = 0.4;
+
+/// Default invertibility floor on |σ| (see [`SigmaClip::Floor`]).
+pub const DEFAULT_SIGMA_FLOOR: f32 = 0.05;
 
 /// One flow block: SVD-linear + invertible leaky ReLU.
 pub struct FlowBlock {
     pub linear: LinearSvd,
 }
 
+/// Per-block forward cache: the linear layer's cache + pre-activation.
+struct FlowBlockCache {
+    lin: Ctx,
+    pre: Mat,
+}
+
 /// A stack of flow blocks mapping data `x` to latent `z`.
 pub struct Flow {
     pub blocks: Vec<FlowBlock>,
     pub dim: usize,
-}
-
-/// Caches for one forward pass (per block: linear cache + pre-activation).
-pub struct FlowCache {
-    linears: Vec<super::layers::LinearSvdCache>,
-    pres: Vec<Mat>,
-}
-
-/// Gradients for one block.
-pub struct FlowGrads {
-    pub per_block: Vec<(SvdGrads, Vec<f32>)>,
 }
 
 fn leaky(x: f32) -> f32 {
@@ -63,38 +67,69 @@ fn leaky_logderiv(x: f32) -> f32 {
     }
 }
 
+impl Params for FlowBlock {
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+        self.linear.visit(f);
+    }
+}
+
+impl Layer for FlowBlock {
+    fn forward(&self, x: &Mat, ctx: &mut Ctx) -> Mat {
+        let mut lin = Ctx::empty();
+        let pre = self.linear.forward(x, &mut lin);
+        let y = pre.map(leaky);
+        ctx.put(FlowBlockCache { lin, pre });
+        y
+    }
+
+    fn backward(&self, ctx: &Ctx, g: &Mat) -> Mat {
+        let cache: &FlowBlockCache = ctx.get();
+        // Through the nonlinearity: g_pre = g ⊙ f'(pre).
+        let mut g_pre = g.clone();
+        for (v, &p) in g_pre.data_mut().iter_mut().zip(cache.pre.data()) {
+            if p < 0.0 {
+                *v *= LEAK;
+            }
+        }
+        self.linear.backward(&cache.lin, &g_pre)
+    }
+
+    fn post_update(&mut self) {
+        self.linear.post_update();
+    }
+}
+
 impl Flow {
     pub fn new(dim: usize, depth: usize, rng: &mut Rng) -> Flow {
         let blocks = (0..depth)
-            .map(|_| FlowBlock { linear: LinearSvd::new(dim, rng) })
+            .map(|_| FlowBlock {
+                linear: LinearSvd::new(dim, rng).with_clip(SigmaClip::Floor(DEFAULT_SIGMA_FLOOR)),
+            })
             .collect();
         Flow { blocks, dim }
     }
 
-    /// Forward `x → (z, per-sample log|det J|, cache)`.
-    pub fn forward(&self, x: &Mat) -> (Mat, Vec<f64>, FlowCache) {
+    /// Forward `x → (z, per-sample log|det J|, per-block caches)`.
+    pub fn forward(&self, x: &Mat) -> (Mat, Vec<f64>, Vec<Ctx>) {
         let b = x.cols();
         let mut cur = x.clone();
         let mut logdet = vec![0.0f64; b];
-        let mut linears = Vec::with_capacity(self.blocks.len());
-        let mut pres = Vec::with_capacity(self.blocks.len());
-        for blk in &self.blocks {
+        let mut ctxs: Vec<Ctx> = (0..self.blocks.len()).map(|_| Ctx::empty()).collect();
+        for (blk, ctx) in self.blocks.iter().zip(ctxs.iter_mut()) {
             // Linear part: logdet contribution Σ log|σ| (same ∀ samples).
             let (_sign, lin_ld) = blk.linear.p.slogdet();
-            let (pre, cache) = blk.linear.forward(&cur);
+            cur = blk.forward(&cur, ctx);
             // Nonlinearity: per-sample Σ log f'(pre).
-            for j in 0..b {
-                let mut ld = lin_ld;
+            let pre = &ctx.get::<FlowBlockCache>().pre;
+            for (j, ld) in logdet.iter_mut().enumerate() {
+                let mut acc = lin_ld;
                 for i in 0..self.dim {
-                    ld += leaky_logderiv(pre[(i, j)]) as f64;
+                    acc += leaky_logderiv(pre[(i, j)]) as f64;
                 }
-                logdet[j] += ld;
+                *ld += acc;
             }
-            cur = pre.map(leaky);
-            linears.push(cache);
-            pres.push(pre);
         }
-        (cur, logdet, FlowCache { linears, pres })
+        (cur, logdet, ctxs)
     }
 
     /// Exact inverse `z → x` (sampling path), using the Table-1 inverse
@@ -104,10 +139,12 @@ impl Flow {
         for blk in self.blocks.iter().rev() {
             let mut pre = cur.map(leaky_inv);
             // Undo bias, then W⁻¹.
-            for i in 0..self.dim {
-                let bi = blk.linear.b[i];
-                for v in pre.row_mut(i) {
-                    *v -= bi;
+            if let Some(bias) = &blk.linear.b {
+                for i in 0..self.dim {
+                    let bi = bias[i];
+                    for v in pre.row_mut(i) {
+                        *v -= bi;
+                    }
                 }
             }
             cur = blk.linear.p.apply_inverse(&pre, blk.linear.k);
@@ -117,10 +154,11 @@ impl Flow {
 
     /// Negative log-likelihood under N(0, I) base + change of variables,
     /// averaged over the batch: `NLL = E[ ½‖z‖² + (d/2)·log 2π − log|det J| ]`.
-    /// Returns `(nll, grads)` — one full backward pass.
-    pub fn nll_step(&self, x: &Mat, cache_out: Option<&mut Option<FlowCache>>) -> (f64, FlowGrads) {
+    /// One full backward pass: gradients (including the `−1/σ` logdet
+    /// terms) accumulate into the blocks' buffers; zero them first.
+    pub fn nll_step(&self, x: &Mat) -> f64 {
         let b = x.cols();
-        let (z, logdet, cache) = self.forward(x);
+        let (z, logdet, ctxs) = self.forward(x);
         let half_log2pi = 0.5 * (2.0 * std::f64::consts::PI).ln();
         let mut nll = 0.0f64;
         for j in 0..b {
@@ -137,44 +175,30 @@ impl Flow {
         // (leaky has piecewise-constant derivative → zero grad from its
         // logdet term except measure-zero kink).
         let mut g = z.scale(1.0 / b as f32);
-        let mut per_block: Vec<(SvdGrads, Vec<f32>)> = Vec::with_capacity(self.blocks.len());
-        for (bi, blk) in self.blocks.iter().enumerate().rev() {
-            let pre = &cache.pres[bi];
-            // Through the nonlinearity: g_pre = g ⊙ f'(pre).
-            let mut g_pre = g.clone();
-            for (v, &p) in g_pre.data_mut().iter_mut().zip(pre.data()) {
-                if p < 0.0 {
-                    *v *= LEAK;
-                }
-            }
-            // Through the linear layer.
-            let (dx, mut grads, db) = blk.linear.backward(&cache.linears[bi], &g_pre);
-            // logdet gradient wrt σ: −(1/b)·Σ_samples ∂logdet/∂σ = −1/σ
-            // (one per sample, averaged — the linear logdet is sample-
-            // independent so the mean keeps the full −1/σ).
-            for (ds, &s) in grads.dsigma.iter_mut().zip(&blk.linear.p.sigma) {
-                *ds -= 1.0 / s;
-            }
-            per_block.push((grads, db));
-            g = dx;
+        for (blk, ctx) in self.blocks.iter().zip(&ctxs).rev() {
+            g = blk.backward(ctx, &g);
+            // logdet gradient wrt σ: the linear logdet is sample-
+            // independent, so the batch mean keeps the full −1/σ.
+            let extra: Vec<f32> = blk.linear.p.sigma.iter().map(|&s| -1.0 / s).collect();
+            blk.linear.accum_sigma_grad(&extra);
         }
-        per_block.reverse();
-        if let Some(slot) = cache_out {
-            *slot = Some(cache);
-        }
-        (nll, FlowGrads { per_block })
+        nll
     }
 
-    /// SGD step on every block; σ kept away from 0 (invertibility) by
-    /// clamping |σ| ≥ floor.
-    pub fn sgd_step(&mut self, grads: &FlowGrads, lr: f32, sigma_floor: f32) {
-        for (blk, (g, db)) in self.blocks.iter_mut().zip(&grads.per_block) {
-            blk.linear.sgd_step(g, db, lr);
-            for s in blk.linear.p.sigma.iter_mut() {
-                if s.abs() < sigma_floor {
-                    *s = sigma_floor * if *s < 0.0 { -1.0 } else { 1.0 };
-                }
-            }
+    /// One training step: zero grads, NLL forward/backward, one optimizer
+    /// sweep, then the σ-floor post-update hooks. Returns the NLL.
+    pub fn train_step(&mut self, x: &Mat, opt: &mut dyn Optimizer) -> f64 {
+        self.zero_grads();
+        let nll = self.nll_step(x);
+        opt.step(self);
+        self.post_update();
+        nll
+    }
+
+    /// Run every block's post-update hook (the σ invertibility floor).
+    pub fn post_update(&mut self) {
+        for blk in &mut self.blocks {
+            blk.post_update();
         }
     }
 
@@ -182,6 +206,15 @@ impl Flow {
     pub fn sample(&self, n: usize, rng: &mut Rng) -> Mat {
         let z = Mat::randn(self.dim, n, rng);
         self.inverse(&z)
+    }
+}
+
+impl Params for Flow {
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+        for (i, blk) in self.blocks.iter_mut().enumerate() {
+            let prefix = format!("b{i}");
+            visit_prefixed(blk, &prefix, f);
+        }
     }
 }
 
@@ -208,6 +241,8 @@ pub fn gaussian_mixture(dim: usize, n_modes: usize, n: usize, rng: &mut Rng) -> 
 mod tests {
     use super::*;
     use crate::linalg::{lu, oracle};
+    use crate::nn::module::grad_by_key;
+    use crate::nn::Sgd;
 
     #[test]
     fn inverse_roundtrips() {
@@ -230,10 +265,7 @@ mod tests {
         let (_z, logdet, _c) = flow.forward(&x);
         let w = flow.blocks[0].linear.p.materialize();
         let (_s, lu_ld) = lu::slogdet(&w);
-        let pre = {
-            let (p, _) = flow.blocks[0].linear.forward(&x);
-            p
-        };
+        let pre = flow.blocks[0].linear.forward(&x, &mut Ctx::empty());
         for j in 0..3 {
             let mut want = lu_ld;
             for i in 0..5 {
@@ -254,13 +286,17 @@ mod tests {
         let mut rng = Rng::new(0xF3);
         let mut flow = Flow::new(4, 2, &mut rng);
         let x = Mat::randn(4, 6, &mut rng);
-        let (_nll, grads) = flow.nll_step(&x, None);
+        flow.zero_grads();
+        let _nll = flow.nll_step(&x);
+        let ds = grad_by_key(&mut flow, "b0.sigma").unwrap();
         // Finite differences on block 0's σ.
-        let fd = oracle::finite_diff_grad(&flow.blocks[0].linear.p.sigma.clone(), 1e-3, |s| {
+        let sigma0 = flow.blocks[0].linear.p.sigma.clone();
+        let fd = oracle::finite_diff_grad(&sigma0, 1e-3, |s| {
             flow.blocks[0].linear.p.sigma = s.to_vec();
-            flow.nll_step(&x, None).0
+            flow.zero_grads();
+            flow.nll_step(&x)
         });
-        crate::util::prop::assert_close(&grads.per_block[0].0.dsigma, &fd, 2e-2, 5e-2).unwrap();
+        crate::util::prop::assert_close(&ds, &fd, 2e-2, 5e-2).unwrap();
     }
 
     #[test]
@@ -268,14 +304,20 @@ mod tests {
         let mut rng = Rng::new(0xF4);
         let mut flow = Flow::new(4, 3, &mut rng);
         let data = gaussian_mixture(4, 3, 128, &mut rng);
-        let (nll0, _) = flow.nll_step(&data, None);
+        let mut opt = Sgd::new(0.05, 0.0);
+        flow.zero_grads();
+        let nll0 = flow.nll_step(&data);
         let mut last = nll0;
         for _ in 0..60 {
-            let (nll, grads) = flow.nll_step(&data, None);
-            flow.sgd_step(&grads, 0.05, 0.05);
-            last = nll;
+            last = flow.train_step(&data, &mut opt);
         }
         assert!(last < nll0 - 0.1, "NLL {nll0:.3} → {last:.3}");
+        // σ stayed above the invertibility floor the whole run.
+        for blk in &flow.blocks {
+            for &s in &blk.linear.p.sigma {
+                assert!(s.abs() >= DEFAULT_SIGMA_FLOOR, "σ={s}");
+            }
+        }
         // Still exactly invertible after training.
         let (z, _ld, _c) = flow.forward(&data);
         let back = flow.inverse(&z);

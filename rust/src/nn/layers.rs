@@ -1,18 +1,106 @@
-//! Layers: standard dense, the paper's `LinearSVD`, and activations.
+//! Layers: standard dense, the paper's `LinearSVD` (square and
+//! rectangular), and activations — all speaking the [`Layer`]/[`Params`]
+//! contract from [`super::module`].
+//!
+//! `backward` *accumulates* parameter gradients into per-layer buffers
+//! (so BPTT reuse sums naturally); optimizers sweep them through
+//! [`Params::visit`] (which also keeps the SVD layers' cached reversed-V
+//! coherent); spectral clipping runs in [`Layer::post_update`].
 
+use super::module::{tuned_block_k, Ctx, Layer, ParamView, Params, SigmaClip};
+use crate::householder::HouseholderVectors;
 use crate::linalg::gemm::{matmul, matmul_nt, matmul_tn};
 use crate::linalg::Mat;
-use crate::svd::param::{SvdGrads, SvdParam};
+use crate::svd::param::{SvdCache, SvdParam};
+use crate::svd::rect::{RectSvdCache, RectSvdParam};
 use crate::util::Rng;
+use std::cell::RefCell;
+
+/// `y[i, :] += b[i]` — the shared bias broadcast.
+fn add_bias(y: &mut Mat, b: &[f32]) {
+    assert_eq!(y.rows(), b.len());
+    for i in 0..y.rows() {
+        let bi = b[i];
+        for v in y.row_mut(i) {
+            *v += bi;
+        }
+    }
+}
+
+/// `db[i] += Σ_j g[i, j]` — bias-gradient accumulation.
+fn accum_bias_grad(db: &mut [f32], g: &Mat) {
+    for (i, d) in db.iter_mut().enumerate() {
+        *d += g.row(i).iter().sum::<f32>();
+    }
+}
+
+/// Accumulated gradients of a factored `U·Σ·Vᵀ` layer (square or
+/// rectangular) — one struct so both layers share the visit order
+/// (`u`, `v`, `sigma`, `b`) and the accumulation rules.
+struct FactoredGrads {
+    du: Mat,
+    dv: Mat,
+    dsigma: Vec<f32>,
+    db: Vec<f32>,
+}
+
+impl FactoredGrads {
+    fn for_shapes(
+        u: &HouseholderVectors,
+        v: &HouseholderVectors,
+        n_sigma: usize,
+        n_bias: usize,
+    ) -> FactoredGrads {
+        FactoredGrads {
+            du: Mat::zeros(u.dim(), u.count()),
+            dv: Mat::zeros(v.dim(), v.count()),
+            dsigma: vec![0.0; n_sigma],
+            db: vec![0.0; n_bias],
+        }
+    }
+
+    /// `self += (du, dv, dsigma)` from one backward pass.
+    fn accum(&mut self, du: &Mat, dv: &Mat, dsigma: &[f32]) {
+        self.du.axpy(1.0, du);
+        self.dv.axpy(1.0, dv);
+        for (a, &d) in self.dsigma.iter_mut().zip(dsigma) {
+            *a += d;
+        }
+    }
+}
+
+/// The shared [`Params::visit`] body of the factored layers.
+fn visit_factored(
+    f: &mut dyn FnMut(ParamView),
+    u: &mut Mat,
+    v: &mut Mat,
+    sigma: &mut [f32],
+    b: Option<&mut Vec<f32>>,
+    g: &mut FactoredGrads,
+) {
+    f(ParamView { key: "u".into(), param: u.data_mut(), grad: g.du.data_mut() });
+    f(ParamView { key: "v".into(), param: v.data_mut(), grad: g.dv.data_mut() });
+    f(ParamView { key: "sigma".into(), param: sigma, grad: &mut g.dsigma });
+    if let Some(b) = b {
+        f(ParamView { key: "b".into(), param: b, grad: &mut g.db });
+    }
+}
+
+// ----------------------------------------------------------------- Dense
 
 /// Standard dense layer `y = W·x + b` (weights out×in, batch in columns).
 pub struct Dense {
     pub w: Mat,
     pub b: Vec<f32>,
+    grads: RefCell<DenseGrads>,
 }
 
-/// Cache for [`Dense::forward`].
-pub struct DenseCache {
+struct DenseGrads {
+    w: Mat,
+    b: Vec<f32>,
+}
+
+struct DenseCache {
     x: Mat,
 }
 
@@ -21,89 +109,245 @@ impl Dense {
     pub fn new(out_dim: usize, in_dim: usize, rng: &mut Rng) -> Dense {
         let scale = 1.0 / (in_dim as f32).sqrt();
         let w = Mat::randn(out_dim, in_dim, rng).scale(scale);
-        Dense { w, b: vec![0.0; out_dim] }
-    }
-
-    pub fn forward(&self, x: &Mat) -> (Mat, DenseCache) {
-        let mut y = matmul(&self.w, x);
-        for i in 0..y.rows() {
-            let bi = self.b[i];
-            for v in y.row_mut(i) {
-                *v += bi;
-            }
-        }
-        (y, DenseCache { x: x.clone() })
-    }
-
-    /// Returns `(dx, dw, db)`.
-    pub fn backward(&self, cache: &DenseCache, g: &Mat) -> (Mat, Mat, Vec<f32>) {
-        let dx = matmul_tn(&self.w, g);
-        let dw = matmul_nt(g, &cache.x);
-        let db: Vec<f32> = (0..g.rows()).map(|i| g.row(i).iter().sum()).collect();
-        (dx, dw, db)
-    }
-
-    pub fn sgd_step(&mut self, dw: &Mat, db: &[f32], lr: f32) {
-        self.w.axpy(-lr, dw);
-        for (b, &d) in self.b.iter_mut().zip(db) {
-            *b -= lr * d;
+        Dense {
+            w,
+            b: vec![0.0; out_dim],
+            grads: RefCell::new(DenseGrads {
+                w: Mat::zeros(out_dim, in_dim),
+                b: vec![0.0; out_dim],
+            }),
         }
     }
 }
+
+impl Params for Dense {
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+        let g = self.grads.get_mut();
+        f(ParamView { key: "w".into(), param: self.w.data_mut(), grad: g.w.data_mut() });
+        f(ParamView { key: "b".into(), param: &mut self.b, grad: &mut g.b });
+    }
+}
+
+impl Layer for Dense {
+    fn forward(&self, x: &Mat, ctx: &mut Ctx) -> Mat {
+        let mut y = matmul(&self.w, x);
+        add_bias(&mut y, &self.b);
+        ctx.put(DenseCache { x: x.clone() });
+        y
+    }
+
+    fn backward(&self, ctx: &Ctx, g: &Mat) -> Mat {
+        let cache: &DenseCache = ctx.get();
+        let dx = matmul_tn(&self.w, g);
+        let dw = matmul_nt(g, &cache.x);
+        let mut acc = self.grads.borrow_mut();
+        acc.w.axpy(1.0, &dw);
+        accum_bias_grad(&mut acc.b, g);
+        dx
+    }
+}
+
+// ------------------------------------------------------------- LinearSvd
 
 /// The paper's drop-in replacement for `nn.Linear` (§6): a square layer
 /// whose weight is held as `U·Σ·Vᵀ`, multiplied with FastH.
 pub struct LinearSvd {
     pub p: SvdParam,
-    pub b: Vec<f32>,
+    /// Optional bias (recurrent cells typically share the input
+    /// projection's bias and go without).
+    pub b: Option<Vec<f32>>,
     /// FastH block size (tuned or heuristic √d).
     pub k: usize,
-}
-
-/// Cache for [`LinearSvd::forward`].
-pub struct LinearSvdCache {
-    inner: crate::svd::param::SvdCache,
+    /// Post-update spectral constraint (see [`SigmaClip`]).
+    pub clip: SigmaClip,
+    grads: RefCell<FactoredGrads>,
 }
 
 impl LinearSvd {
     pub fn new(d: usize, rng: &mut Rng) -> LinearSvd {
-        let k = crate::householder::tune::KCache::heuristic(d, 32);
-        LinearSvd { p: SvdParam::random_full(d, rng), b: vec![0.0; d], k }
-    }
-
-    pub fn forward(&self, x: &Mat) -> (Mat, LinearSvdCache) {
-        let (mut y, inner) = self.p.forward(x, self.k);
-        for i in 0..y.rows() {
-            let bi = self.b[i];
-            for v in y.row_mut(i) {
-                *v += bi;
-            }
-        }
-        (y, LinearSvdCache { inner })
-    }
-
-    /// Returns `(dx, svd grads, db)`.
-    pub fn backward(&self, cache: &LinearSvdCache, g: &Mat) -> (Mat, SvdGrads, Vec<f32>) {
-        let (dx, grads) = self.p.backward(&cache.inner, g);
-        let db: Vec<f32> = (0..g.rows()).map(|i| g.row(i).iter().sum()).collect();
-        (dx, grads, db)
-    }
-
-    pub fn sgd_step(&mut self, grads: &SvdGrads, db: &[f32], lr: f32) {
-        self.p.sgd_step(grads, lr);
-        for (b, &d) in self.b.iter_mut().zip(db) {
-            *b -= lr * d;
+        let p = SvdParam::random_full(d, rng);
+        let grads = RefCell::new(FactoredGrads::for_shapes(&p.u, &p.v, p.sigma.len(), d));
+        LinearSvd {
+            p,
+            b: Some(vec![0.0; d]),
+            k: tuned_block_k(d, 32),
+            clip: SigmaClip::None,
+            grads,
         }
     }
 
-    /// Spectral clipping (σ ∈ [1±ε]) — call after each optimizer step to
-    /// enforce the spectral-RNN constraint.
-    pub fn clip_sigma(&mut self, eps: f32) {
-        self.p.clip_sigma(eps);
+    /// Bias-free variant (e.g. the RNN's recurrent weight, whose bias
+    /// lives in the input projection).
+    pub fn new_unbiased(d: usize, rng: &mut Rng) -> LinearSvd {
+        let mut l = Self::new(d, rng);
+        l.b = None;
+        l
+    }
+
+    /// Builder: set the post-update spectral constraint.
+    pub fn with_clip(mut self, clip: SigmaClip) -> LinearSvd {
+        self.clip = clip;
+        self
+    }
+
+    /// The engine this layer hands FastH — training and serving share it.
+    pub fn engine(&self) -> crate::householder::Engine {
+        crate::householder::Engine::FastH { k: self.k }
+    }
+
+    /// Add an external σ-gradient contribution (the flow's `−1/σ` logdet
+    /// term) into the accumulated gradient buffer.
+    pub fn accum_sigma_grad(&self, extra: &[f32]) {
+        let mut acc = self.grads.borrow_mut();
+        assert_eq!(acc.dsigma.len(), extra.len());
+        for (a, &e) in acc.dsigma.iter_mut().zip(extra) {
+            *a += e;
+        }
     }
 }
 
-/// Elementwise activations with fused backward.
+impl Params for LinearSvd {
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+        visit_factored(
+            f,
+            &mut self.p.u.v,
+            &mut self.p.v.v,
+            &mut self.p.sigma,
+            self.b.as_mut(),
+            self.grads.get_mut(),
+        );
+        // The sweep may have mutated the raw V vectors; refresh the
+        // cached reversed-V so v and v_rev can never silently diverge,
+        // even if a caller skips post_update.
+        self.p.refresh();
+    }
+}
+
+impl Layer for LinearSvd {
+    fn forward(&self, x: &Mat, ctx: &mut Ctx) -> Mat {
+        let (mut y, cache) = self.p.forward(x, self.k);
+        if let Some(b) = &self.b {
+            add_bias(&mut y, b);
+        }
+        ctx.put(cache);
+        y
+    }
+
+    fn backward(&self, ctx: &Ctx, g: &Mat) -> Mat {
+        let cache: &SvdCache = ctx.get();
+        let (dx, grads) = self.p.backward(cache, g);
+        let mut acc = self.grads.borrow_mut();
+        acc.accum(&grads.du, &grads.dv, &grads.dsigma);
+        if self.b.is_some() {
+            accum_bias_grad(&mut acc.db, g);
+        }
+        dx
+    }
+
+    /// Clip the spectrum per [`Self::clip`]. (The reversed-V cache is
+    /// already refreshed by every `visit` sweep; after mutating `p.v`
+    /// directly, call `p.refresh()` yourself.)
+    fn post_update(&mut self) {
+        self.clip.apply(&mut self.p.sigma);
+    }
+}
+
+// --------------------------------------------------------- RectLinearSvd
+
+/// The rectangular `LinearSVD` (paper §3.3 "Rectangular Matrices"): an
+/// out×in weight held as `U·Σ·Vᵀ` with square orthogonal `U`, `V` and a
+/// rectangular-diagonal Σ — the first non-square client of the layer
+/// traits, trained through the same Eq. 3–5 machinery on both
+/// Householder products.
+pub struct RectLinearSvd {
+    pub p: RectSvdParam,
+    pub b: Option<Vec<f32>>,
+    /// FastH block size (clamped per factor inside `RectSvdParam`).
+    pub k: usize,
+    /// Post-update spectral constraint (see [`SigmaClip`]).
+    pub clip: SigmaClip,
+    grads: RefCell<FactoredGrads>,
+}
+
+impl RectLinearSvd {
+    pub fn new(out_dim: usize, in_dim: usize, rng: &mut Rng) -> RectLinearSvd {
+        let p = RectSvdParam::random(out_dim, in_dim, rng);
+        let grads = RefCell::new(FactoredGrads::for_shapes(&p.u, &p.v, p.sigma.len(), out_dim));
+        RectLinearSvd {
+            p,
+            b: Some(vec![0.0; out_dim]),
+            k: tuned_block_k(out_dim.max(in_dim), 32),
+            clip: SigmaClip::None,
+            grads,
+        }
+    }
+
+    /// Bias-free variant (pure `U·Σ·Vᵀ·x`, handy for gradchecks).
+    pub fn new_unbiased(out_dim: usize, in_dim: usize, rng: &mut Rng) -> RectLinearSvd {
+        let mut l = Self::new(out_dim, in_dim, rng);
+        l.b = None;
+        l
+    }
+
+    /// Builder: set the post-update spectral constraint.
+    pub fn with_clip(mut self, clip: SigmaClip) -> RectLinearSvd {
+        self.clip = clip;
+        self
+    }
+
+    /// The engine this layer hands FastH — training and serving share it.
+    pub fn engine(&self) -> crate::householder::Engine {
+        crate::householder::Engine::FastH { k: self.k }
+    }
+}
+
+impl Params for RectLinearSvd {
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+        visit_factored(
+            f,
+            &mut self.p.u.v,
+            &mut self.p.v.v,
+            &mut self.p.sigma,
+            self.b.as_mut(),
+            self.grads.get_mut(),
+        );
+        // Keep v_rev coherent with whatever the sweep just wrote (see
+        // the square LinearSvd impl).
+        self.p.refresh();
+    }
+}
+
+impl Layer for RectLinearSvd {
+    fn forward(&self, x: &Mat, ctx: &mut Ctx) -> Mat {
+        let (mut y, cache) = self.p.forward(x, self.k);
+        if let Some(b) = &self.b {
+            add_bias(&mut y, b);
+        }
+        ctx.put(cache);
+        y
+    }
+
+    fn backward(&self, ctx: &Ctx, g: &Mat) -> Mat {
+        let cache: &RectSvdCache = ctx.get();
+        let (dx, grads) = self.p.backward(cache, g);
+        let mut acc = self.grads.borrow_mut();
+        acc.accum(&grads.du, &grads.dv, &grads.dsigma);
+        if self.b.is_some() {
+            accum_bias_grad(&mut acc.db, g);
+        }
+        dx
+    }
+
+    /// Clip the spectrum per [`Self::clip`] (reversed-V refresh happens
+    /// in every `visit` sweep, as for the square layer).
+    fn post_update(&mut self) {
+        self.clip.apply(&mut self.p.sigma);
+    }
+}
+
+// ------------------------------------------------------------ Activation
+
+/// Elementwise activations with fused backward (no parameters).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
     Tanh,
@@ -111,18 +355,33 @@ pub enum Activation {
     Identity,
 }
 
-impl Activation {
-    pub fn forward(&self, x: &Mat) -> Mat {
-        match self {
+struct ActCache {
+    /// Forward *output* `y = f(x)` — both tanh and relu derivatives are
+    /// expressible from the output.
+    y: Mat,
+}
+
+impl Params for Activation {
+    fn visit(&mut self, _f: &mut dyn FnMut(ParamView)) {}
+}
+
+impl Layer for Activation {
+    fn forward(&self, x: &Mat, ctx: &mut Ctx) -> Mat {
+        let y = match self {
             Activation::Tanh => x.map(|v| v.tanh()),
             Activation::Relu => x.map(|v| v.max(0.0)),
-            Activation::Identity => x.clone(),
-        }
+            // Identity caches nothing — its backward is g unchanged.
+            Activation::Identity => return x.clone(),
+        };
+        ctx.put(ActCache { y: y.clone() });
+        y
     }
 
-    /// `g ⊙ f'(x)` given the forward *output* `y = f(x)` (both tanh and
-    /// relu derivatives are expressible from the output).
-    pub fn backward(&self, y: &Mat, g: &Mat) -> Mat {
+    fn backward(&self, ctx: &Ctx, g: &Mat) -> Mat {
+        if matches!(self, Activation::Identity) {
+            return g.clone();
+        }
+        let y = &ctx.get::<ActCache>().y;
         match self {
             Activation::Tanh => {
                 let mut out = g.clone();
@@ -147,21 +406,27 @@ impl Activation {
 
 #[cfg(test)]
 mod tests {
+    use super::super::module::{collect_grads, grad_by_key};
+    use super::super::optim::{Optimizer, Sgd};
     use super::*;
     use crate::linalg::oracle;
     use crate::util::prop::assert_close;
+
+    fn grad_of(layer: &mut dyn Params, key: &str) -> Vec<f32> {
+        grad_by_key(layer, key).unwrap_or_else(|| panic!("no parameter '{key}'"))
+    }
 
     #[test]
     fn dense_forward_shapes_and_bias() {
         let mut rng = Rng::new(161);
         let layer = Dense::new(5, 3, &mut rng);
         let x = Mat::randn(3, 7, &mut rng);
-        let (y, _c) = layer.forward(&x);
+        let y = layer.forward(&x, &mut Ctx::empty());
         assert_eq!((y.rows(), y.cols()), (5, 7));
         // Zero input → output = bias broadcast.
         let mut l2 = Dense::new(2, 2, &mut rng);
         l2.b = vec![1.5, -0.5];
-        let (y2, _) = l2.forward(&Mat::zeros(2, 3));
+        let y2 = l2.forward(&Mat::zeros(2, 3), &mut Ctx::empty());
         assert_eq!(y2.row(0), &[1.5, 1.5, 1.5]);
         assert_eq!(y2.row(1), &[-0.5, -0.5, -0.5]);
     }
@@ -169,29 +434,51 @@ mod tests {
     #[test]
     fn dense_gradcheck() {
         let mut rng = Rng::new(162);
-        let layer = Dense::new(4, 3, &mut rng);
+        let mut layer = Dense::new(4, 3, &mut rng);
         let x = Mat::randn(3, 2, &mut rng);
         let g = Mat::randn(4, 2, &mut rng);
-        let (_y, cache) = layer.forward(&x);
-        let (dx, dw, db) = layer.backward(&cache, &g);
+        let mut ctx = Ctx::empty();
+        let _y = layer.forward(&x, &mut ctx);
+        let dx = layer.backward(&ctx, &g);
+        let loss = |w: &Mat, b: &[f32], x: &Mat| -> f64 {
+            let l2 = Dense {
+                w: w.clone(),
+                b: b.to_vec(),
+                grads: RefCell::new(DenseGrads { w: Mat::zeros(4, 3), b: vec![0.0; 4] }),
+            };
+            let y = l2.forward(x, &mut Ctx::empty());
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
         let fd_w = oracle::finite_diff_grad(layer.w.data(), 1e-3, |p| {
-            let l2 = Dense { w: Mat::from_vec(4, 3, p.to_vec()), b: layer.b.clone() };
-            let (y, _) = l2.forward(&x);
-            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+            loss(&Mat::from_vec(4, 3, p.to_vec()), &layer.b, &x)
         });
-        assert_close(dw.data(), &fd_w, 1e-2, 5e-2).unwrap();
+        assert_close(&grad_of(&mut layer, "w"), &fd_w, 1e-2, 5e-2).unwrap();
+        let fd_b = oracle::finite_diff_grad(&layer.b, 1e-3, |p| loss(&layer.w, p, &x));
+        assert_close(&grad_of(&mut layer, "b"), &fd_b, 1e-2, 5e-2).unwrap();
         let fd_x = oracle::finite_diff_grad(x.data(), 1e-3, |p| {
-            let x2 = Mat::from_vec(3, 2, p.to_vec());
-            let (y, _) = layer.forward(&x2);
-            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+            loss(&layer.w, &layer.b, &Mat::from_vec(3, 2, p.to_vec()))
         });
         assert_close(dx.data(), &fd_x, 1e-2, 5e-2).unwrap();
-        let fd_b = oracle::finite_diff_grad(&layer.b, 1e-3, |p| {
-            let l2 = Dense { w: layer.w.clone(), b: p.to_vec() };
-            let (y, _) = l2.forward(&x);
-            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
-        });
-        assert_close(&db, &fd_b, 1e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn backward_accumulates_across_calls() {
+        // Two identical backward passes must produce exactly 2× the
+        // gradient of one — the contract BPTT relies on.
+        let mut rng = Rng::new(165);
+        let mut layer = Dense::new(4, 3, &mut rng);
+        let x = Mat::randn(3, 2, &mut rng);
+        let g = Mat::randn(4, 2, &mut rng);
+        let mut ctx = Ctx::empty();
+        let _ = layer.forward(&x, &mut ctx);
+        let _ = layer.backward(&ctx, &g);
+        let once = grad_of(&mut layer, "w");
+        let _ = layer.backward(&ctx, &g);
+        let twice = grad_of(&mut layer, "w");
+        let doubled: Vec<f32> = once.iter().map(|v| 2.0 * v).collect();
+        assert_close(&twice, &doubled, 1e-5, 1e-5).unwrap();
+        layer.zero_grads();
+        assert!(grad_of(&mut layer, "w").iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -199,7 +486,7 @@ mod tests {
         let mut rng = Rng::new(163);
         let layer = LinearSvd::new(8, &mut rng);
         let x = Mat::randn(8, 4, &mut rng);
-        let (y, _c) = layer.forward(&x);
+        let y = layer.forward(&x, &mut Ctx::empty());
         let w = layer.p.materialize();
         let want = oracle::matmul_f64(&w, &x);
         assert_close(y.data(), want.data(), 1e-3, 1e-2).unwrap();
@@ -208,14 +495,17 @@ mod tests {
     #[test]
     fn linear_svd_training_keeps_orthogonality() {
         let mut rng = Rng::new(164);
-        let mut layer = LinearSvd::new(6, &mut rng);
+        let mut layer = LinearSvd::new(6, &mut rng).with_clip(SigmaClip::Band(0.05));
         let x = Mat::randn(6, 3, &mut rng);
         let g = Mat::randn(6, 3, &mut rng);
+        let mut opt = Sgd::new(0.05, 0.0);
         for _ in 0..4 {
-            let (_y, c) = layer.forward(&x);
-            let (_dx, grads, db) = layer.backward(&c, &g);
-            layer.sgd_step(&grads, &db, 0.05);
-            layer.clip_sigma(0.05);
+            layer.zero_grads();
+            let mut ctx = Ctx::empty();
+            let _y = layer.forward(&x, &mut ctx);
+            let _dx = layer.backward(&ctx, &g);
+            opt.step(&mut layer);
+            layer.post_update();
         }
         let u = layer.p.u.materialize();
         let utu = oracle::matmul_f64(&u.t(), &u);
@@ -226,18 +516,52 @@ mod tests {
     }
 
     #[test]
+    fn rect_linear_svd_matches_materialized_weight() {
+        let mut rng = Rng::new(166);
+        for (n, m) in [(10usize, 4usize), (4, 10)] {
+            let layer = RectLinearSvd::new_unbiased(n, m, &mut rng);
+            let x = Mat::randn(m, 3, &mut rng);
+            let y = layer.forward(&x, &mut Ctx::empty());
+            assert_eq!((y.rows(), y.cols()), (n, 3));
+            let w = layer.p.materialize(layer.k);
+            let want = oracle::matmul_f64(&w, &x);
+            assert_close(y.data(), want.data(), 1e-3, 1e-2).unwrap();
+        }
+    }
+
+    #[test]
+    fn rect_linear_svd_bias_and_keys() {
+        let mut rng = Rng::new(167);
+        let mut layer = RectLinearSvd::new(5, 3, &mut rng);
+        if let Some(b) = layer.b.as_mut() {
+            b[0] = 2.0;
+        }
+        let y = layer.forward(&Mat::zeros(3, 2), &mut Ctx::empty());
+        assert_eq!(y.row(0), &[2.0, 2.0]);
+        let keys: Vec<String> = collect_grads(&mut layer).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["u", "v", "sigma", "b"]);
+        // σ has min(out, in) entries; U and V gradients are square.
+        let gs = collect_grads(&mut layer);
+        assert_eq!(gs[2].1.len(), 3);
+        assert_eq!(gs[0].1.len(), 25);
+        assert_eq!(gs[1].1.len(), 9);
+    }
+
+    #[test]
     fn activations_forward_backward() {
         let x = Mat::from_vec(1, 4, vec![-2.0, -0.5, 0.5, 2.0]);
         let g = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
         let relu = Activation::Relu;
-        let y = relu.forward(&x);
+        let mut ctx = Ctx::empty();
+        let y = relu.forward(&x, &mut ctx);
         assert_eq!(y.data(), &[0.0, 0.0, 0.5, 2.0]);
-        let dg = relu.backward(&y, &g);
+        let dg = relu.backward(&ctx, &g);
         assert_eq!(dg.data(), &[0.0, 0.0, 1.0, 1.0]);
 
         let tanh = Activation::Tanh;
-        let y = tanh.forward(&x);
-        let dg = tanh.backward(&y, &g);
+        let mut ctx = Ctx::empty();
+        let _y = tanh.forward(&x, &mut ctx);
+        let dg = tanh.backward(&ctx, &g);
         for (d, &xx) in dg.data().iter().zip(x.data()) {
             let want = 1.0 - xx.tanh() * xx.tanh();
             assert!((d - want).abs() < 1e-5);

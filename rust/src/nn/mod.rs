@@ -2,9 +2,18 @@
 //!
 //! The paper's technique lives *inside* networks: [`layers::LinearSvd`]
 //! is the drop-in `nn.Linear` replacement the paper ships ("change
-//! NN.LINEAR to LINEARSVD", §6), and [`rnn::SvdRnn`] is the spectral-RNN
-//! use case the reparameterization was invented for (singular values
-//! clipped to `[1±ε]` against exploding/vanishing gradients).
+//! NN.LINEAR to LINEARSVD", §6), [`layers::RectLinearSvd`] is its
+//! non-square sibling (§3.3 "Rectangular Matrices"), and [`rnn::SvdRnn`]
+//! is the spectral-RNN use case the reparameterization was invented for
+//! (singular values clipped to `[1±ε]` against exploding/vanishing
+//! gradients).
+//!
+//! Every layer speaks the [`module::Layer`]/[`module::Params`] contract:
+//! `forward(x, ctx)` / `backward(ctx, g)` with a type-erased per-layer
+//! cache, gradients accumulated in the layer, and parameters exposed to
+//! any [`optim::Optimizer`] through key-stable [`module::Params::visit`]
+//! sweeps — see [`module`] for the tour and the Dense → LinearSvd swap
+//! example. [`module::Sequential`] owns the feed-forward training loop.
 //!
 //! Everything needed to train — activations, losses, optimizers, synthetic
 //! tasks — is implemented here from scratch; batches are column-major
@@ -13,11 +22,13 @@
 pub mod flow;
 pub mod layers;
 pub mod loss;
+pub mod module;
 pub mod optim;
 pub mod rnn;
 pub mod tasks;
 
-pub use layers::{Activation, Dense, LinearSvd};
+pub use layers::{Activation, Dense, LinearSvd, RectLinearSvd};
 pub use loss::{mse, softmax_cross_entropy};
-pub use optim::{Adam, Sgd};
+pub use module::{Ctx, Layer, ParamView, Params, Sequential, SigmaClip};
+pub use optim::{Adam, Optimizer, Sgd};
 pub use rnn::SvdRnn;

@@ -1,0 +1,378 @@
+//! The `nn` layer contract: [`Layer`] (forward/backward with a
+//! type-erased per-layer cache) and [`Params`] (uniform parameter
+//! traversal), plus the [`Sequential`] container that owns the training
+//! loop.
+//!
+//! The paper's pitch (§1, §6) is that SVD-reparameterized layers are
+//! *drop-in* replacements for dense layers; these traits make that
+//! literal. Every layer — [`super::Dense`], [`super::LinearSvd`], the
+//! rectangular [`super::RectLinearSvd`], [`super::Activation`], the flow
+//! blocks and the RNN cells — speaks the same `forward(x, ctx)` /
+//! `backward(ctx, g)` protocol and publishes its parameters through
+//! [`Params::visit`], so one optimizer sweep (keyed by stable string
+//! paths, no manual slot bookkeeping) trains any composition of them.
+//!
+//! Swapping a dense hidden layer for its SVD twin is a one-line change:
+//!
+//! ```
+//! use fasth::nn::loss::softmax_cross_entropy;
+//! use fasth::nn::{Activation, Adam, Dense, LinearSvd, Sequential, SigmaClip};
+//! use fasth::util::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! let d = 8;
+//! let mut model = Sequential::new()
+//!     .push(Dense::new(d, 2, &mut rng))
+//!     .push(Activation::Tanh)
+//!     // was: .push(Dense::new(d, d, &mut rng))
+//!     .push(LinearSvd::new(d, &mut rng).with_clip(SigmaClip::Band(0.25)))
+//!     .push(Activation::Tanh)
+//!     .push(Dense::new(3, d, &mut rng));
+//!
+//! let (x, y) = fasth::nn::tasks::spirals(4, 0.05, &mut rng);
+//! let mut opt = Adam::new(0.01);
+//! for _ in 0..2 {
+//!     let (loss, _logits) =
+//!         model.train_step(&x, |logits| softmax_cross_entropy(logits, &y), &mut opt);
+//!     assert!(loss.is_finite());
+//! }
+//! ```
+//!
+//! The FastH engine selection stays inside the layers: each SVD layer
+//! carries its block size `k` (warm-started from the tuned
+//! [`KCache`](crate::householder::tune::KCache) via [`tuned_block_k`]),
+//! so training and serving share one `Engine::FastH { k }` code path.
+
+use crate::linalg::Mat;
+use crate::svd::param::{clip_sigma_band, clip_sigma_floor};
+use std::any::Any;
+
+/// Type-erased per-layer forward cache.
+///
+/// `forward` stashes whatever its `backward` needs (inputs, WY caches,
+/// pre-activations) with [`Ctx::put`]; `backward` reads it back with
+/// [`Ctx::get`]. One `Ctx` corresponds to one forward invocation, so a
+/// layer applied at several points of a network (or several timesteps of
+/// a BPTT unroll) gets one `Ctx` per application.
+#[derive(Default)]
+pub struct Ctx(Option<Box<dyn Any>>);
+
+impl Ctx {
+    /// A cache slot with nothing in it yet.
+    pub fn empty() -> Ctx {
+        Ctx(None)
+    }
+
+    /// Store this forward pass's cache (replaces any previous content).
+    pub fn put<T: 'static>(&mut self, value: T) {
+        self.0 = Some(Box::new(value));
+    }
+
+    /// Borrow the cache stored by `forward`. Panics if the slot is empty
+    /// or holds a different layer's cache type — both are caller bugs
+    /// (mismatched `Ctx` threading).
+    pub fn get<T: 'static>(&self) -> &T {
+        self.0
+            .as_deref()
+            .and_then(|a| a.downcast_ref::<T>())
+            .expect("Ctx: cache missing or of the wrong type (mismatched forward/backward?)")
+    }
+}
+
+/// One parameter tensor exposed during a [`Params::visit`] sweep: the
+/// flat value slice, its accumulated gradient, and an optimizer-stable
+/// key (a path like `"2.u"` — containers prefix their children, so keys
+/// are unique across a model and identical from step to step).
+pub struct ParamView<'a> {
+    pub key: String,
+    pub param: &'a mut [f32],
+    pub grad: &'a mut [f32],
+}
+
+/// Uniform parameter traversal. Implementations must visit the same
+/// parameters, with the same keys, in the same order on every call —
+/// optimizers key their per-parameter state off `ParamView::key`.
+pub trait Params {
+    /// Call `f` once per parameter tensor.
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView));
+
+    /// Reset all accumulated gradients to zero (start of a train step).
+    fn zero_grads(&mut self) {
+        self.visit(&mut |pv| pv.grad.fill(0.0));
+    }
+}
+
+/// The layer contract. `forward` writes its cache into `ctx`; `backward`
+/// *accumulates* parameter gradients into the layer's internal buffers
+/// (so recurrent reuse across timesteps sums naturally) and returns
+/// `∂L/∂x`. Call [`Params::zero_grads`] before each training step —
+/// [`Sequential::train_step`] does.
+pub trait Layer: Params {
+    fn forward(&self, x: &Mat, ctx: &mut Ctx) -> Mat;
+    fn backward(&self, ctx: &Ctx, g: &Mat) -> Mat;
+
+    /// Constraint hook run once after each optimizer sweep (e.g. the
+    /// [`SigmaClip`] spectral constraints). Default: nothing.
+    fn post_update(&mut self) {}
+}
+
+/// Post-update singular-value constraint, shared by every SVD layer (and
+/// by the flow's invertibility floor) instead of per-call-site clamping.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SigmaClip {
+    /// Leave the spectrum alone.
+    None,
+    /// Spectral-RNN band: clamp every σ to `[1−ε, 1+ε]` (paper §5).
+    Band(f32),
+    /// Invertibility floor: push |σ| up to at least `floor`, keeping sign
+    /// (the normalizing-flow requirement).
+    Floor(f32),
+}
+
+impl SigmaClip {
+    /// Apply the constraint in place.
+    pub fn apply(&self, sigma: &mut [f32]) {
+        match *self {
+            SigmaClip::None => {}
+            SigmaClip::Band(eps) => clip_sigma_band(sigma, eps),
+            SigmaClip::Floor(floor) => clip_sigma_floor(sigma, floor),
+        }
+    }
+}
+
+/// Visit `p`'s parameters with every key prefixed by `prefix` + `"."` —
+/// how containers ([`Sequential`], the flow, the RNN) keep keys unique.
+pub fn visit_prefixed<P: Params + ?Sized>(p: &mut P, prefix: &str, f: &mut dyn FnMut(ParamView)) {
+    p.visit(&mut |mut pv| {
+        pv.key = format!("{prefix}.{}", pv.key);
+        f(pv);
+    });
+}
+
+/// Snapshot every `(key, gradient)` pair — diagnostics and gradcheck
+/// tests; the training path never materializes this.
+pub fn collect_grads(p: &mut dyn Params) -> Vec<(String, Vec<f32>)> {
+    let mut out = Vec::new();
+    p.visit(&mut |pv| out.push((pv.key.clone(), pv.grad.to_vec())));
+    out
+}
+
+/// The accumulated gradient of the parameter named `key`, if it exists —
+/// the single find-by-key lookup the gradcheck tests share.
+pub fn grad_by_key(p: &mut dyn Params, key: &str) -> Option<Vec<f32>> {
+    let mut out = None;
+    p.visit(&mut |pv| {
+        if pv.key == key {
+            out = Some(pv.grad.to_vec());
+        }
+    });
+    out
+}
+
+/// FastH block size for a `d`-dimensional factor: the tuned value from
+/// the persistent [`KCache`](crate::householder::tune::KCache) when one
+/// was measured for `(d, m_hint)`, else the √d heuristic — the same
+/// selection path the serving stack uses.
+pub fn tuned_block_k(d: usize, m_hint: usize) -> usize {
+    use crate::householder::tune::KCache;
+    KCache::global()
+        .lookup(d, m_hint)
+        .map(|t| t.k)
+        .unwrap_or_else(|| KCache::heuristic(d, m_hint))
+        .max(1)
+}
+
+/// A feed-forward stack of boxed [`Layer`]s that owns the training loop:
+/// forward → loss → backward → one optimizer sweep → constraint hooks.
+///
+/// Parameters are keyed `"<layer index>.<local name>"`, so the optimizer
+/// state stays attached to the right tensor for the life of the model.
+#[derive(Default)]
+pub struct Sequential {
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    pub fn new() -> Sequential {
+        Sequential { layers: Vec::new() }
+    }
+
+    /// Builder-style append.
+    pub fn push(mut self, layer: impl Layer + 'static) -> Sequential {
+        self.layers.push(Box::new(layer));
+        self
+    }
+
+    /// Forward through every layer, returning the output and one [`Ctx`]
+    /// per layer for the matching [`Sequential::backward`].
+    pub fn forward(&self, x: &Mat) -> (Mat, Vec<Ctx>) {
+        let mut ctxs: Vec<Ctx> = (0..self.layers.len()).map(|_| Ctx::empty()).collect();
+        let mut cur = x.clone();
+        for (layer, ctx) in self.layers.iter().zip(ctxs.iter_mut()) {
+            cur = layer.forward(&cur, ctx);
+        }
+        (cur, ctxs)
+    }
+
+    /// Backward through every layer (reverse order), accumulating each
+    /// layer's parameter gradients; returns `∂L/∂x`.
+    pub fn backward(&self, ctxs: &[Ctx], g: &Mat) -> Mat {
+        assert_eq!(ctxs.len(), self.layers.len(), "ctx count mismatch");
+        let mut cur = g.clone();
+        for (layer, ctx) in self.layers.iter().zip(ctxs).rev() {
+            cur = layer.backward(ctx, &cur);
+        }
+        cur
+    }
+
+    /// Run every layer's [`Layer::post_update`] hook (after an optimizer
+    /// sweep).
+    pub fn post_update(&mut self) {
+        for layer in &mut self.layers {
+            layer.post_update();
+        }
+    }
+
+    /// One full training step: zero grads, forward, `loss(output)` →
+    /// `(scalar, ∂L/∂output)`, backward, a single optimizer sweep over
+    /// all parameters, then the post-update hooks. Returns the loss and
+    /// the network output (for metrics).
+    pub fn train_step(
+        &mut self,
+        x: &Mat,
+        loss: impl FnOnce(&Mat) -> (f64, Mat),
+        opt: &mut dyn super::optim::Optimizer,
+    ) -> (f64, Mat) {
+        self.zero_grads();
+        let (out, ctxs) = self.forward(x);
+        let (loss_val, g) = loss(&out);
+        self.backward(&ctxs, &g);
+        opt.step(self);
+        self.post_update();
+        (loss_val, out)
+    }
+}
+
+impl Params for Sequential {
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            layer.visit(&mut |mut pv| {
+                pv.key = format!("{i}.{}", pv.key);
+                f(pv);
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::nn::loss::softmax_cross_entropy;
+    use crate::nn::{Activation, Adam, Dense, LinearSvd};
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn ctx_roundtrip() {
+        let mut ctx = Ctx::empty();
+        ctx.put(41usize);
+        assert_eq!(*ctx.get::<usize>(), 41);
+        ctx.put(1.5f32); // replaces
+        assert_eq!(*ctx.get::<f32>(), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "Ctx")]
+    fn ctx_wrong_type_panics() {
+        let mut ctx = Ctx::empty();
+        ctx.put(1usize);
+        let _ = ctx.get::<f32>();
+    }
+
+    #[test]
+    fn sigma_clip_variants() {
+        let mut s = vec![0.1f32, 0.9, 1.0, 1.05, 2.0, -3.0];
+        SigmaClip::None.apply(&mut s);
+        assert_eq!(s, vec![0.1, 0.9, 1.0, 1.05, 2.0, -3.0]);
+        SigmaClip::Band(0.05).apply(&mut s);
+        for &v in &s {
+            assert!((0.95..=1.05).contains(&v), "σ={v}");
+        }
+        let mut s = vec![0.01f32, -0.02, 0.5, -0.5];
+        SigmaClip::Floor(0.05).apply(&mut s);
+        assert_eq!(s, vec![0.05, -0.05, 0.5, -0.5]);
+    }
+
+    #[test]
+    fn sequential_keys_are_stable_and_unique() {
+        let mut rng = Rng::new(201);
+        let mut model = Sequential::new()
+            .push(Dense::new(4, 3, &mut rng))
+            .push(Activation::Tanh)
+            .push(LinearSvd::new(4, &mut rng));
+        let keys = |m: &mut Sequential| -> Vec<String> {
+            let mut ks = Vec::new();
+            m.visit(&mut |pv| ks.push(pv.key.clone()));
+            ks
+        };
+        let k1 = keys(&mut model);
+        let k2 = keys(&mut model);
+        assert_eq!(k1, k2, "visit order must be deterministic");
+        let unique: std::collections::BTreeSet<&String> = k1.iter().collect();
+        assert_eq!(unique.len(), k1.len(), "keys must be unique: {k1:?}");
+        assert!(k1.contains(&"0.w".to_string()), "{k1:?}");
+        assert!(k1.contains(&"2.sigma".to_string()), "{k1:?}");
+    }
+
+    #[test]
+    fn sequential_backward_matches_finite_difference() {
+        // End-to-end gradcheck of the container: d(loss)/d(input) through
+        // Dense → tanh → LinearSvd matches finite differences.
+        let mut rng = Rng::new(202);
+        let model = Sequential::new()
+            .push(Dense::new(5, 3, &mut rng))
+            .push(Activation::Tanh)
+            .push(LinearSvd::new(5, &mut rng));
+        let x = Mat::randn(3, 4, &mut rng);
+        let g = Mat::randn(5, 4, &mut rng);
+        let (_y, ctxs) = model.forward(&x);
+        let dx = model.backward(&ctxs, &g);
+        let fd = oracle::finite_diff_grad(x.data(), 1e-3, |p| {
+            let x2 = Mat::from_vec(3, 4, p.to_vec());
+            let (y, _) = model.forward(&x2);
+            y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        });
+        assert_close(dx.data(), &fd, 1e-2, 5e-2).unwrap();
+    }
+
+    #[test]
+    fn train_step_reduces_loss() {
+        let mut rng = Rng::new(203);
+        let d = 12;
+        let (x, y) = crate::nn::tasks::spirals(24, 0.05, &mut rng);
+        let mut model = Sequential::new()
+            .push(Dense::new(d, 2, &mut rng))
+            .push(Activation::Tanh)
+            .push(LinearSvd::new(d, &mut rng).with_clip(SigmaClip::Band(0.25)))
+            .push(Activation::Tanh)
+            .push(Dense::new(3, d, &mut rng));
+        let mut opt = Adam::new(0.02);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..40 {
+            let (loss, _) =
+                model.train_step(&x, |logits| softmax_cross_entropy(logits, &y), &mut opt);
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        let first = first.unwrap();
+        assert!(last < 0.8 * first, "loss {first:.4} → {last:.4}");
+    }
+
+    #[test]
+    fn tuned_block_k_is_sane() {
+        let k = tuned_block_k(64, 32);
+        assert!(k >= 1 && k <= 64, "k={k}");
+    }
+}

@@ -1,44 +1,59 @@
-//! Optimizers over flat parameter slices.
+//! Optimizers over [`Params`] sweeps.
 //!
 //! Parameters live in heterogeneous containers (`Mat`, `Vec<f32>`,
-//! Householder vector matrices); both optimizers operate on `&mut [f32]`
-//! views registered in a stable order, so one optimizer instance can own
-//! the state for a whole model.
+//! Householder vector matrices); a model exposes them through
+//! [`Params::visit`], and one [`Optimizer::step`] call updates every
+//! tensor. Per-parameter state (momentum, Adam moments) is keyed by the
+//! visit's stable string keys — there is no manual slot bookkeeping, and
+//! Adam's timestep advances automatically once per sweep, so bias
+//! correction cannot be silently corrupted by a forgotten `begin_step`.
+
+use super::module::{ParamView, Params};
+use std::collections::HashMap;
+
+/// A full-model update: one sweep over `params`, consuming the
+/// accumulated gradients. Constraint hooks ([`post_update`]) are the
+/// *caller's* job (the containers' `train_step`s run them).
+///
+/// [`post_update`]: super::module::Layer::post_update
+pub trait Optimizer {
+    fn step(&mut self, params: &mut dyn Params);
+}
 
 /// Plain SGD with optional momentum.
 pub struct Sgd {
     pub lr: f32,
     pub momentum: f32,
-    velocity: Vec<Vec<f32>>,
+    velocity: HashMap<String, Vec<f32>>,
 }
 
 impl Sgd {
     pub fn new(lr: f32, momentum: f32) -> Sgd {
-        Sgd { lr, momentum, velocity: Vec::new() }
+        Sgd { lr, momentum, velocity: HashMap::new() }
     }
+}
 
-    /// Update registered slot `slot` (slots must be visited in the same
-    /// order every step; state is allocated lazily on first visit).
-    pub fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32]) {
-        assert_eq!(param.len(), grad.len());
-        while self.velocity.len() <= slot {
-            self.velocity.push(Vec::new());
-        }
-        let v = &mut self.velocity[slot];
-        if v.is_empty() {
-            v.resize(param.len(), 0.0);
-        }
-        assert_eq!(v.len(), param.len(), "slot {slot} shape changed");
-        if self.momentum == 0.0 {
-            for (p, &g) in param.iter_mut().zip(grad) {
-                *p -= self.lr * g;
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut dyn Params) {
+        let (lr, momentum) = (self.lr, self.momentum);
+        let velocity = &mut self.velocity;
+        params.visit(&mut |pv: ParamView| {
+            assert_eq!(pv.param.len(), pv.grad.len());
+            if momentum == 0.0 {
+                for (p, &g) in pv.param.iter_mut().zip(pv.grad.iter()) {
+                    *p -= lr * g;
+                }
+                return;
             }
-        } else {
-            for ((p, vel), &g) in param.iter_mut().zip(v.iter_mut()).zip(grad) {
-                *vel = self.momentum * *vel + g;
-                *p -= self.lr * *vel;
+            let v = velocity
+                .entry(pv.key.clone())
+                .or_insert_with(|| vec![0.0; pv.param.len()]);
+            assert_eq!(v.len(), pv.param.len(), "param '{}' shape changed", pv.key);
+            for ((p, vel), &g) in pv.param.iter_mut().zip(v.iter_mut()).zip(pv.grad.iter()) {
+                *vel = momentum * *vel + g;
+                *p -= lr * *vel;
             }
-        }
+        });
     }
 }
 
@@ -49,43 +64,63 @@ pub struct Adam {
     pub beta2: f32,
     pub eps: f32,
     t: i32,
-    m: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    slots: HashMap<String, AdamSlot>,
+}
+
+struct AdamSlot {
+    m: Vec<f32>,
+    v: Vec<f32>,
 }
 
 impl Adam {
     pub fn new(lr: f32) -> Adam {
-        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, slots: HashMap::new() }
     }
 
-    /// Call once per optimization step *before* the per-slot updates.
-    pub fn begin_step(&mut self) {
+    /// Number of optimizer steps taken so far.
+    pub fn timestep(&self) -> i32 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut dyn Params) {
+        // The timestep advances exactly once per sweep — bias correction
+        // is correct by construction.
         self.t += 1;
-    }
-
-    pub fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32]) {
-        assert_eq!(param.len(), grad.len());
-        assert!(self.t >= 1, "call begin_step() first");
-        while self.m.len() <= slot {
-            self.m.push(Vec::new());
-            self.v.push(Vec::new());
-        }
-        if self.m[slot].is_empty() {
-            self.m[slot].resize(param.len(), 0.0);
-            self.v[slot].resize(param.len(), 0.0);
-        }
-        let (mm, vv) = (&mut self.m[slot], &mut self.v[slot]);
-        assert_eq!(mm.len(), param.len(), "slot {slot} shape changed");
-        let bc1 = 1.0 - self.beta1.powi(self.t);
-        let bc2 = 1.0 - self.beta2.powi(self.t);
-        for i in 0..param.len() {
-            let g = grad[i];
-            mm[i] = self.beta1 * mm[i] + (1.0 - self.beta1) * g;
-            vv[i] = self.beta2 * vv[i] + (1.0 - self.beta2) * g * g;
-            let mhat = mm[i] / bc1;
-            let vhat = vv[i] / bc2;
-            param[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
-        }
+        let (lr, beta1, beta2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - beta1.powi(self.t);
+        let bc2 = 1.0 - beta2.powi(self.t);
+        let slots = &mut self.slots;
+        // A key visited twice within one sweep would double-apply the
+        // update with a stale timestep — a container bug; trap it in
+        // debug builds (no tracking cost in release).
+        #[cfg(debug_assertions)]
+        let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+        params.visit(&mut |pv: ParamView| {
+            assert_eq!(pv.param.len(), pv.grad.len());
+            #[cfg(debug_assertions)]
+            {
+                assert!(
+                    seen.insert(pv.key.clone()),
+                    "param '{}' updated twice within one Adam step",
+                    pv.key
+                );
+            }
+            let slot = slots.entry(pv.key.clone()).or_insert_with(|| AdamSlot {
+                m: vec![0.0; pv.param.len()],
+                v: vec![0.0; pv.param.len()],
+            });
+            assert_eq!(slot.m.len(), pv.param.len(), "param '{}' shape changed", pv.key);
+            for i in 0..pv.param.len() {
+                let g = pv.grad[i];
+                slot.m[i] = beta1 * slot.m[i] + (1.0 - beta1) * g;
+                slot.v[i] = beta2 * slot.v[i] + (1.0 - beta2) * g * g;
+                let mhat = slot.m[i] / bc1;
+                let vhat = slot.v[i] / bc2;
+                pv.param[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        });
     }
 }
 
@@ -93,69 +128,97 @@ impl Adam {
 mod tests {
     use super::*;
 
-    /// Minimize f(x) = Σ (x_i − target_i)² with each optimizer.
-    fn quadratic_descent(opt: &mut dyn FnMut(&mut [f32], &[f32])) -> f32 {
-        let target = [3.0f32, -1.0, 0.5];
-        let mut x = [0.0f32; 3];
-        for _ in 0..400 {
-            let grad: Vec<f32> = x.iter().zip(&target).map(|(&xi, &t)| 2.0 * (xi - t)).collect();
-            opt(&mut x, &grad);
+    /// One named parameter vector with an externally-set gradient.
+    struct VecParams {
+        key: &'static str,
+        x: Vec<f32>,
+        g: Vec<f32>,
+    }
+
+    impl Params for VecParams {
+        fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+            f(ParamView { key: self.key.into(), param: &mut self.x, grad: &mut self.g });
         }
-        x.iter().zip(&target).map(|(&xi, &t)| (xi - t) * (xi - t)).sum()
+    }
+
+    /// Minimize f(x) = Σ (x_i − target_i)² with the given optimizer.
+    fn quadratic_descent(opt: &mut dyn Optimizer) -> f32 {
+        let target = [3.0f32, -1.0, 0.5];
+        let mut p = VecParams { key: "x", x: vec![0.0; 3], g: vec![0.0; 3] };
+        for _ in 0..400 {
+            for i in 0..3 {
+                p.g[i] = 2.0 * (p.x[i] - target[i]);
+            }
+            opt.step(&mut p);
+        }
+        p.x.iter().zip(&target).map(|(&xi, &t)| (xi - t) * (xi - t)).sum()
     }
 
     #[test]
     fn sgd_converges_on_quadratic() {
         let mut sgd = Sgd::new(0.1, 0.0);
-        let err = quadratic_descent(&mut |p, g| sgd.update(0, p, g));
+        let err = quadratic_descent(&mut sgd);
         assert!(err < 1e-6, "err={err}");
     }
 
     #[test]
     fn sgd_momentum_converges() {
         let mut sgd = Sgd::new(0.05, 0.9);
-        let err = quadratic_descent(&mut |p, g| sgd.update(0, p, g));
+        let err = quadratic_descent(&mut sgd);
         assert!(err < 1e-6, "err={err}");
     }
 
     #[test]
     fn adam_converges_on_quadratic() {
+        // No begin_step anywhere: the timestep advances per sweep.
         let mut adam = Adam::new(0.05);
-        let err = quadratic_descent(&mut |p, g| {
-            adam.begin_step();
-            adam.update(0, p, g);
-        });
+        let err = quadratic_descent(&mut adam);
         assert!(err < 1e-4, "err={err}");
+        assert_eq!(adam.timestep(), 400);
     }
 
     #[test]
-    fn slots_are_independent() {
+    fn keys_are_independent() {
         let mut sgd = Sgd::new(1.0, 0.9);
-        let mut a = [0.0f32];
-        let mut b = [0.0f32];
-        sgd.update(0, &mut a, &[1.0]);
-        sgd.update(1, &mut b, &[2.0]);
-        sgd.update(0, &mut a, &[1.0]);
-        // Momentum for slot 0 after two grads of 1.0: v = 1.9 total applied 1 + 1.9.
-        assert!((a[0] + 2.9).abs() < 1e-6, "a={}", a[0]);
-        assert!((b[0] + 2.0).abs() < 1e-6, "b={}", b[0]);
+        let mut a = VecParams { key: "a", x: vec![0.0], g: vec![1.0] };
+        let mut b = VecParams { key: "b", x: vec![0.0], g: vec![2.0] };
+        sgd.step(&mut a);
+        sgd.step(&mut b);
+        sgd.step(&mut a);
+        // Momentum for "a" after two grads of 1.0: total applied 1 + 1.9.
+        assert!((a.x[0] + 2.9).abs() < 1e-6, "a={}", a.x[0]);
+        assert!((b.x[0] + 2.0).abs() < 1e-6, "b={}", b.x[0]);
     }
 
     #[test]
     #[should_panic(expected = "shape changed")]
     fn shape_change_is_detected() {
         let mut sgd = Sgd::new(0.1, 0.5);
-        let mut a = [0.0f32; 2];
-        sgd.update(0, &mut a, &[1.0, 1.0]);
-        let mut b = [0.0f32; 3];
-        sgd.update(0, &mut b, &[1.0, 1.0, 1.0]);
+        let mut a = VecParams { key: "x", x: vec![0.0; 2], g: vec![1.0; 2] };
+        sgd.step(&mut a);
+        let mut b = VecParams { key: "x", x: vec![0.0; 3], g: vec![1.0; 3] };
+        sgd.step(&mut b);
     }
 
+    /// A buggy container that hands the same key out twice in one sweep.
+    struct DupParams {
+        x: Vec<f32>,
+        g: Vec<f32>,
+    }
+
+    impl Params for DupParams {
+        fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+            f(ParamView { key: "dup".into(), param: &mut self.x, grad: &mut self.g });
+            f(ParamView { key: "dup".into(), param: &mut self.x, grad: &mut self.g });
+        }
+    }
+
+    #[cfg(debug_assertions)]
     #[test]
-    #[should_panic(expected = "begin_step")]
-    fn adam_requires_begin_step() {
+    #[should_panic(expected = "updated twice within one Adam step")]
+    fn adam_traps_double_update_within_a_step() {
         let mut adam = Adam::new(0.1);
-        let mut a = [0.0f32];
-        adam.update(0, &mut a, &[1.0]);
+        let mut p = DupParams { x: vec![0.0], g: vec![1.0] };
+        adam.step(&mut p);
     }
 }

@@ -2,68 +2,78 @@
 //! reparameterization was built for: a vanilla RNN whose recurrent matrix
 //! is held as `U·Σ·Vᵀ` with singular values clipped to `[1±ε]`, killing
 //! exploding/vanishing gradients while FastH keeps the Householder
-//! products fast (paper §3.3 "Recurrent Layers": `O(d/m + r·m)` sequential
-//! matrix ops for r recurrent applications instead of `O(d·r)`... of
-//! `O(d)` per step).
+//! products fast (paper §3.3 "Recurrent Layers").
 //!
 //! `h_{t+1} = tanh(W_rec·h_t + W_in·x_t + b)`, readout `y_t = W_out·h_t`.
+//!
+//! The cells are ordinary [`Layer`]s (the recurrent weight is a bias-free
+//! [`LinearSvd`], the projections are [`Dense`]); BPTT threads one
+//! [`Ctx`] per layer per timestep, and because `backward` *accumulates*
+//! into the layers' gradient buffers, the across-time sums come out of
+//! the trait contract for free. One [`Optimizer`] sweep then updates the
+//! whole cell; the spectral clip runs in the post-update hook.
 
-use super::layers::{Activation, Dense};
+use super::layers::{Activation, Dense, LinearSvd};
 use super::loss::softmax_cross_entropy;
+use super::module::{visit_prefixed, Ctx, Layer, ParamView, Params, SigmaClip};
+use super::optim::Optimizer;
 use crate::linalg::Mat;
-use crate::svd::param::{SvdGrads, SvdParam};
 use crate::util::Rng;
 
 /// RNN with an SVD-reparameterized recurrent weight.
 pub struct SvdRnn {
-    pub w_rec: SvdParam,
+    /// Recurrent weight `U·Σ·Vᵀ` (bias-free; the bias lives in `w_in`).
+    /// Its [`SigmaClip::Band`] is the spectral constraint — adjust or
+    /// ablate it through `w_rec.clip`.
+    pub w_rec: LinearSvd,
     pub w_in: Dense,
     pub w_out: Dense,
     pub hidden: usize,
-    /// FastH block size for the recurrent applications.
-    pub k: usize,
-    /// Spectral clip width ε (σ ∈ [1−ε, 1+ε] after each step).
-    pub eps: f32,
 }
 
-/// Per-step caches retained for BPTT.
-struct StepCache {
-    svd: crate::svd::param::SvdCache,
-    in_cache: super::layers::DenseCache,
-    h_pre_act: Mat, // tanh output h_{t+1} (tanh', from output)
-    out_cache: Option<super::layers::DenseCache>,
-}
-
-/// Accumulated gradients for one BPTT pass.
-pub struct RnnGrads {
-    pub rec: SvdGrads,
-    pub in_w: Mat,
-    pub in_b: Vec<f32>,
-    pub out_w: Mat,
-    pub out_b: Vec<f32>,
+/// Per-timestep layer caches retained for BPTT.
+struct StepCtx {
+    rec: Ctx,
+    inp: Ctx,
+    act: Ctx,
+    /// Readout cache + logits, on scored steps only.
+    out: Option<(Ctx, Mat)>,
 }
 
 impl SvdRnn {
+    /// Default spectral clip width ε (σ ∈ [1−ε, 1+ε] after each sweep).
+    pub const DEFAULT_EPS: f32 = 0.05;
+
     pub fn new(input: usize, hidden: usize, output: usize, rng: &mut Rng) -> SvdRnn {
         SvdRnn {
-            w_rec: SvdParam::random_full(hidden, rng),
+            w_rec: LinearSvd::new_unbiased(hidden, rng)
+                .with_clip(SigmaClip::Band(Self::DEFAULT_EPS)),
             w_in: Dense::new(hidden, input, rng),
             w_out: Dense::new(output, hidden, rng),
             hidden,
-            k: crate::householder::tune::KCache::heuristic(hidden, 32),
-            eps: 0.05,
+        }
+    }
+
+    /// The spectral clip width ε currently configured on the recurrent
+    /// weight (0 when the constraint was ablated via `w_rec.clip`).
+    pub fn eps(&self) -> f32 {
+        match self.w_rec.clip {
+            SigmaClip::Band(eps) => eps,
+            _ => 0.0,
         }
     }
 
     /// Run the network over a sequence, scoring the last `scored_steps`
-    /// steps with cross-entropy against `targets`. Returns
-    /// `(mean loss, grads, per-scored-step accuracy)` — one full BPTT pass.
+    /// steps with cross-entropy against `targets`. Returns `(mean loss,
+    /// per-scored-step accuracy)` — one full BPTT pass whose gradients
+    /// accumulate into the layers (zero them first; [`Self::train_step`]
+    /// does).
     pub fn step_bptt(
         &self,
         inputs: &[Mat],
         targets: &[Vec<usize>],
         scored_steps: usize,
-    ) -> (f64, RnnGrads, f64) {
+    ) -> (f64, f64) {
         let t_total = inputs.len();
         assert_eq!(targets.len(), t_total);
         let batch = inputs[0].cols();
@@ -71,31 +81,32 @@ impl SvdRnn {
 
         // ---- forward
         let mut h = Mat::zeros(self.hidden, batch);
-        let mut caches: Vec<StepCache> = Vec::with_capacity(t_total);
-        let mut logits_per_step: Vec<Option<Mat>> = Vec::with_capacity(t_total);
+        let mut steps: Vec<StepCtx> = Vec::with_capacity(t_total);
         for (t, x) in inputs.iter().enumerate() {
-            let (rec_part, svd_cache) = self.w_rec.forward(&h, self.k);
-            let (in_part, in_cache) = self.w_in.forward(x);
+            let mut rec = Ctx::empty();
+            let rec_part = self.w_rec.forward(&h, &mut rec);
+            let mut inp = Ctx::empty();
+            let in_part = self.w_in.forward(x, &mut inp);
             let pre = rec_part.add(&in_part);
-            h = act.forward(&pre);
-            let scored = t + scored_steps >= t_total;
-            let (logits, out_cache) = if scored {
-                let (l, c) = self.w_out.forward(&h);
-                (Some(l), Some(c))
+            let mut act_ctx = Ctx::empty();
+            h = act.forward(&pre, &mut act_ctx);
+            let out = if t + scored_steps >= t_total {
+                let mut out_ctx = Ctx::empty();
+                let logits = self.w_out.forward(&h, &mut out_ctx);
+                Some((out_ctx, logits))
             } else {
-                (None, None)
+                None
             };
-            caches.push(StepCache { svd: svd_cache, in_cache, h_pre_act: h.clone(), out_cache });
-            logits_per_step.push(logits);
+            steps.push(StepCtx { rec, inp, act: act_ctx, out });
         }
 
         // ---- loss on scored steps
+        let n_scored = scored_steps.max(1);
         let mut total_loss = 0.0f64;
         let mut total_acc = 0.0f64;
-        let mut dlogits: Vec<Option<Mat>> = vec![None; t_total];
-        let n_scored = scored_steps.max(1);
-        for t in 0..t_total {
-            if let Some(logits) = &logits_per_step[t] {
+        let mut dlogits: Vec<Option<Mat>> = (0..t_total).map(|_| None).collect();
+        for (t, step) in steps.iter().enumerate() {
+            if let Some((_ctx, logits)) = &step.out {
                 let (l, g) = softmax_cross_entropy(logits, &targets[t]);
                 total_loss += l / n_scored as f64;
                 total_acc += super::loss::accuracy(logits, &targets[t]) / n_scored as f64;
@@ -103,98 +114,82 @@ impl SvdRnn {
             }
         }
 
-        // ---- backward through time
-        let mut grads: Option<RnnGrads> = None;
+        // ---- backward through time (gradients sum inside the layers)
         let mut dh = Mat::zeros(self.hidden, batch);
         for t in (0..t_total).rev() {
-            let cache = &caches[t];
-            if let Some(dl) = &dlogits[t] {
-                let (dh_out, dw_out, db_out) =
-                    self.w_out.backward(cache.out_cache.as_ref().unwrap(), dl);
+            let step = &steps[t];
+            if let (Some((out_ctx, _)), Some(dl)) = (&step.out, &dlogits[t]) {
+                let dh_out = self.w_out.backward(out_ctx, dl);
                 dh.axpy(1.0, &dh_out);
-                accumulate_out(&mut grads, &dw_out, &db_out, self);
             }
-            // Through tanh.
-            let dpre = Activation::Tanh.backward(&cache.h_pre_act, &dh);
-            // Through input projection.
-            let (_dx, dw_in, db_in) = self.w_in.backward(&cache.in_cache, &dpre);
-            // Through the recurrent SVD weight → gradient wrt previous h.
-            let (dh_prev, rec_grads) = self.w_rec.backward(&cache.svd, &dpre);
-            accumulate_rest(&mut grads, &dw_in, &db_in, &rec_grads, self);
-            dh = dh_prev;
+            // Through tanh, then the input projection (input grads are
+            // discarded — inputs are data), then the recurrent weight to
+            // the previous hidden state.
+            let dpre = act.backward(&step.act, &dh);
+            let _dx = self.w_in.backward(&step.inp, &dpre);
+            dh = self.w_rec.backward(&step.rec, &dpre);
         }
-
-        let grads = grads.expect("at least one scored step");
-        (total_loss, grads, total_acc)
+        (total_loss, total_acc)
     }
 
-    /// Apply gradients (plain SGD) and clip the spectrum.
-    pub fn sgd_step(&mut self, grads: &RnnGrads, lr: f32) {
-        self.w_rec.sgd_step(&grads.rec, lr);
-        self.w_rec.clip_sigma(self.eps);
-        self.w_in.sgd_step(&grads.in_w, &grads.in_b, lr);
-        self.w_out.sgd_step(&grads.out_w, &grads.out_b, lr);
+    /// One full training step: zero grads, BPTT, a single optimizer
+    /// sweep, then the spectral clip.
+    pub fn train_step(
+        &mut self,
+        inputs: &[Mat],
+        targets: &[Vec<usize>],
+        scored_steps: usize,
+        opt: &mut dyn Optimizer,
+    ) -> (f64, f64) {
+        self.zero_grads();
+        let (loss, acc) = self.step_bptt(inputs, targets, scored_steps);
+        opt.step(self);
+        self.post_update();
+        (loss, acc)
     }
-}
 
-fn zero_grads(rnn: &SvdRnn) -> RnnGrads {
-    RnnGrads {
-        rec: SvdGrads {
-            du: Mat::zeros(rnn.hidden, rnn.w_rec.u.count()),
-            dv: Mat::zeros(rnn.hidden, rnn.w_rec.v.count()),
-            dsigma: vec![0.0; rnn.hidden],
-        },
-        in_w: Mat::zeros(rnn.w_in.w.rows(), rnn.w_in.w.cols()),
-        in_b: vec![0.0; rnn.w_in.b.len()],
-        out_w: Mat::zeros(rnn.w_out.w.rows(), rnn.w_out.w.cols()),
-        out_b: vec![0.0; rnn.w_out.b.len()],
-    }
-}
-
-fn accumulate_out(grads: &mut Option<RnnGrads>, dw: &Mat, db: &[f32], rnn: &SvdRnn) {
-    let g = grads.get_or_insert_with(|| zero_grads(rnn));
-    g.out_w.axpy(1.0, dw);
-    for (a, &b) in g.out_b.iter_mut().zip(db) {
-        *a += b;
+    /// Run every cell's post-update hook — the recurrent layer's
+    /// spectral clip.
+    pub fn post_update(&mut self) {
+        self.w_rec.post_update();
+        self.w_in.post_update();
+        self.w_out.post_update();
     }
 }
 
-fn accumulate_rest(
-    grads: &mut Option<RnnGrads>,
-    dw_in: &Mat,
-    db_in: &[f32],
-    rec: &SvdGrads,
-    rnn: &SvdRnn,
-) {
-    let g = grads.get_or_insert_with(|| zero_grads(rnn));
-    g.in_w.axpy(1.0, dw_in);
-    for (a, &b) in g.in_b.iter_mut().zip(db_in) {
-        *a += b;
-    }
-    g.rec.du.axpy(1.0, &rec.du);
-    g.rec.dv.axpy(1.0, &rec.dv);
-    for (a, &b) in g.rec.dsigma.iter_mut().zip(&rec.dsigma) {
-        *a += b;
+impl Params for SvdRnn {
+    fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
+        visit_prefixed(&mut self.w_rec, "rec", f);
+        visit_prefixed(&mut self.w_in, "in", f);
+        visit_prefixed(&mut self.w_out, "out", f);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::module::grad_by_key;
     use crate::nn::tasks::copy_memory;
+    use crate::nn::Sgd;
+
+    fn grad_of(rnn: &mut SvdRnn, key: &str) -> Vec<f32> {
+        grad_by_key(rnn, key).unwrap_or_else(|| panic!("no parameter '{key}'"))
+    }
 
     #[test]
     fn forward_backward_shapes() {
         let mut rng = Rng::new(191);
-        let rnn = SvdRnn::new(10, 16, 10, &mut rng);
+        let mut rnn = SvdRnn::new(10, 16, 10, &mut rng);
         let batch = copy_memory(8, 3, 5, 4, &mut rng);
-        let (loss, grads, acc) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
+        let (loss, acc) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=1.0).contains(&acc));
-        assert_eq!(grads.rec.du.cols(), 16);
-        assert_eq!(grads.in_w.rows(), 16);
-        assert_eq!(grads.out_w.rows(), 10);
-        assert!(!grads.rec.du.has_non_finite());
+        let du = grad_of(&mut rnn, "rec.u");
+        assert_eq!(du.len(), 16 * 16);
+        assert!(du.iter().all(|v| v.is_finite()));
+        assert!(du.iter().any(|&v| v != 0.0), "recurrent grads all zero");
+        assert_eq!(grad_of(&mut rnn, "in.w").len(), 16 * 10);
+        assert_eq!(grad_of(&mut rnn, "out.w").len(), 10 * 16);
     }
 
     #[test]
@@ -202,12 +197,14 @@ mod tests {
         // Overfit one small batch: loss must drop substantially.
         let mut rng = Rng::new(192);
         let mut rnn = SvdRnn::new(6, 12, 6, &mut rng);
+        let mut opt = Sgd::new(0.5, 0.0);
         let batch = copy_memory(4, 2, 3, 8, &mut rng);
-        let (loss0, _, _) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
+        let (loss0, _) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
+        rnn.zero_grads();
         let mut last = loss0;
         for _ in 0..30 {
-            let (l, grads, _) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
-            rnn.sgd_step(&grads, 0.5);
+            let (l, _) =
+                rnn.train_step(&batch.inputs, &batch.targets, batch.scored_steps, &mut opt);
             last = l;
         }
         assert!(
@@ -220,13 +217,13 @@ mod tests {
     fn spectrum_stays_clipped_during_training() {
         let mut rng = Rng::new(193);
         let mut rnn = SvdRnn::new(5, 8, 5, &mut rng);
+        let mut opt = Sgd::new(0.3, 0.0);
         let batch = copy_memory(3, 2, 2, 4, &mut rng);
         for _ in 0..5 {
-            let (_l, grads, _) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
-            rnn.sgd_step(&grads, 0.3);
+            rnn.train_step(&batch.inputs, &batch.targets, batch.scored_steps, &mut opt);
         }
-        for &s in &rnn.w_rec.sigma {
-            assert!((1.0 - rnn.eps..=1.0 + rnn.eps).contains(&s), "σ={s}");
+        for &s in &rnn.w_rec.p.sigma {
+            assert!((1.0 - rnn.eps()..=1.0 + rnn.eps()).contains(&s), "σ={s}");
         }
     }
 
@@ -235,10 +232,11 @@ mod tests {
         // The whole point of the spectral constraint: 80-step BPTT keeps
         // gradient norms bounded.
         let mut rng = Rng::new(194);
-        let rnn = SvdRnn::new(6, 10, 6, &mut rng);
+        let mut rnn = SvdRnn::new(6, 10, 6, &mut rng);
         let batch = copy_memory(4, 2, 60, 2, &mut rng);
-        let (_l, grads, _) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
-        let gnorm = grads.rec.du.fro_norm();
+        let (_l, _a) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
+        let du = grad_of(&mut rnn, "rec.u");
+        let gnorm = du.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
         assert!(gnorm.is_finite() && gnorm < 1e3, "‖dU‖ = {gnorm}");
     }
 }

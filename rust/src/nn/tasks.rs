@@ -5,6 +5,8 @@
 //!   the SVD reparameterization comes from),
 //! - [`spirals`]: a 3-class 2-D spiral classification set for the MLP
 //!   example,
+//! - [`linear_teacher`]: a noisy rectangular regression target for the
+//!   non-square `LinearSvd` training path,
 //! - [`char_corpus`]: a tiny character stream for language-model smoke
 //!   runs.
 
@@ -91,6 +93,29 @@ pub fn spirals(n_per_class: usize, noise: f32, rng: &mut Rng) -> (Mat, Vec<usize
     (x, y)
 }
 
+/// Rectangular teacher-student regression: draw a fixed random teacher
+/// `A ∈ ℝ^{out×in}` (spectral scale 1/√in) and return `(x, y)` with
+/// `x ∈ ℝ^{in×n}` standard normal and `y = A·x + noise`. The workload
+/// for training non-square layers (`RectLinearSvd`) end-to-end with MSE.
+pub fn linear_teacher(
+    out_dim: usize,
+    in_dim: usize,
+    n: usize,
+    noise: f32,
+    rng: &mut Rng,
+) -> (Mat, Mat) {
+    let scale = 1.0 / (in_dim as f32).sqrt();
+    let a = Mat::randn(out_dim, in_dim, rng).scale(scale);
+    let x = Mat::randn(in_dim, n, rng);
+    let mut y = crate::linalg::gemm::matmul(&a, &x);
+    if noise > 0.0 {
+        for v in y.data_mut() {
+            *v += noise * rng.normal_f32();
+        }
+    }
+    (x, y)
+}
+
 /// Deterministic tiny character corpus (a repeated pangram-ish stream) for
 /// next-character prediction smoke tests. Returns (vocab, ids).
 pub fn char_corpus(len: usize) -> (Vec<char>, Vec<usize>) {
@@ -161,6 +186,18 @@ mod tests {
         assert_eq!(y.len(), 150);
         assert_eq!(y.iter().filter(|&&c| c == 0).count(), 50);
         assert!(x.data().iter().all(|v| v.abs() <= 1.5));
+    }
+
+    #[test]
+    fn linear_teacher_shapes_and_noise() {
+        let mut rng = Rng::new(183);
+        let (x, y) = linear_teacher(5, 9, 32, 0.0, &mut rng);
+        assert_eq!((x.rows(), x.cols()), (9, 32));
+        assert_eq!((y.rows(), y.cols()), (5, 32));
+        assert!(!y.has_non_finite());
+        let mut rng2 = Rng::new(183);
+        let (_x2, y2) = linear_teacher(5, 9, 32, 0.0, &mut rng2);
+        assert_eq!(y.data(), y2.data(), "deterministic under the same seed");
     }
 
     #[test]

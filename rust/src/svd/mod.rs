@@ -19,3 +19,4 @@ pub mod param;
 
 pub use ops::{MatrixOp, OpEngine};
 pub use param::SvdParam;
+pub use rect::RectSvdParam;

@@ -113,15 +113,19 @@ impl SvdParam {
         for (s, g) in self.sigma.iter_mut().zip(&grads.dsigma) {
             *s -= lr * g;
         }
-        self.v_rev = self.v.reversed();
+        self.refresh();
     }
 
     /// Spectral-RNN's exploding/vanishing-gradient fix (paper §5): clamp
     /// all singular values to `[1−ε, 1+ε]`.
     pub fn clip_sigma(&mut self, eps: f32) {
-        for s in self.sigma.iter_mut() {
-            *s = s.clamp(1.0 - eps, 1.0 + eps);
-        }
+        clip_sigma_band(&mut self.sigma, eps);
+    }
+
+    /// Rebuild the cached reversed-V after `v` was mutated directly
+    /// (e.g. by an optimizer sweep over the raw Householder vectors).
+    pub fn refresh(&mut self) {
+        self.v_rev = self.v.reversed();
     }
 
     /// Materialize the full `W` (tests/export; `O(d³)`).
@@ -183,6 +187,24 @@ impl Engine {
         match *self {
             Engine::FastH { k } => k,
             _ => 32,
+        }
+    }
+}
+
+/// The spectral band clamp (σ ∈ [1−ε, 1+ε]) — the single implementation
+/// behind [`SvdParam::clip_sigma`] and the `nn` post-update hook.
+pub fn clip_sigma_band(sigma: &mut [f32], eps: f32) {
+    for s in sigma.iter_mut() {
+        *s = s.clamp(1.0 - eps, 1.0 + eps);
+    }
+}
+
+/// The invertibility floor (|σ| ≥ floor, sign kept) used by normalizing
+/// flows — shared here so no call site re-implements the clamp inline.
+pub fn clip_sigma_floor(sigma: &mut [f32], floor: f32) {
+    for s in sigma.iter_mut() {
+        if s.abs() < floor {
+            *s = floor * if *s < 0.0 { -1.0 } else { 1.0 };
         }
     }
 }

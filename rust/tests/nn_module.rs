@@ -1,0 +1,214 @@
+//! Integration tests for the unified `Layer`/`Params` trait API: the
+//! rectangular `LinearSvd` gradcheck suite (tall, wide, and rank-
+//! truncated shapes), `RectSvdParam::apply_pinv` round-trips at ragged
+//! block sizes, optimizer key stability across sweeps, and the
+//! Adam-timestep safety net.
+
+use fasth::householder::HouseholderVectors;
+use fasth::linalg::{oracle, Mat};
+use fasth::nn::module::collect_grads;
+use fasth::nn::{
+    mse, Activation, Adam, Ctx, Layer, Optimizer, Params, RectLinearSvd, Sequential, Sgd,
+};
+use fasth::svd::RectSvdParam;
+use fasth::util::prop::assert_close;
+use fasth::util::Rng;
+
+/// Analytic gradients of an unbiased rect layer for `loss = <g, W·x>`,
+/// keyed by parameter name.
+fn layer_grads(
+    layer: &mut RectLinearSvd,
+    x: &Mat,
+    g: &Mat,
+) -> std::collections::BTreeMap<String, Vec<f32>> {
+    layer.zero_grads();
+    let mut ctx = Ctx::empty();
+    let _y = layer.forward(x, &mut ctx);
+    let _dx = layer.backward(&ctx, g);
+    collect_grads(layer).into_iter().collect()
+}
+
+/// Finite-difference gradients through the *inference* path (`apply`),
+/// so analytic backward and forward-only code are cross-checked too.
+fn gradcheck_rect(layer: &mut RectLinearSvd, rng: &mut Rng) {
+    let (n, m) = (layer.p.rows, layer.p.cols);
+    let x = Mat::randn(m, 3, rng);
+    let g = Mat::randn(n, 3, rng);
+    let k = layer.k;
+    let got = layer_grads(layer, &x, &g);
+    let p = layer.p.clone();
+    let loss = |p2: &RectSvdParam, x2: &Mat| -> f64 {
+        let y = p2.apply(x2, k);
+        y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+    };
+
+    let fd_u = oracle::finite_diff_grad(p.u.v.data(), 1e-3, |vals| {
+        let mut p2 = p.clone();
+        p2.u = HouseholderVectors::new(Mat::from_vec(n, n, vals.to_vec()));
+        loss(&p2, &x)
+    });
+    assert_close(&got["u"], &fd_u, 1e-2, 8e-2).unwrap();
+
+    let fd_v = oracle::finite_diff_grad(p.v.v.data(), 1e-3, |vals| {
+        let mut p2 = p.clone();
+        p2.v = HouseholderVectors::new(Mat::from_vec(m, m, vals.to_vec()));
+        p2.refresh();
+        loss(&p2, &x)
+    });
+    assert_close(&got["v"], &fd_v, 1e-2, 8e-2).unwrap();
+
+    let fd_s = oracle::finite_diff_grad(&p.sigma, 1e-3, |vals| {
+        let mut p2 = p.clone();
+        p2.sigma = vals.to_vec();
+        loss(&p2, &x)
+    });
+    assert_close(&got["sigma"], &fd_s, 1e-2, 5e-2).unwrap();
+}
+
+#[test]
+fn rect_gradcheck_tall() {
+    let mut rng = Rng::new(0xA1);
+    let mut layer = RectLinearSvd::new_unbiased(9, 4, &mut rng);
+    gradcheck_rect(&mut layer, &mut rng);
+}
+
+#[test]
+fn rect_gradcheck_wide() {
+    let mut rng = Rng::new(0xA2);
+    let mut layer = RectLinearSvd::new_unbiased(4, 9, &mut rng);
+    gradcheck_rect(&mut layer, &mut rng);
+}
+
+#[test]
+fn rect_gradcheck_rank_truncated() {
+    // truncate_rank zeroes part of the spectrum; gradients must still
+    // match finite differences (σ = 0 is a regular point of the loss).
+    let mut rng = Rng::new(0xA3);
+    let mut layer = RectLinearSvd::new_unbiased(7, 6, &mut rng);
+    for (i, s) in layer.p.sigma.iter_mut().enumerate() {
+        *s = 0.4 + 0.3 * i as f32;
+    }
+    layer.p.truncate_rank(3);
+    assert_eq!(layer.p.rank(), 3);
+    gradcheck_rect(&mut layer, &mut rng);
+}
+
+#[test]
+fn rect_gradcheck_through_sequential() {
+    // The acceptance-criteria check: finite differences through a whole
+    // Sequential (rect → tanh → rect) against the trait backward.
+    let mut rng = Rng::new(0xA4);
+    let model = Sequential::new()
+        .push(RectLinearSvd::new_unbiased(6, 3, &mut rng))
+        .push(Activation::Tanh)
+        .push(RectLinearSvd::new_unbiased(2, 6, &mut rng));
+    let x = Mat::randn(3, 4, &mut rng);
+    let g = Mat::randn(2, 4, &mut rng);
+    let (_y, ctxs) = model.forward(&x);
+    let dx = model.backward(&ctxs, &g);
+    let fd_x = oracle::finite_diff_grad(x.data(), 1e-3, |vals| {
+        let x2 = Mat::from_vec(3, 4, vals.to_vec());
+        let (y, _) = model.forward(&x2);
+        y.data().iter().zip(g.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+    });
+    assert_close(dx.data(), &fd_x, 1e-2, 8e-2).unwrap();
+}
+
+#[test]
+fn apply_pinv_roundtrip_at_ragged_k() {
+    // Block sizes that do not divide either dimension: W⁺(W·x) = x for
+    // tall full-column-rank W, and W(W⁺·y) = y for wide full-row-rank W.
+    let mut rng = Rng::new(0xA5);
+    for k in [1usize, 3, 5, 7] {
+        let mut tall = RectSvdParam::random(17, 5, &mut rng);
+        for (i, s) in tall.sigma.iter_mut().enumerate() {
+            *s = 0.8 + 0.1 * i as f32;
+        }
+        let x = Mat::randn(5, 4, &mut rng);
+        let back = tall.apply_pinv(&tall.apply(&x, k), k);
+        assert!(back.max_abs_diff(&x) < 1e-3, "tall k={k}: diff {}", back.max_abs_diff(&x));
+
+        let mut wide = RectSvdParam::random(5, 17, &mut rng);
+        for (i, s) in wide.sigma.iter_mut().enumerate() {
+            *s = 0.8 + 0.1 * i as f32;
+        }
+        let y = Mat::randn(5, 4, &mut rng);
+        let fwd = wide.apply(&wide.apply_pinv(&y, k), k);
+        assert!(fwd.max_abs_diff(&y) < 1e-3, "wide k={k}: diff {}", fwd.max_abs_diff(&y));
+    }
+}
+
+#[test]
+fn training_is_block_size_invariant_for_rect() {
+    // k is a pure performance knob on the rectangular path too.
+    let run = |k: usize| {
+        let mut rng = Rng::new(0xA6);
+        let mut layer = RectLinearSvd::new_unbiased(10, 6, &mut rng);
+        layer.k = k;
+        let mut opt = Sgd::new(0.05, 0.0);
+        let x = Mat::randn(6, 5, &mut rng);
+        let g = Mat::randn(10, 5, &mut rng);
+        for _ in 0..6 {
+            layer.zero_grads();
+            let mut ctx = Ctx::empty();
+            let _y = layer.forward(&x, &mut ctx);
+            let _dx = layer.backward(&ctx, &g);
+            opt.step(&mut layer);
+            layer.post_update();
+        }
+        (layer.p.u.v.clone(), layer.p.sigma.clone())
+    };
+    let (ua, sa) = run(2);
+    let (ub, sb) = run(9);
+    assert_close(ua.data(), ub.data(), 1e-3, 1e-3).unwrap();
+    assert_close(&sa, &sb, 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn optimizer_state_keys_survive_across_sweeps() {
+    // Adam's per-parameter moments are keyed, not slot-indexed: the key
+    // sequence a model exposes must be identical on every sweep, so the
+    // optimizer state stays attached to the same tensors for the whole
+    // run.
+    let mut rng = Rng::new(0xA7);
+    let build = |rng: &mut Rng| {
+        Sequential::new()
+            .push(RectLinearSvd::new(4, 3, rng))
+            .push(Activation::Tanh)
+            .push(RectLinearSvd::new(2, 4, rng))
+    };
+    let mut m1 = build(&mut rng);
+    let keys = |m: &mut Sequential| -> Vec<String> {
+        let mut ks = Vec::new();
+        m.visit(&mut |pv| ks.push(pv.key.clone()));
+        ks
+    };
+    let k_before = keys(&mut m1);
+    let (x, y) = fasth::nn::tasks::linear_teacher(2, 3, 16, 0.0, &mut rng);
+    let mut opt = Adam::new(0.01);
+    for _ in 0..5 {
+        m1.train_step(&x, |pred| mse(pred, &y), &mut opt);
+    }
+    assert_eq!(keys(&mut m1), k_before, "keys drifted across training sweeps");
+    assert_eq!(opt.timestep(), 5);
+}
+
+#[test]
+fn adam_timestep_advances_once_per_sweep() {
+    // Two models sharing one optimizer: each step() call advances t once,
+    // regardless of how many parameters the sweep visits.
+    let mut rng = Rng::new(0xA8);
+    let mut a = RectLinearSvd::new(3, 2, &mut rng);
+    let mut opt = Adam::new(0.01);
+    for _ in 0..3 {
+        a.zero_grads();
+        let mut ctx = Ctx::empty();
+        let x = Mat::randn(2, 2, &mut rng);
+        let g = Mat::randn(3, 2, &mut rng);
+        let _y = a.forward(&x, &mut ctx);
+        let _dx = a.backward(&ctx, &g);
+        opt.step(&mut a);
+        a.post_update();
+    }
+    assert_eq!(opt.timestep(), 3);
+}
