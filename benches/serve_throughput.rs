@@ -1,0 +1,139 @@
+//! Serving throughput bench: spin up the sharded coordinator on
+//! loopback, drive M concurrent clients with mixed square + rect
+//! traffic, and archive p50/p99 latency, mean batch size, and
+//! columns/sec to `bench_out/BENCH_serving.json` — the serving leg of
+//! the PR-over-PR perf trajectory (CI's bench-smoke job uploads it).
+//!
+//! `cargo bench --bench serve_throughput`
+//! env: FASTH_SERVE_CLIENTS (4), FASTH_SERVE_REQUESTS (200 per client),
+//!      FASTH_SERVE_SHARDS (2).
+
+use fasth::coordinator::{
+    BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
+};
+use fasth::util::json::Json;
+use fasth::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n_clients = env_usize("FASTH_SERVE_CLIENTS", 4);
+    let per_client = env_usize("FASTH_SERVE_REQUESTS", 200);
+    let shards = env_usize("FASTH_SERVE_SHARDS", 2);
+    let d = 64usize;
+    let rect_rows = 96usize;
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create("svd_64", d, ExecEngine::Native { k: 16 }, 0xBE);
+    registry.create_rect("rect_96x64", rect_rows, d, None, ExecEngine::Native { k: 16 }, 0xBF);
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            shards,
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+                adaptive: true,
+                min_wait: Duration::from_micros(200),
+                p50_fraction: 0.5,
+            },
+            max_queue_depth: 100_000,
+        },
+        registry,
+    )
+    .expect("server start");
+    let addr = server.local_addr;
+    println!(
+        "== serve_throughput: {shards} shards × 2 workers, {n_clients} clients × {per_client} \
+         requests (svd_64 + rect_96x64, adaptive deadline) =="
+    );
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0x5E41 + c as u64);
+                let mut client = Client::connect(&addr).expect("connect");
+                // (model, op, input width) mix: square Table-1 ops plus
+                // the rect apply/pinv route.
+                let mix: [(&str, OpKind, usize); 6] = [
+                    ("svd_64", OpKind::Apply, 64),
+                    ("svd_64", OpKind::Inverse, 64),
+                    ("svd_64", OpKind::Expm, 64),
+                    ("svd_64", OpKind::Cayley, 64),
+                    ("rect_96x64", OpKind::Apply, 64),
+                    ("rect_96x64", OpKind::Pinv, 96),
+                ];
+                let mut lat_us: Vec<u64> = Vec::with_capacity(per_client);
+                let mut batch_sizes: Vec<usize> = Vec::with_capacity(per_client);
+                let mut done = 0usize;
+                while done < per_client {
+                    let burst = (4 + rng.below(13)).min(per_client - done);
+                    let (model, op, width) = mix[rng.below(mix.len())];
+                    let cols: Vec<Vec<f32>> = (0..burst)
+                        .map(|_| (0..width).map(|_| rng.normal_f32()).collect())
+                        .collect();
+                    let t = Instant::now();
+                    let responses = client.call_many(model, op, cols).expect("call_many");
+                    let us = (t.elapsed().as_micros() as u64 / burst as u64).max(1);
+                    for r in &responses {
+                        assert!(r.ok, "{model}/{op:?} failed: {:?}", r.error);
+                        lat_us.push(us);
+                        batch_sizes.push(r.batch_size);
+                    }
+                    done += burst;
+                }
+                (lat_us, batch_sizes)
+            })
+        })
+        .collect();
+
+    let mut lat_us: Vec<u64> = Vec::new();
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    for h in handles {
+        let (l, b) = h.join().expect("client thread");
+        lat_us.extend(l);
+        batch_sizes.extend(b);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = lat_us.len();
+    lat_us.sort_unstable();
+    let p50 = lat_us[total / 2];
+    let p99 = lat_us[(total * 99 / 100).min(total - 1)];
+    let mean_batch = batch_sizes.iter().sum::<usize>() as f64 / total as f64;
+    let cols_per_sec = total as f64 / wall;
+
+    println!("completed {total} requests in {wall:.2}s");
+    println!("throughput        : {cols_per_sec:.0} columns/sec");
+    println!("latency p50 / p99 : {p50} µs / {p99} µs");
+    println!("mean batch size   : {mean_batch:.2} columns (max 32)");
+    let mut admin = Client::connect(&addr).expect("admin connect");
+    let stats = admin.admin("stats").expect("stats");
+    println!("server stats      : {stats}");
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("shards", Json::num(shards as f64)),
+        ("clients", Json::num(n_clients as f64)),
+        ("requests", Json::num(total as f64)),
+        ("wall_secs", Json::num(wall)),
+        ("columns_per_sec", Json::num(cols_per_sec)),
+        ("p50_us", Json::num(p50 as f64)),
+        ("p99_us", Json::num(p99 as f64)),
+        ("mean_batch_size", Json::num(mean_batch)),
+        ("server_stats", Json::parse(&stats).expect("stats json")),
+    ]);
+    std::fs::create_dir_all("bench_out").expect("bench_out dir");
+    let path = std::path::Path::new("bench_out").join("BENCH_serving.json");
+    std::fs::write(&path, report.pretty()).expect("write report");
+    println!("saved {}", path.display());
+
+    server.stop();
+    assert!(mean_batch > 1.0, "batching never kicked in");
+    println!("\nserve_throughput OK");
+}

@@ -1,14 +1,16 @@
-//! Serving end-to-end: start the orthoserve coordinator, fire batched
-//! matrix-op requests at it from several client threads, and report
-//! latency/throughput plus the batcher's utilization — demonstrating how
-//! FastH's mini-batch parallelism (depth `O(d/k + k)` per *batch*) turns
-//! into serving throughput.
+//! Serving end-to-end: start the sharded orthoserve coordinator, fire
+//! batched matrix-op requests at it from several client threads, and
+//! report latency/throughput plus the batcher's utilization —
+//! demonstrating how FastH's mini-batch parallelism (depth `O(d/k + k)`
+//! per *batch*) turns into serving throughput.
 //!
-//! Uses the PJRT artifact engine when `artifacts/manifest.json` exists
-//! (the full AOT path: JAX/Pallas → HLO text → Rust), otherwise the
-//! native FastH engine.
+//! Serves a square `svd_{d}` model *and* a rectangular `rect_{2d}x{d}`
+//! model (apply/pinv route), placed on shards by rendezvous hashing.
+//! Uses the PJRT artifact engine for the square model when
+//! `artifacts/manifest.json` exists (the full AOT path: JAX/Pallas →
+//! HLO text → Rust), otherwise the native FastH engine.
 //!
-//! Run: `cargo run --release --example serve`
+//! Run: `cargo run --release --example serve -- [--shards N] [--adaptive]`
 
 use fasth::coordinator::{
     BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
@@ -18,12 +20,30 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut shards = 2usize;
+    let mut adaptive = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--shards" => {
+                shards = args.get(i + 1).and_then(|s| s.parse().ok()).expect("--shards N");
+                i += 2;
+            }
+            "--adaptive" => {
+                adaptive = true;
+                i += 1;
+            }
+            other => panic!("unknown flag '{other}' (try --shards N / --adaptive)"),
+        }
+    }
+
     let d = 64;
     let per_client = 200usize;
     let n_clients = 4usize;
 
-    // Engine: PJRT artifacts if present (and a backend is compiled in),
-    // else native.
+    // Engine for the square model: PJRT artifacts if present (and a
+    // backend is compiled in), else native.
     let artifacts = std::path::Path::new("artifacts/manifest.json");
     let pjrt_engine = if artifacts.exists() {
         let eng = fasth::runtime::ArtifactEngine::open(std::path::Path::new("artifacts"))
@@ -42,19 +62,36 @@ fn main() {
 
     let registry = Arc::new(ModelRegistry::new());
     registry.create(&format!("svd_{d}"), d, engine, 1234);
+    // Rect models serve natively (no AOT artifacts for them).
+    registry.create_rect(
+        &format!("rect_{}x{d}", 2 * d),
+        2 * d,
+        d,
+        None,
+        ExecEngine::Native { k: 32 },
+        1235,
+    );
     let server = Server::start(
         ServerConfig {
             addr: "127.0.0.1:0".into(),
-            workers: 3,
-            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+            shards,
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+                adaptive,
+                ..Default::default()
+            },
             max_queue_depth: 50_000,
         },
         registry,
     )
     .expect("server start");
     println!(
-        "== orthoserve on {} (engine {engine_name}, d = {d}) — {n_clients} clients × {per_client} requests ==\n",
-        server.local_addr
+        "== orthoserve on {} ({shards} shards, engine {engine_name}, adaptive deadline {}, \
+         d = {d}) — {n_clients} clients × {per_client} requests ==\n",
+        server.local_addr,
+        if adaptive { "on" } else { "off" }
     );
 
     let addr = server.local_addr;
@@ -65,18 +102,28 @@ fn main() {
                 let mut rng = Rng::new(500 + c as u64);
                 let mut client = Client::connect(&addr).expect("connect");
                 let mut latencies = Vec::with_capacity(per_client);
-                let ops = [OpKind::Apply, OpKind::Inverse, OpKind::Expm, OpKind::Cayley];
+                // Square Table-1 ops plus the rect apply/pinv route;
+                // each entry is (model, op, input width).
+                let square = format!("svd_{d}");
+                let rect = format!("rect_{}x{d}", 2 * d);
+                let mix: [(&str, OpKind, usize); 6] = [
+                    (&square, OpKind::Apply, d),
+                    (&square, OpKind::Inverse, d),
+                    (&square, OpKind::Expm, d),
+                    (&square, OpKind::Cayley, d),
+                    (&rect, OpKind::Apply, d),
+                    (&rect, OpKind::Pinv, 2 * d),
+                ];
                 // Mix single calls with bursts (bursts exercise batching).
                 let mut done = 0usize;
                 while done < per_client {
                     let burst = (8 + rng.below(17)).min(per_client - done);
-                    let op = ops[rng.below(ops.len())];
+                    let (model, op, width) = mix[rng.below(mix.len())];
                     let cols: Vec<Vec<f32>> = (0..burst)
-                        .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+                        .map(|_| (0..width).map(|_| rng.normal_f32()).collect())
                         .collect();
                     let t = Instant::now();
-                    let responses =
-                        client.call_many(&format!("svd_{d}"), op, cols).expect("call_many");
+                    let responses = client.call_many(model, op, cols).expect("call_many");
                     let us = t.elapsed().as_micros() as u64 / burst as u64;
                     for r in &responses {
                         assert!(r.ok, "request failed: {:?}", r.error);
@@ -104,9 +151,13 @@ fn main() {
     println!("latency p50 / p99 : {} µs / {} µs", lats[total / 2], lats[total * 99 / 100]);
     println!("mean batch size   : {mean_batch:.2} columns (max 32)");
 
-    // Server-side view.
+    // Server-side view: JSON stats + the Prometheus-ish exposition.
     let mut admin = Client::connect(&addr).expect("connect admin");
     println!("\nserver stats: {}", admin.admin("stats").expect("stats"));
+    let prom = admin.metrics_text().expect("metrics");
+    let depth_lines: Vec<&str> =
+        prom.lines().filter(|l| l.starts_with("orthoserve_shard_queue_depth")).collect();
+    println!("per-shard depth gauges:\n{}", depth_lines.join("\n"));
     server.stop();
     assert!(mean_batch > 1.5, "batching never kicked in");
     println!("\nserve OK");

@@ -3,12 +3,28 @@
 //! Policy (vLLM-style continuous batching, simplified to the stateless
 //! case): a queue per `(model, op)` key; flush when either `max_batch`
 //! columns are waiting (full flush) or the oldest request has waited
-//! `max_wait` (deadline flush). Both knobs trade latency against FastH
-//! utilization — the ablation bench `ablation_rnn`/serve example sweep
-//! them.
+//! past the deadline (deadline flush). Both knobs trade latency against
+//! FastH utilization — the ablation bench `ablation_rnn`/serve example
+//! sweep them.
+//!
+//! Two serving-grade refinements on top of the basic policy:
+//!
+//! - **Fairness**: deadline-expired keys are served *before* full
+//!   queues (most-overdue first), and full queues are picked round-robin
+//!   from the key after the last one served — a sustained full-flush
+//!   burst on one `(model, op)` key cannot starve another key that has
+//!   hit its deadline, nor monopolize consumers among several full keys.
+//! - **Adaptive deadline**: with [`BatcherConfig::adaptive`] set, the
+//!   flush deadline tracks a fraction of the observed p50 batch service
+//!   latency (fed by [`DynamicBatcher::observe_latency`], clamped to
+//!   `[min_wait, max_wait]`) instead of a fixed constant — fast models
+//!   flush sooner, slow models accumulate wider batches.
 
+use super::metrics::LatencyHist;
 use super::protocol::{OpKind, Request};
 use std::collections::{BTreeMap, VecDeque};
+use std::ops::Bound;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -17,13 +33,25 @@ use std::time::{Duration, Instant};
 pub struct BatcherConfig {
     /// Flush as soon as this many columns wait on one key (the paper's m).
     pub max_batch: usize,
-    /// Flush the oldest key after this long regardless of size.
+    /// Deadline when `adaptive` is off; the deadline *ceiling* when on.
     pub max_wait: Duration,
+    /// Derive the deadline from the live service-latency histogram.
+    pub adaptive: bool,
+    /// Deadline floor when `adaptive` is on.
+    pub min_wait: Duration,
+    /// Adaptive target: deadline = `p50_fraction` × observed p50 latency.
+    pub p50_fraction: f64,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) }
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            adaptive: false,
+            min_wait: Duration::from_micros(100),
+            p50_fraction: 0.5,
+        }
     }
 }
 
@@ -45,8 +73,25 @@ pub struct Batch {
 #[derive(Default)]
 struct Queues {
     by_key: BTreeMap<(String, OpKind), VecDeque<Pending>>,
+    /// Round-robin cursor: full-queue scans start after this key.
+    last_served: Option<(String, OpKind)>,
     closed: bool,
 }
+
+/// Live latency feedback for the adaptive deadline: a decaying
+/// [`LatencyHist`] (shared with the metrics layer) plus the cached
+/// current deadline.
+struct AdaptiveState {
+    hist: LatencyHist,
+    seen: AtomicU64,
+    wait_us: AtomicU64,
+}
+
+/// Recompute the cached deadline every this many observations.
+const ADAPT_EVERY: u64 = 16;
+/// Halve all histogram buckets every this many observations, so the
+/// deadline tracks the *recent* latency profile, not the all-time one.
+const ADAPT_DECAY_EVERY: u64 = 1024;
 
 /// Thread-safe dynamic batcher. Producers call [`DynamicBatcher::submit`];
 /// a consumer loop calls [`DynamicBatcher::next_batch`].
@@ -54,11 +99,22 @@ pub struct DynamicBatcher {
     config: BatcherConfig,
     queues: Mutex<Queues>,
     signal: Condvar,
+    adaptive: AdaptiveState,
 }
 
 impl DynamicBatcher {
     pub fn new(config: BatcherConfig) -> DynamicBatcher {
-        DynamicBatcher { config, queues: Mutex::new(Queues::default()), signal: Condvar::new() }
+        let wait_us = config.max_wait.as_micros() as u64;
+        DynamicBatcher {
+            config,
+            queues: Mutex::new(Queues::default()),
+            signal: Condvar::new(),
+            adaptive: AdaptiveState {
+                hist: LatencyHist::default(),
+                seen: AtomicU64::new(0),
+                wait_us: AtomicU64::new(wait_us),
+            },
+        }
     }
 
     pub fn config(&self) -> BatcherConfig {
@@ -86,31 +142,74 @@ impl DynamicBatcher {
         self.queues.lock().unwrap().by_key.values().map(|v| v.len()).sum()
     }
 
+    /// Feed one observed batch service latency into the adaptive deadline.
+    /// No-op (beyond a few relaxed atomics) when `adaptive` is off.
+    pub fn observe_latency(&self, us: u64) {
+        if !self.config.adaptive {
+            return;
+        }
+        self.adaptive.hist.record(us);
+        let seen = self.adaptive.seen.fetch_add(1, Ordering::Relaxed) + 1;
+        if seen % ADAPT_DECAY_EVERY == 0 {
+            self.adaptive.hist.halve_buckets();
+        }
+        if seen % ADAPT_EVERY == 0 {
+            self.adaptive.wait_us.store(self.target_wait_us(), Ordering::Relaxed);
+        }
+    }
+
+    /// The deadline currently in force (µs granularity).
+    pub fn current_wait(&self) -> Duration {
+        if self.config.adaptive {
+            Duration::from_micros(self.adaptive.wait_us.load(Ordering::Relaxed))
+        } else {
+            self.config.max_wait
+        }
+    }
+
+    /// `clamp(p50_fraction × p50, min_wait, max_wait)` from the decaying
+    /// histogram (p50 read as its bucket's upper bound).
+    fn target_wait_us(&self) -> u64 {
+        let floor = self.config.min_wait.as_micros() as u64;
+        let ceil = (self.config.max_wait.as_micros() as u64).max(floor);
+        let p50 = self.adaptive.hist.percentile_us(0.5);
+        if p50 == 0 {
+            // Empty (or fully decayed) histogram: no signal yet.
+            return ceil;
+        }
+        let want = (p50 as f64 * self.config.p50_fraction).round() as u64;
+        want.clamp(floor, ceil)
+    }
+
     /// Block until a batch is ready (size- or deadline-triggered), the
     /// batcher closes (drain remaining, then `None`), or — with work
     /// pending — the deadline of the oldest request arrives.
     pub fn next_batch(&self) -> Option<Batch> {
         let mut q = self.queues.lock().unwrap();
         loop {
-            // Full queue? Flush it immediately.
-            if let Some(key) = q
-                .by_key
-                .iter()
-                .find(|(_k, v)| v.len() >= self.config.max_batch)
-                .map(|(k, _)| k.clone())
-            {
-                return Some(self.flush(&mut q, &key, true));
-            }
-            // Expired queue? (oldest pending ≥ max_wait)
+            let wait = self.current_wait();
+            // Deadline-expired key? Serve the most overdue first — this
+            // runs *before* the full-queue check so a hot key that keeps
+            // refilling to max_batch cannot starve an expired key.
             let now = Instant::now();
             let expired = q
                 .by_key
                 .iter()
                 .filter(|(_k, v)| !v.is_empty())
-                .find(|(_k, v)| now.duration_since(v[0].arrived) >= self.config.max_wait)
+                .filter(|(_k, v)| now.duration_since(v[0].arrived) >= wait)
+                .min_by_key(|(_k, v)| v[0].arrived)
                 .map(|(k, _)| k.clone());
             if let Some(key) = expired {
-                return Some(self.flush(&mut q, &key, false));
+                // Classify as a full flush if the queue also reached
+                // max_batch (keeps flush_full/flush_deadline accounting
+                // comparable with the pre-fairness policy).
+                let full = q.by_key.get(&key).is_some_and(|v| v.len() >= self.config.max_batch);
+                return Some(self.flush(&mut q, &key, full));
+            }
+            // Full queue? Round-robin: scan starts after the last key
+            // served so concurrent full keys share the consumers.
+            if let Some(key) = Self::next_full(&q, self.config.max_batch) {
+                return Some(self.flush(&mut q, &key, true));
             }
             if q.closed {
                 // Drain whatever is left, oldest queue first.
@@ -127,18 +226,32 @@ impl DynamicBatcher {
                 .by_key
                 .values()
                 .filter(|v| !v.is_empty())
-                .map(|v| v[0].arrived + self.config.max_wait)
+                .map(|v| v[0].arrived + wait)
                 .min();
             match nearest {
                 Some(deadline) => {
-                    let wait = deadline.saturating_duration_since(Instant::now());
-                    let (qq, _timeout) = self.signal.wait_timeout(q, wait).unwrap();
+                    let sleep = deadline.saturating_duration_since(Instant::now());
+                    let (qq, _timeout) = self.signal.wait_timeout(q, sleep).unwrap();
                     q = qq;
                 }
                 None => {
                     q = self.signal.wait(q).unwrap();
                 }
             }
+        }
+    }
+
+    /// First key at/after the round-robin cursor with a full queue.
+    fn next_full(q: &Queues, max_batch: usize) -> Option<(String, OpKind)> {
+        let is_full = |(_k, v): &(&(String, OpKind), &VecDeque<Pending>)| v.len() >= max_batch;
+        match &q.last_served {
+            Some(last) => q
+                .by_key
+                .range((Bound::Excluded(last.clone()), Bound::Unbounded))
+                .find(is_full)
+                .or_else(|| q.by_key.range(..=last.clone()).find(is_full))
+                .map(|(k, _)| k.clone()),
+            None => q.by_key.iter().find(is_full).map(|(k, _)| k.clone()),
         }
     }
 
@@ -149,6 +262,7 @@ impl DynamicBatcher {
         if queue.is_empty() {
             q.by_key.remove(key);
         }
+        q.last_served = Some(key.clone());
         Batch { model: key.0.clone(), op: key.1, requests, full }
     }
 }
@@ -167,6 +281,7 @@ mod tests {
         let b = DynamicBatcher::new(BatcherConfig {
             max_batch: 3,
             max_wait: Duration::from_secs(60),
+            ..Default::default()
         });
         for i in 0..3 {
             b.submit(req(i, "m", OpKind::Apply));
@@ -182,6 +297,7 @@ mod tests {
         let b = DynamicBatcher::new(BatcherConfig {
             max_batch: 100,
             max_wait: Duration::from_millis(5),
+            ..Default::default()
         });
         b.submit(req(1, "m", OpKind::Apply));
         let t0 = Instant::now();
@@ -196,6 +312,7 @@ mod tests {
         let b = DynamicBatcher::new(BatcherConfig {
             max_batch: 2,
             max_wait: Duration::from_secs(60),
+            ..Default::default()
         });
         b.submit(req(1, "a", OpKind::Apply));
         b.submit(req(2, "a", OpKind::Inverse)); // different op → different key
@@ -213,6 +330,7 @@ mod tests {
         let b = DynamicBatcher::new(BatcherConfig {
             max_batch: 10,
             max_wait: Duration::from_secs(60),
+            ..Default::default()
         });
         b.submit(req(1, "m", OpKind::Apply));
         b.submit(req(2, "m", OpKind::Cayley));
@@ -229,6 +347,7 @@ mod tests {
         let b = Arc::new(DynamicBatcher::new(BatcherConfig {
             max_batch: 7,
             max_wait: Duration::from_millis(1),
+            ..Default::default()
         }));
         let n = 500u64;
         let producers: Vec<_> = (0..4)
@@ -252,5 +371,80 @@ mod tests {
             }
         }
         assert_eq!(seen.len() as u64, n, "lost requests");
+    }
+
+    #[test]
+    fn full_queues_rotate_round_robin() {
+        // Two perpetually-full keys must alternate, not let BTreeMap
+        // order always pick the lexicographically first.
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        for i in 0..4 {
+            b.submit(req(i, "aaa", OpKind::Apply));
+            b.submit(req(10 + i, "zzz", OpKind::Apply));
+        }
+        let order: Vec<String> = (0..4).map(|_| b.next_batch().unwrap().model).collect();
+        assert_eq!(order, vec!["aaa", "zzz", "aaa", "zzz"]);
+    }
+
+    #[test]
+    fn expired_key_beats_full_queue() {
+        // A deadline-expired singleton is served before a full queue.
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(3),
+            ..Default::default()
+        });
+        b.submit(req(1, "lonely", OpKind::Apply));
+        std::thread::sleep(Duration::from_millis(5));
+        b.submit(req(2, "burst", OpKind::Apply));
+        b.submit(req(3, "burst", OpKind::Apply));
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.model, "lonely");
+        assert!(!first.full);
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.model, "burst");
+        assert!(second.full);
+    }
+
+    #[test]
+    fn adaptive_deadline_tracks_p50_within_clamps() {
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            adaptive: true,
+            min_wait: Duration::from_micros(200),
+            p50_fraction: 0.5,
+        };
+        let b = DynamicBatcher::new(cfg);
+        // Before any observations: the ceiling.
+        assert_eq!(b.current_wait(), Duration::from_millis(10));
+        // Fast service (≤ 250 µs bucket) drags the deadline down…
+        for _ in 0..64 {
+            b.observe_latency(200);
+        }
+        let w = b.current_wait();
+        assert!(w <= Duration::from_micros(250), "got {w:?}");
+        assert!(w >= cfg.min_wait, "got {w:?}");
+        // …slow service pushes it back toward (and clamps at) the ceiling.
+        for _ in 0..512 {
+            b.observe_latency(400_000);
+        }
+        assert_eq!(b.current_wait(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn non_adaptive_ignores_observations() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(7),
+            ..Default::default()
+        });
+        for _ in 0..128 {
+            b.observe_latency(1);
+        }
+        assert_eq!(b.current_wait(), Duration::from_millis(7));
     }
 }

@@ -1,10 +1,77 @@
-//! Serving metrics: lock-free counters + a coarse latency histogram.
+//! Serving metrics: lock-free counters + coarse latency histograms
+//! (aggregate and per-op), with JSON (`stats` admin) and Prometheus-ish
+//! text (`metrics` admin) renderers.
 
+use super::protocol::OpKind;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Histogram bucket upper bounds in microseconds (last bucket = +∞).
 pub const LATENCY_BUCKETS_US: [u64; 10] =
     [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 50_000, u64::MAX];
+
+/// Index of the histogram bucket that `us` falls into.
+pub fn bucket_index(us: u64) -> usize {
+    LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(LATENCY_BUCKETS_US.len() - 1)
+}
+
+/// One latency histogram: bucketed counts + count + sum.
+#[derive(Default)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; LATENCY_BUCKETS_US.len()],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile (returns the bucket upper bound).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.buckets.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return LATENCY_BUCKETS_US[i];
+            }
+        }
+        u64::MAX
+    }
+
+    /// Halve every bucket — a decay step for consumers that want the
+    /// percentile to track *recent* latencies (`count`/`sum_us` keep
+    /// their all-time totals; only the bucket-based percentile decays).
+    pub fn halve_buckets(&self) {
+        for b in &self.buckets {
+            // Racy halving is fine: the histogram is a heuristic.
+            b.store(b.load(Ordering::Relaxed) / 2, Ordering::Relaxed);
+        }
+    }
+
+    fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
 
 /// Aggregated serving metrics; all methods are thread-safe.
 #[derive(Default)]
@@ -16,8 +83,9 @@ pub struct Metrics {
     pub batched_columns: AtomicU64,
     pub flush_full: AtomicU64,
     pub flush_deadline: AtomicU64,
-    latency_hist: [AtomicU64; 10],
-    latency_sum_us: AtomicU64,
+    latency: LatencyHist,
+    /// Per-op latency histograms, indexed by [`OpKind::index`].
+    per_op: [LatencyHist; OpKind::ALL.len()],
 }
 
 impl Metrics {
@@ -25,10 +93,20 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Record a latency against the aggregate histogram only.
     pub fn record_latency(&self, us: u64) {
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        let idx = LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(9);
-        self.latency_hist[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(us);
+    }
+
+    /// Record a latency against the aggregate *and* the op's histogram.
+    pub fn record_latency_op(&self, op: OpKind, us: u64) {
+        self.latency.record(us);
+        self.per_op[op.index()].record(us);
+    }
+
+    /// The latency histogram of one op (tests / dashboards).
+    pub fn op_hist(&self, op: OpKind) -> &LatencyHist {
+        &self.per_op[op.index()]
     }
 
     /// Mean batch size so far (the FastH utilization knob).
@@ -46,30 +124,42 @@ impl Metrics {
         if n == 0 {
             return 0.0;
         }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.sum_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
-    /// Approximate latency percentile from the histogram (returns the
-    /// bucket upper bound).
+    /// Approximate latency percentile from the aggregate histogram
+    /// (returns the bucket upper bound).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.latency_hist.iter().map(|c| c.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (p * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, c) in self.latency_hist.iter().enumerate() {
-            seen += c.load(Ordering::Relaxed);
-            if seen >= target {
-                return LATENCY_BUCKETS_US[i];
-            }
-        }
-        u64::MAX
+        self.latency.percentile_us(p)
     }
 
-    /// Render as a JSON object string (the `stats` admin command).
+    /// Render as a JSON object string (the `stats` admin command) with no
+    /// shard context (single-shard callers, unit tests).
     pub fn to_json(&self) -> String {
+        self.to_json_with(&[])
+    }
+
+    /// Render as a JSON object string including live per-shard queue
+    /// depths and the per-op latency histograms.
+    pub fn to_json_with(&self, shard_depths: &[usize]) -> String {
         use crate::util::json::Json;
+        let mut per_op = Vec::new();
+        for op in OpKind::ALL {
+            let h = self.op_hist(op);
+            let buckets = h.bucket_counts();
+            let hist: Vec<Json> = buckets.iter().map(|&c| Json::num(c as f64)).collect();
+            per_op.push((
+                op.name(),
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("mean_us", Json::num(h.mean_us())),
+                    ("p50_us", Json::num(h.percentile_us(0.5).min(10_000_000) as f64)),
+                    ("p99_us", Json::num(h.percentile_us(0.99).min(10_000_000) as f64)),
+                    ("hist", Json::arr(hist)),
+                ]),
+            ));
+        }
+        let depths: Vec<Json> = shard_depths.iter().map(|&d| Json::num(d as f64)).collect();
         Json::obj(vec![
             ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
             ("responses_ok", Json::num(self.responses_ok.load(Ordering::Relaxed) as f64)),
@@ -88,8 +178,63 @@ impl Metrics {
                 "p99_latency_us",
                 Json::num(self.latency_percentile_us(0.99).min(10_000_000) as f64),
             ),
+            ("shard_depth", Json::arr(depths)),
+            ("per_op", Json::obj(per_op)),
         ])
         .to_string()
+    }
+
+    /// Prometheus-ish exposition text (the `metrics` admin command): one
+    /// `name{labels} value` sample per line, no TYPE/HELP chatter.
+    pub fn to_prometheus(&self, shard_depths: &[usize]) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let counters: [(&str, &AtomicU64); 7] = [
+            ("orthoserve_requests_total", &self.requests),
+            ("orthoserve_responses_ok_total", &self.responses_ok),
+            ("orthoserve_responses_err_total", &self.responses_err),
+            ("orthoserve_batches_total", &self.batches),
+            ("orthoserve_batched_columns_total", &self.batched_columns),
+            ("orthoserve_flush_full_total", &self.flush_full),
+            ("orthoserve_flush_deadline_total", &self.flush_deadline),
+        ];
+        for (name, c) in counters {
+            let _ = writeln!(out, "{name} {}", c.load(Ordering::Relaxed));
+        }
+        let _ = writeln!(out, "orthoserve_mean_batch_size {}", self.mean_batch_size());
+        for op in OpKind::ALL {
+            let h = self.op_hist(op);
+            let mut cum = 0u64;
+            for (i, c) in h.bucket_counts().into_iter().enumerate() {
+                cum += c;
+                let le = if LATENCY_BUCKETS_US[i] == u64::MAX {
+                    "+Inf".to_string()
+                } else {
+                    LATENCY_BUCKETS_US[i].to_string()
+                };
+                let _ = writeln!(
+                    out,
+                    "orthoserve_latency_us_bucket{{op=\"{}\",le=\"{le}\"}} {cum}",
+                    op.name()
+                );
+            }
+            let _ = writeln!(
+                out,
+                "orthoserve_latency_us_count{{op=\"{}\"}} {}",
+                op.name(),
+                h.count()
+            );
+            let _ = writeln!(
+                out,
+                "orthoserve_latency_us_sum{{op=\"{}\"}} {}",
+                op.name(),
+                h.sum_us.load(Ordering::Relaxed)
+            );
+        }
+        for (s, d) in shard_depths.iter().enumerate() {
+            let _ = writeln!(out, "orthoserve_shard_queue_depth{{shard=\"{s}\"}} {d}");
+        }
+        out
     }
 }
 
@@ -118,13 +263,49 @@ mod tests {
     }
 
     #[test]
+    fn per_op_histograms_are_isolated() {
+        let m = Metrics::new();
+        m.record_latency_op(OpKind::Apply, 40);
+        m.record_latency_op(OpKind::Apply, 45);
+        m.record_latency_op(OpKind::Expm, 40_000);
+        assert_eq!(m.op_hist(OpKind::Apply).count(), 2);
+        assert_eq!(m.op_hist(OpKind::Expm).count(), 1);
+        assert_eq!(m.op_hist(OpKind::Pinv).count(), 0);
+        assert_eq!(m.op_hist(OpKind::Apply).percentile_us(0.5), 50);
+        assert_eq!(m.op_hist(OpKind::Expm).percentile_us(0.5), 50_000);
+        // Aggregate saw all three.
+        assert_eq!(m.latency.count(), 3);
+    }
+
+    #[test]
     fn json_renders() {
         let m = Metrics::new();
         m.requests.fetch_add(3, Ordering::Relaxed);
         m.responses_ok.fetch_add(3, Ordering::Relaxed);
-        m.record_latency(100);
-        let j = crate::util::json::Json::parse(&m.to_json()).unwrap();
+        m.record_latency_op(OpKind::Apply, 100);
+        let j = crate::util::json::Json::parse(&m.to_json_with(&[1, 4])).unwrap();
         assert_eq!(j.get("requests").as_usize(), Some(3));
         assert!(j.get("p50_latency_us").as_f64().is_some());
+        let depths = j.get("shard_depth").as_arr().unwrap();
+        assert_eq!(depths.len(), 2);
+        assert_eq!(depths[1].as_usize(), Some(4));
+        let apply = j.get("per_op").get("apply");
+        assert_eq!(apply.get("count").as_usize(), Some(1));
+        assert_eq!(apply.get("hist").as_arr().unwrap().len(), LATENCY_BUCKETS_US.len());
+    }
+
+    #[test]
+    fn prometheus_renders() {
+        let m = Metrics::new();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.record_latency_op(OpKind::Pinv, 99);
+        let text = m.to_prometheus(&[0, 7]);
+        assert!(text.contains("orthoserve_requests_total 2"));
+        assert!(text.contains("orthoserve_latency_us_count{op=\"pinv\"} 1"));
+        assert!(text.contains("orthoserve_latency_us_bucket{op=\"pinv\",le=\"100\"} 1"));
+        assert!(text.contains("orthoserve_latency_us_bucket{op=\"pinv\",le=\"+Inf\"} 1"));
+        assert!(text.contains("orthoserve_shard_queue_depth{shard=\"1\"} 7"));
+        // Line-oriented: every line is one sample, none empty.
+        assert!(text.lines().all(|l| !l.trim().is_empty() && l.contains(' ')));
     }
 }

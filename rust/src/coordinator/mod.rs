@@ -5,13 +5,18 @@
 //! *per batch*, independent of how many columns ride along — so a dynamic
 //! batcher that coalesces single-column requests into a `d×m` mini-batch
 //! converts the paper's parallelism directly into serving throughput.
-//! This module provides exactly that:
+//! This module provides exactly that, sharded:
 //!
 //! - [`protocol`]: JSON-lines wire format (request/response),
-//! - [`metrics`]: counters + latency histogram,
-//! - [`state`]: the model registry (named [`crate::svd::SvdParam`]s with a
+//! - [`metrics`]: counters + aggregate and per-op latency histograms,
+//! - [`state`]: the model registry (square [`crate::svd::SvdParam`] or
+//!   rectangular [`crate::svd::rect::RectSvdParam`] entries with a
 //!   native-FastH or PJRT-artifact execution engine),
-//! - [`batcher`]: the dynamic batcher (flush on size or deadline),
+//! - [`batcher`]: the dynamic batcher (flush on size or adaptive
+//!   deadline, with per-key fairness),
+//! - [`shard`]: S independent `(batcher, worker pool, registry
+//!   partition, response routes)` shards, models placed by rendezvous
+//!   hashing on name,
 //! - [`worker`]: batch execution (assemble `X`, run, scatter results),
 //! - [`server`]: a threaded TCP front-end plus a matching blocking client.
 
@@ -19,10 +24,12 @@ pub mod batcher;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
+pub mod shard;
 pub mod state;
 pub mod worker;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use protocol::{OpKind, Request, Response};
 pub use server::{Client, Server, ServerConfig};
-pub use state::{ExecEngine, ModelRegistry};
+pub use shard::{rendezvous_place, Shard, ShardSet};
+pub use state::{ExecEngine, ModelEntry, ModelRegistry};

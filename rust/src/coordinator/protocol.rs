@@ -17,21 +17,40 @@ use anyhow::{bail, Context, Result};
 pub enum OpKind {
     /// `y = W·x`.
     Apply,
-    /// `y = W⁻¹·x` (Table-1 inverse route).
+    /// `y = W⁻¹·x` (Table-1 inverse route; square models only).
     Inverse,
     /// `y = e^W·x` (symmetric upper-bound form).
     Expm,
     /// `y = C(W)·x`.
     Cayley,
+    /// `y = W⁺·x` (Table-1 pseudo-inverse route `V·Σ⁺·Uᵀ`): the rect
+    /// route; on square models it coincides with `Inverse` for σ ≠ 0.
+    Pinv,
 }
 
 impl OpKind {
+    /// Every op, in stable order (per-op metrics index on this).
+    pub const ALL: [OpKind; 5] =
+        [OpKind::Apply, OpKind::Inverse, OpKind::Expm, OpKind::Cayley, OpKind::Pinv];
+
+    /// Position in [`OpKind::ALL`].
+    pub fn index(self) -> usize {
+        match self {
+            OpKind::Apply => 0,
+            OpKind::Inverse => 1,
+            OpKind::Expm => 2,
+            OpKind::Cayley => 3,
+            OpKind::Pinv => 4,
+        }
+    }
+
     pub fn parse(s: &str) -> Result<OpKind> {
         Ok(match s {
             "apply" => OpKind::Apply,
             "inverse" => OpKind::Inverse,
             "expm" => OpKind::Expm,
             "cayley" => OpKind::Cayley,
+            "pinv" => OpKind::Pinv,
             other => bail!("unknown op '{other}'"),
         })
     }
@@ -42,6 +61,7 @@ impl OpKind {
             OpKind::Inverse => "inverse",
             OpKind::Expm => "expm",
             OpKind::Cayley => "cayley",
+            OpKind::Pinv => "pinv",
         }
     }
 }
@@ -182,8 +202,9 @@ mod tests {
 
     #[test]
     fn all_ops_parse() {
-        for op in [OpKind::Apply, OpKind::Inverse, OpKind::Expm, OpKind::Cayley] {
+        for (i, op) in OpKind::ALL.into_iter().enumerate() {
             assert_eq!(OpKind::parse(op.name()).unwrap(), op);
+            assert_eq!(op.index(), i);
         }
         assert!(OpKind::parse("nonsense").is_err());
     }

@@ -1,14 +1,21 @@
 //! TCP front-end: newline-delimited JSON requests in, responses out.
 //!
-//! Topology: N connection threads parse requests into the shared
-//! [`DynamicBatcher`]; W worker threads pull batches, execute them against
-//! the [`ModelRegistry`], and route responses back to the originating
-//! connection through per-connection channels. Admin lines
-//! (`{"cmd": "stats"|"models"|"shutdown"}`) are answered inline.
+//! Topology: N connection readers parse requests and route each one to
+//! its model's shard (rendezvous hash on model name — see
+//! [`super::shard`]). Every shard owns an independent
+//! `(batcher, worker pool, registry partition, response routes)` tuple:
+//! its workers pull batches from its [`DynamicBatcher`], execute them
+//! against its registry partition, and route responses back through
+//! *its* per-connection channel table — a hot model saturating one
+//! shard cannot serialize other models' responses behind a global lock.
+//! Admin lines (`{"cmd": "stats"|"metrics"|"models"|"shutdown"}`) are
+//! answered by the reader through the connection's single writer-half
+//! channel, so the socket has exactly one writing thread.
 
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::BatcherConfig;
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
+use super::shard::{ResponseTx, ShardSet};
 use super::state::ModelRegistry;
 use super::worker::execute_batch;
 use anyhow::{Context, Result};
@@ -16,19 +23,21 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 /// Server knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Bind address, e.g. "127.0.0.1:7070" (port 0 = ephemeral).
     pub addr: String,
-    /// Worker threads executing batches.
+    /// Independent serving shards (min 1).
+    pub shards: usize,
+    /// Worker threads executing batches, *per shard*.
     pub workers: usize,
     pub batcher: BatcherConfig,
-    /// Reject new requests once this many columns are queued
-    /// (backpressure).
+    /// Reject new requests once this many columns are queued on the
+    /// target shard (backpressure).
     pub max_queue_depth: usize,
 }
 
@@ -36,6 +45,7 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:0".into(),
+            shards: 2,
             workers: 2,
             batcher: BatcherConfig::default(),
             max_queue_depth: 10_000,
@@ -43,20 +53,21 @@ impl Default for ServerConfig {
     }
 }
 
-type ResponseTx = mpsc::Sender<Response>;
-
 /// Running server handle.
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     pub metrics: Arc<Metrics>,
+    /// The user-facing catalog (the shards hold partitions of it).
     pub registry: Arc<ModelRegistry>,
+    pub shards: Arc<ShardSet>,
     shutdown: Arc<AtomicBool>,
-    batcher: Arc<DynamicBatcher>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind and start serving in background threads.
+    /// Bind and start serving in background threads. The registry is
+    /// partitioned across shards here; models registered *after* start
+    /// are adopted lazily by the owning shard on first request.
     pub fn start(config: ServerConfig, registry: Arc<ModelRegistry>) -> Result<Server> {
         let listener = TcpListener::bind(&config.addr)
             .with_context(|| format!("binding {}", config.addr))?;
@@ -64,38 +75,64 @@ impl Server {
         listener.set_nonblocking(true)?;
 
         let metrics = Arc::new(Metrics::new());
-        let batcher = Arc::new(DynamicBatcher::new(config.batcher));
+        let shards = Arc::new(ShardSet::new(config.shards, config.batcher));
+        for name in registry.names() {
+            if let Some(state) = registry.get(&name) {
+                shards.register(state);
+            }
+        }
         let shutdown = Arc::new(AtomicBool::new(false));
-        let routes: Arc<Mutex<HashMap<u64, ResponseTx>>> = Arc::new(Mutex::new(HashMap::new()));
         let next_conn_id = Arc::new(AtomicU64::new(1));
         let mut threads = Vec::new();
 
-        // Worker threads: pull batches → execute → route responses.
-        for _ in 0..config.workers.max(1) {
-            let batcher = batcher.clone();
-            let registry = registry.clone();
-            let metrics = metrics.clone();
-            let routes = routes.clone();
-            threads.push(std::thread::spawn(move || {
-                while let Some(batch) = batcher.next_batch() {
-                    let responses = execute_batch(&registry, &metrics, &batch);
-                    let routes = routes.lock().unwrap();
-                    for (resp, req) in responses.into_iter().zip(&batch.requests) {
-                        // Requests carry the connection id in the top bits
-                        // of the wire id (see conn loop); route accordingly.
-                        let conn = req.id >> 32;
-                        if let Some(tx) = routes.get(&conn) {
-                            let _ = tx.send(resp);
+        // Per-shard worker pools: pull batches → execute against the
+        // shard's partition → route via the shard's channel table, and
+        // feed the observed service latency back into the shard's
+        // adaptive deadline.
+        for shard in shards.shards() {
+            for _ in 0..config.workers.max(1) {
+                let shard = shard.clone();
+                let metrics = metrics.clone();
+                let catalog = registry.clone();
+                threads.push(std::thread::spawn(move || {
+                    while let Some(batch) = shard.batcher.next_batch() {
+                        // Lazily adopt models registered in the catalog
+                        // after start(): the reader routed this batch here
+                        // by name, so this shard owns the model.
+                        if shard.registry.get(&batch.model).is_none() {
+                            if let Some(state) = catalog.get(&batch.model) {
+                                shard.registry.insert_state(state);
+                            }
+                        }
+                        let t0 = Instant::now();
+                        let responses = execute_batch(&shard.registry, &metrics, &batch);
+                        // Only engine-executed batches feed the adaptive
+                        // deadline — rejected batches (unknown model, bad
+                        // widths) finish in ~0 µs and would otherwise drag
+                        // the shard's deadline to min_wait.
+                        if responses.iter().any(|r| r.ok) {
+                            shard.batcher.observe_latency(t0.elapsed().as_micros() as u64);
+                        }
+                        let routes = shard.routes.lock().unwrap();
+                        for (mut resp, req) in responses.into_iter().zip(&batch.requests) {
+                            // Requests carry the connection id in the top
+                            // bits of the wire id (see conn loop); restore
+                            // the client's id before serializing.
+                            let conn = req.id >> 32;
+                            resp.id &= 0xFFFF_FFFF;
+                            if let Some(tx) = routes.get(&conn) {
+                                let _ = tx.send(resp.to_json());
+                            }
                         }
                     }
-                }
-            }));
+                }));
+            }
         }
 
         // Accept loop.
         {
             let shutdown = shutdown.clone();
-            let batcher = batcher.clone();
+            let shards = shards.clone();
             let metrics = metrics.clone();
             let registry = registry.clone();
             let max_depth = config.max_queue_depth;
@@ -104,16 +141,16 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             let conn_id = next_conn_id.fetch_add(1, Ordering::Relaxed);
-                            let (tx, rx) = mpsc::channel::<Response>();
-                            routes.lock().unwrap().insert(conn_id, tx);
+                            let (tx, rx) = mpsc::channel::<String>();
+                            shards.add_route(conn_id, &tx);
                             spawn_connection(
                                 conn_id,
                                 stream,
-                                batcher.clone(),
+                                shards.clone(),
                                 metrics.clone(),
                                 registry.clone(),
-                                routes.clone(),
                                 shutdown.clone(),
+                                tx,
                                 rx,
                                 max_depth,
                             );
@@ -127,13 +164,13 @@ impl Server {
             }));
         }
 
-        Ok(Server { local_addr, metrics, registry, shutdown, batcher, threads })
+        Ok(Server { local_addr, metrics, registry, shards, shutdown, threads })
     }
 
     /// Stop accepting, drain queues, join threads.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
-        self.batcher.close();
+        self.shards.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -144,30 +181,32 @@ impl Server {
 fn spawn_connection(
     conn_id: u64,
     stream: TcpStream,
-    batcher: Arc<DynamicBatcher>,
+    shards: Arc<ShardSet>,
     metrics: Arc<Metrics>,
     registry: Arc<ModelRegistry>,
-    routes: Arc<Mutex<HashMap<u64, ResponseTx>>>,
     shutdown: Arc<AtomicBool>,
-    responses: mpsc::Receiver<Response>,
+    tx: ResponseTx,
+    replies: mpsc::Receiver<String>,
     max_depth: usize,
 ) {
-    // Writer half: serialize responses back, restoring the client's id.
+    // Writer half: the ONLY thread writing this socket. Everything —
+    // batch responses from shard workers, admin replies, inline errors —
+    // arrives as pre-serialized lines on one channel, so frames can
+    // never interleave.
     let write_stream = stream.try_clone().expect("clone stream");
     std::thread::spawn(move || {
         let mut w = BufWriter::new(write_stream);
-        while let Ok(mut resp) = responses.recv() {
-            resp.id &= 0xFFFF_FFFF; // strip the connection tag
-            if writeln!(w, "{}", resp.to_json()).and_then(|_| w.flush()).is_err() {
+        while let Ok(line) = replies.recv() {
+            if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
                 break;
             }
         }
     });
 
-    // Reader half: parse request lines into the batcher.
+    // Reader half: parse request lines, route to the model's shard;
+    // admin and error replies go through the writer channel (`tx`).
     std::thread::spawn(move || {
-        let peer_routes = routes.clone();
-        let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        let mut reader = BufReader::new(stream);
         let mut line = String::new();
         loop {
             line.clear();
@@ -182,52 +221,60 @@ fn spawn_connection(
             // Admin commands bypass the batcher.
             if let Ok(j) = crate::util::json::Json::parse(trimmed) {
                 if let Some(cmd) = j.get("cmd").as_str() {
+                    use crate::util::json::Json;
                     let reply = match cmd {
-                        "stats" => metrics.to_json(),
+                        "stats" => metrics.to_json_with(&shards.depths()),
+                        "metrics" => {
+                            // The Prometheus-ish exposition framed in ONE
+                            // JSON line, keeping the wire line-oriented
+                            // (Client::metrics_text unwraps the frame).
+                            let text = metrics.to_prometheus(&shards.depths());
+                            Json::obj(vec![("metrics", Json::str(text))]).to_string()
+                        }
                         "models" => {
-                            let names = registry.names();
-                            let items = names.into_iter().map(crate::util::json::Json::str);
-                            crate::util::json::Json::arr(items.collect()).to_string()
+                            let items = registry.names().into_iter().map(Json::str);
+                            Json::arr(items.collect()).to_string()
                         }
                         "shutdown" => {
                             shutdown.store(true, Ordering::Relaxed);
-                            batcher.close();
+                            shards.close();
                             "{\"ok\":true}".to_string()
                         }
-                        other => format!("{{\"error\":\"unknown cmd '{other}'\"}}"),
+                        other => {
+                            let msg = Json::str(format!("unknown cmd '{other}'"));
+                            Json::obj(vec![("error", msg)]).to_string()
+                        }
                     };
-                    let mut w = BufWriter::new(stream.try_clone().expect("clone"));
-                    let _ = writeln!(w, "{reply}");
-                    let _ = w.flush();
+                    let _ = tx.send(reply);
                     continue;
                 }
             }
             metrics.requests.fetch_add(1, Ordering::Relaxed);
             match Request::from_json(trimmed) {
                 Ok(mut req) => {
-                    if batcher.depth() >= max_depth {
+                    let shard = shards.shard_for(&req.model);
+                    if shard.batcher.depth() >= max_depth {
                         // Backpressure: reject instead of queueing unboundedly.
-                        let resp = Response::err(req.id, "server overloaded (queue full)");
+                        let resp = Response::err(
+                            req.id,
+                            format!("server overloaded (shard {} queue full)", shard.id),
+                        );
                         metrics.responses_err.fetch_add(1, Ordering::Relaxed);
-                        let mut w = BufWriter::new(stream.try_clone().expect("clone"));
-                        let _ = writeln!(w, "{}", resp.to_json());
-                        let _ = w.flush();
+                        let _ = tx.send(resp.to_json());
                         continue;
                     }
                     // Tag the request id with the connection for routing.
                     req.id = (conn_id << 32) | (req.id & 0xFFFF_FFFF);
-                    batcher.submit(req);
+                    shard.batcher.submit(req);
                 }
                 Err(e) => {
                     metrics.responses_err.fetch_add(1, Ordering::Relaxed);
                     let resp = Response::err(0, format!("bad request: {e:#}"));
-                    let mut w = BufWriter::new(stream.try_clone().expect("clone"));
-                    let _ = writeln!(w, "{}", resp.to_json());
-                    let _ = w.flush();
+                    let _ = tx.send(resp.to_json());
                 }
             }
         }
-        peer_routes.lock().unwrap().remove(&conn_id);
+        shards.remove_route(conn_id);
     });
 }
 
@@ -236,17 +283,31 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     next_id: u64,
+    /// Responses read while waiting for a different id (out-of-order
+    /// completions across interleaved call/call_many sequences).
+    pending: HashMap<u64, Response>,
 }
 
 impl Client {
     pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: BufWriter::new(stream), next_id: 1 })
+        let writer = BufWriter::new(stream);
+        Ok(Client { reader, writer, next_id: 1, pending: HashMap::new() })
     }
 
-    /// Send one request and wait for its response (responses on one
-    /// connection come back in completion order; we match by id).
+    fn read_response(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed connection");
+        }
+        Response::from_json(line.trim())
+    }
+
+    /// Send one request and wait for *its* response: responses on one
+    /// connection come back in completion order, so anything with a
+    /// different id (including errors destined for other in-flight
+    /// requests) is buffered, never stolen.
     pub fn call(
         &mut self,
         model: &str,
@@ -258,16 +319,27 @@ impl Client {
         let req = Request { id, model: model.into(), op, column };
         writeln!(self.writer, "{}", req.to_json())?;
         self.writer.flush()?;
+        if let Some(resp) = self.pending.remove(&id) {
+            return Ok(resp);
+        }
         loop {
-            let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
-                anyhow::bail!("server closed connection");
-            }
-            let resp = Response::from_json(line.trim())?;
-            if resp.id == id || !resp.ok {
+            let resp = self.read_response()?;
+            if resp.id == id {
                 return Ok(resp);
             }
+            self.check_unroutable(&resp)?;
+            self.pending.insert(resp.id, resp);
         }
+    }
+
+    /// An error response with id 0 is connection-level (the server could
+    /// not parse a line): no request owns it, so waiting on would hang —
+    /// surface it instead. (Client ids start at 1.)
+    fn check_unroutable(&self, resp: &Response) -> Result<()> {
+        if resp.id == 0 && !resp.ok {
+            anyhow::bail!("server error: {}", resp.error.as_deref().unwrap_or("unknown"));
+        }
+        Ok(())
     }
 
     /// Fire-and-collect: send all columns, then read all responses
@@ -289,28 +361,57 @@ impl Client {
         self.writer.flush()?;
         let mut got: Vec<Option<Response>> = vec![None; n];
         let mut filled = 0;
-        while filled < n {
-            let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
-                anyhow::bail!("server closed connection");
-            }
-            let resp = Response::from_json(line.trim())?;
-            let idx = (resp.id - first_id) as usize;
-            if idx < n && got[idx].is_none() {
-                got[idx] = Some(resp);
+        for (idx, slot) in got.iter_mut().enumerate() {
+            if let Some(resp) = self.pending.remove(&(first_id + idx as u64)) {
+                *slot = Some(resp);
                 filled += 1;
+            }
+        }
+        while filled < n {
+            let resp = self.read_response()?;
+            // checked_sub: a stray response below first_id must buffer,
+            // not underflow.
+            match resp.id.checked_sub(first_id) {
+                Some(idx) if (idx as usize) < n && got[idx as usize].is_none() => {
+                    got[idx as usize] = Some(resp);
+                    filled += 1;
+                }
+                _ => {
+                    self.check_unroutable(&resp)?;
+                    self.pending.insert(resp.id, resp);
+                }
             }
         }
         Ok(got.into_iter().map(|o| o.unwrap()).collect())
     }
 
-    /// Admin command returning the raw JSON line.
+    /// Admin command returning the raw reply (`stats`, `models`,
+    /// `shutdown` answer with one JSON line; `metrics` is delegated to
+    /// [`Client::metrics_text`] so its multi-line exposition cannot
+    /// desync the connection).
     pub fn admin(&mut self, cmd: &str) -> Result<String> {
+        if cmd == "metrics" {
+            return self.metrics_text();
+        }
         writeln!(self.writer, "{{\"cmd\":\"{cmd}\"}}")?;
         self.writer.flush()?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim().to_string())
+    }
+
+    /// The `metrics` admin command: returns the Prometheus-ish
+    /// exposition text (framed in one JSON line on the wire).
+    pub fn metrics_text(&mut self) -> Result<String> {
+        writeln!(self.writer, "{{\"cmd\":\"metrics\"}}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed connection");
+        }
+        let j = crate::util::json::Json::parse(line.trim()).context("metrics frame")?;
+        let text = j.get("metrics").as_str().context("metrics frame missing 'metrics'")?;
+        Ok(text.to_string())
     }
 }
 
@@ -328,8 +429,13 @@ mod tests {
         Server::start(
             ServerConfig {
                 addr: "127.0.0.1:0".into(),
+                shards: 2,
                 workers: 2,
-                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(2),
+                    ..Default::default()
+                },
                 max_queue_depth: 100,
             },
             registry,
@@ -364,10 +470,11 @@ mod tests {
         // At least one response should have shared a batch.
         let max_bs = responses.iter().map(|r| r.batch_size).max().unwrap();
         assert!(max_bs > 1, "no batching observed (max batch {max_bs})");
-        // Stats report them all.
+        // Stats report them all, with one depth slot per shard.
         let stats = client.admin("stats").unwrap();
         let j = crate::util::json::Json::parse(&stats).unwrap();
         assert_eq!(j.get("responses_ok").as_usize(), Some(32));
+        assert_eq!(j.get("shard_depth").as_arr().unwrap().len(), 2);
         server.stop();
     }
 
@@ -387,6 +494,32 @@ mod tests {
         let mut client = Client::connect(&server.local_addr).unwrap();
         let models = client.admin("models").unwrap();
         assert!(models.contains("m8"));
+        server.stop();
+    }
+
+    #[test]
+    fn metrics_admin_returns_prometheus_text() {
+        let server = start_test_server();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let _ = client.call("m8", OpKind::Apply, vec![0.5; 8]).unwrap();
+        let text = client.metrics_text().unwrap();
+        assert!(text.contains("orthoserve_requests_total"), "{text}");
+        assert!(text.contains("orthoserve_shard_queue_depth{shard=\"1\"}"), "{text}");
+        assert!(text.contains("orthoserve_latency_us_count{op=\"apply\"} 1"), "{text}");
+        // The connection is still usable for ordinary calls afterwards.
+        let r = client.call("m8", OpKind::Apply, vec![0.25; 8]).unwrap();
+        assert!(r.ok);
+        server.stop();
+    }
+
+    #[test]
+    fn late_registration_is_served() {
+        let server = start_test_server();
+        server.registry.create("late", 8, ExecEngine::Native { k: 4 }, 33);
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let r = client.call("late", OpKind::Apply, vec![0.5; 8]).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+        assert_eq!(r.column.len(), 8);
         server.stop();
     }
 

@@ -1,0 +1,210 @@
+//! Shard layer: the serving coordinator as S independent
+//! `(batcher, worker pool, registry partition)` shards.
+//!
+//! Placement is rendezvous (highest-random-weight) hashing on the model
+//! name: every `(shard, name)` pair gets a deterministic score and the
+//! name lives on the arg-max shard. Growing from S to S+1 shards only
+//! moves the names whose new shard wins — ~1/(S+1) of them — instead of
+//! the ~all-of-them a modular hash would reshuffle.
+//!
+//! Each shard owns its own [`DynamicBatcher`], its own slice of the
+//! model registry, and its own response-routing table, so a hot model's
+//! traffic contends only with its shard — one global `routes` mutex no
+//! longer serializes every connection's responses behind one lock.
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::state::{ModelRegistry, ModelState};
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Per-connection reply channel (registered in each shard's routes).
+/// Carries fully serialized wire lines — responses *and* inline admin /
+/// error replies — so the connection's writer half is the only thread
+/// that ever writes to the socket.
+pub type ResponseTx = mpsc::Sender<String>;
+
+/// One independent serving shard.
+pub struct Shard {
+    pub id: usize,
+    pub batcher: DynamicBatcher,
+    /// The registry partition: only models placed on this shard.
+    pub registry: ModelRegistry,
+    /// conn id → response channel, touched only by this shard's workers
+    /// and connection setup/teardown.
+    pub routes: Mutex<HashMap<u64, ResponseTx>>,
+}
+
+/// The fixed set of shards a server runs.
+pub struct ShardSet {
+    shards: Vec<Arc<Shard>>,
+}
+
+impl ShardSet {
+    /// Build `n` shards (min 1), each with its own batcher.
+    pub fn new(n: usize, batcher: BatcherConfig) -> ShardSet {
+        let shards = (0..n.max(1))
+            .map(|id| {
+                Arc::new(Shard {
+                    id,
+                    batcher: DynamicBatcher::new(batcher),
+                    registry: ModelRegistry::new(),
+                    routes: Mutex::new(HashMap::new()),
+                })
+            })
+            .collect();
+        ShardSet { shards }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn shards(&self) -> &[Arc<Shard>] {
+        &self.shards
+    }
+
+    /// The shard index owning `model` (rendezvous hash).
+    pub fn place(&self, model: &str) -> usize {
+        rendezvous_place(self.shards.len(), model)
+    }
+
+    /// The shard owning `model`.
+    pub fn shard_for(&self, model: &str) -> &Arc<Shard> {
+        &self.shards[self.place(model)]
+    }
+
+    /// Put a model into its owning shard's registry partition.
+    pub fn register(&self, state: Arc<ModelState>) {
+        self.shard_for(&state.name).registry.insert_state(state);
+    }
+
+    /// Live queue depth per shard (stats / backpressure).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.batcher.depth()).collect()
+    }
+
+    /// Register a connection's response channel with every shard.
+    pub fn add_route(&self, conn_id: u64, tx: &ResponseTx) {
+        for s in &self.shards {
+            s.routes.lock().unwrap().insert(conn_id, tx.clone());
+        }
+    }
+
+    /// Remove a connection's response channel from every shard.
+    pub fn remove_route(&self, conn_id: u64) {
+        for s in &self.shards {
+            s.routes.lock().unwrap().remove(&conn_id);
+        }
+    }
+
+    /// Close every shard's batcher (workers drain and exit).
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.batcher.close();
+        }
+    }
+}
+
+/// Rendezvous/HRW placement of `key` among `n` shards: arg-max over
+/// per-shard scores. Deterministic across processes (FNV-1a + a
+/// splitmix64 finalizer — no `RandomState` involved).
+pub fn rendezvous_place(n: usize, key: &str) -> usize {
+    assert!(n > 0, "no shards");
+    let kh = fnv1a64(key.as_bytes());
+    let mut best = 0usize;
+    let mut best_score = 0u64;
+    for s in 0..n {
+        let score = splitmix64(kh ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if s == 0 || score > best_score {
+            best = s;
+            best_score = score;
+        }
+    }
+    best
+}
+
+/// FNV-1a 64-bit over raw bytes.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer: decorrelates the per-shard scores.
+fn splitmix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::ExecEngine;
+
+    #[test]
+    fn placement_is_deterministic_and_in_range() {
+        for n in 1..6 {
+            for name in ["svd_64", "rect_96x64", "", "ünïcode"] {
+                let p = rendezvous_place(n, name);
+                assert!(p < n);
+                assert_eq!(p, rendezvous_place(n, name), "unstable for {name}@{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_spreads_models() {
+        // 256 names over 4 shards: no shard empty, none hogging > 60%.
+        let n = 4;
+        let mut counts = vec![0usize; n];
+        for i in 0..256 {
+            counts[rendezvous_place(n, &format!("model_{i}"))] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 0, "shard {s} empty: {counts:?}");
+            assert!(c < 154, "shard {s} hogging: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn register_routes_to_owning_partition() {
+        let set = ShardSet::new(3, BatcherConfig::default());
+        let reg = ModelRegistry::new();
+        for i in 0..12 {
+            reg.create(&format!("m{i}"), 8, ExecEngine::Native { k: 4 }, i);
+        }
+        for name in reg.names() {
+            set.register(reg.get(&name).unwrap());
+        }
+        let mut total = 0;
+        for (s, shard) in set.shards().iter().enumerate() {
+            for name in shard.registry.names() {
+                assert_eq!(set.place(&name), s, "{name} on wrong shard");
+            }
+            total += shard.registry.len();
+        }
+        assert_eq!(total, 12, "models lost or duplicated across partitions");
+    }
+
+    #[test]
+    fn routes_added_and_removed_everywhere() {
+        let set = ShardSet::new(2, BatcherConfig::default());
+        let (tx, _rx) = std::sync::mpsc::channel();
+        set.add_route(7, &tx);
+        for s in set.shards() {
+            assert!(s.routes.lock().unwrap().contains_key(&7));
+        }
+        set.remove_route(7);
+        for s in set.shards() {
+            assert!(s.routes.lock().unwrap().is_empty());
+        }
+    }
+}

@@ -1,8 +1,11 @@
 //! Model registry: named SVD-reparameterized weights plus the execution
-//! engine that serves them.
+//! engine that serves them. Models are either square ([`SvdParam`]) or
+//! rectangular ([`RectSvdParam`] with an optional served rank) — the
+//! registry partition owned by each shard holds [`ModelState`]s of both.
 
 use crate::linalg::Mat;
 use crate::runtime::pjrt::{ArtifactEngine, Tensor};
+use crate::svd::rect::RectSvdParam;
 use crate::svd::{MatrixOp, SvdParam};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Result};
@@ -21,31 +24,103 @@ pub enum ExecEngine {
     Pjrt(Arc<ArtifactEngine>),
 }
 
+/// The served parameterization: square or rectangular `U·Σ·Vᵀ`.
+pub enum ModelEntry {
+    /// `d×d` with full Table-1 op coverage.
+    Square(SvdParam),
+    /// `rows×cols` serving `apply` / `pinv`, optionally rank-truncated
+    /// (§2.1 low-rank route: σ beyond the top `rank` zeroed at load).
+    Rect {
+        param: RectSvdParam,
+        /// Served rank `r ≤ min(rows, cols)`.
+        rank: usize,
+    },
+}
+
 /// One served model.
 pub struct ModelState {
     pub name: String,
-    pub param: SvdParam,
+    pub entry: ModelEntry,
     pub engine: ExecEngine,
 }
 
 impl ModelState {
-    /// Execute `op` on a d×m batch.
-    pub fn execute(&self, op: OpKind, x: &Mat) -> Result<Mat> {
-        let d = self.param.dim();
-        if x.rows() != d {
-            bail!("model '{}' is {d}-dimensional, got {} rows", self.name, x.rows());
+    /// The square parameterization, if this model is square.
+    pub fn square(&self) -> Option<&SvdParam> {
+        match &self.entry {
+            ModelEntry::Square(p) => Some(p),
+            ModelEntry::Rect { .. } => None,
         }
+    }
+
+    /// `(input dim, output dim)` of `op` on this model — the protocol's
+    /// ragged-width contract (a rect `apply` takes `cols`-vectors and
+    /// returns `rows`-vectors; `pinv` the reverse). Errors on ops the
+    /// shape does not support.
+    pub fn dims(&self, op: OpKind) -> Result<(usize, usize)> {
+        match &self.entry {
+            ModelEntry::Square(p) => Ok((p.dim(), p.dim())),
+            ModelEntry::Rect { param, .. } => match op {
+                OpKind::Apply => Ok((param.cols, param.rows)),
+                OpKind::Pinv => Ok((param.rows, param.cols)),
+                OpKind::Inverse | OpKind::Expm | OpKind::Cayley => bail!(
+                    "op '{}' needs a square model; '{}' is {}×{} (use apply/pinv)",
+                    op.name(),
+                    self.name,
+                    param.rows,
+                    param.cols
+                ),
+            },
+        }
+    }
+
+    /// Execute `op` on a batch whose width is the op's input dim.
+    pub fn execute(&self, op: OpKind, x: &Mat) -> Result<Mat> {
+        let (d_in, _d_out) = self.dims(op)?;
+        if x.rows() != d_in {
+            bail!(
+                "model '{}' expects {d_in}-rows input for '{}', got {} rows",
+                self.name,
+                op.name(),
+                x.rows()
+            );
+        }
+        match &self.entry {
+            ModelEntry::Square(p) => self.execute_square(p, op, x),
+            ModelEntry::Rect { param, .. } => match &self.engine {
+                ExecEngine::Native { k } => Ok(match op {
+                    OpKind::Apply => param.apply(x, *k),
+                    OpKind::Pinv => param.apply_pinv(x, *k),
+                    _ => unreachable!("dims() rejected non-rect ops"),
+                }),
+                ExecEngine::Pjrt(_) => bail!(
+                    "rect model '{}' has no AOT artifacts; serve it natively",
+                    self.name
+                ),
+            },
+        }
+    }
+
+    fn execute_square(&self, p: &SvdParam, op: OpKind, x: &Mat) -> Result<Mat> {
+        let d = p.dim();
         match &self.engine {
             ExecEngine::Native { k } => Ok(match op {
-                OpKind::Apply => self.param.apply(x, *k),
-                OpKind::Inverse => self.param.apply_inverse(x, *k),
+                OpKind::Apply => p.apply(x, *k),
+                OpKind::Inverse => p.apply_inverse(x, *k),
+                // Moore-Penrose on the square route: Σ⁺ zeroes the σ = 0
+                // directions where apply_inverse would emit ∞ (equal to
+                // Inverse whenever σ ≠ 0, e.g. every create()d model).
+                OpKind::Pinv => {
+                    let pinv: Vec<f32> = p.sigma.iter().map(|&s| recip_or_zero(s)).collect();
+                    inverse_with_sigma(p, &pinv, x, *k)
+                }
                 OpKind::Expm => {
-                    let sig = MatrixOp::Expm.transform_sigma(&self.param.sigma);
-                    apply_with_sigma(&self.param, &sig, x, *k)
+                    let sig = MatrixOp::Expm.transform_sigma(&p.sigma);
+                    apply_with_sigma(p, &sig, x, *k)
                 }
                 OpKind::Cayley => {
-                    let sig = MatrixOp::Cayley.transform_sigma(&self.param.sigma);
-                    apply_with_sigma(&self.param, &sig, x, *k)
+                    let sig = MatrixOp::Cayley.transform_sigma(&p.sigma);
+                    apply_with_sigma(p, &sig, x, *k)
                 }
             }),
             ExecEngine::Pjrt(engine) => {
@@ -53,35 +128,42 @@ impl ModelState {
                 // apply artifact with a transformed spectrum (identical
                 // graph, different σ input — Table 1's point).
                 let (artifact, sigma) = match op {
-                    OpKind::Apply => (format!("svd_apply_{d}"), self.param.sigma.clone()),
-                    OpKind::Inverse => {
-                        (format!("svd_inverse_{d}"), self.param.sigma.clone())
+                    OpKind::Apply => (format!("svd_apply_{d}"), p.sigma.clone()),
+                    OpKind::Inverse | OpKind::Pinv => {
+                        // The inverse artifact reciprocates σ in-graph, so
+                        // it cannot express Σ⁺'s zero-stays-zero rule.
+                        if op == OpKind::Pinv && p.sigma.iter().any(|s| s.abs() < 1e-30) {
+                            bail!("model '{}' has σ = 0: pinv needs the native engine", self.name);
+                        }
+                        (format!("svd_inverse_{d}"), p.sigma.clone())
                     }
                     OpKind::Expm => (
                         format!("svd_apply_{d}"),
-                        MatrixOp::Expm.transform_sigma(&self.param.sigma),
+                        MatrixOp::Expm.transform_sigma(&p.sigma),
                     ),
                     OpKind::Cayley => (
                         format!("svd_apply_{d}"),
-                        MatrixOp::Cayley.transform_sigma(&self.param.sigma),
+                        MatrixOp::Cayley.transform_sigma(&p.sigma),
                     ),
                 };
                 let entry = engine
                     .entry(&artifact)
                     .ok_or_else(|| anyhow!("no artifact '{artifact}' for model '{}'", self.name))?;
-                // Artifacts are lowered for a fixed batch m: pad/truncate.
+                // Artifacts are lowered for a fixed batch m: wider batches
+                // run in m-column chunks (never truncate), narrower ones
+                // zero-pad. The U/V/σ tensors are built once; only the
+                // chunk slot changes per call.
                 let m_art = entry.m;
-                let x_padded = pad_cols(x, m_art);
-                let out = engine.run1(
-                    &artifact,
-                    &[
-                        Tensor::M(self.param.u.v.clone()),
-                        Tensor::M(self.param.v.v.clone()),
-                        Tensor::V(sigma),
-                        Tensor::M(x_padded),
-                    ],
-                )?;
-                Ok(out.slice(0, d, 0, x.cols()))
+                let mut inputs = vec![
+                    Tensor::M(p.u.v.clone()),
+                    Tensor::M(p.v.v.clone()),
+                    Tensor::V(sigma),
+                    Tensor::M(Mat::zeros(0, 0)),
+                ];
+                run_in_col_chunks(x, m_art, |chunk| {
+                    inputs[3] = Tensor::M(chunk);
+                    engine.run1(&artifact, &inputs)
+                })
             }
         }
     }
@@ -94,6 +176,25 @@ fn apply_with_sigma(p: &SvdParam, sigma: &[f32], x: &Mat, k: usize) -> Mat {
     let x1 = fasth::fasth_apply_transpose(&p.v, x, k);
     let x2 = crate::svd::param::scale_rows(&x1, sigma);
     fasth::fasth_apply(&p.u, &x2, k)
+}
+
+/// `V·diag(σ')·Uᵀ` — the inverse-direction route with a caller-supplied
+/// (already reciprocated) spectrum (the square pinv path).
+fn inverse_with_sigma(p: &SvdParam, sigma: &[f32], x: &Mat, k: usize) -> Mat {
+    use crate::householder::fasth;
+    let y1 = fasth::fasth_apply_transpose(&p.u, x, k);
+    let y2 = crate::svd::param::scale_rows(&y1, sigma);
+    fasth::fasth_apply(&p.v, &y2, k)
+}
+
+/// `1/σ`, except Σ⁺'s convention that a zero singular value contributes
+/// zero (matches `RectSvdParam::sigma_pinv_apply`).
+fn recip_or_zero(s: f32) -> f32 {
+    if s.abs() < 1e-30 {
+        0.0
+    } else {
+        1.0 / s
+    }
 }
 
 /// Pad (or truncate) a batch to exactly `m` columns with zeros.
@@ -110,7 +211,35 @@ fn pad_cols(x: &Mat, m: usize) -> Mat {
     out
 }
 
-/// Thread-safe registry of served models.
+/// Run a fixed-width executor over an arbitrary-width batch: `x` is
+/// split into `≤ m_art`-column chunks, each zero-padded to exactly
+/// `m_art` columns, and the outputs are reassembled at `x.cols()` width.
+/// (Regression shield: the old path padded *or truncated* to one
+/// artifact batch and then sliced `x.cols()` columns out of the `m_art`
+/// -wide result — reading past the artifact's output for wide batches.)
+fn run_in_col_chunks(
+    x: &Mat,
+    m_art: usize,
+    mut run: impl FnMut(Mat) -> Result<Mat>,
+) -> Result<Mat> {
+    assert!(m_art > 0, "artifact batch width must be positive");
+    let mut out: Option<Mat> = None;
+    for c0 in (0..x.cols()).step_by(m_art) {
+        let c1 = (c0 + m_art).min(x.cols());
+        let chunk = x.slice(0, x.rows(), c0, c1);
+        let y = run(pad_cols(&chunk, m_art))?;
+        if y.cols() != m_art {
+            bail!("executor returned {} columns, expected {m_art}", y.cols());
+        }
+        let dst = out.get_or_insert_with(|| Mat::zeros(y.rows(), x.cols()));
+        dst.set_slice(0, c0, &y.slice(0, y.rows(), 0, c1 - c0));
+    }
+    Ok(out.unwrap_or_else(|| Mat::zeros(x.rows(), 0)))
+}
+
+/// Thread-safe registry of served models. The server partitions one
+/// registry per shard (rendezvous-hashed on model name); this type is
+/// both the user-facing catalog and the per-shard partition.
 pub struct ModelRegistry {
     models: RwLock<BTreeMap<String, Arc<ModelState>>>,
 }
@@ -126,7 +255,7 @@ impl ModelRegistry {
         ModelRegistry { models: RwLock::new(BTreeMap::new()) }
     }
 
-    /// Register a freshly initialized model of size d.
+    /// Register a freshly initialized square model of size d.
     pub fn create(&self, name: &str, d: usize, engine: ExecEngine, seed: u64) {
         let mut rng = Rng::new(seed);
         let mut param = SvdParam::random_full(d, &mut rng);
@@ -134,14 +263,55 @@ impl ModelRegistry {
         for s in param.sigma.iter_mut() {
             *s = 0.75 + 0.5 * rng.uniform() as f32;
         }
-        let state = ModelState { name: name.to_string(), param, engine };
-        self.models.write().unwrap().insert(name.to_string(), Arc::new(state));
+        self.insert(name, param, engine);
     }
 
-    /// Register an existing parameterization.
+    /// Register a freshly initialized `rows×cols` rectangular model,
+    /// optionally truncated to rank `r` (§2.1 low-rank serving).
+    pub fn create_rect(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        rank: Option<usize>,
+        engine: ExecEngine,
+        seed: u64,
+    ) {
+        let mut rng = Rng::new(seed);
+        let mut param = RectSvdParam::random(rows, cols, &mut rng);
+        for s in param.sigma.iter_mut() {
+            *s = 0.75 + 0.5 * rng.uniform() as f32;
+        }
+        self.insert_rect(name, param, rank, engine);
+    }
+
+    /// Register an existing square parameterization.
     pub fn insert(&self, name: &str, param: SvdParam, engine: ExecEngine) {
-        let state = ModelState { name: name.to_string(), param, engine };
-        self.models.write().unwrap().insert(name.to_string(), Arc::new(state));
+        let entry = ModelEntry::Square(param);
+        self.insert_state(Arc::new(ModelState { name: name.to_string(), entry, engine }));
+    }
+
+    /// Register an existing rectangular parameterization, truncating to
+    /// `rank` if given.
+    pub fn insert_rect(
+        &self,
+        name: &str,
+        mut param: RectSvdParam,
+        rank: Option<usize>,
+        engine: ExecEngine,
+    ) {
+        let full = param.sigma.len();
+        let rank = rank.unwrap_or(full).min(full);
+        if rank < full {
+            param.truncate_rank(rank);
+        }
+        let entry = ModelEntry::Rect { param, rank };
+        self.insert_state(Arc::new(ModelState { name: name.to_string(), entry, engine }));
+    }
+
+    /// Register a pre-built model state (shard partitioning path).
+    pub fn insert_state(&self, state: Arc<ModelState>) {
+        self.models.write().unwrap().insert(state.name.clone(), state);
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<ModelState>> {
@@ -184,8 +354,10 @@ mod tests {
         let mut rng = Rng::new(3);
         let x = Mat::randn(12, 5, &mut rng);
         let y = model.execute(OpKind::Apply, &x).unwrap();
-        let back = model.execute(OpKind::Inverse, &y).unwrap();
-        assert_close(back.data(), x.data(), 1e-2, 1e-2).unwrap();
+        for op in [OpKind::Inverse, OpKind::Pinv] {
+            let back = model.execute(op, &y).unwrap();
+            assert_close(back.data(), x.data(), 1e-2, 1e-2).unwrap();
+        }
     }
 
     #[test]
@@ -212,6 +384,62 @@ mod tests {
     }
 
     #[test]
+    fn rect_apply_pinv_roundtrip_and_dims() {
+        let reg = ModelRegistry::new();
+        reg.create_rect("r", 12, 7, None, ExecEngine::Native { k: 4 }, 7);
+        let model = reg.get("r").unwrap();
+        assert!(model.square().is_none());
+        assert_eq!(model.dims(OpKind::Apply).unwrap(), (7, 12));
+        assert_eq!(model.dims(OpKind::Pinv).unwrap(), (12, 7));
+        assert!(model.dims(OpKind::Inverse).is_err());
+        assert!(model.dims(OpKind::Expm).is_err());
+        let mut rng = Rng::new(8);
+        let x = Mat::randn(7, 3, &mut rng);
+        let y = model.execute(OpKind::Apply, &x).unwrap();
+        assert_eq!((y.rows(), y.cols()), (12, 3));
+        // Tall full-rank: W⁺·W = I, so pinv round-trips.
+        let back = model.execute(OpKind::Pinv, &y).unwrap();
+        assert_close(back.data(), x.data(), 1e-2, 1e-2).unwrap();
+        // Wrong-width input rejected, square-only ops rejected.
+        assert!(model.execute(OpKind::Apply, &Mat::zeros(12, 2)).is_err());
+        assert!(model.execute(OpKind::Expm, &Mat::zeros(7, 2)).is_err());
+    }
+
+    #[test]
+    fn square_pinv_zeroes_dead_directions() {
+        // insert() accepts any spectrum — a σ = 0 entry must make pinv
+        // project (finite output), where inverse would divide by zero.
+        let mut rng = Rng::new(14);
+        let mut param = SvdParam::random_full(8, &mut rng);
+        param.sigma[3] = 0.0;
+        let reg = ModelRegistry::new();
+        reg.insert("sq0", param, ExecEngine::Native { k: 4 });
+        let model = reg.get("sq0").unwrap();
+        let x = Mat::randn(8, 2, &mut rng);
+        let y = model.execute(OpKind::Pinv, &x).unwrap();
+        assert!(!y.has_non_finite(), "pinv must zero the σ = 0 direction");
+    }
+
+    #[test]
+    fn rect_rank_truncation_applied_at_insert() {
+        let reg = ModelRegistry::new();
+        reg.create_rect("r", 10, 10, Some(3), ExecEngine::Native { k: 4 }, 9);
+        let model = reg.get("r").unwrap();
+        match &model.entry {
+            ModelEntry::Rect { param, rank } => {
+                assert_eq!(*rank, 3);
+                assert_eq!(param.rank(), 3);
+            }
+            ModelEntry::Square(_) => panic!("expected rect"),
+        }
+        // Truncated-rank apply stays well-defined (a projection).
+        let mut rng = Rng::new(10);
+        let x = Mat::randn(10, 2, &mut rng);
+        let y = model.execute(OpKind::Apply, &x).unwrap();
+        assert!(!y.has_non_finite());
+    }
+
+    #[test]
     fn pad_cols_behaviour() {
         let x = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
         let p = pad_cols(&x, 4);
@@ -221,6 +449,38 @@ mod tests {
         let t = pad_cols(&x, 1);
         assert_eq!((t.rows(), t.cols()), (2, 1));
         assert_eq!(t[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn oversize_batch_runs_in_chunks() {
+        // Regression: x wider than the artifact batch must chunk, not
+        // truncate. Fake executor doubles values and asserts every chunk
+        // arrives at exactly the artifact width.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let m_art = 4usize;
+        let mut rng = Rng::new(11);
+        let x = Mat::randn(3, 2 * m_art + 3, &mut rng); // ragged tail
+        let calls = AtomicUsize::new(0);
+        let y = run_in_col_chunks(&x, m_art, |chunk| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!(chunk.cols(), m_art);
+            Ok(chunk.map(|v| 2.0 * v))
+        })
+        .unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        assert_eq!((y.rows(), y.cols()), (3, x.cols()));
+        for i in 0..3 {
+            for j in 0..x.cols() {
+                assert_eq!(y[(i, j)], 2.0 * x[(i, j)], "({i},{j})");
+            }
+        }
+        // Narrow batches still pad up and slice back down.
+        let narrow = Mat::randn(3, 2, &mut rng);
+        let y2 = run_in_col_chunks(&narrow, m_art, |chunk| Ok(chunk.map(|v| v + 1.0))).unwrap();
+        assert_eq!((y2.rows(), y2.cols()), (3, 2));
+        assert_eq!(y2[(2, 1)], narrow[(2, 1)] + 1.0);
+        // Executor errors surface.
+        assert!(run_in_col_chunks(&narrow, m_art, |_| anyhow::bail!("boom")).is_err());
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Batch execution: assemble the `d×m` batch, run the model's engine,
-//! scatter per-column results back to their requests.
+//! Batch execution: assemble the `d_in×m` batch, run the model's engine,
+//! scatter per-column results back to their requests. Input and output
+//! widths may differ (rect models: `apply` is `cols→rows`, `pinv` is
+//! `rows→cols`).
 
 use super::batcher::Batch;
 use super::metrics::Metrics;
@@ -32,9 +34,21 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
                 .collect();
         }
     };
-    let d = model.param.dim();
+    // The op's in/out widths on this model (errors for e.g. expm on a
+    // rect shape fan out to the whole batch).
+    let d_in = match model.dims(batch.op) {
+        Ok((d_in, _)) => d_in,
+        Err(e) => {
+            metrics.responses_err.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+            return batch
+                .requests
+                .iter()
+                .map(|r| Response::err(r.id, format!("{e:#}")))
+                .collect();
+        }
+    };
     // Column-length validation before assembling the batch.
-    if let Some(bad) = batch.requests.iter().find(|r| r.column.len() != d) {
+    if let Some(bad) = batch.requests.iter().find(|r| r.column.len() != d_in) {
         metrics.responses_err.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
         return batch
             .requests
@@ -43,7 +57,7 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
                 Response::err(
                     r.id,
                     format!(
-                        "column length {} != model dim {d} (first offender id {})",
+                        "column length {} != op input dim {d_in} (first offender id {})",
                         r.column.len(),
                         bad.id
                     ),
@@ -52,11 +66,11 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
             .collect();
     }
 
-    // Gather columns → X.
+    // Gather columns → X (d_in×m).
     let m = batch.requests.len();
-    let mut x = Mat::zeros(d, m);
+    let mut x = Mat::zeros(d_in, m);
     for (j, r) in batch.requests.iter().enumerate() {
-        for i in 0..d {
+        for i in 0..d_in {
             x[(i, j)] = r.column[i];
         }
     }
@@ -70,7 +84,7 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
                 .iter()
                 .enumerate()
                 .map(|(j, r)| {
-                    metrics.record_latency(us);
+                    metrics.record_latency_op(batch.op, us);
                     Response::ok(r.id, y.col(j), m, us)
                 })
                 .collect()
@@ -97,14 +111,14 @@ mod tests {
         (reg, Metrics::new())
     }
 
-    fn make_batch(op: OpKind, cols: Vec<Vec<f32>>) -> Batch {
+    fn make_batch(model: &str, op: OpKind, cols: Vec<Vec<f32>>) -> Batch {
         Batch {
-            model: "m8".into(),
+            model: model.into(),
             op,
             requests: cols
                 .into_iter()
                 .enumerate()
-                .map(|(i, column)| Request { id: i as u64, model: "m8".into(), op, column })
+                .map(|(i, column)| Request { id: i as u64, model: model.into(), op, column })
                 .collect(),
             full: true,
         }
@@ -116,7 +130,7 @@ mod tests {
         let mut rng = Rng::new(10);
         let cols: Vec<Vec<f32>> =
             (0..5).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
-        let batch = make_batch(OpKind::Apply, cols.clone());
+        let batch = make_batch("m8", OpKind::Apply, cols.clone());
         let responses = execute_batch(&reg, &metrics, &batch);
         assert_eq!(responses.len(), 5);
         // Each response equals running that column alone.
@@ -133,16 +147,15 @@ mod tests {
         }
         assert_eq!(metrics.responses_ok.load(Ordering::Relaxed), 5);
         assert_eq!(metrics.mean_batch_size(), 5.0);
+        // Latency landed on the op's histogram.
+        assert_eq!(metrics.op_hist(OpKind::Apply).count(), 5);
+        assert_eq!(metrics.op_hist(OpKind::Inverse).count(), 0);
     }
 
     #[test]
     fn unknown_model_errors_whole_batch() {
         let (reg, metrics) = setup();
-        let mut batch = make_batch(OpKind::Apply, vec![vec![0.0; 8]; 3]);
-        batch.model = "ghost".into();
-        for r in batch.requests.iter_mut() {
-            r.model = "ghost".into();
-        }
+        let batch = make_batch("ghost", OpKind::Apply, vec![vec![0.0; 8]; 3]);
         let responses = execute_batch(&reg, &metrics, &batch);
         assert!(responses.iter().all(|r| !r.ok));
         assert_eq!(metrics.responses_err.load(Ordering::Relaxed), 3);
@@ -151,7 +164,7 @@ mod tests {
     #[test]
     fn wrong_column_length_rejected() {
         let (reg, metrics) = setup();
-        let batch = make_batch(OpKind::Apply, vec![vec![0.0; 8], vec![0.0; 7]]);
+        let batch = make_batch("m8", OpKind::Apply, vec![vec![0.0; 8], vec![0.0; 7]]);
         let responses = execute_batch(&reg, &metrics, &batch);
         assert!(responses.iter().all(|r| !r.ok));
         let _ = metrics;
@@ -162,12 +175,41 @@ mod tests {
         let (reg, metrics) = setup();
         let mut rng = Rng::new(11);
         let col: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
-        let fwd = execute_batch(&reg, &metrics, &make_batch(OpKind::Apply, vec![col.clone()]));
+        let fwd =
+            execute_batch(&reg, &metrics, &make_batch("m8", OpKind::Apply, vec![col.clone()]));
         let back = execute_batch(
             &reg,
             &metrics,
-            &make_batch(OpKind::Inverse, vec![fwd[0].column.clone()]),
+            &make_batch("m8", OpKind::Inverse, vec![fwd[0].column.clone()]),
         );
         assert_close(&back[0].column, &col, 1e-2, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn rect_batch_has_ragged_in_out_widths() {
+        let reg = ModelRegistry::new();
+        reg.create_rect("r", 12, 8, None, ExecEngine::Native { k: 4 }, 12);
+        let metrics = Metrics::new();
+        let mut rng = Rng::new(13);
+        let cols: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        let fwd = execute_batch(&reg, &metrics, &make_batch("r", OpKind::Apply, cols.clone()));
+        assert!(fwd.iter().all(|r| r.ok), "{:?}", fwd[0].error);
+        assert!(fwd.iter().all(|r| r.column.len() == 12), "apply must widen 8→12");
+        // pinv back: 12-wide in, 8-wide out, round-trips (tall full rank).
+        let back = execute_batch(
+            &reg,
+            &metrics,
+            &make_batch("r", OpKind::Pinv, fwd.iter().map(|r| r.column.clone()).collect()),
+        );
+        for (resp, col) in back.iter().zip(&cols) {
+            assert!(resp.ok);
+            assert_close(&resp.column, col, 1e-2, 1e-2).unwrap();
+        }
+        // Square-only op on the rect model errors the whole batch.
+        let bad =
+            execute_batch(&reg, &metrics, &make_batch("r", OpKind::Expm, vec![vec![0.0; 8]; 2]));
+        assert!(bad.iter().all(|r| !r.ok));
+        assert!(bad[0].error.as_ref().unwrap().contains("square"));
     }
 }

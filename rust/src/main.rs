@@ -102,6 +102,7 @@ fn print_usage() {
          \n\
          bench    --fig 1|3|4|k|rnn|all  [--sizes 64,128,...] [--budget secs] [--reps n]\n\
          serve    [--addr host:port] [--d 64] [--engine native|pjrt] [--artifacts dir]\n\
+                  [--shards n] [--adaptive] [--rect ROWSxCOLS[@RANK]]\n\
          train    --task rnn|spiral [--steps n] [--hidden d] [--lr f]\n\
          ops      [--d 64]\n\
          tune-k   [--d 784] [--m 32] [--budget secs]\n\
@@ -181,6 +182,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7070".into());
     let d: usize = flags.get("d").map(|s| s.parse()).transpose()?.unwrap_or(64);
     let engine_kind = flags.get("engine").map(|s| s.as_str()).unwrap_or("native");
+    let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let adaptive = flags.contains_key("adaptive");
 
     let registry = Arc::new(ModelRegistry::new());
     let engine = match engine_kind {
@@ -198,13 +201,37 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     registry.create(&format!("svd_{d}"), d, engine, 42);
 
+    // Optional rectangular companion: `--rect ROWSxCOLS[@RANK]` registers
+    // `rect_{rows}x{cols}` serving apply/pinv (natively).
+    let mut rect_banner = String::new();
+    if let Some(spec) = flags.get("rect") {
+        let (shape, rank) = match spec.split_once('@') {
+            Some((shape, r)) => {
+                (shape, Some(r.parse::<usize>().with_context(|| format!("bad rank '{r}'"))?))
+            }
+            None => (spec.as_str(), None),
+        };
+        let (rows, cols) = shape
+            .split_once('x')
+            .with_context(|| format!("--rect wants ROWSxCOLS[@RANK], got '{spec}'"))?;
+        let rows: usize = rows.parse().with_context(|| format!("bad rows '{rows}'"))?;
+        let cols: usize = cols.parse().with_context(|| format!("bad cols '{cols}'"))?;
+        let name = format!("rect_{rows}x{cols}");
+        let k = figures::default_k(rows.max(cols));
+        registry.create_rect(&name, rows, cols, rank, ExecEngine::Native { k }, 43);
+        rect_banner = format!(" + {name}");
+    }
+
+    let batcher = fasth::coordinator::BatcherConfig { adaptive, ..Default::default() };
     let server = Server::start(
-        ServerConfig { addr: addr.clone(), ..Default::default() },
+        ServerConfig { addr: addr.clone(), shards, batcher, ..Default::default() },
         registry.clone(),
     )?;
     println!(
-        "orthoserve listening on {} (model svd_{d}, engine {engine_kind})",
-        server.local_addr
+        "orthoserve listening on {} ({shards} shards, model svd_{d}{rect_banner}, engine \
+         {engine_kind}, adaptive deadline {})",
+        server.local_addr,
+        if adaptive { "on" } else { "off" }
     );
     println!("send {{\"cmd\":\"shutdown\"}} to stop.");
     // Keep the process alive until a client asks for shutdown; probe the

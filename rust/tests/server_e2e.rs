@@ -1,6 +1,7 @@
 //! Coordinator end-to-end over real TCP: batching semantics, response
-//! conservation under concurrency, PJRT-backed serving when artifacts
-//! exist, and backpressure.
+//! conservation under concurrency, sharded routing (shards ≥ 2 with a
+//! rectangular model served via apply/pinv), PJRT-backed serving when
+//! artifacts exist, and backpressure.
 
 use fasth::coordinator::{
     BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
@@ -10,14 +11,29 @@ use fasth::util::Rng;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// A 2-shard server with one square model `svd_{d}` and one tall
+/// rectangular model `rect_{2d}x{d}` (full rank).
 fn native_server(d: usize, max_batch: usize) -> Server {
     let registry = Arc::new(ModelRegistry::new());
     registry.create(&format!("svd_{d}"), d, ExecEngine::Native { k: 8 }, 0xE2E);
+    registry.create_rect(
+        &format!("rect_{}x{d}", 2 * d),
+        2 * d,
+        d,
+        None,
+        ExecEngine::Native { k: 8 },
+        0xE2E + 1,
+    );
     Server::start(
         ServerConfig {
             addr: "127.0.0.1:0".into(),
+            shards: 2,
             workers: 2,
-            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
             max_queue_depth: 10_000,
         },
         registry,
@@ -38,6 +54,54 @@ fn apply_inverse_roundtrip_over_tcp() {
         assert!(back.ok);
         assert_close(&back.column, &col, 1e-2, 1e-2).unwrap();
     }
+    server.stop();
+}
+
+#[test]
+fn rect_model_apply_pinv_roundtrip_over_tcp() {
+    // The PR-3 follow-up: rectangular models served end-to-end. Tall
+    // full-rank ⇒ pinv is a left inverse, so the round trip is exact up
+    // to FastH tolerance; the widths change across the wire (16 in, 32
+    // out for apply; the reverse for pinv).
+    let server = native_server(16, 8);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(7);
+    for _ in 0..3 {
+        let col: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let fwd = client.call("rect_32x16", OpKind::Apply, col.clone()).unwrap();
+        assert!(fwd.ok, "{:?}", fwd.error);
+        assert_eq!(fwd.column.len(), 32, "apply must widen 16→32");
+        let back = client.call("rect_32x16", OpKind::Pinv, fwd.column).unwrap();
+        assert!(back.ok, "{:?}", back.error);
+        assert_eq!(back.column.len(), 16, "pinv must narrow 32→16");
+        assert_close(&back.column, &col, 1e-2, 1e-2).unwrap();
+    }
+    // Square-only ops on the rect model surface a per-batch error.
+    let bad = client.call("rect_32x16", OpKind::Expm, vec![0.0; 16]).unwrap();
+    assert!(!bad.ok);
+    assert!(bad.error.unwrap().contains("square"));
+    server.stop();
+}
+
+#[test]
+fn stats_report_shard_depth_and_per_op_histograms() {
+    let server = native_server(12, 4);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(9);
+    let col: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+    for _ in 0..4 {
+        assert!(client.call("svd_12", OpKind::Apply, col.clone()).unwrap().ok);
+    }
+    let rcol: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+    assert!(client.call("rect_24x12", OpKind::Apply, rcol).unwrap().ok);
+    let stats = client.admin("stats").unwrap();
+    let j = fasth::util::json::Json::parse(&stats).unwrap();
+    // One live-depth slot per shard.
+    assert_eq!(j.get("shard_depth").as_arr().unwrap().len(), 2, "{stats}");
+    // Per-op histograms counted the traffic by op.
+    assert_eq!(j.get("per_op").get("apply").get("count").as_usize(), Some(5), "{stats}");
+    assert_eq!(j.get("per_op").get("pinv").get("count").as_usize(), Some(0), "{stats}");
+    assert!(j.get("per_op").get("apply").get("p50_us").as_f64().is_some(), "{stats}");
     server.stop();
 }
 
@@ -67,10 +131,12 @@ fn conservation_under_concurrent_clients() {
             std::thread::spawn(move || {
                 let mut rng = Rng::new(100 + c);
                 let mut client = Client::connect(&addr).unwrap();
+                // Interleave both shards' models from every client.
+                let model = if c % 2 == 0 { "svd_12" } else { "rect_24x12" };
                 let cols: Vec<Vec<f32>> = (0..per_client)
                     .map(|_| (0..12).map(|_| rng.normal_f32()).collect())
                     .collect();
-                let rs = client.call_many("svd_12", OpKind::Apply, cols).unwrap();
+                let rs = client.call_many(model, OpKind::Apply, cols).unwrap();
                 assert_eq!(rs.len(), per_client);
                 rs.iter().filter(|r| r.ok).count()
             })
@@ -122,8 +188,13 @@ fn pjrt_engine_serves_if_artifacts_present() {
     let server = Server::start(
         ServerConfig {
             addr: "127.0.0.1:0".into(),
+            shards: 2,
             workers: 2,
-            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
             max_queue_depth: 1000,
         },
         registry.clone(),
@@ -139,11 +210,12 @@ fn pjrt_engine_serves_if_artifacts_present() {
     assert_close(&back.column, &col, 2e-2, 2e-2).unwrap();
     // Cross-check against native execution of the same registered weight.
     let model = registry.get(&format!("svd_{d}")).unwrap();
+    let param = model.square().expect("square model");
     let mut x = fasth::linalg::Mat::zeros(d, 1);
     for i in 0..d {
         x[(i, 0)] = col[i];
     }
-    let native = model.param.apply(&x, 32);
+    let native = param.apply(&x, 32);
     let mut client2 = Client::connect(&server.local_addr).unwrap();
     let served = client2.call(&format!("svd_{d}"), OpKind::Apply, col).unwrap();
     assert_close(&served.column, &native.col(0), 1e-2, 1e-2).unwrap();

@@ -1,0 +1,224 @@
+//! Sharded-serving properties: batcher fairness under a full-flush
+//! burst, rendezvous placement stability as the shard count grows, and
+//! multi-model traffic across a real sharded TCP server (fixed and
+//! adaptive deadlines).
+
+use fasth::coordinator::{
+    rendezvous_place, BatcherConfig, Client, DynamicBatcher, ExecEngine, ModelRegistry, OpKind,
+    Request, Server, ServerConfig,
+};
+use fasth::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn req(id: u64, model: &str) -> Request {
+    Request { id, model: model.into(), op: OpKind::Apply, column: vec![1.0, 2.0] }
+}
+
+/// A sustained full-flush burst on one `(model, op)` key must not delay
+/// a deadline-expired key beyond `max_wait + ε`. (The pre-fairness
+/// batcher checked full queues before expired ones, so a hot key that
+/// kept refilling to `max_batch` starved singleton keys indefinitely.)
+#[test]
+fn full_flush_burst_cannot_starve_expired_key() {
+    let max_wait = Duration::from_millis(25);
+    let b = Arc::new(DynamicBatcher::new(BatcherConfig {
+        max_batch: 4,
+        max_wait,
+        ..Default::default()
+    }));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Producer: keep the burst key's queue at/above max_batch.
+    let producer = {
+        let b = b.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut id = 1000u64;
+            while !stop.load(Ordering::Relaxed) {
+                for _ in 0..4 {
+                    b.submit(req(id, "burst"));
+                    id += 1;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        })
+    };
+
+    // Single consumer (the sharp case: one worker, so every burst batch
+    // competes head-on with the victim).
+    let (tx, rx) = mpsc::channel();
+    let consumer = {
+        let b = b.clone();
+        std::thread::spawn(move || {
+            let mut full_bursts = 0u32;
+            while let Some(batch) = b.next_batch() {
+                if batch.model == "victim" {
+                    let _ = tx.send((Instant::now(), full_bursts));
+                } else if batch.full {
+                    full_bursts += 1;
+                }
+            }
+        })
+    };
+
+    // Let the burst reach steady state, then submit one victim request.
+    std::thread::sleep(Duration::from_millis(20));
+    let t0 = Instant::now();
+    b.submit(req(1, "victim"));
+    let (t_served, full_bursts) = rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("victim starved: never flushed under the burst");
+    let waited = t_served.duration_since(t0);
+    stop.store(true, Ordering::Relaxed);
+    producer.join().unwrap();
+    b.close();
+    consumer.join().unwrap();
+
+    // Generous ε for CI scheduling noise — the regression mode is
+    // unbounded starvation, not tens of milliseconds.
+    assert!(
+        waited <= max_wait + Duration::from_millis(150),
+        "deadline overshoot: waited {waited:?} (max_wait {max_wait:?})"
+    );
+    assert!(full_bursts >= 3, "burst never contended (only {full_bursts} full flushes)");
+}
+
+/// Growing S → S+1 shards must remap roughly 1/(S+1) of model names —
+/// and every moved name must move *to* the new shard (the rendezvous
+/// property; a modular hash reshuffles almost everything).
+#[test]
+fn rendezvous_growth_moves_about_one_over_s() {
+    let names: Vec<String> = (0..1000).map(|i| format!("model_{i}")).collect();
+    for s in [2usize, 4, 8] {
+        let mut moved = 0;
+        for name in &names {
+            let old = rendezvous_place(s, name);
+            let new = rendezvous_place(s + 1, name);
+            if old != new {
+                assert_eq!(new, s, "'{name}' moved {old}→{new}, not to the new shard {s}");
+                moved += 1;
+            }
+        }
+        let frac = moved as f64 / names.len() as f64;
+        let expect = 1.0 / (s as f64 + 1.0);
+        assert!(moved > 0, "no names moved at S={s} — new shard unused");
+        assert!(frac <= expect + 0.08, "S={s}: moved {frac:.3}, expected ≈{expect:.3}");
+    }
+}
+
+/// Many models across 3 shards over real TCP: concurrent mixed traffic
+/// (square apply/inverse + rect apply/pinv) all completes, and stats
+/// report one depth slot per shard.
+#[test]
+fn multi_model_traffic_across_three_shards() {
+    let registry = Arc::new(ModelRegistry::new());
+    for i in 0..4 {
+        registry.create(&format!("sq_{i}"), 12, ExecEngine::Native { k: 4 }, 50 + i);
+    }
+    for i in 0..4 {
+        let name = format!("rc_{i}");
+        registry.create_rect(&name, 18, 12, None, ExecEngine::Native { k: 4 }, 60 + i);
+    }
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            shards: 3,
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            max_queue_depth: 10_000,
+        },
+        registry,
+    )
+    .unwrap();
+    let addr = server.local_addr;
+    let handles: Vec<_> = (0..4)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(200 + c as u64);
+                let mut client = Client::connect(&addr).unwrap();
+                for i in 0..20 {
+                    let col: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+                    if i % 2 == 0 {
+                        let model = format!("sq_{}", i % 4);
+                        let r = client.call(&model, OpKind::Apply, col).unwrap();
+                        assert!(r.ok, "{model}: {:?}", r.error);
+                        assert_eq!(r.column.len(), 12);
+                    } else {
+                        let model = format!("rc_{}", i % 4);
+                        let fwd = client.call(&model, OpKind::Apply, col).unwrap();
+                        assert!(fwd.ok, "{model}: {:?}", fwd.error);
+                        assert_eq!(fwd.column.len(), 18);
+                        let back = client.call(&model, OpKind::Pinv, fwd.column).unwrap();
+                        assert!(back.ok, "{model} pinv: {:?}", back.error);
+                        assert_eq!(back.column.len(), 12);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = admin.admin("stats").unwrap();
+    let j = fasth::util::json::Json::parse(&stats).unwrap();
+    assert_eq!(j.get("shard_depth").as_arr().unwrap().len(), 3, "{stats}");
+    assert!(j.get("per_op").get("pinv").get("count").as_usize().unwrap() > 0, "{stats}");
+    let prom = admin.metrics_text().unwrap();
+    assert!(prom.contains("orthoserve_shard_queue_depth{shard=\"2\"}"), "{prom}");
+    server.stop();
+}
+
+/// The adaptive deadline serves correctly end-to-end: fast traffic
+/// tightens the flush deadline (within clamps) without dropping or
+/// corrupting responses.
+#[test]
+fn adaptive_deadline_server_roundtrips() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create("m16", 16, ExecEngine::Native { k: 4 }, 77);
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            shards: 2,
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(5),
+                adaptive: true,
+                min_wait: Duration::from_micros(200),
+                p50_fraction: 0.5,
+            },
+            max_queue_depth: 10_000,
+        },
+        registry,
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(42);
+    // Sequential single calls: one batch (= one latency observation)
+    // each, enough to cross the adaptation threshold deterministically.
+    for _ in 0..32 {
+        let col: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let r = client.call("m16", OpKind::Apply, col).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+    // Sub-millisecond d=16 batches must have pulled the serving shard's
+    // deadline off the 5 ms ceiling (it stays ≥ the 200 µs floor).
+    let shard = server.shards.shard_for("m16");
+    let adapted = shard.batcher.current_wait();
+    assert!(adapted < Duration::from_millis(5), "deadline never adapted: {adapted:?}");
+    assert!(adapted >= Duration::from_micros(200), "deadline below floor: {adapted:?}");
+    // Traffic under the adapted deadline still round-trips correctly.
+    let cols: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..16).map(|_| rng.normal_f32()).collect()).collect();
+    let responses = client.call_many("m16", OpKind::Apply, cols).unwrap();
+    assert_eq!(responses.len(), 64);
+    assert!(responses.iter().all(|r| r.ok));
+    server.stop();
+}
