@@ -1,83 +1,64 @@
 //! Normalizing flow with SVD-reparameterized layers (paper §5: the
-//! Glow/emerging-convolutions use case). Trains by *exact* maximum
-//! likelihood on a Gaussian-mixture target: every training step needs
-//! `log|det W|` (here Σ log|σ| in O(d), vs O(d³) slogdet) and sampling
-//! needs `W⁻¹` (here V·Σ⁻¹·Uᵀ, vs an O(d³) inverse) — the two Table-1
-//! rows that motivated the paper's normalizing-flow discussion.
+//! Glow/emerging-convolutions use case), now a thin wrapper over the
+//! experiment harness: runs the built-in `flow_d8` spec — `LinearSvd`
+//! couplings (Σ log|σ| logdet in O(d), exact `V·Σ⁻¹·Uᵀ` inverse) vs
+//! dense couplings (LU slogdet/solve, the O(d³) route Table 1 replaces)
+//! — through `experiments::Runner` and prints the Table-2-style
+//! comparison. The SVD family must learn (NLL drops) and keep exact
+//! invertibility (`inv_err` extra), the property PLU/QR flows trade away.
 //!
-//! Run: `cargo run --release --example train_flow [steps]`
+//! Run: `cargo run --release --example train_flow [smoke|paper]`
+//! (default paper). RunRecord artifacts land in `bench_out/experiments/`.
 
-use fasth::linalg::lu;
-use fasth::nn::flow::{gaussian_mixture, Flow};
-use fasth::nn::{Params, Sgd};
-use fasth::util::Rng;
-use std::time::Instant;
+use fasth::experiments::{builtin, report, Budget, Family, Runner};
 
 fn main() {
-    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
-    let (dim, depth, modes, n_train) = (8, 4, 4, 512);
-    let mut rng = Rng::new(0xF10C);
-    let data = gaussian_mixture(dim, modes, n_train, &mut rng);
-    let mut flow = Flow::new(dim, depth, &mut rng);
+    let budget = match std::env::args().nth(1).as_deref() {
+        Some("smoke") => Budget::Smoke,
+        _ => Budget::Paper,
+    };
+    let mut spec = builtin("flow_d8", budget).expect("registry spec");
+    // Example-scale: two seeds per family (the full seed set is the CLI's
+    // job: `repro experiment flow_d8 --budget paper`).
+    spec.seeds.truncate(2);
     println!(
-        "== normalizing flow: {depth} blocks of LinearSVD+leaky in d = {dim}, \
-         {modes}-mode Gaussian mixture, {n_train} samples ==\n"
+        "== flow density estimation via experiment runner [{}]: d = 8 Gaussian mixture, \
+         {} epochs × {} steps, {} seeds ==\n",
+        budget.name(),
+        spec.epochs,
+        spec.steps_per_epoch,
+        spec.seeds.len()
     );
 
-    let t0 = Instant::now();
-    let mut opt = Sgd::new(0.03, 0.0);
-    flow.zero_grads();
-    let nll0 = flow.nll_step(&data);
-    let mut last = nll0;
-    for step in 0..steps {
-        let nll = flow.train_step(&data, &mut opt);
-        last = nll;
-        if step % 30 == 0 || step + 1 == steps {
-            println!("step {step:>4}  nll/dim {:.4}", nll / dim as f64);
+    let records = Runner::new().run_spec(&spec).expect("run failed");
+    for r in &records {
+        println!(
+            "{:<10} seed {:<3} first-epoch nll/dim {:.4} → final {:.4}  inv_err {:.3e}  ({:.1}s)",
+            r.family,
+            r.seed,
+            r.epochs.first().map(|e| e.eval).unwrap_or(f64::NAN),
+            r.final_eval,
+            r.extras.get("inv_err").copied().unwrap_or(f64::NAN),
+            r.wall_secs
+        );
+    }
+    println!("\n{}", report::markdown(&report::aggregate(&records)));
+
+    for r in &records {
+        assert!(r.all_finite(), "{}/s{} diverged", r.family, r.seed);
+    }
+    let svd_name = Family::SvdFlow.name();
+    for r in records.iter().filter(|r| r.family == svd_name) {
+        let inv_err = r.extras["inv_err"];
+        assert!(inv_err < 1e-2, "lost exact invertibility: inv_err = {inv_err:.3e}");
+        if budget == Budget::Paper {
+            let first = r.epochs.first().map(|e| e.eval).unwrap_or(f64::NAN);
+            assert!(
+                r.final_eval < first - 0.05,
+                "flow did not learn: nll/dim {first:.3} → {:.3}",
+                r.final_eval
+            );
         }
     }
-    println!(
-        "\ntrained {steps} steps in {:.1}s; NLL/dim {:.4} → {:.4}",
-        t0.elapsed().as_secs_f64(),
-        nll0 / dim as f64,
-        last / dim as f64
-    );
-
-    // Exact invertibility after training (the property PLU/QR flows trade
-    // away and the SVD parameterization keeps for free).
-    let (z, _logdet, _c) = flow.forward(&data);
-    let back = flow.inverse(&z);
-    println!(
-        "invertibility: ‖f⁻¹(f(x)) − x‖∞ = {:.3e}",
-        back.max_abs_diff(&data)
-    );
-
-    // O(d) logdet vs O(d³) LU slogdet on the first block.
-    let w = flow.blocks[0].linear.p.materialize();
-    let t_lu = Instant::now();
-    let (_s, lu_ld) = lu::slogdet(&w);
-    let lu_time = t_lu.elapsed();
-    let t_svd = Instant::now();
-    let (_s2, svd_ld) = flow.blocks[0].linear.p.slogdet();
-    let svd_time = t_svd.elapsed();
-    println!(
-        "log|det W| block 0: LU {lu_ld:.5} ({:.1} µs)  vs  spectrum {svd_ld:.5} ({:.2} µs)",
-        lu_time.as_secs_f64() * 1e6,
-        svd_time.as_secs_f64() * 1e6
-    );
-
-    // Sampling through the exact inverse.
-    let samples = flow.sample(256, &mut rng);
-    let mode_radius = 2.5f32;
-    let mean_r: f32 = (0..samples.cols())
-        .map(|j| (samples[(0, j)].powi(2) + samples[(1, j)].powi(2)).sqrt())
-        .sum::<f32>()
-        / samples.cols() as f32;
-    println!(
-        "samples: mean radius in mode plane = {mean_r:.2} (target modes at {mode_radius})"
-    );
-
-    assert!(last < nll0 - 0.5, "flow did not learn: NLL {nll0:.3} → {last:.3}");
-    assert!(back.max_abs_diff(&data) < 1e-2, "lost invertibility");
-    println!("\ntrain_flow OK");
+    println!("train_flow OK (SVD couplings learned and stayed exactly invertible)");
 }

@@ -19,6 +19,12 @@
 //!   latency (fed by [`DynamicBatcher::observe_latency`], clamped to
 //!   `[min_wait, max_wait]`) instead of a fixed constant — fast models
 //!   flush sooner, slow models accumulate wider batches.
+//! - **Adaptive batch cap**: the same p50 histogram drives a live
+//!   `max_batch` ([`DynamicBatcher::current_max_batch`], clamped to
+//!   `[1, max_batch]`): when a full batch's service latency blows past
+//!   the `max_wait` ceiling the cap shrinks proportionally, so one slow
+//!   model degrades to smaller, lower-latency batches instead of holding
+//!   `max_batch` columns hostage per flush.
 
 use super::metrics::LatencyHist;
 use super::protocol::{OpKind, Request};
@@ -85,6 +91,8 @@ struct AdaptiveState {
     hist: LatencyHist,
     seen: AtomicU64,
     wait_us: AtomicU64,
+    /// Live batch-size cap in `[1, config.max_batch]`.
+    batch: AtomicU64,
 }
 
 /// Recompute the cached deadline every this many observations.
@@ -113,6 +121,7 @@ impl DynamicBatcher {
                 hist: LatencyHist::default(),
                 seen: AtomicU64::new(0),
                 wait_us: AtomicU64::new(wait_us),
+                batch: AtomicU64::new(config.max_batch.max(1) as u64),
             },
         }
     }
@@ -155,6 +164,7 @@ impl DynamicBatcher {
         }
         if seen % ADAPT_EVERY == 0 {
             self.adaptive.wait_us.store(self.target_wait_us(), Ordering::Relaxed);
+            self.adaptive.batch.store(self.target_batch(), Ordering::Relaxed);
         }
     }
 
@@ -165,6 +175,33 @@ impl DynamicBatcher {
         } else {
             self.config.max_wait
         }
+    }
+
+    /// The batch-size cap currently in force: `config.max_batch` when
+    /// static, the histogram-driven value when adaptive.
+    pub fn current_max_batch(&self) -> usize {
+        if self.config.adaptive {
+            (self.adaptive.batch.load(Ordering::Relaxed) as usize).max(1)
+        } else {
+            self.config.max_batch
+        }
+    }
+
+    /// `clamp(max_batch × max_wait / p50, 1, max_batch)` from the same
+    /// decaying histogram as the deadline: service latency at (or under)
+    /// the `max_wait` ceiling earns the full batch width; a p50 of N×
+    /// the ceiling shrinks the cap by ~N so per-flush latency tracks
+    /// back toward the operator's bound.
+    fn target_batch(&self) -> u64 {
+        let max_batch = self.config.max_batch.max(1) as u64;
+        let p50 = self.adaptive.hist.percentile_us(0.5);
+        if p50 == 0 {
+            // Empty (or fully decayed) histogram: no signal yet.
+            return max_batch;
+        }
+        let ceil_us = (self.config.max_wait.as_micros() as u64).max(1);
+        let want = (max_batch as f64 * ceil_us as f64 / p50 as f64).floor() as u64;
+        want.clamp(1, max_batch)
     }
 
     /// `clamp(p50_fraction × p50, min_wait, max_wait)` from the decaying
@@ -188,6 +225,7 @@ impl DynamicBatcher {
         let mut q = self.queues.lock().unwrap();
         loop {
             let wait = self.current_wait();
+            let max_batch = self.current_max_batch();
             // Deadline-expired key? Serve the most overdue first — this
             // runs *before* the full-queue check so a hot key that keeps
             // refilling to max_batch cannot starve an expired key.
@@ -201,15 +239,15 @@ impl DynamicBatcher {
                 .map(|(k, _)| k.clone());
             if let Some(key) = expired {
                 // Classify as a full flush if the queue also reached
-                // max_batch (keeps flush_full/flush_deadline accounting
-                // comparable with the pre-fairness policy).
-                let full = q.by_key.get(&key).is_some_and(|v| v.len() >= self.config.max_batch);
-                return Some(self.flush(&mut q, &key, full));
+                // the live cap (keeps flush_full/flush_deadline
+                // accounting comparable with the pre-fairness policy).
+                let full = q.by_key.get(&key).is_some_and(|v| v.len() >= max_batch);
+                return Some(self.flush(&mut q, &key, full, max_batch));
             }
             // Full queue? Round-robin: scan starts after the last key
             // served so concurrent full keys share the consumers.
-            if let Some(key) = Self::next_full(&q, self.config.max_batch) {
-                return Some(self.flush(&mut q, &key, true));
+            if let Some(key) = Self::next_full(&q, max_batch) {
+                return Some(self.flush(&mut q, &key, true, max_batch));
             }
             if q.closed {
                 // Drain whatever is left, oldest queue first.
@@ -219,7 +257,7 @@ impl DynamicBatcher {
                     .filter(|(_k, v)| !v.is_empty())
                     .min_by_key(|(_k, v)| v[0].arrived)
                     .map(|(k, _)| k.clone());
-                return key.map(|k| self.flush(&mut q, &k, false));
+                return key.map(|k| self.flush(&mut q, &k, false, max_batch));
             }
             // Sleep until the nearest deadline (or a submit wakes us).
             let nearest = q
@@ -255,9 +293,15 @@ impl DynamicBatcher {
         }
     }
 
-    fn flush(&self, q: &mut Queues, key: &(String, OpKind), full: bool) -> Batch {
+    fn flush(
+        &self,
+        q: &mut Queues,
+        key: &(String, OpKind),
+        full: bool,
+        max_batch: usize,
+    ) -> Batch {
         let queue = q.by_key.get_mut(key).expect("key exists");
-        let take = queue.len().min(self.config.max_batch);
+        let take = queue.len().min(max_batch);
         let requests: Vec<Request> = queue.drain(..take).map(|p| p.req).collect();
         if queue.is_empty() {
             q.by_key.remove(key);
@@ -446,5 +490,41 @@ mod tests {
             b.observe_latency(1);
         }
         assert_eq!(b.current_wait(), Duration::from_millis(7));
+        assert_eq!(b.current_max_batch(), b.config().max_batch);
+    }
+
+    #[test]
+    fn adaptive_max_batch_shrinks_under_slow_service() {
+        let cfg = BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            adaptive: true,
+            min_wait: Duration::from_micros(100),
+            p50_fraction: 0.5,
+        };
+        let b = DynamicBatcher::new(cfg);
+        // No observations yet: full width.
+        assert_eq!(b.current_max_batch(), 32);
+        // Service p50 ~100× the max_wait ceiling → the cap collapses
+        // (clamped to ≥ 1).
+        for _ in 0..64 {
+            b.observe_latency(100_000);
+        }
+        let cap = b.current_max_batch();
+        assert!(cap < 32, "cap did not shrink: {cap}");
+        assert!(cap >= 1);
+        // A queued burst now flushes at the shrunken cap, classified as
+        // a full flush.
+        for i in 0..32 {
+            b.submit(req(i, "m", OpKind::Apply));
+        }
+        let batch = b.next_batch().unwrap();
+        assert!(batch.full);
+        assert_eq!(batch.requests.len(), cap);
+        // Fast service drags the cap back up to the configured width.
+        for _ in 0..1024 {
+            b.observe_latency(10);
+        }
+        assert_eq!(b.current_max_batch(), 32, "cap did not recover");
     }
 }

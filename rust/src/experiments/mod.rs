@@ -1,0 +1,43 @@
+//! The declarative experiment harness — the subsystem every quality
+//! claim lands in.
+//!
+//! The paper's end-to-end claim (§6, Table 2) is not just that FastH
+//! speeds up `H·X`: it is that SVD-parameterized layers *match standard
+//! layers* on real workloads. Related work (Bermeitinger et al.,
+//! PAPERS.md) shows such comparisons are only credible as controlled
+//! multi-seed training runs. This module turns that protocol into code:
+//!
+//! - [`spec::ExperimentSpec`] declares a run: workload × model families ×
+//!   optimizer × budget × seed set. Specs are plain data (JSON in/out);
+//!   the built-in registry ([`spec::builtin`]) ships the paper-shaped
+//!   suite: char-level LM ([`SvdRnn`](crate::nn::SvdRnn) vs
+//!   [`DenseRnn`](crate::nn::DenseRnn)), copy-memory, flow density
+//!   estimation on d ∈ {8, 16, 32} Gaussian mixtures (SVD vs dense
+//!   couplings), and the spiral / rectangular-teacher regression suite
+//!   (`LinearSvd` / `RectLinearSvd` / `Dense`).
+//! - [`runner::Runner`] executes a spec: every (family, seed) cell is an
+//!   independent deterministic training run (fanned out across threads),
+//!   sampling per-epoch metrics — loss, eval metric, wall-time, and
+//!   σ-spectrum stats through the [`crate::nn::Layer::sigma_spectrum`]
+//!   hook — into a versioned [`record::RunRecord`] JSON artifact under
+//!   `bench_out/experiments/`.
+//! - [`report`] aggregates multi-seed records into the Table-2-style
+//!   comparison (mean ± std per workload × family cell), rendered as
+//!   markdown and as `bench_out/BENCH_experiments.json`.
+//!
+//! Determinism contract: the same spec + seed produces byte-identical
+//! metrics (wall-time fields excluded) — see
+//! [`record::RunRecord::fingerprint`] and the `experiments` integration
+//! suite.
+
+pub mod record;
+pub mod report;
+pub mod runner;
+pub mod spec;
+pub mod workloads;
+
+pub use record::{EpochMetrics, RunRecord, SigmaStats, SCHEMA_VERSION};
+pub use runner::Runner;
+pub use spec::{
+    builtin, builtin_all, builtin_names, Budget, ExperimentSpec, Family, OptSpec, Workload,
+};

@@ -1,0 +1,412 @@
+//! Versioned run artifacts: one [`RunRecord`] per (spec, family, seed)
+//! training run, serialized to JSON under `bench_out/experiments/`.
+//!
+//! The determinism contract lives here: [`RunRecord::fingerprint`] is the
+//! serialization of every *metric* field (wall-clock fields excluded),
+//! and the same spec + seed must reproduce it byte-for-byte — the
+//! `experiments` integration suite enforces it. A schema-version guard
+//! rejects artifacts written by an incompatible layout.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Bump when the record layout changes incompatibly.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// JSON has no NaN/∞: non-finite metrics serialize as `null` so a
+/// diverged run still writes a *parseable* artifact (the finite gate
+/// then rejects it), instead of poisoning the whole artifact directory.
+pub(crate) fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Inverse of [`num_or_null`]: `null` (or a missing key) loads as NaN —
+/// which [`RunRecord::all_finite`] flags — anything else must be a
+/// number.
+fn f64_or_nan(j: &Json) -> Option<f64> {
+    match j {
+        Json::Null => Some(f64::NAN),
+        other => other.as_f64(),
+    }
+}
+
+/// Min/max/mean of the live σ-spectrum across every SVD layer of the
+/// model (absent for all-dense families).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SigmaStats {
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl SigmaStats {
+    /// Summarize a flattened spectrum; `None` when the model exposes no σ.
+    pub fn from_spectrum(sigma: &[f32]) -> Option<SigmaStats> {
+        if sigma.is_empty() {
+            return None;
+        }
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0f64;
+        for &s in sigma {
+            let s = s as f64;
+            min = min.min(s);
+            max = max.max(s);
+            sum += s;
+        }
+        Some(SigmaStats { min, max, mean: sum / sigma.len() as f64 })
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("min", num_or_null(self.min)),
+            ("max", num_or_null(self.max)),
+            ("mean", num_or_null(self.mean)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<SigmaStats> {
+        if !matches!(j, Json::Obj(_)) {
+            return None;
+        }
+        match (
+            f64_or_nan(j.get("min")),
+            f64_or_nan(j.get("max")),
+            f64_or_nan(j.get("mean")),
+        ) {
+            (Some(min), Some(max), Some(mean)) => Some(SigmaStats { min, max, mean }),
+            _ => None,
+        }
+    }
+}
+
+/// One epoch's sampled metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    /// Mean training loss over the epoch's steps.
+    pub loss: f64,
+    /// Workload eval metric on held-out data (see `Workload::eval_kind`).
+    pub eval: f64,
+    /// Wall-clock of the epoch — excluded from the fingerprint.
+    pub wall_secs: f64,
+    /// σ-spectrum stats sampled at epoch end (SVD families only).
+    pub sigma: Option<SigmaStats>,
+}
+
+/// The full artifact for one training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRecord {
+    pub schema_version: u32,
+    /// Spec registry name.
+    pub experiment: String,
+    /// Workload row label (e.g. `flow_d16`).
+    pub workload: String,
+    /// Family column label (e.g. `svd-flow`).
+    pub family: String,
+    pub budget: String,
+    pub seed: u64,
+    pub eval_kind: String,
+    pub epochs: Vec<EpochMetrics>,
+    /// Last epoch's training loss.
+    pub final_loss: f64,
+    /// Last epoch's eval metric — the Table-2 cell input.
+    pub final_eval: f64,
+    /// Workload-specific scalars (e.g. the flow's `inv_err`).
+    pub extras: BTreeMap<String, f64>,
+    /// Total run wall-clock — excluded from the fingerprint.
+    pub wall_secs: f64,
+}
+
+impl RunRecord {
+    /// The deterministic subset: everything except wall-clock fields.
+    /// Byte-identical across runs of the same spec + seed.
+    pub fn metrics_json(&self) -> Json {
+        let epochs = self
+            .epochs
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("epoch", Json::num(e.epoch as f64)),
+                    ("loss", num_or_null(e.loss)),
+                    ("eval", num_or_null(e.eval)),
+                ];
+                if let Some(s) = e.sigma {
+                    fields.push(("sigma", s.to_json()));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let extras: std::collections::BTreeMap<String, Json> =
+            self.extras.iter().map(|(k, &v)| (k.clone(), num_or_null(v))).collect();
+        Json::obj(vec![
+            ("schema_version", Json::num(self.schema_version as f64)),
+            ("experiment", Json::str(self.experiment.clone())),
+            ("workload", Json::str(self.workload.clone())),
+            ("family", Json::str(self.family.clone())),
+            ("budget", Json::str(self.budget.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("eval_kind", Json::str(self.eval_kind.clone())),
+            ("epochs", Json::Arr(epochs)),
+            ("final_loss", num_or_null(self.final_loss)),
+            ("final_eval", num_or_null(self.final_eval)),
+            ("extras", Json::Obj(extras)),
+        ])
+    }
+
+    /// Compact string form of [`Self::metrics_json`] — the determinism
+    /// fingerprint the tests compare byte-for-byte.
+    pub fn fingerprint(&self) -> String {
+        self.metrics_json().to_string()
+    }
+
+    /// The full artifact (metrics + wall-clock fields).
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.metrics_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("metrics_json returns an object"),
+        };
+        // Re-emit epochs with their wall field attached.
+        let epochs: Vec<Json> = self
+            .epochs
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("epoch", Json::num(e.epoch as f64)),
+                    ("loss", num_or_null(e.loss)),
+                    ("eval", num_or_null(e.eval)),
+                    ("wall_secs", num_or_null(e.wall_secs)),
+                ];
+                if let Some(s) = e.sigma {
+                    fields.push(("sigma", s.to_json()));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        obj.insert("epochs".into(), Json::Arr(epochs));
+        obj.insert("wall_secs".into(), num_or_null(self.wall_secs));
+        Json::Obj(obj)
+    }
+
+    /// Parse an artifact, rejecting unknown schema versions.
+    pub fn from_json(j: &Json) -> Result<RunRecord, String> {
+        let version = j.get("schema_version").as_usize().ok_or("record missing schema_version")?;
+        if version as u32 != SCHEMA_VERSION {
+            return Err(format!(
+                "record schema_version {version} != supported {SCHEMA_VERSION} \
+                 (regenerate with `repro experiment`)"
+            ));
+        }
+        let s = |key: &str| -> Result<String, String> {
+            j.get(key).as_str().map(str::to_string).ok_or_else(|| format!("record missing '{key}'"))
+        };
+        // Metric fields: `null` means "was non-finite" and loads as NaN
+        // (the finite gate re-flags it); a wrong-typed value is an error.
+        let f = |key: &str| -> Result<f64, String> {
+            f64_or_nan(j.get(key)).ok_or_else(|| format!("record field '{key}' is not a number"))
+        };
+        let epochs = j
+            .get("epochs")
+            .as_arr()
+            .ok_or("record missing 'epochs'")?
+            .iter()
+            .map(|e| {
+                Ok(EpochMetrics {
+                    epoch: e.get("epoch").as_usize().ok_or("epoch missing 'epoch'")?,
+                    loss: f64_or_nan(e.get("loss")).ok_or("epoch 'loss' is not a number")?,
+                    eval: f64_or_nan(e.get("eval")).ok_or("epoch 'eval' is not a number")?,
+                    wall_secs: e.get("wall_secs").as_f64().unwrap_or(0.0),
+                    sigma: SigmaStats::from_json(e.get("sigma")),
+                })
+            })
+            .collect::<Result<Vec<EpochMetrics>, String>>()?;
+        let extras = j
+            .get("extras")
+            .as_obj()
+            .map(|o| {
+                o.iter().filter_map(|(k, v)| f64_or_nan(v).map(|f| (k.clone(), f))).collect()
+            })
+            .unwrap_or_default();
+        Ok(RunRecord {
+            schema_version: version as u32,
+            experiment: s("experiment")?,
+            workload: s("workload")?,
+            family: s("family")?,
+            budget: s("budget")?,
+            seed: j.get("seed").as_f64().ok_or("record missing 'seed'")? as u64,
+            eval_kind: s("eval_kind")?,
+            epochs,
+            final_loss: f("final_loss")?,
+            final_eval: f("final_eval")?,
+            extras,
+            wall_secs: j.get("wall_secs").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    /// True when every metric is finite — the NaN/divergence gate the
+    /// CLI and CI enforce.
+    pub fn all_finite(&self) -> bool {
+        let sigma_ok = |s: Option<SigmaStats>| match s {
+            Some(s) => s.min.is_finite() && s.max.is_finite() && s.mean.is_finite(),
+            None => true,
+        };
+        self.final_loss.is_finite()
+            && self.final_eval.is_finite()
+            && self
+                .epochs
+                .iter()
+                .all(|e| e.loss.is_finite() && e.eval.is_finite() && sigma_ok(e.sigma))
+            && self.extras.values().all(|v| v.is_finite())
+    }
+
+    /// Artifact file name: `<workload>__<family>__s<seed>.json`.
+    pub fn file_name(&self) -> String {
+        format!("{}__{}__s{}.json", self.workload, self.family, self.seed)
+    }
+
+    /// Write the artifact under `dir` (created if needed).
+    pub fn save(&self, dir: &Path) -> io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.to_json().pretty() + "\n")?;
+        Ok(path)
+    }
+
+    /// Load one artifact.
+    pub fn load(path: &Path) -> Result<RunRecord, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Load every `*.json` artifact in `dir`, sorted by (workload,
+    /// family, seed) so downstream aggregation is order-stable.
+    pub fn load_dir(dir: &Path) -> Result<Vec<RunRecord>, String> {
+        let mut out = Vec::new();
+        let entries =
+            std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        for entry in entries {
+            let path = entry.map_err(|e| e.to_string())?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                out.push(Self::load(&path)?);
+            }
+        }
+        out.sort_by(|a, b| {
+            (&a.workload, &a.family, a.seed).cmp(&(&b.workload, &b.family, b.seed))
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_record(seed: u64) -> RunRecord {
+        RunRecord {
+            schema_version: SCHEMA_VERSION,
+            experiment: "teacher".into(),
+            workload: "teacher_6x10".into(),
+            family: "rect-svd".into(),
+            budget: "smoke".into(),
+            seed,
+            eval_kind: "eval mse".into(),
+            epochs: vec![
+                EpochMetrics {
+                    epoch: 0,
+                    loss: 0.5,
+                    eval: 0.4,
+                    wall_secs: 0.011,
+                    sigma: Some(SigmaStats { min: 0.2, max: 1.1, mean: 0.7 }),
+                },
+                EpochMetrics { epoch: 1, loss: 0.25, eval: 0.2, wall_secs: 0.012, sigma: None },
+            ],
+            final_loss: 0.25,
+            final_eval: 0.2,
+            extras: [("grad_norm".to_string(), 1.25)].into_iter().collect(),
+            wall_secs: 0.023,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let r = sample_record(7);
+        let text = r.to_json().to_string();
+        let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(r.fingerprint(), back.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_excludes_wall_time() {
+        let a = sample_record(7);
+        let mut b = a.clone();
+        b.wall_secs = 99.0;
+        b.epochs[0].wall_secs = 42.0;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = a.clone();
+        c.epochs[0].loss += 1e-12;
+        assert_ne!(a.fingerprint(), c.fingerprint(), "metric changes must change the print");
+    }
+
+    #[test]
+    fn schema_version_guard_rejects_future_records() {
+        let mut j = sample_record(1).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("schema_version".into(), Json::num(SCHEMA_VERSION as f64 + 1.0));
+        }
+        let err = RunRecord::from_json(&j).unwrap_err();
+        assert!(err.contains("schema_version"), "{err}");
+    }
+
+    #[test]
+    fn diverged_record_still_writes_valid_json() {
+        // JSON has no NaN/∞ — a diverged run must serialize to `null`s
+        // that parse back to NaN, not poison the artifact directory.
+        let mut r = sample_record(9);
+        r.final_eval = f64::NAN;
+        r.epochs[1].loss = f64::INFINITY;
+        r.extras.insert("inv_err".into(), f64::NAN);
+        let text = r.to_json().to_string();
+        let back = RunRecord::from_json(&Json::parse(&text).expect("valid JSON")).unwrap();
+        assert!(back.final_eval.is_nan());
+        assert!(back.epochs[1].loss.is_nan(), "∞ loads as NaN via null");
+        assert!(back.extras["inv_err"].is_nan());
+        assert!(!back.all_finite(), "the finite gate must still trip after reload");
+        assert_eq!(r.fingerprint(), back.fingerprint());
+    }
+
+    #[test]
+    fn finite_gate() {
+        let mut r = sample_record(1);
+        assert!(r.all_finite());
+        r.extras.insert("bad".into(), f64::NAN);
+        assert!(!r.all_finite());
+        let mut r2 = sample_record(1);
+        r2.epochs[1].eval = f64::INFINITY;
+        assert!(!r2.all_finite());
+    }
+
+    #[test]
+    fn save_load_dir_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fasth_rec_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = sample_record(1);
+        let mut b = sample_record(2);
+        b.family = "dense".into();
+        a.save(&dir).unwrap();
+        b.save(&dir).unwrap();
+        let loaded = RunRecord::load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), 2);
+        // Sorted by (workload, family, seed): "dense" < "rect-svd".
+        assert_eq!(loaded[0].family, "dense");
+        assert_eq!(loaded[1].seed, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,247 @@
+//! Table-2-style aggregation: multi-seed [`RunRecord`]s → one
+//! (workload × family) grid of `mean ± std` cells, rendered as markdown
+//! and as the `bench_out/BENCH_experiments.json` CI artifact.
+
+use super::record::RunRecord;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One aggregated cell: all seeds of one (workload, family) pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    pub workload: String,
+    pub family: String,
+    pub eval_kind: String,
+    /// Seeds aggregated.
+    pub n_seeds: usize,
+    pub eval_mean: f64,
+    pub eval_std: f64,
+    pub loss_mean: f64,
+    pub loss_std: f64,
+}
+
+/// Population mean and standard deviation (σ over the seed set, matching
+/// the paper's `μ ± σ` protocol).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Group records by (workload, family) and reduce each group's final
+/// metrics to `mean ± std` over its seeds. Output is sorted by workload
+/// then family (BTreeMap order) — deterministic for golden tests.
+pub fn aggregate(records: &[RunRecord]) -> Vec<Cell> {
+    let mut groups: BTreeMap<(String, String), Vec<&RunRecord>> = BTreeMap::new();
+    for r in records {
+        groups.entry((r.workload.clone(), r.family.clone())).or_default().push(r);
+    }
+    groups
+        .into_iter()
+        .map(|((workload, family), rs)| {
+            let evals: Vec<f64> = rs.iter().map(|r| r.final_eval).collect();
+            let losses: Vec<f64> = rs.iter().map(|r| r.final_loss).collect();
+            let (eval_mean, eval_std) = mean_std(&evals);
+            let (loss_mean, loss_std) = mean_std(&losses);
+            Cell {
+                workload,
+                family,
+                eval_kind: rs[0].eval_kind.clone(),
+                n_seeds: rs.len(),
+                eval_mean,
+                eval_std,
+                loss_mean,
+                loss_std,
+            }
+        })
+        .collect()
+}
+
+fn fmt_cell(mean: f64, std: f64) -> String {
+    format!("{mean:.4} ± {std:.4}")
+}
+
+/// Render the Table-2-style markdown: one row per workload, one column
+/// per family, each cell `eval mean ± std (n seeds)`.
+pub fn markdown(cells: &[Cell]) -> String {
+    // Column set = families in first-seen (BTreeMap, i.e. sorted) order.
+    let mut families: Vec<String> = Vec::new();
+    for c in cells {
+        if !families.contains(&c.family) {
+            families.push(c.family.clone());
+        }
+    }
+    let mut rows: Vec<String> = Vec::new();
+    for c in cells {
+        if !rows.contains(&c.workload) {
+            rows.push(c.workload.clone());
+        }
+    }
+    let by_key: BTreeMap<(&str, &str), &Cell> =
+        cells.iter().map(|c| ((c.workload.as_str(), c.family.as_str()), c)).collect();
+
+    let mut out = String::from("| workload | metric |");
+    for f in &families {
+        out.push_str(&format!(" {f} |"));
+    }
+    out.push('\n');
+    out.push_str("|---|---|");
+    for _ in &families {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for w in &rows {
+        let kind = cells
+            .iter()
+            .find(|c| &c.workload == w)
+            .map(|c| c.eval_kind.as_str())
+            .unwrap_or("-");
+        out.push_str(&format!("| {w} | {kind} |"));
+        for f in &families {
+            match by_key.get(&(w.as_str(), f.as_str())) {
+                Some(c) => out.push_str(&format!(
+                    " {} (n={}) |",
+                    fmt_cell(c.eval_mean, c.eval_std),
+                    c.n_seeds
+                )),
+                None => out.push_str(" — |"),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// The machine-readable companion of [`markdown`].
+pub fn to_json(cells: &[Cell], budget: &str, total_runs: usize) -> Json {
+    let cell_json = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("workload", Json::str(c.workload.clone())),
+                ("family", Json::str(c.family.clone())),
+                ("eval_kind", Json::str(c.eval_kind.clone())),
+                ("n_seeds", Json::num(c.n_seeds as f64)),
+                // null-safe: aggregating a diverged record set must still
+                // emit parseable JSON (see record::num_or_null).
+                ("eval_mean", super::record::num_or_null(c.eval_mean)),
+                ("eval_std", super::record::num_or_null(c.eval_std)),
+                ("loss_mean", super::record::num_or_null(c.loss_mean)),
+                ("loss_std", super::record::num_or_null(c.loss_std)),
+            ])
+        })
+        .collect();
+    let workloads: std::collections::BTreeSet<&str> =
+        cells.iter().map(|c| c.workload.as_str()).collect();
+    let families: std::collections::BTreeSet<&str> =
+        cells.iter().map(|c| c.family.as_str()).collect();
+    Json::obj(vec![
+        ("schema_version", Json::num(super::record::SCHEMA_VERSION as f64)),
+        ("budget", Json::str(budget)),
+        ("runs", Json::num(total_runs as f64)),
+        ("workloads", Json::num(workloads.len() as f64)),
+        ("families", Json::num(families.len() as f64)),
+        ("cells", Json::Arr(cell_json)),
+    ])
+}
+
+/// Write `bench_out/BENCH_experiments.json` (or a custom path).
+pub fn save_bench_json(
+    cells: &[Cell],
+    budget: &str,
+    total_runs: usize,
+    path: &Path,
+) -> io::Result<PathBuf> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, to_json(cells, budget, total_runs).pretty() + "\n")?;
+    Ok(path.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::record::{EpochMetrics, RunRecord, SCHEMA_VERSION};
+
+    fn rec(workload: &str, family: &str, seed: u64, eval: f64, loss: f64) -> RunRecord {
+        RunRecord {
+            schema_version: SCHEMA_VERSION,
+            experiment: workload.to_string(),
+            workload: workload.to_string(),
+            family: family.to_string(),
+            budget: "smoke".into(),
+            seed,
+            eval_kind: "accuracy".into(),
+            epochs: vec![EpochMetrics { epoch: 0, loss, eval, wall_secs: 0.0, sigma: None }],
+            final_loss: loss,
+            final_eval: eval,
+            extras: Default::default(),
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!(mean_std(&[]).0.is_nan());
+    }
+
+    #[test]
+    fn aggregate_groups_by_workload_family() {
+        let records = vec![
+            rec("spiral", "dense", 1, 0.8, 0.5),
+            rec("spiral", "dense", 2, 0.9, 0.4),
+            rec("spiral", "linear-svd", 1, 0.85, 0.45),
+            rec("teacher", "dense", 1, 0.1, 0.1),
+        ];
+        let cells = aggregate(&records);
+        assert_eq!(cells.len(), 3);
+        let dense = &cells[0];
+        assert_eq!((dense.workload.as_str(), dense.family.as_str()), ("spiral", "dense"));
+        assert_eq!(dense.n_seeds, 2);
+        assert!((dense.eval_mean - 0.85).abs() < 1e-12);
+        assert!((dense.eval_std - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markdown_has_rows_columns_and_gaps() {
+        let records = vec![
+            rec("spiral", "dense", 1, 0.8, 0.5),
+            rec("spiral", "linear-svd", 1, 0.85, 0.45),
+            rec("teacher", "dense", 1, 0.1, 0.1),
+        ];
+        let md = markdown(&aggregate(&records));
+        assert!(md.contains("| workload | metric |"), "{md}");
+        assert!(md.contains("| spiral |"), "{md}");
+        assert!(md.contains("linear-svd"), "{md}");
+        // teacher has no linear-svd cell → em-dash gap.
+        assert!(md.lines().any(|l| l.starts_with("| teacher |") && l.contains("—")), "{md}");
+        assert!(md.contains("±"), "{md}");
+    }
+
+    #[test]
+    fn bench_json_counts() {
+        let records = vec![
+            rec("spiral", "dense", 1, 0.8, 0.5),
+            rec("spiral", "linear-svd", 1, 0.85, 0.45),
+            rec("teacher", "dense", 1, 0.1, 0.1),
+        ];
+        let j = to_json(&aggregate(&records), "smoke", records.len());
+        assert_eq!(j.get("workloads").as_usize(), Some(2));
+        assert_eq!(j.get("families").as_usize(), Some(2));
+        assert_eq!(j.get("runs").as_usize(), Some(3));
+        assert_eq!(j.get("cells").as_arr().unwrap().len(), 3);
+        // Round-trips through the serializer.
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re.get("budget").as_str(), Some("smoke"));
+    }
+}

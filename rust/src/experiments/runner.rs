@@ -1,0 +1,140 @@
+//! The experiment runner: fan a spec's (family × seed) grid out across
+//! threads, collect one [`RunRecord`] per cell, persist the artifacts.
+//!
+//! Every cell is an independent deterministic training run (own RNG
+//! streams, own optimizer state), so the thread-parallel fan-out cannot
+//! change any metric — [`crate::util::parallel::parallel_map`] preserves
+//! order and the GEMM/LU kernels underneath are reduction-order-stable.
+//! Artifacts are written serially after the parallel section.
+
+use super::record::RunRecord;
+use super::spec::{ExperimentSpec, Family};
+use super::workloads::run_one;
+use crate::util::parallel::parallel_map;
+use std::path::PathBuf;
+
+/// Default artifact directory (next to the bench CSVs).
+pub const DEFAULT_OUT_DIR: &str = "bench_out/experiments";
+
+/// Executes specs and persists their run records.
+pub struct Runner {
+    /// Where `RunRecord` JSON artifacts land.
+    pub out_dir: PathBuf,
+    /// Fan (family × seed) cells out across the thread pool. Off forces
+    /// serial execution (same results, easier profiling).
+    pub parallel: bool,
+    /// Skip writing artifacts (unit tests aggregating in memory).
+    pub persist: bool,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner { out_dir: PathBuf::from(DEFAULT_OUT_DIR), parallel: true, persist: true }
+    }
+}
+
+impl Runner {
+    pub fn new() -> Runner {
+        Runner::default()
+    }
+
+    /// Runner writing to a custom directory.
+    pub fn with_out_dir(dir: impl Into<PathBuf>) -> Runner {
+        Runner { out_dir: dir.into(), ..Runner::default() }
+    }
+
+    /// Execute every (family, seed) cell of `spec`; returns the records
+    /// in (family-order × seed-order) and writes one artifact per cell.
+    ///
+    /// A cell that fails to *execute* (incompatible family, empty run) is
+    /// an `Err`; a run that diverges still yields its record — callers
+    /// gate on [`RunRecord::all_finite`].
+    pub fn run_spec(&self, spec: &ExperimentSpec) -> Result<Vec<RunRecord>, String> {
+        spec.validate()?;
+        let cells: Vec<(Family, u64)> = spec
+            .families
+            .iter()
+            .flat_map(|&f| spec.seeds.iter().map(move |&s| (f, s)))
+            .collect();
+        let results: Vec<Result<RunRecord, String>> = if self.parallel && cells.len() > 1 {
+            parallel_map(cells.len(), |i| run_one(spec, cells[i].0, cells[i].1))
+        } else {
+            cells.iter().map(|&(f, s)| run_one(spec, f, s)).collect()
+        };
+        let mut records = Vec::with_capacity(results.len());
+        for r in results {
+            records.push(r?);
+        }
+        if self.persist {
+            for rec in &records {
+                rec.save(&self.out_dir).map_err(|e| format!("saving record: {e}"))?;
+            }
+        }
+        Ok(records)
+    }
+
+    /// Run several specs back to back, concatenating their records.
+    pub fn run_all(&self, specs: &[ExperimentSpec]) -> Result<Vec<RunRecord>, String> {
+        let mut all = Vec::new();
+        for spec in specs {
+            all.extend(self.run_spec(spec)?);
+        }
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::spec::{builtin, Budget};
+
+    fn tiny_spec() -> ExperimentSpec {
+        let mut spec = builtin("teacher", Budget::Smoke).unwrap();
+        spec.epochs = 1;
+        spec.steps_per_epoch = 2;
+        spec.seeds = vec![11, 12];
+        spec
+    }
+
+    #[test]
+    fn grid_order_is_family_major_and_complete() {
+        let spec = tiny_spec();
+        let runner = Runner { persist: false, ..Runner::default() };
+        let records = runner.run_spec(&spec).unwrap();
+        assert_eq!(records.len(), spec.families.len() * spec.seeds.len());
+        assert_eq!(records[0].family, "rect-svd");
+        assert_eq!(records[0].seed, 11);
+        assert_eq!(records[1].seed, 12);
+        assert_eq!(records[2].family, "dense");
+    }
+
+    #[test]
+    fn parallel_and_serial_agree_byte_for_byte() {
+        let spec = tiny_spec();
+        let par = Runner { persist: false, parallel: true, ..Runner::default() };
+        let ser = Runner { persist: false, parallel: false, ..Runner::default() };
+        let a = par.run_spec(&spec).unwrap();
+        let b = ser.run_spec(&spec).unwrap();
+        let fp = |rs: &[RunRecord]| -> Vec<String> { rs.iter().map(|r| r.fingerprint()).collect() };
+        assert_eq!(fp(&a), fp(&b));
+    }
+
+    #[test]
+    fn persist_writes_one_artifact_per_cell() {
+        let dir = std::env::temp_dir().join(format!("fasth_runner_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = tiny_spec();
+        let runner = Runner::with_out_dir(&dir);
+        let records = runner.run_spec(&spec).unwrap();
+        let loaded = RunRecord::load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), records.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected() {
+        let mut spec = tiny_spec();
+        spec.epochs = 0;
+        assert!(Runner::new().run_spec(&spec).is_err());
+    }
+}

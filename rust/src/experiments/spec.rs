@@ -1,0 +1,568 @@
+//! Declarative experiment specs: workload × model families × optimizer ×
+//! budget × seeds, as plain data with JSON in/out, plus the built-in
+//! registry the `repro experiment` CLI and the examples run.
+
+use crate::nn::{Adam, Optimizer, Sgd};
+use crate::util::json::Json;
+
+/// How much compute a spec is scaled for. `Smoke` is the CI tier (tiny
+/// epochs, two seeds, minutes on a laptop); `Paper` is the Table-2 tier
+/// (full epochs, five seeds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Budget {
+    Smoke,
+    Paper,
+}
+
+impl Budget {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Budget::Smoke => "smoke",
+            Budget::Paper => "paper",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Budget, String> {
+        match s {
+            "smoke" => Ok(Budget::Smoke),
+            "paper" => Ok(Budget::Paper),
+            other => Err(format!("unknown budget '{other}' (want smoke|paper)")),
+        }
+    }
+}
+
+/// A training workload with its size knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Workload {
+    /// Next-character prediction over [`crate::nn::tasks::char_corpus`],
+    /// truncated BPTT over windows of `seq_len`.
+    CharLm { hidden: usize, seq_len: usize, batch: usize, corpus_len: usize },
+    /// The long-horizon copy-memory task (spectral-RNN literature).
+    CopyMemory { alphabet: usize, symbols: usize, delay: usize, batch: usize, hidden: usize },
+    /// Flow density estimation on a `dim`-dimensional Gaussian mixture.
+    FlowMixture { dim: usize, depth: usize, modes: usize, n_train: usize },
+    /// 3-class spiral classification through a d×d hidden block.
+    Spiral { hidden: usize, n_per_class: usize, noise: f32 },
+    /// Rectangular teacher-student regression (`out_dim` × `in_dim`).
+    Teacher { out_dim: usize, in_dim: usize, n_train: usize, noise: f32 },
+}
+
+impl Workload {
+    /// Stable row label for the Table-2 report.
+    pub fn label(&self) -> String {
+        match self {
+            Workload::CharLm { .. } => "char_lm".into(),
+            Workload::CopyMemory { .. } => "copy_memory".into(),
+            Workload::FlowMixture { dim, .. } => format!("flow_d{dim}"),
+            Workload::Spiral { .. } => "spiral".into(),
+            Workload::Teacher { out_dim, in_dim, .. } => format!("teacher_{out_dim}x{in_dim}"),
+        }
+    }
+
+    /// What the per-epoch `eval` column measures (and the Table-2 cell).
+    pub fn eval_kind(&self) -> &'static str {
+        match self {
+            Workload::CharLm { .. } => "next-char accuracy",
+            Workload::CopyMemory { .. } => "answer accuracy",
+            Workload::FlowMixture { .. } => "nll/dim",
+            Workload::Spiral { .. } => "accuracy",
+            Workload::Teacher { .. } => "eval mse",
+        }
+    }
+
+    /// The model families this workload can instantiate.
+    pub fn compatible(&self) -> &'static [Family] {
+        match self {
+            Workload::CharLm { .. } | Workload::CopyMemory { .. } => {
+                &[Family::SvdRnn, Family::DenseRnn]
+            }
+            Workload::FlowMixture { .. } => &[Family::SvdFlow, Family::DenseFlow],
+            Workload::Spiral { .. } => &[Family::SvdMlp, Family::RectSvdMlp, Family::DenseMlp],
+            Workload::Teacher { .. } => &[Family::RectSvdMlp, Family::DenseMlp],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num = |v: usize| Json::num(v as f64);
+        match *self {
+            Workload::CharLm { hidden, seq_len, batch, corpus_len } => Json::obj(vec![
+                ("kind", Json::str("char_lm")),
+                ("hidden", num(hidden)),
+                ("seq_len", num(seq_len)),
+                ("batch", num(batch)),
+                ("corpus_len", num(corpus_len)),
+            ]),
+            Workload::CopyMemory { alphabet, symbols, delay, batch, hidden } => Json::obj(vec![
+                ("kind", Json::str("copy_memory")),
+                ("alphabet", num(alphabet)),
+                ("symbols", num(symbols)),
+                ("delay", num(delay)),
+                ("batch", num(batch)),
+                ("hidden", num(hidden)),
+            ]),
+            Workload::FlowMixture { dim, depth, modes, n_train } => Json::obj(vec![
+                ("kind", Json::str("flow_mixture")),
+                ("dim", num(dim)),
+                ("depth", num(depth)),
+                ("modes", num(modes)),
+                ("n_train", num(n_train)),
+            ]),
+            Workload::Spiral { hidden, n_per_class, noise } => Json::obj(vec![
+                ("kind", Json::str("spiral")),
+                ("hidden", num(hidden)),
+                ("n_per_class", num(n_per_class)),
+                ("noise", Json::num(noise as f64)),
+            ]),
+            Workload::Teacher { out_dim, in_dim, n_train, noise } => Json::obj(vec![
+                ("kind", Json::str("teacher")),
+                ("out_dim", num(out_dim)),
+                ("in_dim", num(in_dim)),
+                ("n_train", num(n_train)),
+                ("noise", Json::num(noise as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Workload, String> {
+        let field = |key: &str| -> Result<usize, String> {
+            j.get(key).as_usize().ok_or_else(|| format!("workload missing '{key}'"))
+        };
+        let noise = || -> Result<f32, String> {
+            j.get("noise")
+                .as_f64()
+                .map(|v| v as f32)
+                .ok_or_else(|| "workload missing 'noise'".into())
+        };
+        match j.get("kind").as_str() {
+            Some("char_lm") => Ok(Workload::CharLm {
+                hidden: field("hidden")?,
+                seq_len: field("seq_len")?,
+                batch: field("batch")?,
+                corpus_len: field("corpus_len")?,
+            }),
+            Some("copy_memory") => Ok(Workload::CopyMemory {
+                alphabet: field("alphabet")?,
+                symbols: field("symbols")?,
+                delay: field("delay")?,
+                batch: field("batch")?,
+                hidden: field("hidden")?,
+            }),
+            Some("flow_mixture") => Ok(Workload::FlowMixture {
+                dim: field("dim")?,
+                depth: field("depth")?,
+                modes: field("modes")?,
+                n_train: field("n_train")?,
+            }),
+            Some("spiral") => Ok(Workload::Spiral {
+                hidden: field("hidden")?,
+                n_per_class: field("n_per_class")?,
+                noise: noise()?,
+            }),
+            Some("teacher") => Ok(Workload::Teacher {
+                out_dim: field("out_dim")?,
+                in_dim: field("in_dim")?,
+                n_train: field("n_train")?,
+                noise: noise()?,
+            }),
+            other => Err(format!("unknown workload kind {other:?}")),
+        }
+    }
+}
+
+/// A model family — one column of the Table-2 comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Family {
+    /// Spectral RNN: recurrent weight `U·Σ·Vᵀ`, σ clipped to `[1±ε]`.
+    SvdRnn,
+    /// Dense-recurrent RNN baseline.
+    DenseRnn,
+    /// Flow with `LinearSvd` couplings (spectrum logdet/inverse).
+    SvdFlow,
+    /// Flow with dense couplings (LU logdet/inverse each step).
+    DenseFlow,
+    /// MLP hidden block held as square `LinearSvd`.
+    SvdMlp,
+    /// MLP hidden block / regression layer held as `RectLinearSvd`.
+    RectSvdMlp,
+    /// Plain dense layer baseline.
+    DenseMlp,
+}
+
+impl Family {
+    pub const ALL: [Family; 7] = [
+        Family::SvdRnn,
+        Family::DenseRnn,
+        Family::SvdFlow,
+        Family::DenseFlow,
+        Family::SvdMlp,
+        Family::RectSvdMlp,
+        Family::DenseMlp,
+    ];
+
+    /// Stable column label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::SvdRnn => "svd-rnn",
+            Family::DenseRnn => "dense-rnn",
+            Family::SvdFlow => "svd-flow",
+            Family::DenseFlow => "dense-flow",
+            Family::SvdMlp => "linear-svd",
+            Family::RectSvdMlp => "rect-svd",
+            Family::DenseMlp => "dense",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Family, String> {
+        Family::ALL
+            .iter()
+            .find(|f| f.name() == s)
+            .copied()
+            .ok_or_else(|| format!("unknown family '{s}'"))
+    }
+}
+
+/// Optimizer declaration (built fresh per run, so optimizer state never
+/// leaks across seeds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptSpec {
+    Sgd { lr: f32, momentum: f32 },
+    Adam { lr: f32 },
+}
+
+impl OptSpec {
+    pub fn build(&self) -> Box<dyn Optimizer> {
+        match *self {
+            OptSpec::Sgd { lr, momentum } => Box::new(Sgd::new(lr, momentum)),
+            OptSpec::Adam { lr } => Box::new(Adam::new(lr)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            OptSpec::Sgd { lr, momentum } => format!("sgd(lr={lr},m={momentum})"),
+            OptSpec::Adam { lr } => format!("adam(lr={lr})"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            OptSpec::Sgd { lr, momentum } => Json::obj(vec![
+                ("kind", Json::str("sgd")),
+                ("lr", Json::num(lr as f64)),
+                ("momentum", Json::num(momentum as f64)),
+            ]),
+            OptSpec::Adam { lr } => {
+                Json::obj(vec![("kind", Json::str("adam")), ("lr", Json::num(lr as f64))])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<OptSpec, String> {
+        let lr = j.get("lr").as_f64().ok_or("optimizer missing 'lr'")? as f32;
+        match j.get("kind").as_str() {
+            Some("sgd") => Ok(OptSpec::Sgd {
+                lr,
+                momentum: j.get("momentum").as_f64().unwrap_or(0.0) as f32,
+            }),
+            Some("adam") => Ok(OptSpec::Adam { lr }),
+            other => Err(format!("unknown optimizer kind {other:?}")),
+        }
+    }
+}
+
+/// One declarative experiment: everything the runner needs, nothing it
+/// has to invent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    /// Registry name (also the artifact prefix).
+    pub name: String,
+    pub budget: Budget,
+    pub workload: Workload,
+    /// Model families to compare — the Table-2 columns.
+    pub families: Vec<Family>,
+    pub optimizer: OptSpec,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    /// Seed set; every family trains once per seed.
+    pub seeds: Vec<u64>,
+}
+
+impl ExperimentSpec {
+    /// Reject specs the runner cannot execute (empty dimensions,
+    /// incompatible families).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("spec name is empty".into());
+        }
+        if self.epochs == 0 || self.steps_per_epoch == 0 {
+            return Err(format!("{}: epochs and steps_per_epoch must be ≥ 1", self.name));
+        }
+        if self.seeds.is_empty() {
+            return Err(format!("{}: seed set is empty", self.name));
+        }
+        if self.families.is_empty() {
+            return Err(format!("{}: family set is empty", self.name));
+        }
+        let ok = self.workload.compatible();
+        for f in &self.families {
+            if !ok.contains(f) {
+                return Err(format!(
+                    "{}: family '{}' incompatible with workload '{}'",
+                    self.name,
+                    f.name(),
+                    self.workload.label()
+                ));
+            }
+        }
+        let mut uniq = self.families.clone();
+        uniq.sort();
+        uniq.dedup();
+        if uniq.len() != self.families.len() {
+            return Err(format!("{}: duplicate family", self.name));
+        }
+        // Workload-specific shape checks (specs arrive as JSON — the
+        // runner must reject what it would otherwise panic on).
+        if let Workload::CharLm { seq_len, corpus_len, .. } = self.workload {
+            if corpus_len < seq_len + 2 {
+                return Err(format!(
+                    "{}: corpus_len {corpus_len} too short for seq_len {seq_len} \
+                     (need ≥ seq_len + 2 for next-char windows)",
+                    self.name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("budget", Json::str(self.budget.name())),
+            ("workload", self.workload.to_json()),
+            (
+                "families",
+                Json::arr(self.families.iter().map(|f| Json::str(f.name())).collect()),
+            ),
+            ("optimizer", self.optimizer.to_json()),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("steps_per_epoch", Json::num(self.steps_per_epoch as f64)),
+            ("seeds", Json::arr(self.seeds.iter().map(|&s| Json::num(s as f64)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentSpec, String> {
+        let name = j.get("name").as_str().ok_or("spec missing 'name'")?.to_string();
+        let budget = Budget::parse(j.get("budget").as_str().ok_or("spec missing 'budget'")?)?;
+        let workload = Workload::from_json(j.get("workload"))?;
+        let families = j
+            .get("families")
+            .as_arr()
+            .ok_or("spec missing 'families'")?
+            .iter()
+            .map(|f| Family::parse(f.as_str().unwrap_or("")))
+            .collect::<Result<Vec<Family>, String>>()?;
+        let optimizer = OptSpec::from_json(j.get("optimizer"))?;
+        let epochs = j.get("epochs").as_usize().ok_or("spec missing 'epochs'")?;
+        let steps_per_epoch =
+            j.get("steps_per_epoch").as_usize().ok_or("spec missing 'steps_per_epoch'")?;
+        let seeds = j
+            .get("seeds")
+            .as_arr()
+            .ok_or("spec missing 'seeds'")?
+            .iter()
+            .map(|s| s.as_f64().map(|v| v as u64).ok_or_else(|| "bad seed".to_string()))
+            .collect::<Result<Vec<u64>, String>>()?;
+        let spec = ExperimentSpec {
+            name,
+            budget,
+            workload,
+            families,
+            optimizer,
+            epochs,
+            steps_per_epoch,
+            seeds,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// Seed set per budget tier (≥ 2 everywhere so mean ± std is defined).
+fn tier_seeds(budget: Budget) -> Vec<u64> {
+    match budget {
+        Budget::Smoke => vec![1, 2],
+        Budget::Paper => vec![1, 2, 3, 4, 5],
+    }
+}
+
+/// Names the built-in registry knows (see [`builtin`]).
+pub fn builtin_names() -> &'static [&'static str] {
+    &["char_lm", "copy_mem", "flow_d8", "flow_d16", "flow_d32", "spiral", "teacher"]
+}
+
+/// Look up a built-in spec by name, scaled to `budget`.
+pub fn builtin(name: &str, budget: Budget) -> Option<ExperimentSpec> {
+    let smoke = budget == Budget::Smoke;
+    let pick = |s: usize, p: usize| if smoke { s } else { p };
+    let seeds = tier_seeds(budget);
+    let flow = |dim: usize| ExperimentSpec {
+        name: format!("flow_d{dim}"),
+        budget,
+        workload: Workload::FlowMixture {
+            dim,
+            depth: pick(3, 4),
+            modes: 4,
+            n_train: pick(128, 512),
+        },
+        families: vec![Family::SvdFlow, Family::DenseFlow],
+        optimizer: OptSpec::Sgd { lr: 0.03, momentum: 0.0 },
+        epochs: pick(2, 8),
+        steps_per_epoch: pick(10, 40),
+        seeds: seeds.clone(),
+    };
+    let spec = match name {
+        "char_lm" => ExperimentSpec {
+            name: "char_lm".into(),
+            budget,
+            workload: Workload::CharLm {
+                hidden: pick(32, 64),
+                seq_len: pick(24, 32),
+                batch: pick(16, 32),
+                corpus_len: pick(2048, 8192),
+            },
+            families: vec![Family::SvdRnn, Family::DenseRnn],
+            optimizer: OptSpec::Adam { lr: 0.01 },
+            epochs: pick(2, 10),
+            steps_per_epoch: pick(8, 60),
+            seeds,
+        },
+        "copy_mem" => ExperimentSpec {
+            name: "copy_mem".into(),
+            budget,
+            workload: Workload::CopyMemory {
+                alphabet: 4,
+                symbols: 3,
+                delay: pick(6, 10),
+                batch: pick(32, 64),
+                hidden: pick(24, 80),
+            },
+            families: vec![Family::SvdRnn, Family::DenseRnn],
+            optimizer: OptSpec::Sgd { lr: 0.7, momentum: 0.0 },
+            epochs: pick(2, 8),
+            steps_per_epoch: pick(10, 50),
+            seeds,
+        },
+        "flow_d8" => flow(8),
+        "flow_d16" => flow(16),
+        "flow_d32" => flow(32),
+        "spiral" => ExperimentSpec {
+            name: "spiral".into(),
+            budget,
+            workload: Workload::Spiral {
+                hidden: pick(16, 32),
+                n_per_class: pick(32, 128),
+                noise: 0.08,
+            },
+            families: vec![Family::SvdMlp, Family::RectSvdMlp, Family::DenseMlp],
+            optimizer: OptSpec::Adam { lr: 0.01 },
+            epochs: pick(2, 10),
+            steps_per_epoch: pick(10, 30),
+            seeds,
+        },
+        "teacher" => ExperimentSpec {
+            name: "teacher".into(),
+            budget,
+            workload: Workload::Teacher {
+                out_dim: 6,
+                in_dim: 10,
+                n_train: pick(64, 256),
+                noise: 0.02,
+            },
+            families: vec![Family::RectSvdMlp, Family::DenseMlp],
+            optimizer: OptSpec::Adam { lr: 0.02 },
+            epochs: pick(2, 8),
+            steps_per_epoch: pick(10, 40),
+            seeds,
+        },
+        _ => return None,
+    };
+    debug_assert!(spec.validate().is_ok());
+    Some(spec)
+}
+
+/// The suite `repro experiment all` runs at a given budget. Smoke skips
+/// the d = 32 flow (it exists to show the dim trend at paper scale).
+pub fn builtin_all(budget: Budget) -> Vec<ExperimentSpec> {
+    let names: &[&str] = match budget {
+        Budget::Smoke => &["char_lm", "copy_mem", "flow_d8", "flow_d16", "spiral", "teacher"],
+        Budget::Paper => builtin_names(),
+    };
+    names.iter().map(|n| builtin(n, budget).expect("registry name")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_validate_at_both_budgets() {
+        for &name in builtin_names() {
+            for budget in [Budget::Smoke, Budget::Paper] {
+                let spec = builtin(name, budget).unwrap();
+                spec.validate().unwrap_or_else(|e| panic!("{name}/{budget:?}: {e}"));
+                assert!(spec.seeds.len() >= 2, "{name}: need ≥ 2 seeds for mean ± std");
+                assert!(spec.families.len() >= 2, "{name}: need ≥ 2 families to compare");
+            }
+        }
+        assert!(builtin("nope", Budget::Smoke).is_none());
+    }
+
+    #[test]
+    fn builtin_all_covers_three_plus_workload_kinds() {
+        let all = builtin_all(Budget::Smoke);
+        let labels: std::collections::BTreeSet<String> =
+            all.iter().map(|s| s.workload.label()).collect();
+        assert!(labels.len() >= 3, "{labels:?}");
+        // Paper adds the d = 32 flow.
+        assert!(builtin_all(Budget::Paper).len() > all.len());
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        for &name in builtin_names() {
+            let spec = builtin(name, Budget::Paper).unwrap();
+            let j = spec.to_json();
+            let back = ExperimentSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(spec, back, "{name}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_incompatible_family() {
+        let mut spec = builtin("teacher", Budget::Smoke).unwrap();
+        spec.families.push(Family::SvdRnn);
+        assert!(spec.validate().unwrap_err().contains("incompatible"));
+        let mut spec = builtin("spiral", Budget::Smoke).unwrap();
+        spec.seeds.clear();
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_corpus_shorter_than_window() {
+        let mut spec = builtin("char_lm", Budget::Smoke).unwrap();
+        if let Workload::CharLm { corpus_len, seq_len, .. } = &mut spec.workload {
+            *corpus_len = *seq_len; // no room for a next-char window
+        }
+        assert!(spec.validate().unwrap_err().contains("corpus_len"));
+    }
+
+    #[test]
+    fn family_names_roundtrip() {
+        for f in Family::ALL {
+            assert_eq!(Family::parse(f.name()).unwrap(), f);
+        }
+        assert!(Family::parse("bogus").is_err());
+    }
+}

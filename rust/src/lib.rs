@@ -15,14 +15,17 @@
 //! - [`householder`] — the paper's algorithms: sequential & parallel
 //!   baselines from Zhang et al. 2018 and FastH fwd/bwd (Algorithms 1–3),
 //! - [`svd`] — the SVD reparameterization layer and Table-1 matrix ops,
-//! - [`nn`] — minimal NN stack (MLP/RNN + optimizers + tasks) for the
-//!   end-to-end experiments,
+//! - [`nn`] — minimal NN stack (MLP/RNN/flows + optimizers + tasks) for
+//!   the end-to-end experiments,
+//! - [`experiments`] — the declarative workload harness: multi-seed
+//!   training runs, versioned RunRecord artifacts, Table-2 reports,
 //! - [`runtime`] — PJRT loading/execution of JAX/Pallas AOT artifacts,
 //! - [`coordinator`] — the serving layer: router, dynamic batcher, workers,
 //! - [`bench_harness`] — regenerates every figure/table of the paper.
 
 pub mod bench_harness;
 pub mod coordinator;
+pub mod experiments;
 pub mod householder;
 pub mod linalg;
 pub mod nn;

@@ -274,13 +274,23 @@ impl Gemm {
         let serial = flops < self.par_flop_threshold || num_threads() == 1 || m <= MR;
         let kc = self.kc.max(1);
         let nc = self.nc.max(NR);
+        // Very wide outputs (n > nc, several B windows) pack each window's
+        // NR-panels in parallel — the B-pack is O(k·n) data movement that
+        // otherwise serializes ahead of every row-slab fan-out. Narrow
+        // outputs (n ≤ nc) keep the serial pack: one window, and the pack
+        // is cheap relative to the microkernel sweep it feeds.
+        let par_pack = !serial && n > nc;
         let cn = n; // C row stride
         let mut bbuf = PACK_B_BUF.take();
         for j0 in (0..n).step_by(nc) {
             let nb = nc.min(n - j0);
             for k0 in (0..k).step_by(kc) {
                 let kb = kc.min(k - k0);
-                pack_b(b, tb, j0, nb, k0, kb, &mut bbuf);
+                if par_pack {
+                    pack_b_parallel(b, tb, j0, nb, k0, kb, &mut bbuf);
+                } else {
+                    pack_b(b, tb, j0, nb, k0, kb, &mut bbuf);
+                }
                 let bpan = &bbuf[..nb.div_ceil(NR) * NR * kb];
                 let body = |rows: Range<usize>, c_rows: &mut [f32]| {
                     let mut abuf = PACK_A_BUF.take();
@@ -395,11 +405,46 @@ fn pack_a(src: &Mat, trans: bool, rows: Range<usize>, k0: usize, kb: usize, buf:
     }
 }
 
+/// Pack one NR-wide B panel: columns `[j_base, j_base + j_lim)` × depth
+/// `[k0, k0+kb)` into kk-major layout (`panel[kk][c]`), zero-padding
+/// ragged columns. `trans == false`: `src` is K×N row-major (contiguous
+/// reads per kk). `trans == true`: `src` is N×K storage (logical
+/// B = srcᵀ), packed by walking each source row over kk — the NT case.
+fn pack_b_panel(
+    src: &Mat,
+    trans: bool,
+    j_base: usize,
+    j_lim: usize,
+    k0: usize,
+    kb: usize,
+    panel: &mut [f32],
+) {
+    debug_assert_eq!(panel.len(), NR * kb);
+    if trans {
+        for c in 0..NR {
+            if c < j_lim {
+                let srow = &src.row(j_base + c)[k0..k0 + kb];
+                for (kk, &v) in srow.iter().enumerate() {
+                    panel[kk * NR + c] = v;
+                }
+            } else {
+                for kk in 0..kb {
+                    panel[kk * NR + c] = 0.0;
+                }
+            }
+        }
+    } else {
+        for kk in 0..kb {
+            let srow = &src.row(k0 + kk)[j_base..j_base + j_lim];
+            let dst = &mut panel[kk * NR..(kk + 1) * NR];
+            dst[..j_lim].copy_from_slice(srow);
+            dst[j_lim..].fill(0.0);
+        }
+    }
+}
+
 /// Pack logical-B window `[j0, j0+nb)` × depth `[k0, k0+kb)` into kk-major
-/// NR-wide panels (`buf[q][kk][c]`), zero-padding the ragged last panel.
-/// `trans == false`: `src` is K×N row-major (contiguous reads per kk).
-/// `trans == true`: `src` is N×K storage (logical B = srcᵀ), packed by
-/// walking each source row over kk — the NT case.
+/// NR-wide panels (`buf[q][kk][c]`), serially.
 fn pack_b(src: &Mat, trans: bool, j0: usize, nb: usize, k0: usize, kb: usize, buf: &mut Vec<f32>) {
     let panels = nb.div_ceil(NR);
     let need = panels * NR * kb;
@@ -409,29 +454,34 @@ fn pack_b(src: &Mat, trans: bool, j0: usize, nb: usize, k0: usize, kb: usize, bu
     for q in 0..panels {
         let j_base = j0 + q * NR;
         let j_lim = NR.min(j0 + nb - j_base);
-        let panel = &mut buf[q * NR * kb..(q + 1) * NR * kb];
-        if trans {
-            for c in 0..NR {
-                if c < j_lim {
-                    let srow = &src.row(j_base + c)[k0..k0 + kb];
-                    for (kk, &v) in srow.iter().enumerate() {
-                        panel[kk * NR + c] = v;
-                    }
-                } else {
-                    for kk in 0..kb {
-                        panel[kk * NR + c] = 0.0;
-                    }
-                }
-            }
-        } else {
-            for kk in 0..kb {
-                let srow = &src.row(k0 + kk)[j_base..j_base + j_lim];
-                let dst = &mut panel[kk * NR..(kk + 1) * NR];
-                dst[..j_lim].copy_from_slice(srow);
-                dst[j_lim..].fill(0.0);
-            }
-        }
+        pack_b_panel(src, trans, j_base, j_lim, k0, kb, &mut buf[q * NR * kb..(q + 1) * NR * kb]);
     }
+}
+
+/// [`pack_b`] with the panels fanned out across the pool — the very-wide
+/// output case (n > nc), where the pack is a serial prefix ahead of every
+/// row-slab dispatch. Panels are disjoint `NR × kb` chunks of `buf`, so
+/// the result is bit-identical to the serial pack.
+fn pack_b_parallel(
+    src: &Mat,
+    trans: bool,
+    j0: usize,
+    nb: usize,
+    k0: usize,
+    kb: usize,
+    buf: &mut Vec<f32>,
+) {
+    let panels = nb.div_ceil(NR);
+    let need = panels * NR * kb;
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+    let splits: Vec<usize> = (1..=panels).map(|q| q * NR * kb).collect();
+    crate::util::parallel::parallel_chunks_mut(&mut buf[..need], &splits, |q, panel| {
+        let j_base = j0 + q * NR;
+        let j_lim = NR.min(j0 + nb - j_base);
+        pack_b_panel(src, trans, j_base, j_lim, k0, kb, panel);
+    });
 }
 
 #[inline(always)]
@@ -647,6 +697,44 @@ mod tests {
                 assert!((c[(i, j)] - want).abs() < 2e-3, "({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn parallel_b_pack_wide_nn_matches_serial() {
+        // n > nc (512) routes the B pack through the pool. Panels are
+        // disjoint buffer chunks and every element's reduction order is
+        // unchanged, so threaded must match the serial-pack result
+        // essentially exactly (and both match the oracle).
+        let mut rng = Rng::new(23);
+        let a = Mat::randn(48, 70, &mut rng);
+        let b = Mat::randn(70, 600, &mut rng);
+        let threaded = matmul(&a, &b);
+        let serial = {
+            let g = Gemm { par_flop_threshold: usize::MAX, ..Default::default() };
+            let mut c = Mat::zeros(48, 600);
+            g.gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            c
+        };
+        assert_close(threaded.data(), serial.data(), 1e-7, 1e-7).unwrap();
+        assert_close(threaded.data(), naive(&a, &b).data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn parallel_b_pack_wide_nt_matches_serial() {
+        // Same wide-output path but packing B from transposed (N×K)
+        // storage — the NT large-output route.
+        let mut rng = Rng::new(29);
+        let a = Mat::randn(150, 40, &mut rng);
+        let b = Mat::randn(600, 40, &mut rng);
+        let threaded = matmul_nt(&a, &b);
+        let serial = {
+            let g = Gemm { par_flop_threshold: usize::MAX, ..Default::default() };
+            let mut c = Mat::zeros(150, 600);
+            g.gemm(1.0, &a, Trans::No, &b, Trans::Yes, 0.0, &mut c);
+            c
+        };
+        assert_close(threaded.data(), serial.data(), 1e-7, 1e-7).unwrap();
+        assert_close(threaded.data(), naive(&a, &b.t()).data(), 1e-3, 1e-3).unwrap();
     }
 
     #[test]

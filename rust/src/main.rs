@@ -1,12 +1,15 @@
 //! `repro` — CLI for the FastH reproduction.
 //!
 //! Subcommands:
-//!   bench     regenerate the paper's figures (1, 3, 4, k, rnn, all)
-//!   serve     start the orthoserve coordinator (native or PJRT engine)
-//!   train     end-to-end training runs (rnn copy-memory / spiral MLP)
-//!   ops       Table-1 numeric equivalence demo at a given d
-//!   tune-k    §3.3 one-time block-size search
-//!   selftest  PJRT artifacts vs native numerics
+//!   bench       regenerate the paper's figures (1, 3, 4, k, rnn, all)
+//!   serve       start the orthoserve coordinator (native or PJRT engine)
+//!   train       end-to-end training runs (rnn copy-memory / spiral MLP)
+//!   experiment  the Table-2 quality study: run a declarative spec
+//!               (or `all`) at a budget, multi-seed, writing RunRecords
+//!   report      aggregate RunRecords into the Table-2 markdown/JSON
+//!   ops         Table-1 numeric equivalence demo at a given d
+//!   tune-k      §3.3 one-time block-size search
+//!   selftest    PJRT artifacts vs native numerics
 //!
 //! (Arg parsing is hand-rolled — no CLI crates in the offline registry.)
 
@@ -78,11 +81,16 @@ fn run(args: &[String]) -> Result<()> {
         print_usage();
         return Ok(());
     };
+    // `experiment` takes a positional spec name before the flags.
+    if cmd == "experiment" {
+        return cmd_experiment(&args[1..]);
+    }
     let flags = parse_flags(&args[1..])?;
     match cmd.as_str() {
         "bench" => cmd_bench(&flags),
         "serve" => cmd_serve(&flags),
         "train" => cmd_train(&flags),
+        "report" => cmd_report(&flags),
         "ops" => cmd_ops(&flags),
         "tune-k" => cmd_tune_k(&flags),
         "selftest" => cmd_selftest(&flags),
@@ -100,13 +108,17 @@ fn print_usage() {
          \n\
          USAGE: repro <subcommand> [--flags]\n\
          \n\
-         bench    --fig 1|3|4|k|rnn|all  [--sizes 64,128,...] [--budget secs] [--reps n]\n\
-         serve    [--addr host:port] [--d 64] [--engine native|pjrt] [--artifacts dir]\n\
-                  [--shards n] [--adaptive] [--rect ROWSxCOLS[@RANK]]\n\
-         train    --task rnn|spiral [--steps n] [--hidden d] [--lr f]\n\
-         ops      [--d 64]\n\
-         tune-k   [--d 784] [--m 32] [--budget secs]\n\
-         selftest [--artifacts dir]"
+         bench      --fig 1|3|4|k|rnn|all  [--sizes 64,128,...] [--budget secs] [--reps n]\n\
+         serve      [--addr host:port] [--d 64] [--engine native|pjrt] [--artifacts dir]\n\
+                    [--shards n] [--adaptive] [--rect ROWSxCOLS[@RANK]]\n\
+         train      --task rnn|spiral [--steps n] [--hidden d] [--lr f]\n\
+         experiment <name|all> [--budget smoke|paper] [--seed-offset n] [--out dir]\n\
+                    [--serial]   (names: char_lm copy_mem flow_d8 flow_d16 flow_d32\n\
+                    spiral teacher)\n\
+         report     [--dir bench_out/experiments] [--out bench_out/TABLE2.md]\n\
+         ops        [--d 64]\n\
+         tune-k     [--d 784] [--m 32] [--budget secs]\n\
+         selftest   [--artifacts dir]"
     );
 }
 
@@ -302,6 +314,131 @@ fn train_spiral(steps: usize) -> Result<()> {
             println!("step {step:>5}  loss {loss:.4}  acc {acc:.3}");
         }
     }
+    Ok(())
+}
+
+// ------------------------------------------------------------ experiment
+
+/// `repro experiment <name|all> [--budget smoke|paper] [--seed-offset n]
+/// [--out dir] [--serial]` — the Table-2 quality study. Runs every
+/// (family × seed) cell of the named spec(s), writes one RunRecord JSON
+/// per cell plus `bench_out/BENCH_experiments.json`, prints the
+/// aggregated markdown table, and fails on any NaN/divergence.
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    use fasth::experiments::{builtin, builtin_all, builtin_names, report, Budget, Runner};
+
+    let (name, rest) = match args.first() {
+        Some(a) if !a.starts_with("--") => (a.clone(), &args[1..]),
+        _ => ("all".to_string(), args),
+    };
+    let flags = parse_flags(rest)?;
+    let budget = match flags.get("budget") {
+        Some(b) => Budget::parse(b).map_err(anyhow::Error::msg)?,
+        None => Budget::Smoke,
+    };
+    let seed_offset: u64 = match flags.get("seed-offset") {
+        Some(s) => s.parse().context("bad --seed-offset")?,
+        None => 0,
+    };
+    let out_dir = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| fasth::experiments::runner::DEFAULT_OUT_DIR.to_string());
+
+    let mut specs = if name == "all" {
+        builtin_all(budget)
+    } else {
+        vec![builtin(&name, budget).with_context(|| {
+            format!("unknown experiment '{name}' (known: {})", builtin_names().join(" "))
+        })?]
+    };
+    for spec in &mut specs {
+        for s in &mut spec.seeds {
+            *s = s.wrapping_add(seed_offset);
+        }
+    }
+
+    let mut runner = Runner::with_out_dir(&out_dir);
+    runner.parallel = !flags.contains_key("serial");
+    let t0 = std::time::Instant::now();
+    let mut records = Vec::new();
+    for spec in &specs {
+        println!(
+            "running '{}' [{}]: {} × {} families × {} seeds × {} epochs",
+            spec.name,
+            budget.name(),
+            spec.workload.label(),
+            spec.families.len(),
+            spec.seeds.len(),
+            spec.epochs
+        );
+        let recs = runner.run_spec(spec).map_err(anyhow::Error::msg)?;
+        for r in &recs {
+            println!(
+                "  {:<12} {:<10} seed {:<3} loss {:.4} → {} {:.4}  ({:.1}s)",
+                r.workload, r.family, r.seed, r.final_loss, r.eval_kind, r.final_eval, r.wall_secs
+            );
+        }
+        records.extend(recs);
+    }
+
+    // NaN/divergence gate: any non-finite metric fails the run (CI keys
+    // off the exit code).
+    let bad: Vec<String> = records
+        .iter()
+        .filter(|r| !r.all_finite())
+        .map(|r| format!("{}/{}/s{}", r.workload, r.family, r.seed))
+        .collect();
+    if !bad.is_empty() {
+        bail!("non-finite metrics (divergence) in: {}", bad.join(", "));
+    }
+
+    let cells = report::aggregate(&records);
+    let md = report::markdown(&cells);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n== Table-2-style comparison ({} runs, {wall:.1}s) ==", records.len());
+    println!("{md}");
+    let bench_path = std::path::Path::new("bench_out/BENCH_experiments.json");
+    report::save_bench_json(&cells, budget.name(), records.len(), bench_path)?;
+    println!("records in {out_dir}/; aggregate saved to {}", bench_path.display());
+    Ok(())
+}
+
+/// `repro report [--dir bench_out/experiments] [--out bench_out/TABLE2.md]`
+/// — re-aggregate previously written RunRecords into the Table-2 markdown
+/// (printed and saved) and refresh `bench_out/BENCH_experiments.json`.
+fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {
+    use fasth::experiments::{report, RunRecord};
+
+    let dir = flags
+        .get("dir")
+        .cloned()
+        .unwrap_or_else(|| fasth::experiments::runner::DEFAULT_OUT_DIR.to_string());
+    let out = match flags.get("out") {
+        Some(o) => o.clone(),
+        None => "bench_out/TABLE2.md".to_string(),
+    };
+    let records = RunRecord::load_dir(std::path::Path::new(&dir)).map_err(anyhow::Error::msg)?;
+    if records.is_empty() {
+        bail!("no run records in {dir} (run `repro experiment` first)");
+    }
+    let budget = records[0].budget.clone();
+    let cells = report::aggregate(&records);
+    let md = report::markdown(&cells);
+    println!("{md}");
+    let header = format!(
+        "# Table-2-style quality comparison\n\n{} runs, budget `{}`, schema v{}.\n\n",
+        records.len(),
+        budget,
+        fasth::experiments::SCHEMA_VERSION
+    );
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, header + &md)?;
+    let bench_path = std::path::Path::new("bench_out/BENCH_experiments.json");
+    report::save_bench_json(&cells, &budget, records.len(), bench_path)?;
+    println!("markdown saved to {out}; aggregate refreshed at {}", bench_path.display());
     Ok(())
 }
 

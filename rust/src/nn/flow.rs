@@ -9,15 +9,22 @@
 //! plus Σ log f'(pre) from the nonlinearity. Density fitting by exact
 //! maximum likelihood under a standard-normal base.
 //!
+//! The linear part is abstracted behind the [`Coupling`] trait so the
+//! Table-2 quality study can train the *same* flow with two
+//! parameterizations: [`LinearSvd`] (spectrum-backed `O(d)` logdet and
+//! exact `V·Σ⁻¹·Uᵀ` inverse) vs the [`Dense`] baseline (LU-backed
+//! `O(d³)` slogdet/solve and a `−W⁻ᵀ` logdet gradient each step — the
+//! costs the paper's reparameterization removes).
+//!
 //! The blocks are ordinary [`Layer`]s; the flow is an ordinary [`Params`]
-//! container, so any [`Optimizer`] trains it. Invertibility is kept by
-//! the shared [`SigmaClip::Floor`] post-update hook (|σ| ≥ floor) instead
-//! of ad-hoc clamping in the update path.
+//! container, so any [`Optimizer`] trains it. Invertibility of the SVD
+//! coupling is kept by the shared [`SigmaClip::Floor`] post-update hook
+//! (|σ| ≥ floor) instead of ad-hoc clamping in the update path.
 
-use super::layers::LinearSvd;
+use super::layers::{Dense, LinearSvd};
 use super::module::{visit_prefixed, Ctx, Layer, ParamView, Params, SigmaClip};
 use super::optim::Optimizer;
-use crate::linalg::Mat;
+use crate::linalg::{lu, Mat};
 use crate::util::Rng;
 
 /// Invertible leaky ReLU slope for the negative half.
@@ -26,22 +33,95 @@ const LEAK: f32 = 0.4;
 /// Default invertibility floor on |σ| (see [`SigmaClip::Floor`]).
 pub const DEFAULT_SIGMA_FLOOR: f32 = 0.05;
 
-/// One flow block: SVD-linear + invertible leaky ReLU.
-pub struct FlowBlock {
-    pub linear: LinearSvd,
+/// The affine part of a flow block: any [`Layer`] that can also report
+/// `log|det W|`, invert itself exactly, and push the `−∂log|det|` term
+/// into its own gradient buffers. The two implementations are the
+/// paper's comparison: [`LinearSvd`] (spectrum route) vs [`Dense`]
+/// (LU route).
+pub trait Coupling: Layer {
+    /// `(sign, log|det W|)` of the linear map.
+    fn slogdet(&self) -> (f64, f64);
+
+    /// Exact inverse of the affine map: solve `W·x + b = y` for `x`.
+    /// Entries become NaN if `W` is numerically singular (the flow has
+    /// diverged; run records surface it).
+    fn invert_affine(&self, y: &Mat) -> Mat;
+
+    /// Accumulate `∂(−log|det W|)/∂params` into the layer's gradient
+    /// buffers (the maximum-likelihood logdet term, sample-independent).
+    fn accum_logdet_grad(&self);
 }
 
-/// Per-block forward cache: the linear layer's cache + pre-activation.
+impl Coupling for LinearSvd {
+    fn slogdet(&self) -> (f64, f64) {
+        self.p.slogdet()
+    }
+
+    fn invert_affine(&self, y: &Mat) -> Mat {
+        let mut pre = y.clone();
+        if let Some(bias) = &self.b {
+            for (i, &bi) in bias.iter().enumerate() {
+                for v in pre.row_mut(i) {
+                    *v -= bi;
+                }
+            }
+        }
+        // Table-1 inverse `W⁻¹ = V·Σ⁻¹·Uᵀ` — no LU, no iterative solve.
+        self.p.apply_inverse(&pre, self.k)
+    }
+
+    fn accum_logdet_grad(&self) {
+        // ∂Σlog|σ|/∂σ = 1/σ, negated for the NLL.
+        let extra: Vec<f32> = self.p.sigma.iter().map(|&s| -1.0 / s).collect();
+        self.accum_sigma_grad(&extra);
+    }
+}
+
+impl Coupling for Dense {
+    fn slogdet(&self) -> (f64, f64) {
+        lu::slogdet(&self.w)
+    }
+
+    fn invert_affine(&self, y: &Mat) -> Mat {
+        let mut pre = y.clone();
+        for (i, &bi) in self.b.iter().enumerate() {
+            for v in pre.row_mut(i) {
+                *v -= bi;
+            }
+        }
+        lu::solve(&self.w, &pre)
+            .unwrap_or_else(|| Mat::from_fn(pre.rows(), pre.cols(), |_, _| f32::NAN))
+    }
+
+    fn accum_logdet_grad(&self) {
+        // ∂(−log|det W|)/∂W = −W⁻ᵀ, one O(d³) inverse per step — the
+        // cost the SVD route replaces with O(d). A singular W gets no
+        // logdet gradient; the −log|det| = +∞ loss surfaces divergence.
+        if let Some(winv) = lu::inverse(&self.w) {
+            self.accum_w_grad(&winv.t().scale(-1.0));
+        }
+    }
+}
+
+/// One flow block: coupling (SVD-linear or dense) + invertible leaky ReLU.
+pub struct FlowBlock<C: Coupling = LinearSvd> {
+    pub linear: C,
+}
+
+/// Per-block forward cache: the coupling's cache + pre-activation.
 struct FlowBlockCache {
     lin: Ctx,
     pre: Mat,
 }
 
 /// A stack of flow blocks mapping data `x` to latent `z`.
-pub struct Flow {
-    pub blocks: Vec<FlowBlock>,
+pub struct Flow<C: Coupling = LinearSvd> {
+    pub blocks: Vec<FlowBlock<C>>,
     pub dim: usize,
 }
+
+/// The dense-coupling baseline flow of the Table-2 comparison.
+pub type DenseFlow = Flow<Dense>;
 
 fn leaky(x: f32) -> f32 {
     if x >= 0.0 {
@@ -67,13 +147,13 @@ fn leaky_logderiv(x: f32) -> f32 {
     }
 }
 
-impl Params for FlowBlock {
+impl<C: Coupling> Params for FlowBlock<C> {
     fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
         self.linear.visit(f);
     }
 }
 
-impl Layer for FlowBlock {
+impl<C: Coupling> Layer for FlowBlock<C> {
     fn forward(&self, x: &Mat, ctx: &mut Ctx) -> Mat {
         let mut lin = Ctx::empty();
         let pre = self.linear.forward(x, &mut lin);
@@ -97,9 +177,13 @@ impl Layer for FlowBlock {
     fn post_update(&mut self) {
         self.linear.post_update();
     }
+
+    fn sigma_spectrum(&self) -> Option<&[f32]> {
+        self.linear.sigma_spectrum()
+    }
 }
 
-impl Flow {
+impl Flow<LinearSvd> {
     pub fn new(dim: usize, depth: usize, rng: &mut Rng) -> Flow {
         let blocks = (0..depth)
             .map(|_| FlowBlock {
@@ -108,7 +192,20 @@ impl Flow {
             .collect();
         Flow { blocks, dim }
     }
+}
 
+impl Flow<Dense> {
+    /// Dense-coupling baseline: same depth/nonlinearity, ordinary dense
+    /// weights (logdet and inverse via LU each time they are needed).
+    pub fn new_dense(dim: usize, depth: usize, rng: &mut Rng) -> DenseFlow {
+        let blocks = (0..depth)
+            .map(|_| FlowBlock { linear: Dense::new(dim, dim, rng) })
+            .collect();
+        Flow { blocks, dim }
+    }
+}
+
+impl<C: Coupling> Flow<C> {
     /// Forward `x → (z, per-sample log|det J|, per-block caches)`.
     pub fn forward(&self, x: &Mat) -> (Mat, Vec<f64>, Vec<Ctx>) {
         let b = x.cols();
@@ -116,8 +213,8 @@ impl Flow {
         let mut logdet = vec![0.0f64; b];
         let mut ctxs: Vec<Ctx> = (0..self.blocks.len()).map(|_| Ctx::empty()).collect();
         for (blk, ctx) in self.blocks.iter().zip(ctxs.iter_mut()) {
-            // Linear part: logdet contribution Σ log|σ| (same ∀ samples).
-            let (_sign, lin_ld) = blk.linear.p.slogdet();
+            // Linear part: logdet contribution log|det W| (same ∀ samples).
+            let (_sign, lin_ld) = blk.linear.slogdet();
             cur = blk.forward(&cur, ctx);
             // Nonlinearity: per-sample Σ log f'(pre).
             let pre = &ctx.get::<FlowBlockCache>().pre;
@@ -132,30 +229,23 @@ impl Flow {
         (cur, logdet, ctxs)
     }
 
-    /// Exact inverse `z → x` (sampling path), using the Table-1 inverse
-    /// `W⁻¹ = V·Σ⁻¹·Uᵀ` — no LU, no iterative solve.
+    /// Exact inverse `z → x` (sampling path): each coupling solves its
+    /// affine map exactly — `V·Σ⁻¹·Uᵀ` on the SVD route, an LU solve on
+    /// the dense baseline.
     pub fn inverse(&self, z: &Mat) -> Mat {
         let mut cur = z.clone();
         for blk in self.blocks.iter().rev() {
-            let mut pre = cur.map(leaky_inv);
-            // Undo bias, then W⁻¹.
-            if let Some(bias) = &blk.linear.b {
-                for i in 0..self.dim {
-                    let bi = bias[i];
-                    for v in pre.row_mut(i) {
-                        *v -= bi;
-                    }
-                }
-            }
-            cur = blk.linear.p.apply_inverse(&pre, blk.linear.k);
+            let pre = cur.map(leaky_inv);
+            cur = blk.linear.invert_affine(&pre);
         }
         cur
     }
 
     /// Negative log-likelihood under N(0, I) base + change of variables,
     /// averaged over the batch: `NLL = E[ ½‖z‖² + (d/2)·log 2π − log|det J| ]`.
-    /// One full backward pass: gradients (including the `−1/σ` logdet
-    /// terms) accumulate into the blocks' buffers; zero them first.
+    /// One full backward pass: gradients (including the couplings'
+    /// `−∂log|det|` terms) accumulate into the blocks' buffers; zero
+    /// them first.
     pub fn nll_step(&self, x: &Mat) -> f64 {
         let b = x.cols();
         let (z, logdet, ctxs) = self.forward(x);
@@ -170,23 +260,24 @@ impl Flow {
         }
         nll /= b as f64;
 
-        // Backward: ∂NLL/∂z = z / b ;  logdet terms contribute directly to
-        // σ-gradients (∂Σlog|σ|/∂σ = 1/σ) and to pre-activation grads
-        // (leaky has piecewise-constant derivative → zero grad from its
-        // logdet term except measure-zero kink).
+        // Backward: ∂NLL/∂z = z / b ;  logdet terms contribute directly
+        // to the couplings' own gradients (−1/σ on the spectrum route,
+        // −W⁻ᵀ on the dense route) and to pre-activation grads (leaky
+        // has piecewise-constant derivative → zero grad from its logdet
+        // term except measure-zero kink).
         let mut g = z.scale(1.0 / b as f32);
         for (blk, ctx) in self.blocks.iter().zip(&ctxs).rev() {
             g = blk.backward(ctx, &g);
-            // logdet gradient wrt σ: the linear logdet is sample-
-            // independent, so the batch mean keeps the full −1/σ.
-            let extra: Vec<f32> = blk.linear.p.sigma.iter().map(|&s| -1.0 / s).collect();
-            blk.linear.accum_sigma_grad(&extra);
+            // The linear logdet is sample-independent, so the batch mean
+            // keeps the full logdet gradient.
+            blk.linear.accum_logdet_grad();
         }
         nll
     }
 
     /// One training step: zero grads, NLL forward/backward, one optimizer
-    /// sweep, then the σ-floor post-update hooks. Returns the NLL.
+    /// sweep, then the post-update hooks (σ-floor on the SVD coupling).
+    /// Returns the NLL.
     pub fn train_step(&mut self, x: &Mat, opt: &mut dyn Optimizer) -> f64 {
         self.zero_grads();
         let nll = self.nll_step(x);
@@ -195,11 +286,20 @@ impl Flow {
         nll
     }
 
-    /// Run every block's post-update hook (the σ invertibility floor).
+    /// Run every block's post-update hook (the σ invertibility floor on
+    /// the SVD coupling; a no-op on the dense baseline).
     pub fn post_update(&mut self) {
         for blk in &mut self.blocks {
             blk.post_update();
         }
+    }
+
+    /// Metric hook: every coupling's σ, flattened (empty for the dense
+    /// baseline).
+    pub fn sigma_spectrum(&self) -> Vec<f32> {
+        super::module::collect_sigma_spectrum(
+            self.blocks.iter().map(|b| b as &dyn Layer),
+        )
     }
 
     /// Draw samples by pushing base noise through the inverse.
@@ -209,7 +309,7 @@ impl Flow {
     }
 }
 
-impl Params for Flow {
+impl<C: Coupling> Params for Flow<C> {
     fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
         for (i, blk) in self.blocks.iter_mut().enumerate() {
             let prefix = format!("b{i}");
@@ -252,6 +352,16 @@ mod tests {
         let (z, _ld, _c) = flow.forward(&x);
         let back = flow.inverse(&z);
         assert!(back.max_abs_diff(&x) < 1e-3, "diff {}", back.max_abs_diff(&x));
+    }
+
+    #[test]
+    fn dense_inverse_roundtrips() {
+        let mut rng = Rng::new(0xF6);
+        let flow = Flow::new_dense(6, 3, &mut rng);
+        let x = Mat::randn(6, 5, &mut rng);
+        let (z, _ld, _c) = flow.forward(&x);
+        let back = flow.inverse(&z);
+        assert!(back.max_abs_diff(&x) < 1e-2, "diff {}", back.max_abs_diff(&x));
     }
 
     #[test]
@@ -300,6 +410,25 @@ mod tests {
     }
 
     #[test]
+    fn dense_nll_gradcheck_w() {
+        // The dense coupling's −W⁻ᵀ logdet term plus the data path must
+        // match finite differences of the full NLL wrt W.
+        let mut rng = Rng::new(0xF7);
+        let mut flow = Flow::new_dense(4, 2, &mut rng);
+        let x = Mat::randn(4, 6, &mut rng);
+        flow.zero_grads();
+        let _nll = flow.nll_step(&x);
+        let dw = grad_by_key(&mut flow, "b0.w").unwrap();
+        let w0 = flow.blocks[0].linear.w.clone();
+        let fd = oracle::finite_diff_grad(w0.data(), 1e-3, |p| {
+            flow.blocks[0].linear.w = Mat::from_vec(4, 4, p.to_vec());
+            flow.zero_grads();
+            flow.nll_step(&x)
+        });
+        crate::util::prop::assert_close(&dw, &fd, 2e-2, 5e-2).unwrap();
+    }
+
+    #[test]
     fn training_reduces_nll() {
         let mut rng = Rng::new(0xF4);
         let mut flow = Flow::new(4, 3, &mut rng);
@@ -313,12 +442,32 @@ mod tests {
         }
         assert!(last < nll0 - 0.1, "NLL {nll0:.3} → {last:.3}");
         // σ stayed above the invertibility floor the whole run.
-        for blk in &flow.blocks {
-            for &s in &blk.linear.p.sigma {
-                assert!(s.abs() >= DEFAULT_SIGMA_FLOOR, "σ={s}");
-            }
+        for &s in &flow.sigma_spectrum() {
+            assert!(s.abs() >= DEFAULT_SIGMA_FLOOR, "σ={s}");
         }
         // Still exactly invertible after training.
+        let (z, _ld, _c) = flow.forward(&data);
+        let back = flow.inverse(&z);
+        assert!(back.max_abs_diff(&data) < 1e-2);
+    }
+
+    #[test]
+    fn dense_training_reduces_nll() {
+        let mut rng = Rng::new(0xF8);
+        let mut flow = Flow::new_dense(4, 3, &mut rng);
+        let data = gaussian_mixture(4, 3, 128, &mut rng);
+        // Same lr the flow experiment specs use; the −W⁻ᵀ logdet term
+        // makes the dense loss surface jumpier than the σ-path's.
+        let mut opt = Sgd::new(0.03, 0.0);
+        flow.zero_grads();
+        let nll0 = flow.nll_step(&data);
+        let mut last = nll0;
+        for _ in 0..60 {
+            last = flow.train_step(&data, &mut opt);
+        }
+        assert!(last < nll0 - 0.1, "NLL {nll0:.3} → {last:.3}");
+        assert!(flow.sigma_spectrum().is_empty(), "dense couplings have no σ");
+        // Inverse still works through the LU solves after training.
         let (z, _ld, _c) = flow.forward(&data);
         let back = flow.inverse(&z);
         assert!(back.max_abs_diff(&data) < 1e-2);

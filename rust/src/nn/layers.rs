@@ -118,6 +118,14 @@ impl Dense {
             }),
         }
     }
+
+    /// Add an external weight-gradient contribution (the dense flow
+    /// coupling's `−W⁻ᵀ` logdet term) into the accumulated gradient
+    /// buffer — the dense twin of [`LinearSvd::accum_sigma_grad`].
+    pub fn accum_w_grad(&self, extra: &Mat) {
+        let mut acc = self.grads.borrow_mut();
+        acc.w.axpy(1.0, extra);
+    }
 }
 
 impl Params for Dense {
@@ -250,6 +258,10 @@ impl Layer for LinearSvd {
     fn post_update(&mut self) {
         self.clip.apply(&mut self.p.sigma);
     }
+
+    fn sigma_spectrum(&self) -> Option<&[f32]> {
+        Some(&self.p.sigma)
+    }
 }
 
 // --------------------------------------------------------- RectLinearSvd
@@ -342,6 +354,10 @@ impl Layer for RectLinearSvd {
     /// in every `visit` sweep, as for the square layer).
     fn post_update(&mut self) {
         self.clip.apply(&mut self.p.sigma);
+    }
+
+    fn sigma_spectrum(&self) -> Option<&[f32]> {
+        Some(&self.p.sigma)
     }
 }
 

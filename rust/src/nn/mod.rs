@@ -27,8 +27,9 @@ pub mod optim;
 pub mod rnn;
 pub mod tasks;
 
+pub use flow::{Coupling, DenseFlow, Flow};
 pub use layers::{Activation, Dense, LinearSvd, RectLinearSvd};
 pub use loss::{mse, softmax_cross_entropy};
 pub use module::{Ctx, Layer, ParamView, Params, Sequential, SigmaClip};
 pub use optim::{Adam, Optimizer, Sgd};
-pub use rnn::SvdRnn;
+pub use rnn::{DenseRnn, Rnn, SvdRnn};

@@ -114,6 +114,27 @@ pub trait Layer: Params {
     /// Constraint hook run once after each optimizer sweep (e.g. the
     /// [`SigmaClip`] spectral constraints). Default: nothing.
     fn post_update(&mut self) {}
+
+    /// Metric hook: the live singular-value spectrum of this layer's
+    /// weight, when the layer keeps one by construction (the SVD layers;
+    /// containers surface their children's). Experiment logging samples
+    /// this per epoch; `None` for layers without an explicit spectrum.
+    fn sigma_spectrum(&self) -> Option<&[f32]> {
+        None
+    }
+}
+
+/// Collect every σ exposed by `layers`' [`Layer::sigma_spectrum`] hooks
+/// into one flat vector — the per-epoch spectrum sample the experiment
+/// runner records.
+pub fn collect_sigma_spectrum<'a>(layers: impl IntoIterator<Item = &'a dyn Layer>) -> Vec<f32> {
+    let mut out = Vec::new();
+    for layer in layers {
+        if let Some(s) = layer.sigma_spectrum() {
+            out.extend_from_slice(s);
+        }
+    }
+    out
 }
 
 /// Post-update singular-value constraint, shared by every SVD layer (and
@@ -223,6 +244,12 @@ impl Sequential {
             cur = layer.backward(ctx, &cur);
         }
         cur
+    }
+
+    /// All σ exposed by this stack's layers, flattened (see
+    /// [`Layer::sigma_spectrum`]). Empty when no layer carries a spectrum.
+    pub fn sigma_spectrum(&self) -> Vec<f32> {
+        collect_sigma_spectrum(self.layers.iter().map(|b| b.as_ref()))
     }
 
     /// Run every layer's [`Layer::post_update`] hook (after an optimizer

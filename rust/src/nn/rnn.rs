@@ -1,17 +1,23 @@
-//! Spectral RNN (Zhang et al. 2018) — the use case the SVD
-//! reparameterization was built for: a vanilla RNN whose recurrent matrix
-//! is held as `U·Σ·Vᵀ` with singular values clipped to `[1±ε]`, killing
-//! exploding/vanishing gradients while FastH keeps the Householder
-//! products fast (paper §3.3 "Recurrent Layers").
+//! Recurrent cells on the [`Layer`] trait: a vanilla RNN generic over its
+//! recurrent weight, instantiated as the paper's spectral RNN
+//! ([`SvdRnn`], Zhang et al. 2018 — the use case the SVD
+//! reparameterization was built for) and as the [`DenseRnn`] baseline the
+//! Table-2 quality study compares against.
 //!
 //! `h_{t+1} = tanh(W_rec·h_t + W_in·x_t + b)`, readout `y_t = W_out·h_t`.
 //!
-//! The cells are ordinary [`Layer`]s (the recurrent weight is a bias-free
-//! [`LinearSvd`], the projections are [`Dense`]); BPTT threads one
-//! [`Ctx`] per layer per timestep, and because `backward` *accumulates*
-//! into the layers' gradient buffers, the across-time sums come out of
-//! the trait contract for free. One [`Optimizer`] sweep then updates the
-//! whole cell; the spectral clip runs in the post-update hook.
+//! [`SvdRnn`] holds the recurrent matrix as `U·Σ·Vᵀ` with singular values
+//! clipped to `[1±ε]`, killing exploding/vanishing gradients while FastH
+//! keeps the Householder products fast (paper §3.3 "Recurrent Layers");
+//! [`DenseRnn`] is the same cell with an ordinary dense recurrent weight.
+//!
+//! The cells are ordinary [`Layer`]s (the recurrent weight is any layer —
+//! bias-free [`LinearSvd`] or [`Dense`] — the projections are [`Dense`]);
+//! BPTT threads one [`Ctx`] per layer per timestep, and because
+//! `backward` *accumulates* into the layers' gradient buffers, the
+//! across-time sums come out of the trait contract for free. One
+//! [`Optimizer`] sweep then updates the whole cell; the spectral clip
+//! runs in the post-update hook.
 
 use super::layers::{Activation, Dense, LinearSvd};
 use super::loss::softmax_cross_entropy;
@@ -20,16 +26,23 @@ use super::optim::Optimizer;
 use crate::linalg::Mat;
 use crate::util::Rng;
 
-/// RNN with an SVD-reparameterized recurrent weight.
-pub struct SvdRnn {
-    /// Recurrent weight `U·Σ·Vᵀ` (bias-free; the bias lives in `w_in`).
-    /// Its [`SigmaClip::Band`] is the spectral constraint — adjust or
-    /// ablate it through `w_rec.clip`.
-    pub w_rec: LinearSvd,
+/// Vanilla RNN generic over the recurrent weight's parameterization.
+pub struct Rnn<R: Layer> {
+    /// Recurrent weight (bias-free for [`SvdRnn`]; the bias lives in
+    /// `w_in`). For the SVD cell its [`SigmaClip::Band`] is the spectral
+    /// constraint — adjust or ablate it through `w_rec.clip`.
+    pub w_rec: R,
     pub w_in: Dense,
     pub w_out: Dense,
     pub hidden: usize,
 }
+
+/// RNN with an SVD-reparameterized recurrent weight (spectral RNN).
+pub type SvdRnn = Rnn<LinearSvd>;
+
+/// RNN with an ordinary dense recurrent weight — the Table-2 baseline
+/// family the SVD cell is compared against.
+pub type DenseRnn = Rnn<Dense>;
 
 /// Per-timestep layer caches retained for BPTT.
 struct StepCtx {
@@ -40,12 +53,12 @@ struct StepCtx {
     out: Option<(Ctx, Mat)>,
 }
 
-impl SvdRnn {
+impl Rnn<LinearSvd> {
     /// Default spectral clip width ε (σ ∈ [1−ε, 1+ε] after each sweep).
     pub const DEFAULT_EPS: f32 = 0.05;
 
     pub fn new(input: usize, hidden: usize, output: usize, rng: &mut Rng) -> SvdRnn {
-        SvdRnn {
+        Rnn {
             w_rec: LinearSvd::new_unbiased(hidden, rng)
                 .with_clip(SigmaClip::Band(Self::DEFAULT_EPS)),
             w_in: Dense::new(hidden, input, rng),
@@ -62,7 +75,22 @@ impl SvdRnn {
             _ => 0.0,
         }
     }
+}
 
+impl Rnn<Dense> {
+    /// Dense-recurrent baseline cell (same init scale family as the
+    /// projections; no spectral constraint to ablate).
+    pub fn new_dense(input: usize, hidden: usize, output: usize, rng: &mut Rng) -> DenseRnn {
+        Rnn {
+            w_rec: Dense::new(hidden, hidden, rng),
+            w_in: Dense::new(hidden, input, rng),
+            w_out: Dense::new(output, hidden, rng),
+            hidden,
+        }
+    }
+}
+
+impl<R: Layer> Rnn<R> {
     /// Run the network over a sequence, scoring the last `scored_steps`
     /// steps with cross-entropy against `targets`. Returns `(mean loss,
     /// per-scored-step accuracy)` — one full BPTT pass whose gradients
@@ -133,7 +161,7 @@ impl SvdRnn {
     }
 
     /// One full training step: zero grads, BPTT, a single optimizer
-    /// sweep, then the spectral clip.
+    /// sweep, then the post-update hooks (the SVD cell's spectral clip).
     pub fn train_step(
         &mut self,
         inputs: &[Mat],
@@ -149,15 +177,21 @@ impl SvdRnn {
     }
 
     /// Run every cell's post-update hook — the recurrent layer's
-    /// spectral clip.
+    /// spectral clip on the SVD cell, a no-op on the dense baseline.
     pub fn post_update(&mut self) {
         self.w_rec.post_update();
         self.w_in.post_update();
         self.w_out.post_update();
     }
+
+    /// Metric hook: the recurrent weight's live σ-spectrum, when it has
+    /// one (`None` for the dense baseline).
+    pub fn sigma_spectrum(&self) -> Option<&[f32]> {
+        self.w_rec.sigma_spectrum()
+    }
 }
 
-impl Params for SvdRnn {
+impl<R: Layer> Params for Rnn<R> {
     fn visit(&mut self, f: &mut dyn FnMut(ParamView)) {
         visit_prefixed(&mut self.w_rec, "rec", f);
         visit_prefixed(&mut self.w_in, "in", f);
@@ -172,7 +206,7 @@ mod tests {
     use crate::nn::tasks::copy_memory;
     use crate::nn::Sgd;
 
-    fn grad_of(rnn: &mut SvdRnn, key: &str) -> Vec<f32> {
+    fn grad_of<R: Layer>(rnn: &mut Rnn<R>, key: &str) -> Vec<f32> {
         grad_by_key(rnn, key).unwrap_or_else(|| panic!("no parameter '{key}'"))
     }
 
@@ -214,6 +248,29 @@ mod tests {
     }
 
     #[test]
+    fn dense_baseline_trains_with_same_machinery() {
+        // The DenseRnn baseline cell: same BPTT driver, same optimizer
+        // sweep, dense recurrent grads under "rec.w", and no σ-spectrum.
+        let mut rng = Rng::new(195);
+        let mut rnn = DenseRnn::new_dense(6, 12, 6, &mut rng);
+        assert!(rnn.sigma_spectrum().is_none());
+        let batch = copy_memory(4, 2, 3, 8, &mut rng);
+        let (loss0, _) = rnn.step_bptt(&batch.inputs, &batch.targets, batch.scored_steps);
+        let dw = grad_of(&mut rnn, "rec.w");
+        assert_eq!(dw.len(), 12 * 12);
+        assert!(dw.iter().any(|&v| v != 0.0), "dense recurrent grads all zero");
+        rnn.zero_grads();
+        let mut opt = Sgd::new(0.5, 0.0);
+        let mut last = loss0;
+        for _ in 0..30 {
+            let (l, _) =
+                rnn.train_step(&batch.inputs, &batch.targets, batch.scored_steps, &mut opt);
+            last = l;
+        }
+        assert!(last < 0.7 * loss0, "dense loss did not decrease: {loss0} -> {last}");
+    }
+
+    #[test]
     fn spectrum_stays_clipped_during_training() {
         let mut rng = Rng::new(193);
         let mut rnn = SvdRnn::new(5, 8, 5, &mut rng);
@@ -222,7 +279,9 @@ mod tests {
         for _ in 0..5 {
             rnn.train_step(&batch.inputs, &batch.targets, batch.scored_steps, &mut opt);
         }
-        for &s in &rnn.w_rec.p.sigma {
+        let spectrum = rnn.sigma_spectrum().expect("SVD cell exposes σ").to_vec();
+        assert_eq!(spectrum.len(), 8);
+        for &s in &spectrum {
             assert!((1.0 - rnn.eps()..=1.0 + rnn.eps()).contains(&s), "σ={s}");
         }
     }

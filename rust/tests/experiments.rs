@@ -1,0 +1,148 @@
+//! Integration suite for the experiments subsystem: the determinism
+//! contract (same spec + seed ⇒ byte-identical metrics, wall-time
+//! excluded), RunRecord serde round-trips with the schema-version guard,
+//! the end-to-end artifact pipeline (runner → disk → report), and the
+//! NaN gate.
+
+use fasth::experiments::workloads::run_one;
+use fasth::experiments::{
+    builtin, builtin_all, report, Budget, ExperimentSpec, Family, RunRecord, Runner,
+    SCHEMA_VERSION,
+};
+use fasth::util::json::Json;
+use std::path::PathBuf;
+
+/// Scale a builtin down to test size (1–2 epochs, 2 steps, 2 seeds).
+fn tiny(name: &str) -> ExperimentSpec {
+    let mut spec = builtin(name, Budget::Smoke).unwrap();
+    spec.epochs = 2;
+    spec.steps_per_epoch = 2;
+    spec.seeds = vec![1, 2];
+    spec
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fasth_exp_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn same_spec_and_seed_is_byte_identical_modulo_wall_time() {
+    // The ISSUE-level determinism contract, across every workload kind:
+    // run the identical spec twice (threaded fan-out both times) and
+    // compare each record's metric fingerprint byte-for-byte.
+    for name in ["char_lm", "flow_d8", "spiral", "teacher"] {
+        let spec = tiny(name);
+        let runner = Runner { persist: false, ..Runner::default() };
+        let a = runner.run_spec(&spec).unwrap();
+        let b = runner.run_spec(&spec).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(
+                ra.fingerprint(),
+                rb.fingerprint(),
+                "{name}/{}/s{} not deterministic",
+                ra.family,
+                ra.seed
+            );
+            // Wall-time may differ run to run; the full JSON need not
+            // match, the metrics subset must.
+            assert!(ra.wall_secs >= 0.0 && rb.wall_secs >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn record_roundtrips_through_disk_with_schema_guard() {
+    let spec = tiny("teacher");
+    let rec = run_one(&spec, Family::RectSvdMlp, 5).unwrap();
+    let dir = tmp_dir("roundtrip");
+    let path = rec.save(&dir).unwrap();
+
+    // Byte-level round-trip: load → same fingerprint and same full JSON.
+    let loaded = RunRecord::load(&path).unwrap();
+    assert_eq!(rec.fingerprint(), loaded.fingerprint());
+    assert_eq!(rec.to_json().to_string(), loaded.to_json().to_string());
+    assert_eq!(loaded.schema_version, SCHEMA_VERSION);
+
+    // Schema-version guard: a bumped version must be rejected.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    if let Json::Obj(o) = &mut j {
+        o.insert("schema_version".into(), Json::num(SCHEMA_VERSION as f64 + 1.0));
+    }
+    std::fs::write(&path, j.to_string()).unwrap();
+    let err = RunRecord::load(&path).unwrap_err();
+    assert!(err.contains("schema_version"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn smoke_suite_covers_workloads_families_and_reports() {
+    // A miniature `repro experiment all --budget smoke`: every builtin of
+    // the smoke tier at test scale, through the threaded runner, into
+    // artifacts, aggregated into the Table-2 report.
+    let dir = tmp_dir("suite");
+    let runner = Runner::with_out_dir(&dir);
+    let specs: Vec<ExperimentSpec> =
+        builtin_all(Budget::Smoke).iter().map(|s| tiny(&s.name)).collect();
+    let records = runner.run_all(&specs).unwrap();
+
+    // The acceptance floor: ≥ 3 workloads × ≥ 2 families, ≥ 2 seeds.
+    let workloads: std::collections::BTreeSet<&str> =
+        records.iter().map(|r| r.workload.as_str()).collect();
+    let families: std::collections::BTreeSet<&str> =
+        records.iter().map(|r| r.family.as_str()).collect();
+    assert!(workloads.len() >= 3, "{workloads:?}");
+    assert!(families.len() >= 2, "{families:?}");
+    assert!(records.iter().all(|r| r.all_finite()), "NaN/divergence in smoke suite");
+
+    // Artifacts landed and reload to the same fingerprints.
+    let loaded = RunRecord::load_dir(&dir).unwrap();
+    assert_eq!(loaded.len(), records.len());
+
+    // Report: every (workload, family) cell has both seeds aggregated,
+    // and the markdown table mentions every family column.
+    let cells = report::aggregate(&loaded);
+    assert!(cells.iter().all(|c| c.n_seeds == 2), "mean ± std needs both seeds");
+    let md = report::markdown(&cells);
+    for f in &families {
+        assert!(md.contains(f), "family '{f}' missing from:\n{md}");
+    }
+    assert!(md.contains('±'));
+    let j = report::to_json(&cells, "smoke", loaded.len());
+    assert_eq!(j.get("workloads").as_usize(), Some(workloads.len()));
+    assert_eq!(j.get("families").as_usize(), Some(families.len()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn seed_offset_changes_metrics_but_not_structure() {
+    // The nightly lane shifts seeds; shifted runs must stay finite and
+    // produce different metric streams.
+    let spec = tiny("spiral");
+    let mut shifted = spec.clone();
+    for s in &mut shifted.seeds {
+        *s += 1000;
+    }
+    let base = run_one(&spec, Family::SvdMlp, spec.seeds[0]).unwrap();
+    let moved = run_one(&shifted, Family::SvdMlp, shifted.seeds[0]).unwrap();
+    assert!(base.all_finite() && moved.all_finite());
+    assert_ne!(base.fingerprint(), moved.fingerprint());
+    assert_eq!(base.workload, moved.workload);
+    assert_eq!(base.epochs.len(), moved.epochs.len());
+}
+
+#[test]
+fn sigma_spectrum_is_sampled_per_epoch_for_svd_families() {
+    let spec = tiny("char_lm");
+    let svd = run_one(&spec, Family::SvdRnn, 1).unwrap();
+    for e in &svd.epochs {
+        let s = e.sigma.expect("SVD-RNN must sample σ each epoch");
+        // Spectral clip keeps σ in [1−ε, 1+ε].
+        assert!(s.min >= 0.94 && s.max <= 1.06, "σ stats out of band: {s:?}");
+    }
+    let dense = run_one(&spec, Family::DenseRnn, 1).unwrap();
+    assert!(dense.epochs.iter().all(|e| e.sigma.is_none()));
+}

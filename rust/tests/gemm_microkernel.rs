@@ -179,3 +179,36 @@ fn packed_vs_oracle_property_sweep() {
         assert_close(got.data(), want.data(), 5e-3, 5e-3)
     });
 }
+
+#[test]
+fn wide_output_parallel_b_pack_threaded_vs_serial() {
+    // Very wide outputs (n > nc = 512) fan the B-panel pack out across
+    // the pool; narrow outputs keep the serial pack. Either way the
+    // packed panels are byte-identical, so threaded and serial results
+    // must agree to f32 reproducibility — across NN, TN, NT and a
+    // two-window (n > 2·nc) sweep.
+    let mut rng = Rng::new(0xB7);
+    let cases: [(Trans, Trans, usize, usize, usize); 4] = [
+        (Trans::No, Trans::No, 48, 70, 600),
+        (Trans::Yes, Trans::No, 40, 90, 520),
+        (Trans::No, Trans::Yes, 150, 40, 640),
+        (Trans::No, Trans::No, 33, 50, 1100), // two full B windows
+    ];
+    for (ta, tb, m, k, n) in cases {
+        let a = match ta {
+            Trans::No => Mat::randn(m, k, &mut rng),
+            Trans::Yes => Mat::randn(k, m, &mut rng),
+        };
+        let b = match tb {
+            Trans::No => Mat::randn(k, n, &mut rng),
+            Trans::Yes => Mat::randn(n, k, &mut rng),
+        };
+        let threaded = run_gemm(&Gemm::default(), 1.0, &a, ta, &b, tb, 0.0);
+        let ser = run_gemm(&serial(), 1.0, &a, ta, &b, tb, 0.0);
+        assert_close(threaded.data(), ser.data(), 1e-7, 1e-7)
+            .unwrap_or_else(|e| panic!("{ta:?}/{tb:?} m={m} k={k} n={n}: {e}"));
+        let want = reference(1.0, &a, ta, &b, tb, 0.0, &Mat::zeros(m, n));
+        assert_close(threaded.data(), want.data(), 5e-3, 5e-3)
+            .unwrap_or_else(|e| panic!("{ta:?}/{tb:?} vs oracle m={m} k={k} n={n}: {e}"));
+    }
+}
