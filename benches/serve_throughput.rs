@@ -1,16 +1,28 @@
-//! Serving throughput bench: spin up the sharded coordinator on
-//! loopback, drive M concurrent clients with mixed square + rect
-//! traffic, and archive p50/p99 latency, mean batch size, and
-//! columns/sec to `bench_out/BENCH_serving.json` — the serving leg of
+//! Serving throughput bench: spin up the evented coordinator on
+//! loopback and drive it through three phases —
+//!
+//!   1. **pipelined throughput**: M concurrent clients with mixed
+//!      square + rect traffic (p50/p99 latency, mean batch size,
+//!      columns/sec),
+//!   2. **connection churn**: hundreds of short-lived clients
+//!      (connect → handshake → one call → disconnect) hammering the
+//!      accept path and reactor adopt/teardown,
+//!   3. **concurrency**: FASTH_SERVE_CONNS (default 1024) connections
+//!      held open *simultaneously* on ≤ 4 reactor threads, each with a
+//!      request in flight — the evented core's reason to exist (the
+//!      thread-per-connection ancestor needed 2 threads per socket).
+//!
+//! Results land in `bench_out/BENCH_serving.json` — the serving leg of
 //! the PR-over-PR perf trajectory (CI's bench-smoke job uploads it).
 //!
 //! `cargo bench --bench serve_throughput`
 //! env: FASTH_SERVE_CLIENTS (4), FASTH_SERVE_REQUESTS (200 per client),
-//!      FASTH_SERVE_SHARDS (2).
+//!      FASTH_SERVE_SHARDS (2), FASTH_SERVE_REACTORS (4),
+//!      FASTH_SERVE_CHURN (300), FASTH_SERVE_CONNS (1024).
+//! The concurrency phase needs ~3 fds per connection; raise `ulimit -n`
+//! (CI uses 8192) or shrink FASTH_SERVE_CONNS on tight systems.
 
-use fasth::coordinator::{
-    BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
-};
+use fasth::coordinator::{Call, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig};
 use fasth::util::json::Json;
 use fasth::util::Rng;
 use std::sync::Arc;
@@ -24,35 +36,33 @@ fn main() {
     let n_clients = env_usize("FASTH_SERVE_CLIENTS", 4);
     let per_client = env_usize("FASTH_SERVE_REQUESTS", 200);
     let shards = env_usize("FASTH_SERVE_SHARDS", 2);
+    let reactors = env_usize("FASTH_SERVE_REACTORS", 4);
+    let churn_conns = env_usize("FASTH_SERVE_CHURN", 300);
+    let concurrent_conns = env_usize("FASTH_SERVE_CONNS", 1024);
     let d = 64usize;
     let rect_rows = 96usize;
 
     let registry = Arc::new(ModelRegistry::new());
     registry.create("svd_64", d, ExecEngine::Native { k: 16 }, 0xBE);
     registry.create_rect("rect_96x64", rect_rows, d, None, ExecEngine::Native { k: 16 }, 0xBF);
-    let server = Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            shards,
-            workers: 2,
-            batcher: BatcherConfig {
-                max_batch: 32,
-                max_wait: Duration::from_millis(2),
-                adaptive: true,
-                min_wait: Duration::from_micros(200),
-                p50_fraction: 0.5,
-            },
-            max_queue_depth: 100_000,
-        },
-        registry,
-    )
-    .expect("server start");
+    let config = ServerConfig::builder()
+        .shards(shards)
+        .workers(2)
+        .reactors(reactors)
+        .max_batch(32)
+        .max_wait(Duration::from_millis(2))
+        .adaptive(true)
+        .max_queue_depth(100_000)
+        .build()
+        .expect("valid config");
+    let server = Server::start(config, registry).expect("server start");
     let addr = server.local_addr;
     println!(
-        "== serve_throughput: {shards} shards × 2 workers, {n_clients} clients × {per_client} \
-         requests (svd_64 + rect_96x64, adaptive deadline) =="
+        "== serve_throughput: {shards} shards × 2 workers, {reactors} reactors, {n_clients} \
+         clients × {per_client} requests (svd_64 + rect_96x64, adaptive deadline) =="
     );
 
+    // ---- phase 1: pipelined throughput --------------------------------
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_clients)
         .map(|c| {
@@ -75,11 +85,13 @@ fn main() {
                 while done < per_client {
                     let burst = (4 + rng.below(13)).min(per_client - done);
                     let (model, op, width) = mix[rng.below(mix.len())];
-                    let cols: Vec<Vec<f32>> = (0..burst)
-                        .map(|_| (0..width).map(|_| rng.normal_f32()).collect())
+                    let calls: Vec<Call> = (0..burst)
+                        .map(|_| {
+                            Call::new(model, op, (0..width).map(|_| rng.normal_f32()).collect())
+                        })
                         .collect();
                     let t = Instant::now();
-                    let responses = client.call_many(model, op, cols).expect("call_many");
+                    let responses = client.call_many(calls).expect("call_many");
                     let us = (t.elapsed().as_micros() as u64 / burst as u64).max(1);
                     for r in &responses {
                         assert!(r.ok, "{model}/{op:?} failed: {:?}", r.error);
@@ -112,6 +124,74 @@ fn main() {
     println!("throughput        : {cols_per_sec:.0} columns/sec");
     println!("latency p50 / p99 : {p50} µs / {p99} µs");
     println!("mean batch size   : {mean_batch:.2} columns (max 32)");
+
+    // ---- phase 2: connection churn ------------------------------------
+    // Short-lived clients in parallel waves: every connection pays the
+    // full accept → reactor adopt → handshake → call → teardown path.
+    let churn_threads = 8usize.min(churn_conns.max(1));
+    let t_churn = Instant::now();
+    let churn_handles: Vec<_> = (0..churn_threads)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mine = churn_conns / churn_threads
+                    + usize::from(t < churn_conns % churn_threads);
+                let mut rng = Rng::new(0xC0DE + t as u64);
+                for _ in 0..mine {
+                    let mut client = Client::connect(&addr).expect("churn connect");
+                    let col: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+                    let r = client.call(Call::apply("svd_64", col)).expect("churn call");
+                    assert!(r.ok, "churn call failed: {:?}", r.error);
+                }
+            })
+        })
+        .collect();
+    for h in churn_handles {
+        h.join().expect("churn thread");
+    }
+    let churn_wall = t_churn.elapsed().as_secs_f64();
+    let churn_per_sec = churn_conns as f64 / churn_wall;
+    println!("conn churn        : {churn_conns} conns in {churn_wall:.2}s ({churn_per_sec:.0}/s)");
+
+    // ---- phase 3: concurrent connections ------------------------------
+    // Hold FASTH_SERVE_CONNS connections open at once on the reactor
+    // cores, each with one request in flight, for a few rounds. A
+    // single driver thread suffices: send() is non-blocking from the
+    // client's perspective, so all N requests are simultaneously in
+    // flight server-side before the first wait_for().
+    let mut swarm: Vec<Client> = Vec::with_capacity(concurrent_conns);
+    for i in 0..concurrent_conns {
+        match Client::connect(&addr) {
+            Ok(c) => swarm.push(c),
+            Err(e) => panic!("swarm connect #{i} failed (raise `ulimit -n`?): {e:#}"),
+        }
+    }
+    let open_now: u64 =
+        server.metrics.connections_open.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(
+        open_now >= concurrent_conns as u64,
+        "server sees only {open_now} open connections, expected >= {concurrent_conns}"
+    );
+    let t_conc = Instant::now();
+    let rounds = 3usize;
+    let mut rng = Rng::new(0x5AA5);
+    for _ in 0..rounds {
+        let mut ids = Vec::with_capacity(swarm.len());
+        for client in swarm.iter_mut() {
+            let col: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+            ids.push(client.send(&Call::apply("svd_64", col)).expect("swarm send"));
+        }
+        for (client, id) in swarm.iter_mut().zip(ids) {
+            let r = client.wait_for(id).expect("swarm wait");
+            assert!(r.ok, "swarm call failed: {:?}", r.error);
+        }
+    }
+    let conc_wall = t_conc.elapsed().as_secs_f64();
+    println!(
+        "concurrency       : {concurrent_conns} simultaneous conns × {rounds} rounds on \
+         {reactors} reactors in {conc_wall:.2}s"
+    );
+    drop(swarm);
+
     let mut admin = Client::connect(&addr).expect("admin connect");
     let stats = admin.admin("stats").expect("stats");
     println!("server stats      : {stats}");
@@ -119,6 +199,7 @@ fn main() {
     let report = Json::obj(vec![
         ("bench", Json::str("serve_throughput")),
         ("shards", Json::num(shards as f64)),
+        ("reactors", Json::num(reactors as f64)),
         ("clients", Json::num(n_clients as f64)),
         ("requests", Json::num(total as f64)),
         ("wall_secs", Json::num(wall)),
@@ -126,6 +207,10 @@ fn main() {
         ("p50_us", Json::num(p50 as f64)),
         ("p99_us", Json::num(p99 as f64)),
         ("mean_batch_size", Json::num(mean_batch)),
+        ("churn_conns", Json::num(churn_conns as f64)),
+        ("churn_per_sec", Json::num(churn_per_sec)),
+        ("concurrent_conns", Json::num(concurrent_conns as f64)),
+        ("concurrent_rounds_secs", Json::num(conc_wall)),
         ("server_stats", Json::parse(&stats).expect("stats json")),
     ]);
     std::fs::create_dir_all("bench_out").expect("bench_out dir");

@@ -10,11 +10,9 @@
 //! `artifacts/manifest.json` exists (the full AOT path: JAX/Pallas →
 //! HLO text → Rust), otherwise the native FastH engine.
 //!
-//! Run: `cargo run --release --example serve -- [--shards N] [--adaptive]`
+//! Run: `cargo run --release --example serve -- [--shards N] [--reactors N] [--adaptive]`
 
-use fasth::coordinator::{
-    BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
-};
+use fasth::coordinator::{Call, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig};
 use fasth::util::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -22,6 +20,7 @@ use std::time::{Duration, Instant};
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut shards = 2usize;
+    let mut reactors = 2usize;
     let mut adaptive = false;
     let mut i = 0;
     while i < args.len() {
@@ -30,11 +29,15 @@ fn main() {
                 shards = args.get(i + 1).and_then(|s| s.parse().ok()).expect("--shards N");
                 i += 2;
             }
+            "--reactors" => {
+                reactors = args.get(i + 1).and_then(|s| s.parse().ok()).expect("--reactors N");
+                i += 2;
+            }
             "--adaptive" => {
                 adaptive = true;
                 i += 1;
             }
-            other => panic!("unknown flag '{other}' (try --shards N / --adaptive)"),
+            other => panic!("unknown flag '{other}' (try --shards N / --reactors N / --adaptive)"),
         }
     }
 
@@ -71,25 +74,20 @@ fn main() {
         ExecEngine::Native { k: 32 },
         1235,
     );
-    let server = Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            shards,
-            workers: 2,
-            batcher: BatcherConfig {
-                max_batch: 32,
-                max_wait: Duration::from_millis(2),
-                adaptive,
-                ..Default::default()
-            },
-            max_queue_depth: 50_000,
-        },
-        registry,
-    )
-    .expect("server start");
+    let config = ServerConfig::builder()
+        .shards(shards)
+        .workers(2)
+        .reactors(reactors)
+        .max_batch(32)
+        .max_wait(Duration::from_millis(2))
+        .adaptive(adaptive)
+        .max_queue_depth(50_000)
+        .build()
+        .expect("valid config");
+    let server = Server::start(config, registry).expect("server start");
     println!(
-        "== orthoserve on {} ({shards} shards, engine {engine_name}, adaptive deadline {}, \
-         d = {d}) — {n_clients} clients × {per_client} requests ==\n",
+        "== orthoserve on {} ({shards} shards, {reactors} reactors, engine {engine_name}, \
+         adaptive deadline {}, d = {d}) — {n_clients} clients × {per_client} requests ==\n",
         server.local_addr,
         if adaptive { "on" } else { "off" }
     );
@@ -119,11 +117,13 @@ fn main() {
                 while done < per_client {
                     let burst = (8 + rng.below(17)).min(per_client - done);
                     let (model, op, width) = mix[rng.below(mix.len())];
-                    let cols: Vec<Vec<f32>> = (0..burst)
-                        .map(|_| (0..width).map(|_| rng.normal_f32()).collect())
+                    let calls: Vec<Call> = (0..burst)
+                        .map(|_| {
+                            Call::new(model, op, (0..width).map(|_| rng.normal_f32()).collect())
+                        })
                         .collect();
                     let t = Instant::now();
-                    let responses = client.call_many(model, op, cols).expect("call_many");
+                    let responses = client.call_many(calls).expect("call_many");
                     let us = t.elapsed().as_micros() as u64 / burst as u64;
                     for r in &responses {
                         assert!(r.ok, "request failed: {:?}", r.error);

@@ -1,0 +1,363 @@
+//! Blocking client for the v1 wire protocol.
+//!
+//! The surface is typed: build a [`Call`] (`Call::apply("m", col)`),
+//! hand it to [`Client::call`] / [`Client::call_many`], or split
+//! send/receive with [`Client::send`] + [`Client::wait_for`] to pipeline
+//! by hand. [`ClientConfig`] bounds the two failure modes the old
+//! ad-hoc client left open: a dead server now surfaces a read-timeout
+//! error instead of hanging forever, and the out-of-order response
+//! buffer is capped at `max_pending` instead of growing without bound.
+//!
+//! On connect the client performs the `{"cmd":"hello","proto":1}`
+//! handshake (see `docs/PROTOCOL.md`); a server speaking a different
+//! protocol version is reported as an error before any request is sent.
+
+use super::protocol::{Hello, OpKind, Request, Response, PROTO_VERSION};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Client knobs.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Give up on a blocked read after this long, surfacing an error
+    /// instead of hanging on a dead server. `Duration::ZERO` disables
+    /// the timeout (reads block forever).
+    pub read_timeout: Duration,
+    /// Cap on buffered out-of-order responses (and on the in-flight
+    /// window [`Client::call_many`] keeps open). Exceeding it means the
+    /// connection is desynced; the client errors instead of growing the
+    /// buffer without bound.
+    pub max_pending: usize,
+    /// Send the version handshake on connect. Off only for talking to
+    /// pre-handshake servers or raw-socket testing.
+    pub handshake: bool,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            read_timeout: Duration::from_secs(30),
+            max_pending: 1024,
+            handshake: true,
+        }
+    }
+}
+
+/// One typed request: which model, which Table-1 op, which column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Call {
+    model: String,
+    op: OpKind,
+    column: Vec<f32>,
+}
+
+impl Call {
+    pub fn new(model: impl Into<String>, op: OpKind, column: Vec<f32>) -> Call {
+        Call { model: model.into(), op, column }
+    }
+
+    /// `y = W·x`.
+    pub fn apply(model: impl Into<String>, column: Vec<f32>) -> Call {
+        Call::new(model, OpKind::Apply, column)
+    }
+
+    /// `y = W⁻¹·x` (square models).
+    pub fn inverse(model: impl Into<String>, column: Vec<f32>) -> Call {
+        Call::new(model, OpKind::Inverse, column)
+    }
+
+    /// `y = e^W·x`.
+    pub fn expm(model: impl Into<String>, column: Vec<f32>) -> Call {
+        Call::new(model, OpKind::Expm, column)
+    }
+
+    /// `y = C(W)·x`.
+    pub fn cayley(model: impl Into<String>, column: Vec<f32>) -> Call {
+        Call::new(model, OpKind::Cayley, column)
+    }
+
+    /// `y = W⁺·x` (the rect route).
+    pub fn pinv(model: impl Into<String>, column: Vec<f32>) -> Call {
+        Call::new(model, OpKind::Pinv, column)
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn op(&self) -> OpKind {
+        self.op
+    }
+
+    pub fn column(&self) -> &[f32] {
+        &self.column
+    }
+}
+
+/// Blocking client for tests, examples, benches, and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+    /// Responses read while waiting for a different id (out-of-order
+    /// completions across interleaved call sequences); bounded by
+    /// [`ClientConfig::max_pending`].
+    pending: HashMap<u64, Response>,
+    config: ClientConfig,
+    server_proto: Option<u32>,
+}
+
+impl Client {
+    /// Connect with default config (30 s read timeout, handshake on).
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        Client::connect_with(addr, ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: &std::net::SocketAddr, config: ClientConfig) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        if config.read_timeout > Duration::ZERO {
+            stream.set_read_timeout(Some(config.read_timeout))?;
+        }
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        let mut client = Client {
+            reader,
+            writer,
+            next_id: 1,
+            pending: HashMap::new(),
+            config,
+            server_proto: None,
+        };
+        if client.config.handshake {
+            client.handshake()?;
+        }
+        Ok(client)
+    }
+
+    /// Exchange `hello` frames; errors if the server speaks a different
+    /// protocol version.
+    fn handshake(&mut self) -> Result<()> {
+        writeln!(self.writer, "{}", Hello::new().to_json())?;
+        self.writer.flush()?;
+        let line = self.read_line()?;
+        let j = Json::parse(&line).context("hello reply")?;
+        if j.get("ok").as_bool() != Some(true) {
+            bail!(
+                "handshake rejected (client speaks proto {PROTO_VERSION}): {}",
+                j.get("error").as_str().unwrap_or("unknown error")
+            );
+        }
+        self.server_proto = j.get("proto").as_f64().map(|p| p as u32);
+        Ok(())
+    }
+
+    /// The protocol version the server confirmed on handshake (`None`
+    /// when the handshake was disabled).
+    pub fn server_proto(&self) -> Option<u32> {
+        self.server_proto
+    }
+
+    /// One wire line, with the read timeout mapped to a useful error.
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => bail!("server closed connection"),
+            Ok(_) => Ok(line.trim().to_string()),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                bail!(
+                    "read timed out after {:?} (server unresponsive or reply lost)",
+                    self.config.read_timeout
+                )
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
+        let line = self.read_line()?;
+        Response::from_json(&line)
+    }
+
+    /// An error response with id 0 is connection-level (the server could
+    /// not parse a line): no request owns it, so waiting on would hang —
+    /// surface it instead. (Client ids start at 1.)
+    fn check_unroutable(&self, resp: &Response) -> Result<()> {
+        if resp.id == 0 && !resp.ok {
+            bail!("server error: {}", resp.error.as_deref().unwrap_or("unknown"));
+        }
+        Ok(())
+    }
+
+    /// Park a response destined for another in-flight id, enforcing the
+    /// `max_pending` bound.
+    fn buffer_pending(&mut self, resp: Response) -> Result<()> {
+        self.check_unroutable(&resp)?;
+        if self.pending.len() >= self.config.max_pending {
+            bail!(
+                "out-of-order buffer exceeded max_pending={} (connection desynced?)",
+                self.config.max_pending
+            );
+        }
+        self.pending.insert(resp.id, resp);
+        Ok(())
+    }
+
+    /// Send a call without waiting for its response; returns the wire id
+    /// to pass to [`Client::wait_for`]. This is the pipelining primitive
+    /// (the serving bench holds hundreds of ids open per connection).
+    pub fn send(&mut self, call: &Call) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req =
+            Request { id, model: call.model.clone(), op: call.op, column: call.column.clone() };
+        writeln!(self.writer, "{}", req.to_json())?;
+        self.writer.flush()?;
+        Ok(id)
+    }
+
+    /// Wait for the response to a previously [`Client::send`]-ed id:
+    /// responses with a different id are buffered, never stolen.
+    pub fn wait_for(&mut self, id: u64) -> Result<Response> {
+        if let Some(resp) = self.pending.remove(&id) {
+            return Ok(resp);
+        }
+        loop {
+            let resp = self.read_response()?;
+            if resp.id == id {
+                return Ok(resp);
+            }
+            self.buffer_pending(resp)?;
+        }
+    }
+
+    /// Send one call and wait for *its* response.
+    pub fn call(&mut self, call: Call) -> Result<Response> {
+        let id = self.send(&call)?;
+        self.wait_for(id)
+    }
+
+    /// Pipeline many calls, keeping at most `max_pending` in flight
+    /// (exercises batching: the server coalesces in-flight requests).
+    pub fn call_many(&mut self, calls: Vec<Call>) -> Result<Vec<Response>> {
+        let n = calls.len();
+        let window = self.config.max_pending.max(1);
+        let mut ids = Vec::with_capacity(n);
+        let mut out: Vec<Option<Response>> = vec![None; n];
+        let mut waited = 0usize;
+        for call in &calls {
+            ids.push(self.send(call)?);
+            while ids.len() - waited >= window {
+                out[waited] = Some(self.wait_for(ids[waited])?);
+                waited += 1;
+            }
+        }
+        for (slot, id) in out.iter_mut().zip(ids.iter()).skip(waited) {
+            *slot = Some(self.wait_for(*id)?);
+        }
+        Ok(out.into_iter().map(|o| o.expect("every slot filled")).collect())
+    }
+
+    /// Admin command returning the raw reply (`stats`, `models`,
+    /// `shutdown` answer with one JSON line; `metrics` is delegated to
+    /// [`Client::metrics_text`] so its multi-line exposition cannot
+    /// desync the connection).
+    pub fn admin(&mut self, cmd: &str) -> Result<String> {
+        if cmd == "metrics" {
+            return self.metrics_text();
+        }
+        writeln!(self.writer, "{{\"cmd\":\"{cmd}\"}}")?;
+        self.writer.flush()?;
+        self.read_line()
+    }
+
+    /// The `metrics` admin command: returns the Prometheus-ish
+    /// exposition text (framed in one JSON line on the wire).
+    pub fn metrics_text(&mut self) -> Result<String> {
+        writeln!(self.writer, "{{\"cmd\":\"metrics\"}}")?;
+        self.writer.flush()?;
+        let line = self.read_line()?;
+        let j = Json::parse(&line).context("metrics frame")?;
+        let text = j.get("metrics").as_str().context("metrics frame missing 'metrics'")?;
+        Ok(text.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::TcpListener;
+
+    #[test]
+    fn call_builders_carry_op_and_column() {
+        let c = Call::apply("m", vec![1.0, 2.0]);
+        assert_eq!(c.model(), "m");
+        assert_eq!(c.op(), OpKind::Apply);
+        assert_eq!(c.column(), &[1.0, 2.0]);
+        assert_eq!(Call::inverse("m", vec![0.0]).op(), OpKind::Inverse);
+        assert_eq!(Call::expm("m", vec![0.0]).op(), OpKind::Expm);
+        assert_eq!(Call::cayley("m", vec![0.0]).op(), OpKind::Cayley);
+        assert_eq!(Call::pinv("m", vec![0.0]).op(), OpKind::Pinv);
+        assert_eq!(Call::new("m", OpKind::Pinv, vec![0.0]), Call::pinv("m", vec![0.0]));
+    }
+
+    #[test]
+    fn dead_server_times_out_instead_of_hanging() {
+        // A listener that accepts but never replies.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (_stream, _) = listener.accept().unwrap();
+            // Hold the socket open past the client's timeout.
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let cfg = ClientConfig { read_timeout: Duration::from_millis(50), ..Default::default() };
+        let err = Client::connect_with(&addr, cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn pending_buffer_is_bounded() {
+        // A fake server that answers the handshake, then floods
+        // responses for ids the client never asked about.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut w = BufWriter::new(stream);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap(); // hello
+            writeln!(w, "{{\"ok\":true,\"proto\":1}}").unwrap();
+            w.flush().unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap(); // the request (id 1)
+            for id in 100..110 {
+                writeln!(w, "{{\"id\":{id},\"ok\":true,\"column\":[0]}}").unwrap();
+            }
+            w.flush().unwrap();
+            // Keep the socket open so the client fails on the bound,
+            // not on EOF.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let cfg = ClientConfig {
+            read_timeout: Duration::from_millis(500),
+            max_pending: 4,
+            ..Default::default()
+        };
+        let mut client = Client::connect_with(&addr, cfg).unwrap();
+        assert_eq!(client.server_proto(), Some(1));
+        let err = client.call(Call::apply("m", vec![0.0])).unwrap_err();
+        assert!(format!("{err:#}").contains("max_pending"), "{err:#}");
+        t.join().unwrap();
+    }
+}

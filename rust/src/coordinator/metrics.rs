@@ -83,6 +83,15 @@ pub struct Metrics {
     pub batched_columns: AtomicU64,
     pub flush_full: AtomicU64,
     pub flush_deadline: AtomicU64,
+    /// Connections accepted since start.
+    pub connections_total: AtomicU64,
+    /// Connections currently open (gauge).
+    pub connections_open: AtomicU64,
+    /// Times a connection's reading was paused for pipelining/write
+    /// backpressure (see [`super::reactor`]).
+    pub conn_pauses: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
     latency: LatencyHist,
     /// Per-op latency histograms, indexed by [`OpKind::index`].
     per_op: [LatencyHist; OpKind::ALL.len()],
@@ -134,14 +143,15 @@ impl Metrics {
     }
 
     /// Render as a JSON object string (the `stats` admin command) with no
-    /// shard context (single-shard callers, unit tests).
+    /// shard or reactor context (single-shard callers, unit tests).
     pub fn to_json(&self) -> String {
-        self.to_json_with(&[])
+        self.to_json_with(&[], &[])
     }
 
     /// Render as a JSON object string including live per-shard queue
-    /// depths and the per-op latency histograms.
-    pub fn to_json_with(&self, shard_depths: &[usize]) -> String {
+    /// depths, per-reactor connection counts, and the per-op latency
+    /// histograms.
+    pub fn to_json_with(&self, shard_depths: &[usize], reactor_conns: &[usize]) -> String {
         use crate::util::json::Json;
         let mut per_op = Vec::new();
         for op in OpKind::ALL {
@@ -160,6 +170,7 @@ impl Metrics {
             ));
         }
         let depths: Vec<Json> = shard_depths.iter().map(|&d| Json::num(d as f64)).collect();
+        let reactors: Vec<Json> = reactor_conns.iter().map(|&c| Json::num(c as f64)).collect();
         Json::obj(vec![
             ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
             ("responses_ok", Json::num(self.responses_ok.load(Ordering::Relaxed) as f64)),
@@ -179,6 +190,18 @@ impl Metrics {
                 Json::num(self.latency_percentile_us(0.99).min(10_000_000) as f64),
             ),
             ("shard_depth", Json::arr(depths)),
+            ("reactor_conns", Json::arr(reactors)),
+            (
+                "connections_total",
+                Json::num(self.connections_total.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "connections_open",
+                Json::num(self.connections_open.load(Ordering::Relaxed) as f64),
+            ),
+            ("conn_pauses", Json::num(self.conn_pauses.load(Ordering::Relaxed) as f64)),
+            ("bytes_read", Json::num(self.bytes_read.load(Ordering::Relaxed) as f64)),
+            ("bytes_written", Json::num(self.bytes_written.load(Ordering::Relaxed) as f64)),
             ("per_op", Json::obj(per_op)),
         ])
         .to_string()
@@ -186,10 +209,10 @@ impl Metrics {
 
     /// Prometheus-ish exposition text (the `metrics` admin command): one
     /// `name{labels} value` sample per line, no TYPE/HELP chatter.
-    pub fn to_prometheus(&self, shard_depths: &[usize]) -> String {
+    pub fn to_prometheus(&self, shard_depths: &[usize], reactor_conns: &[usize]) -> String {
         use std::fmt::Write;
         let mut out = String::new();
-        let counters: [(&str, &AtomicU64); 7] = [
+        let counters: [(&str, &AtomicU64); 12] = [
             ("orthoserve_requests_total", &self.requests),
             ("orthoserve_responses_ok_total", &self.responses_ok),
             ("orthoserve_responses_err_total", &self.responses_err),
@@ -197,6 +220,11 @@ impl Metrics {
             ("orthoserve_batched_columns_total", &self.batched_columns),
             ("orthoserve_flush_full_total", &self.flush_full),
             ("orthoserve_flush_deadline_total", &self.flush_deadline),
+            ("orthoserve_connections_total", &self.connections_total),
+            ("orthoserve_connections_open", &self.connections_open),
+            ("orthoserve_conn_pauses_total", &self.conn_pauses),
+            ("orthoserve_bytes_read_total", &self.bytes_read),
+            ("orthoserve_bytes_written_total", &self.bytes_written),
         ];
         for (name, c) in counters {
             let _ = writeln!(out, "{name} {}", c.load(Ordering::Relaxed));
@@ -233,6 +261,9 @@ impl Metrics {
         }
         for (s, d) in shard_depths.iter().enumerate() {
             let _ = writeln!(out, "orthoserve_shard_queue_depth{{shard=\"{s}\"}} {d}");
+        }
+        for (r, c) in reactor_conns.iter().enumerate() {
+            let _ = writeln!(out, "orthoserve_reactor_connections{{reactor=\"{r}\"}} {c}");
         }
         out
     }
@@ -283,12 +314,19 @@ mod tests {
         m.requests.fetch_add(3, Ordering::Relaxed);
         m.responses_ok.fetch_add(3, Ordering::Relaxed);
         m.record_latency_op(OpKind::Apply, 100);
-        let j = crate::util::json::Json::parse(&m.to_json_with(&[1, 4])).unwrap();
+        m.connections_total.fetch_add(5, Ordering::Relaxed);
+        m.connections_open.fetch_add(2, Ordering::Relaxed);
+        let j = crate::util::json::Json::parse(&m.to_json_with(&[1, 4], &[2, 0])).unwrap();
         assert_eq!(j.get("requests").as_usize(), Some(3));
         assert!(j.get("p50_latency_us").as_f64().is_some());
         let depths = j.get("shard_depth").as_arr().unwrap();
         assert_eq!(depths.len(), 2);
         assert_eq!(depths[1].as_usize(), Some(4));
+        let reactors = j.get("reactor_conns").as_arr().unwrap();
+        assert_eq!(reactors.len(), 2);
+        assert_eq!(reactors[0].as_usize(), Some(2));
+        assert_eq!(j.get("connections_total").as_usize(), Some(5));
+        assert_eq!(j.get("connections_open").as_usize(), Some(2));
         let apply = j.get("per_op").get("apply");
         assert_eq!(apply.get("count").as_usize(), Some(1));
         assert_eq!(apply.get("hist").as_arr().unwrap().len(), LATENCY_BUCKETS_US.len());
@@ -298,9 +336,12 @@ mod tests {
     fn prometheus_renders() {
         let m = Metrics::new();
         m.requests.fetch_add(2, Ordering::Relaxed);
+        m.connections_open.fetch_add(3, Ordering::Relaxed);
         m.record_latency_op(OpKind::Pinv, 99);
-        let text = m.to_prometheus(&[0, 7]);
+        let text = m.to_prometheus(&[0, 7], &[3]);
         assert!(text.contains("orthoserve_requests_total 2"));
+        assert!(text.contains("orthoserve_connections_open 3"));
+        assert!(text.contains("orthoserve_reactor_connections{reactor=\"0\"} 3"));
         assert!(text.contains("orthoserve_latency_us_count{op=\"pinv\"} 1"));
         assert!(text.contains("orthoserve_latency_us_bucket{op=\"pinv\",le=\"100\"} 1"));
         assert!(text.contains("orthoserve_latency_us_bucket{op=\"pinv\",le=\"+Inf\"} 1"));

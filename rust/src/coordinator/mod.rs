@@ -5,9 +5,9 @@
 //! *per batch*, independent of how many columns ride along — so a dynamic
 //! batcher that coalesces single-column requests into a `d×m` mini-batch
 //! converts the paper's parallelism directly into serving throughput.
-//! This module provides exactly that, sharded:
+//! This module provides exactly that, sharded and evented:
 //!
-//! - [`protocol`]: JSON-lines wire format (request/response),
+//! - [`protocol`]: versioned JSON-lines wire format ([`protocol::v1`]),
 //! - [`metrics`]: counters + aggregate and per-op latency histograms,
 //! - [`state`]: the model registry (square [`crate::svd::SvdParam`] or
 //!   rectangular [`crate::svd::rect::RectSvdParam`] entries with a
@@ -18,18 +18,26 @@
 //!   partition, response routes)` shards, models placed by rendezvous
 //!   hashing on name,
 //! - [`worker`]: batch execution (assemble `X`, run, scatter results),
-//! - [`server`]: a threaded TCP front-end plus a matching blocking client.
+//! - [`reactor`]: the evented I/O core — N reactor threads multiplex
+//!   every connection (epoll on Linux, poll-tick fallback elsewhere)
+//!   with per-connection pipelining backpressure,
+//! - [`server`]: the TCP front-end wiring reactors, shards, and workers,
+//! - [`client`]: the blocking client ([`Call`] builder + [`ClientConfig`]).
 
 pub mod batcher;
+pub mod client;
 pub mod metrics;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
 pub mod shard;
 pub mod state;
 pub mod worker;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use protocol::{OpKind, Request, Response};
-pub use server::{Client, Server, ServerConfig};
+pub use client::{Call, Client, ClientConfig};
+pub use protocol::{OpKind, Request, Response, PROTO_VERSION};
+pub use reactor::{ConnHandle, FrameDecoder, ResponseTx};
+pub use server::{Server, ServerConfig, ServerConfigBuilder};
 pub use shard::{rendezvous_place, Shard, ShardSet};
 pub use state::{ExecEngine, ModelEntry, ModelRegistry};

@@ -1,177 +1,236 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Versioned wire protocol: newline-delimited JSON over TCP.
 //!
-//! Request:  `{"id": 7, "model": "svd_64", "op": "apply",
-//!             "column": [f32; d]}`
-//! Response: `{"id": 7, "ok": true, "column": [f32; d],
-//!             "batch_size": 5, "latency_us": 1234}`
+//! Every frame shape lives behind a version module — [`v1`] today — so
+//! a future v2 can land additively next to it; the crate re-exports the
+//! current version's types at this level and advertises it as
+//! [`PROTO_VERSION`]. Connections may open with a
+//! `{"cmd":"hello","proto":1}` handshake; a server that does not speak
+//! the requested version answers a structured error envelope instead of
+//! a per-line parse failure. Connections that skip the handshake are
+//! treated as implicit v1 (the version that predates the handshake).
 //!
-//! Single columns are the unit of work; the batcher coalesces them into
-//! the `d×m` mini-batches FastH wants. Admin commands (`stats`, `models`,
-//! `shutdown`) share the channel via `{"cmd": "..."}` lines.
+//! See `docs/PROTOCOL.md` for the full contract (framing, handshake,
+//! error envelope, pipelining).
 
-use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+/// Version 1 of the line protocol.
+///
+/// Request:  `{"id": 7, "model": "svd_64", "op": "apply",
+///             "column": [f32; d]}`
+/// Response: `{"id": 7, "ok": true, "column": [f32; d],
+///             "batch_size": 5, "latency_us": 1234}`
+///
+/// Single columns are the unit of work; the batcher coalesces them into
+/// the `d×m` mini-batches FastH wants. Admin commands (`hello`, `stats`,
+/// `metrics`, `models`, `shutdown`) share the channel via
+/// `{"cmd": "..."}` lines.
+pub mod v1 {
+    use crate::util::json::Json;
+    use anyhow::{bail, Context, Result};
 
-/// Operation requested on a model's weight `W = UΣVᵀ`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum OpKind {
-    /// `y = W·x`.
-    Apply,
-    /// `y = W⁻¹·x` (Table-1 inverse route; square models only).
-    Inverse,
-    /// `y = e^W·x` (symmetric upper-bound form).
-    Expm,
-    /// `y = C(W)·x`.
-    Cayley,
-    /// `y = W⁺·x` (Table-1 pseudo-inverse route `V·Σ⁺·Uᵀ`): the rect
-    /// route; on square models it coincides with `Inverse` for σ ≠ 0.
-    Pinv,
-}
+    /// The protocol version this module defines.
+    pub const VERSION: u32 = 1;
 
-impl OpKind {
-    /// Every op, in stable order (per-op metrics index on this).
-    pub const ALL: [OpKind; 5] =
-        [OpKind::Apply, OpKind::Inverse, OpKind::Expm, OpKind::Cayley, OpKind::Pinv];
+    /// Connection handshake frame: `{"cmd":"hello","proto":1}`.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct Hello {
+        pub proto: u32,
+    }
 
-    /// Position in [`OpKind::ALL`].
-    pub fn index(self) -> usize {
-        match self {
-            OpKind::Apply => 0,
-            OpKind::Inverse => 1,
-            OpKind::Expm => 2,
-            OpKind::Cayley => 3,
-            OpKind::Pinv => 4,
+    impl Hello {
+        pub fn new() -> Hello {
+            Hello { proto: VERSION }
+        }
+
+        pub fn to_json(&self) -> String {
+            Json::obj(vec![
+                ("cmd", Json::str("hello")),
+                ("proto", Json::num(self.proto as f64)),
+            ])
+            .to_string()
+        }
+
+        pub fn from_json(line: &str) -> Result<Hello> {
+            let j = Json::parse(line).context("hello json")?;
+            if j.get("cmd").as_str() != Some("hello") {
+                bail!("not a hello frame");
+            }
+            let proto = j.get("proto").as_f64().context("hello: proto")? as u32;
+            Ok(Hello { proto })
         }
     }
 
-    pub fn parse(s: &str) -> Result<OpKind> {
-        Ok(match s {
-            "apply" => OpKind::Apply,
-            "inverse" => OpKind::Inverse,
-            "expm" => OpKind::Expm,
-            "cayley" => OpKind::Cayley,
-            "pinv" => OpKind::Pinv,
-            other => bail!("unknown op '{other}'"),
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            OpKind::Apply => "apply",
-            OpKind::Inverse => "inverse",
-            OpKind::Expm => "expm",
-            OpKind::Cayley => "cayley",
-            OpKind::Pinv => "pinv",
-        }
-    }
-}
-
-/// A single-column request.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Request {
-    pub id: u64,
-    pub model: String,
-    pub op: OpKind,
-    pub column: Vec<f32>,
-}
-
-impl Request {
-    pub fn to_json(&self) -> String {
-        Json::obj(vec![
-            ("id", Json::num(self.id as f64)),
-            ("model", Json::str(&self.model)),
-            ("op", Json::str(self.op.name())),
-            (
-                "column",
-                Json::arr(self.column.iter().map(|&x| Json::num(x as f64)).collect()),
-            ),
-        ])
-        .to_string()
-    }
-
-    pub fn from_json(line: &str) -> Result<Request> {
-        let j = Json::parse(line).context("request json")?;
-        let id = j.get("id").as_f64().context("request: id")? as u64;
-        let model = j.get("model").as_str().context("request: model")?.to_string();
-        let op = OpKind::parse(j.get("op").as_str().context("request: op")?)?;
-        let column: Vec<f32> = j
-            .get("column")
-            .as_arr()
-            .context("request: column")?
-            .iter()
-            .map(|v| v.as_f64().map(|f| f as f32).context("request: column entry"))
-            .collect::<Result<_>>()?;
-        if column.is_empty() {
-            bail!("request: empty column");
-        }
-        Ok(Request { id, model, op, column })
-    }
-}
-
-/// Response to one request.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Response {
-    pub id: u64,
-    pub ok: bool,
-    pub column: Vec<f32>,
-    pub error: Option<String>,
-    /// How many requests shared the executed batch.
-    pub batch_size: usize,
-    /// End-to-end service latency.
-    pub latency_us: u64,
-}
-
-impl Response {
-    pub fn ok(id: u64, column: Vec<f32>, batch_size: usize, latency_us: u64) -> Response {
-        Response { id, ok: true, column, error: None, batch_size, latency_us }
-    }
-
-    pub fn err(id: u64, msg: impl Into<String>) -> Response {
-        Response {
-            id,
-            ok: false,
-            column: Vec::new(),
-            error: Some(msg.into()),
-            batch_size: 0,
-            latency_us: 0,
+    impl Default for Hello {
+        fn default() -> Self {
+            Hello::new()
         }
     }
 
-    pub fn to_json(&self) -> String {
-        let mut fields = vec![
-            ("id", Json::num(self.id as f64)),
-            ("ok", Json::Bool(self.ok)),
-            ("batch_size", Json::num(self.batch_size as f64)),
-            ("latency_us", Json::num(self.latency_us as f64)),
-            (
-                "column",
-                Json::arr(self.column.iter().map(|&x| Json::num(x as f64)).collect()),
-            ),
-        ];
-        if let Some(e) = &self.error {
-            fields.push(("error", Json::str(e)));
-        }
-        Json::obj(fields).to_string()
+    /// Operation requested on a model's weight `W = UΣVᵀ`.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub enum OpKind {
+        /// `y = W·x`.
+        Apply,
+        /// `y = W⁻¹·x` (Table-1 inverse route; square models only).
+        Inverse,
+        /// `y = e^W·x` (symmetric upper-bound form).
+        Expm,
+        /// `y = C(W)·x`.
+        Cayley,
+        /// `y = W⁺·x` (Table-1 pseudo-inverse route `V·Σ⁺·Uᵀ`): the rect
+        /// route; on square models it coincides with `Inverse` for σ ≠ 0.
+        Pinv,
     }
 
-    pub fn from_json(line: &str) -> Result<Response> {
-        let j = Json::parse(line).context("response json")?;
-        Ok(Response {
-            id: j.get("id").as_f64().context("response: id")? as u64,
-            ok: j.get("ok").as_bool().context("response: ok")?,
-            column: j
+    impl OpKind {
+        /// Every op, in stable order (per-op metrics index on this).
+        pub const ALL: [OpKind; 5] =
+            [OpKind::Apply, OpKind::Inverse, OpKind::Expm, OpKind::Cayley, OpKind::Pinv];
+
+        /// Position in [`OpKind::ALL`].
+        pub fn index(self) -> usize {
+            match self {
+                OpKind::Apply => 0,
+                OpKind::Inverse => 1,
+                OpKind::Expm => 2,
+                OpKind::Cayley => 3,
+                OpKind::Pinv => 4,
+            }
+        }
+
+        pub fn parse(s: &str) -> Result<OpKind> {
+            Ok(match s {
+                "apply" => OpKind::Apply,
+                "inverse" => OpKind::Inverse,
+                "expm" => OpKind::Expm,
+                "cayley" => OpKind::Cayley,
+                "pinv" => OpKind::Pinv,
+                other => bail!("unknown op '{other}'"),
+            })
+        }
+
+        pub fn name(&self) -> &'static str {
+            match self {
+                OpKind::Apply => "apply",
+                OpKind::Inverse => "inverse",
+                OpKind::Expm => "expm",
+                OpKind::Cayley => "cayley",
+                OpKind::Pinv => "pinv",
+            }
+        }
+    }
+
+    /// A single-column request.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct Request {
+        pub id: u64,
+        pub model: String,
+        pub op: OpKind,
+        pub column: Vec<f32>,
+    }
+
+    impl Request {
+        pub fn to_json(&self) -> String {
+            Json::obj(vec![
+                ("id", Json::num(self.id as f64)),
+                ("model", Json::str(&self.model)),
+                ("op", Json::str(self.op.name())),
+                (
+                    "column",
+                    Json::arr(self.column.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+            ])
+            .to_string()
+        }
+
+        pub fn from_json(line: &str) -> Result<Request> {
+            let j = Json::parse(line).context("request json")?;
+            let id = j.get("id").as_f64().context("request: id")? as u64;
+            let model = j.get("model").as_str().context("request: model")?.to_string();
+            let op = OpKind::parse(j.get("op").as_str().context("request: op")?)?;
+            let column: Vec<f32> = j
                 .get("column")
                 .as_arr()
-                .unwrap_or(&[])
+                .context("request: column")?
                 .iter()
-                .filter_map(|v| v.as_f64().map(|f| f as f32))
-                .collect(),
-            error: j.get("error").as_str().map(|s| s.to_string()),
-            batch_size: j.get("batch_size").as_usize().unwrap_or(0),
-            latency_us: j.get("latency_us").as_f64().unwrap_or(0.0) as u64,
-        })
+                .map(|v| v.as_f64().map(|f| f as f32).context("request: column entry"))
+                .collect::<Result<_>>()?;
+            if column.is_empty() {
+                bail!("request: empty column");
+            }
+            Ok(Request { id, model, op, column })
+        }
+    }
+
+    /// Response to one request.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct Response {
+        pub id: u64,
+        pub ok: bool,
+        pub column: Vec<f32>,
+        pub error: Option<String>,
+        /// How many requests shared the executed batch.
+        pub batch_size: usize,
+        /// End-to-end service latency.
+        pub latency_us: u64,
+    }
+
+    impl Response {
+        pub fn ok(id: u64, column: Vec<f32>, batch_size: usize, latency_us: u64) -> Response {
+            Response { id, ok: true, column, error: None, batch_size, latency_us }
+        }
+
+        pub fn err(id: u64, msg: impl Into<String>) -> Response {
+            Response {
+                id,
+                ok: false,
+                column: Vec::new(),
+                error: Some(msg.into()),
+                batch_size: 0,
+                latency_us: 0,
+            }
+        }
+
+        pub fn to_json(&self) -> String {
+            let mut fields = vec![
+                ("id", Json::num(self.id as f64)),
+                ("ok", Json::Bool(self.ok)),
+                ("batch_size", Json::num(self.batch_size as f64)),
+                ("latency_us", Json::num(self.latency_us as f64)),
+                (
+                    "column",
+                    Json::arr(self.column.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+            ];
+            if let Some(e) = &self.error {
+                fields.push(("error", Json::str(e)));
+            }
+            Json::obj(fields).to_string()
+        }
+
+        pub fn from_json(line: &str) -> Result<Response> {
+            let j = Json::parse(line).context("response json")?;
+            Ok(Response {
+                id: j.get("id").as_f64().context("response: id")? as u64,
+                ok: j.get("ok").as_bool().context("response: ok")?,
+                column: j
+                    .get("column")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_f64().map(|f| f as f32))
+                    .collect(),
+                error: j.get("error").as_str().map(|s| s.to_string()),
+                batch_size: j.get("batch_size").as_usize().unwrap_or(0),
+                latency_us: j.get("latency_us").as_f64().unwrap_or(0.0) as u64,
+            })
+        }
     }
 }
+
+/// The protocol version this build of the coordinator speaks.
+pub const PROTO_VERSION: u32 = v1::VERSION;
+
+pub use v1::{Hello, OpKind, Request, Response};
 
 #[cfg(test)]
 mod tests {
@@ -214,5 +273,23 @@ mod tests {
         assert!(Request::from_json("{}").is_err());
         assert!(Request::from_json(r#"{"id":1,"model":"m","op":"apply","column":[]}"#).is_err());
         assert!(Request::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn hello_roundtrip_and_version_constant() {
+        assert_eq!(PROTO_VERSION, v1::VERSION);
+        let h = Hello::new();
+        assert_eq!(h.proto, PROTO_VERSION);
+        assert_eq!(h.to_json(), r#"{"cmd":"hello","proto":1}"#);
+        let back = Hello::from_json(&h.to_json()).unwrap();
+        assert_eq!(back, h);
+        // A future client may offer a version we don't parse specially;
+        // the number still round-trips for the server to judge.
+        let v9 = Hello::from_json(r#"{"cmd":"hello","proto":9}"#).unwrap();
+        assert_eq!(v9.proto, 9);
+        // Non-hello frames are rejected.
+        assert!(Hello::from_json(r#"{"cmd":"stats"}"#).is_err());
+        assert!(Hello::from_json(r#"{"cmd":"hello"}"#).is_err());
+        assert!(Hello::from_json("nope").is_err());
     }
 }

@@ -1,0 +1,972 @@
+//! Evented serving core: N reactor threads multiplex every connection.
+//!
+//! Each reactor owns a [`Selector`] (epoll on Linux via a minimal
+//! syscall shim — no external crates — and a nonblocking poll-tick
+//! fallback elsewhere) plus the per-connection state machines:
+//!
+//! ```text
+//! socket readable ─► read buffer ─► FrameDecoder ─► shard dispatch
+//! worker response ─► ConnHandle outbox ─► dirty list ─► write buffer
+//! socket writable ─► flush write buffer ─► maybe resume reading
+//! ```
+//!
+//! Backpressure is explicit: a connection whose in-flight request count
+//! reaches `max_pipeline`, or whose pending write bytes exceed
+//! `write_buf_cap`, is *paused* — the reactor drops its read interest
+//! and stops decoding frames until responses flush. Nothing is dropped
+//! or reordered; the TCP window pushes back on the client.
+//!
+//! Shard workers never touch sockets. They retire responses into the
+//! connection's [`ConnHandle`] outbox and ring the owning reactor's
+//! waker; the reactor serializes all socket writes, so frames can never
+//! interleave.
+
+use super::metrics::Metrics;
+use super::protocol::{Request, Response, PROTO_VERSION};
+use super::shard::ShardSet;
+use super::state::ModelRegistry;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub use sys::Selector;
+
+/// One readiness event from the selector.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub id: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+/// Linux: a thin epoll + eventfd shim over raw syscalls. `std` links
+/// libc, so the symbols resolve without any external crate.
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::Event;
+    use std::io;
+    use std::net::TcpStream;
+    use std::os::unix::io::{AsRawFd, RawFd};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EFD_NONBLOCK: i32 = 0o4000;
+    const EFD_CLOEXEC: i32 = 0o2000000;
+    const SOL_SOCKET: i32 = 1;
+    const SO_SNDBUF: i32 = 7;
+
+    /// Selector slot reserved for the waker's eventfd.
+    const WAKE_ID: u64 = u64::MAX;
+
+    /// Kernel `struct epoll_event`; packed on x86_64 only (the kernel
+    /// ABI packs it there).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn close(fd: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, name: i32, val: *const u8, len: u32) -> i32;
+    }
+
+    /// RAII fd wrapper (closes on drop).
+    struct OwnedFd(RawFd);
+
+    impl Drop for OwnedFd {
+        fn drop(&mut self) {
+            unsafe { close(self.0) };
+        }
+    }
+
+    pub struct Selector {
+        ep: OwnedFd,
+        /// Shared with the [`Waker`] so the eventfd cannot be closed
+        /// (and its fd number reused) while a waker still writes it.
+        wake: Arc<OwnedFd>,
+    }
+
+    pub struct Waker {
+        wake: Arc<OwnedFd>,
+    }
+
+    fn cvt(ret: i32) -> io::Result<i32> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    /// Create a selector plus the waker that can interrupt its waits.
+    pub fn pair() -> io::Result<(Selector, Waker)> {
+        let ep = OwnedFd(cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?);
+        let efd = OwnedFd(cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?);
+        let wake = Arc::new(efd);
+        let mut ev = EpollEvent { events: EPOLLIN, data: WAKE_ID };
+        cvt(unsafe { epoll_ctl(ep.0, EPOLL_CTL_ADD, wake.0, &mut ev) })?;
+        Ok((Selector { ep, wake: wake.clone() }, Waker { wake }))
+    }
+
+    impl Selector {
+        fn ctl(&self, op: i32, fd: RawFd, id: u64, r: bool, w: bool) -> io::Result<()> {
+            let mut events = EPOLLRDHUP;
+            if r {
+                events |= EPOLLIN;
+            }
+            if w {
+                events |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events, data: id };
+            cvt(unsafe { epoll_ctl(self.ep.0, op, fd, &mut ev) }).map(|_| ())
+        }
+
+        pub fn register(&self, s: &TcpStream, id: u64, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, s.as_raw_fd(), id, r, w)
+        }
+
+        pub fn reregister(&self, s: &TcpStream, id: u64, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, s.as_raw_fd(), id, r, w)
+        }
+
+        pub fn deregister(&self, s: &TcpStream, _id: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            cvt(unsafe { epoll_ctl(self.ep.0, EPOLL_CTL_DEL, s.as_raw_fd(), &mut ev) }).map(|_| ())
+        }
+
+        /// Block until readiness, the waker rings, or `timeout` passes.
+        pub fn wait(&self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<()> {
+            out.clear();
+            const MAX: usize = 128;
+            let mut events = [EpollEvent { events: 0, data: 0 }; MAX];
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = unsafe { epoll_wait(self.ep.0, events.as_mut_ptr(), MAX as i32, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in events.iter().take(n as usize) {
+                let id = ev.data;
+                let bits = ev.events;
+                if id == WAKE_ID {
+                    let mut buf = [0u8; 8];
+                    let _ = unsafe { read(self.wake.0, buf.as_mut_ptr(), 8) };
+                    continue;
+                }
+                out.push(Event {
+                    id,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLHUP | EPOLLERR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Waker {
+        /// Interrupt the selector's current (or next) wait.
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            let _ = unsafe { write(self.wake.0, &one as *const u64 as *const u8, 8) };
+        }
+    }
+
+    /// Shrink the socket's kernel send buffer (tests use this to make
+    /// write-side backpressure deterministic).
+    pub fn set_send_buffer(s: &TcpStream, bytes: usize) -> io::Result<()> {
+        let v = bytes as i32;
+        let p = &v as *const i32 as *const u8;
+        let ret = unsafe { setsockopt(s.as_raw_fd(), SOL_SOCKET, SO_SNDBUF, p, 4) };
+        cvt(ret).map(|_| ())
+    }
+}
+
+/// Fallback for non-Linux targets: no OS readiness queue; the selector
+/// reports every registered connection as ready for its current
+/// interest at a short poll tick. Correct because all sockets are
+/// nonblocking (spurious readiness costs one `WouldBlock`), but less
+/// efficient — Linux gets the real epoll path.
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    use super::Event;
+    use std::collections::HashMap;
+    use std::io;
+    use std::net::TcpStream;
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    struct Inner {
+        interest: Mutex<HashMap<u64, (bool, bool)>>,
+        gate: Mutex<bool>,
+        cv: Condvar,
+    }
+
+    pub struct Selector {
+        inner: Arc<Inner>,
+    }
+
+    pub struct Waker {
+        inner: Arc<Inner>,
+    }
+
+    pub fn pair() -> io::Result<(Selector, Waker)> {
+        let inner = Arc::new(Inner {
+            interest: Mutex::new(HashMap::new()),
+            gate: Mutex::new(false),
+            cv: Condvar::new(),
+        });
+        Ok((Selector { inner: inner.clone() }, Waker { inner }))
+    }
+
+    impl Selector {
+        pub fn register(&self, _s: &TcpStream, id: u64, r: bool, w: bool) -> io::Result<()> {
+            self.inner.interest.lock().unwrap().insert(id, (r, w));
+            Ok(())
+        }
+
+        pub fn reregister(&self, _s: &TcpStream, id: u64, r: bool, w: bool) -> io::Result<()> {
+            self.inner.interest.lock().unwrap().insert(id, (r, w));
+            Ok(())
+        }
+
+        pub fn deregister(&self, _s: &TcpStream, id: u64) -> io::Result<()> {
+            self.inner.interest.lock().unwrap().remove(&id);
+            Ok(())
+        }
+
+        pub fn wait(&self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<()> {
+            out.clear();
+            let tick = timeout.min(Duration::from_millis(2));
+            {
+                let gate = self.inner.gate.lock().unwrap();
+                let mut gate = if *gate {
+                    gate
+                } else {
+                    self.inner.cv.wait_timeout(gate, tick).unwrap().0
+                };
+                *gate = false;
+            }
+            for (&id, &(r, w)) in self.inner.interest.lock().unwrap().iter() {
+                if r || w {
+                    out.push(Event { id, readable: r, writable: w, hangup: false });
+                }
+            }
+            Ok(())
+        }
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            *self.inner.gate.lock().unwrap() = true;
+            self.inner.cv.notify_all();
+        }
+    }
+
+    pub fn set_send_buffer(_s: &TcpStream, _bytes: usize) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Incremental NDJSON frame decoder: feed raw TCP reads in, pull
+/// complete lines out. Handles frames split across reads and multiple
+/// frames merged into one read; caps buffered bytes at `max_frame` for
+/// newline-less streams.
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Bytes already scanned for `\n` (avoids rescanning a long partial
+    /// frame on every push).
+    scanned: usize,
+    max_frame: usize,
+}
+
+impl FrameDecoder {
+    pub fn new(max_frame: usize) -> FrameDecoder {
+        FrameDecoder { buf: Vec::new(), scanned: 0, max_frame }
+    }
+
+    /// Append raw bytes from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The next complete, non-empty line — `Ok(None)` if more bytes are
+    /// needed, `Err` if the partial frame exceeds `max_frame` (the
+    /// buffer resets so the connection can report the error and close).
+    pub fn next_frame(&mut self) -> Result<Option<String>, String> {
+        loop {
+            match self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+                Some(off) => {
+                    let end = self.scanned + off;
+                    let line = String::from_utf8_lossy(&self.buf[..end]).trim().to_string();
+                    self.buf.drain(..=end);
+                    self.scanned = 0;
+                    if line.is_empty() {
+                        continue;
+                    }
+                    return Ok(Some(line));
+                }
+                None => {
+                    self.scanned = self.buf.len();
+                    if self.buf.len() > self.max_frame {
+                        self.buf.clear();
+                        self.scanned = 0;
+                        return Err(format!("frame exceeds max_frame={} bytes", self.max_frame));
+                    }
+                    return Ok(None);
+                }
+            }
+        }
+    }
+
+    /// Bytes currently buffered (partial frame).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether a full (newline-terminated) frame is waiting un-decoded.
+    pub fn has_complete_frame(&self) -> bool {
+        self.buf.contains(&b'\n')
+    }
+}
+
+/// Per-connection reply handle, registered in each shard's routes.
+/// Workers call [`ConnHandle::send`] from any thread; the line lands in
+/// the outbox and the owning reactor is woken to flush it. Also tracks
+/// the connection's in-flight request count for pipelining backpressure.
+pub struct ConnHandle {
+    pub conn_id: u64,
+    outbox: Mutex<Vec<String>>,
+    in_flight: AtomicUsize,
+    reactor: Option<Arc<ReactorShared>>,
+}
+
+/// What shard routing tables store (see [`super::shard`]).
+pub type ResponseTx = Arc<ConnHandle>;
+
+impl ConnHandle {
+    /// A handle whose sends wake `reactor` to flush the outbox.
+    pub fn new(conn_id: u64, reactor: Arc<ReactorShared>) -> ResponseTx {
+        Arc::new(ConnHandle {
+            conn_id,
+            outbox: Mutex::new(Vec::new()),
+            in_flight: AtomicUsize::new(0),
+            reactor: Some(reactor),
+        })
+    }
+
+    /// A handle with no reactor attached (unit tests, tools).
+    pub fn detached(conn_id: u64) -> ResponseTx {
+        Arc::new(ConnHandle {
+            conn_id,
+            outbox: Mutex::new(Vec::new()),
+            in_flight: AtomicUsize::new(0),
+            reactor: None,
+        })
+    }
+
+    /// Queue a response line and retire one in-flight request (the
+    /// counter saturates at zero — unroutable replies can't underflow).
+    pub fn send(&self, line: String) {
+        let dec = |v: usize| v.checked_sub(1);
+        let _ = self.in_flight.fetch_update(Ordering::AcqRel, Ordering::Acquire, dec);
+        self.push(line);
+    }
+
+    /// Queue a reply line that does not retire an in-flight request
+    /// (admin replies, connection-level errors).
+    pub fn send_reply(&self, line: String) {
+        self.push(line);
+    }
+
+    fn push(&self, line: String) {
+        self.outbox.lock().unwrap().push(line);
+        if let Some(r) = &self.reactor {
+            r.notify(self.conn_id);
+        }
+    }
+
+    /// Count a request as in-flight *before* submitting it (its response
+    /// can race back from a worker immediately).
+    pub fn begin_request(&self) {
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Drain all queued lines (reactor thread only).
+    pub fn take_lines(&self) -> Vec<String> {
+        std::mem::take(&mut *self.outbox.lock().unwrap())
+    }
+
+    pub fn has_output(&self) -> bool {
+        !self.outbox.lock().unwrap().is_empty()
+    }
+}
+
+/// The cross-thread face of one reactor: where the accept thread hands
+/// over new connections and where [`ConnHandle::send`] marks
+/// connections dirty.
+pub struct ReactorShared {
+    pub id: usize,
+    incoming: Mutex<Vec<(u64, TcpStream, ResponseTx)>>,
+    dirty: Mutex<Vec<u64>>,
+    waker: sys::Waker,
+    conns: AtomicUsize,
+}
+
+/// Create one reactor's shared handle plus the selector its thread
+/// drives (pass both to [`run_reactor`]).
+pub fn new_reactor(id: usize) -> io::Result<(Selector, Arc<ReactorShared>)> {
+    let (selector, waker) = sys::pair()?;
+    let shared = Arc::new(ReactorShared {
+        id,
+        incoming: Mutex::new(Vec::new()),
+        dirty: Mutex::new(Vec::new()),
+        waker,
+        conns: AtomicUsize::new(0),
+    });
+    Ok((selector, shared))
+}
+
+impl ReactorShared {
+    /// Mark a connection as having pending output and ring the reactor.
+    pub fn notify(&self, conn_id: u64) {
+        self.dirty.lock().unwrap().push(conn_id);
+        self.waker.wake();
+    }
+
+    /// Ring the reactor with no specific connection (shutdown).
+    pub fn wake(&self) {
+        self.waker.wake();
+    }
+
+    /// Hand a freshly accepted connection to this reactor.
+    pub fn adopt(&self, conn_id: u64, stream: TcpStream, handle: ResponseTx) {
+        self.incoming.lock().unwrap().push((conn_id, stream, handle));
+        self.waker.wake();
+    }
+
+    /// Connections currently owned by this reactor (load balancing,
+    /// `stats` gauges).
+    pub fn conn_count(&self) -> usize {
+        self.conns.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-connection knobs, shared by every reactor.
+#[derive(Clone, Debug)]
+pub struct ConnLimits {
+    /// Pause reading once this many requests are in flight.
+    pub max_pipeline: usize,
+    /// Pause reading once this many response bytes are waiting to flush.
+    pub write_buf_cap: usize,
+    /// Kill frames larger than this many bytes.
+    pub max_frame: usize,
+    /// Reject requests when the target shard's queue is this deep.
+    pub max_queue_depth: usize,
+    /// Optional kernel `SO_SNDBUF` override for accepted sockets.
+    pub sock_buf: Option<usize>,
+}
+
+/// Everything a reactor thread needs to serve its connections.
+#[derive(Clone)]
+pub struct ReactorCtx {
+    pub shards: Arc<ShardSet>,
+    pub metrics: Arc<Metrics>,
+    pub registry: Arc<ModelRegistry>,
+    pub shutdown: Arc<AtomicBool>,
+    /// All reactors (for `stats` gauges and shutdown fan-out).
+    pub reactors: Vec<Arc<ReactorShared>>,
+    pub limits: ConnLimits,
+}
+
+impl ReactorCtx {
+    fn reactor_conns(&self) -> Vec<usize> {
+        self.reactors.iter().map(|r| r.conn_count()).collect()
+    }
+}
+
+/// One connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    handle: ResponseTx,
+    dec: FrameDecoder,
+    /// Bytes queued for the socket; `wpos..` is still unwritten.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Backpressure engaged: read interest dropped, frames not decoded.
+    paused: bool,
+    /// Interest currently registered with the selector.
+    want_read: bool,
+    want_write: bool,
+    read_closed: bool,
+    close_now: bool,
+    /// Close once the write buffer drains (protocol errors).
+    close_after_flush: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, handle: ResponseTx, max_frame: usize) -> Conn {
+        Conn {
+            stream,
+            handle,
+            dec: FrameDecoder::new(max_frame),
+            wbuf: Vec::new(),
+            wpos: 0,
+            paused: false,
+            want_read: true,
+            want_write: false,
+            read_closed: false,
+            close_now: false,
+            close_after_flush: false,
+        }
+    }
+
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Append one wire line to the write buffer (reactor thread only).
+    fn push_line(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    fn over_cap(&self, ctx: &ReactorCtx) -> bool {
+        self.handle.in_flight() >= ctx.limits.max_pipeline
+            || self.pending_write() > ctx.limits.write_buf_cap
+    }
+
+    /// Move worker responses from the outbox into the write buffer.
+    fn drain_outbox(&mut self) {
+        for line in self.handle.take_lines() {
+            self.wbuf.extend_from_slice(line.as_bytes());
+            self.wbuf.push(b'\n');
+        }
+    }
+
+    /// Decode and dispatch buffered frames until empty or over cap,
+    /// then sync the paused flag with the cap state.
+    fn process_pending(&mut self, ctx: &ReactorCtx) {
+        while !self.close_now && !self.close_after_flush && !self.over_cap(ctx) {
+            match self.dec.next_frame() {
+                Ok(Some(line)) => self.handle_frame(ctx, &line),
+                Ok(None) => break,
+                Err(msg) => {
+                    ctx.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+                    self.push_line(&Response::err(0, msg).to_json());
+                    self.close_after_flush = true;
+                }
+            }
+        }
+        let over = self.over_cap(ctx);
+        if over && !self.paused {
+            ctx.metrics.conn_pauses.fetch_add(1, Ordering::Relaxed);
+        }
+        self.paused = over;
+    }
+
+    /// One decoded line: admin command or single-column request.
+    fn handle_frame(&mut self, ctx: &ReactorCtx, line: &str) {
+        if let Ok(j) = Json::parse(line) {
+            if let Some(cmd) = j.get("cmd").as_str() {
+                let cmd = cmd.to_string();
+                self.handle_admin(ctx, &cmd, &j);
+                return;
+            }
+        }
+        ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        match Request::from_json(line) {
+            Ok(mut req) => {
+                let shard = ctx.shards.shard_for(&req.model);
+                if shard.batcher.depth() >= ctx.limits.max_queue_depth {
+                    // Queue backpressure: reject instead of queueing
+                    // unboundedly.
+                    ctx.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+                    let msg = format!("server overloaded (shard {} queue full)", shard.id);
+                    self.push_line(&Response::err(req.id, msg).to_json());
+                    return;
+                }
+                // Tag the wire id with the connection for routing.
+                req.id = (self.handle.conn_id << 32) | (req.id & 0xFFFF_FFFF);
+                self.handle.begin_request();
+                shard.batcher.submit(req);
+            }
+            Err(e) => {
+                ctx.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+                self.push_line(&Response::err(0, format!("bad request: {e:#}")).to_json());
+            }
+        }
+    }
+
+    /// Admin commands bypass the batcher and answer inline.
+    fn handle_admin(&mut self, ctx: &ReactorCtx, cmd: &str, j: &Json) {
+        let reply = match cmd {
+            "hello" => {
+                let proto = j.get("proto").as_f64().unwrap_or(0.0) as u32;
+                if proto == PROTO_VERSION {
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("proto", Json::num(PROTO_VERSION as f64)),
+                    ])
+                    .to_string()
+                } else {
+                    // Structured version-mismatch envelope, then close.
+                    self.close_after_flush = true;
+                    let msg = format!("unsupported proto {proto} (server speaks {PROTO_VERSION})");
+                    Json::obj(vec![
+                        ("id", Json::num(0.0)),
+                        ("ok", Json::Bool(false)),
+                        ("proto", Json::num(PROTO_VERSION as f64)),
+                        ("error", Json::str(msg)),
+                    ])
+                    .to_string()
+                }
+            }
+            "stats" => ctx.metrics.to_json_with(&ctx.shards.depths(), &ctx.reactor_conns()),
+            "metrics" => {
+                // The Prometheus-ish exposition framed in ONE JSON line,
+                // keeping the wire line-oriented (Client::metrics_text
+                // unwraps the frame).
+                let text = ctx.metrics.to_prometheus(&ctx.shards.depths(), &ctx.reactor_conns());
+                Json::obj(vec![("metrics", Json::str(text))]).to_string()
+            }
+            "models" => {
+                let items = ctx.registry.names().into_iter().map(Json::str);
+                Json::arr(items.collect()).to_string()
+            }
+            "shutdown" => {
+                ctx.shutdown.store(true, Ordering::Relaxed);
+                ctx.shards.close();
+                for r in &ctx.reactors {
+                    r.wake();
+                }
+                "{\"ok\":true}".to_string()
+            }
+            other => {
+                let msg = Json::str(format!("unknown cmd '{other}'"));
+                Json::obj(vec![("error", msg)]).to_string()
+            }
+        };
+        self.push_line(&reply);
+    }
+
+    /// Pull from the socket into the decoder, dispatching as frames
+    /// complete; bounded per wakeup so one chatty peer cannot starve
+    /// the reactor.
+    fn handle_readable(&mut self, ctx: &ReactorCtx, buf: &mut [u8]) {
+        if self.paused {
+            return;
+        }
+        for _ in 0..16 {
+            match self.stream.read(buf) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    ctx.metrics.bytes_read.fetch_add(n as u64, Ordering::Relaxed);
+                    self.dec.push(&buf[..n]);
+                    self.process_pending(ctx);
+                    if self.paused || self.close_now || n < buf.len() {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_now = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Write as much of the buffer as the socket accepts.
+    fn try_flush(&mut self, ctx: &ReactorCtx) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.close_now = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    ctx.metrics.bytes_written.fetch_add(n as u64, Ordering::Relaxed);
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_now = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 64 * 1024 {
+            // Compact a long-lived partial buffer.
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+
+    /// The full service pass: outbox → flush → resume decoding → flush.
+    fn service(&mut self, ctx: &ReactorCtx) {
+        self.drain_outbox();
+        self.try_flush(ctx);
+        self.process_pending(ctx);
+        self.try_flush(ctx);
+    }
+
+    /// Re-sync selector interest with the state machine.
+    fn update_interest(&mut self, selector: &Selector, id: u64) {
+        let want_read =
+            !self.paused && !self.read_closed && !self.close_now && !self.close_after_flush;
+        let want_write = self.pending_write() > 0;
+        if (want_read != self.want_read || want_write != self.want_write)
+            && selector.reregister(&self.stream, id, want_read, want_write).is_ok()
+        {
+            self.want_read = want_read;
+            self.want_write = want_write;
+        }
+    }
+
+    fn should_close(&self) -> bool {
+        if self.close_now {
+            return true;
+        }
+        let drained = self.pending_write() == 0 && !self.handle.has_output();
+        if self.close_after_flush && drained {
+            return true;
+        }
+        // Graceful: peer finished sending, everything owed was sent.
+        self.read_closed
+            && drained
+            && self.handle.in_flight() == 0
+            && !self.dec.has_complete_frame()
+    }
+}
+
+/// One reactor thread: multiplex all adopted connections until
+/// shutdown.
+pub fn run_reactor(selector: Selector, shared: Arc<ReactorShared>, ctx: ReactorCtx) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut events: Vec<Event> = Vec::new();
+    let mut touched: Vec<u64> = Vec::new();
+    let mut buf = [0u8; 16 * 1024];
+
+    loop {
+        let _ = selector.wait(Duration::from_millis(50), &mut events);
+
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            // Best-effort final flush (e.g. the `shutdown` ack), then
+            // tear everything down.
+            for (&id, conn) in conns.iter_mut() {
+                conn.drain_outbox();
+                conn.try_flush(&ctx);
+                let _ = selector.deregister(&conn.stream, id);
+            }
+            for &id in conns.keys() {
+                ctx.shards.remove_route(id);
+                ctx.metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+            }
+            shared.conns.store(0, Ordering::Relaxed);
+            break;
+        }
+
+        touched.clear();
+
+        // Adopt connections handed over by the accept thread.
+        let pending: Vec<_> = shared.incoming.lock().unwrap().drain(..).collect();
+        for (conn_id, stream, handle) in pending {
+            let ready = stream.set_nonblocking(true).is_ok()
+                && selector.register(&stream, conn_id, true, false).is_ok();
+            if !ready {
+                ctx.shards.remove_route(conn_id);
+                ctx.metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            if let Some(bytes) = ctx.limits.sock_buf {
+                let _ = sys::set_send_buffer(&stream, bytes);
+            }
+            shared.conns.fetch_add(1, Ordering::Relaxed);
+            conns.insert(conn_id, Conn::new(stream, handle, ctx.limits.max_frame));
+            touched.push(conn_id);
+        }
+
+        // Connections with fresh worker output.
+        let mut dirty = std::mem::take(&mut *shared.dirty.lock().unwrap());
+        dirty.sort_unstable();
+        dirty.dedup();
+        for conn_id in dirty {
+            if let Some(conn) = conns.get_mut(&conn_id) {
+                conn.service(&ctx);
+                conn.update_interest(&selector, conn_id);
+                touched.push(conn_id);
+            }
+        }
+
+        // Socket readiness.
+        for ev in &events {
+            if let Some(conn) = conns.get_mut(&ev.id) {
+                if ev.hangup {
+                    conn.close_now = true;
+                }
+                if ev.readable && !conn.close_now {
+                    conn.handle_readable(&ctx, &mut buf);
+                }
+                conn.service(&ctx);
+                conn.update_interest(&selector, ev.id);
+                touched.push(ev.id);
+            }
+        }
+
+        // Teardown sweep over everything touched this iteration.
+        touched.sort_unstable();
+        touched.dedup();
+        for &id in &touched {
+            let close = conns.get(&id).map(|c| c.should_close()).unwrap_or(false);
+            if close {
+                let conn = conns.remove(&id).expect("closing conn exists");
+                let _ = selector.deregister(&conn.stream, id);
+                ctx.shards.remove_route(id);
+                shared.conns.fetch_sub(1, Ordering::Relaxed);
+                ctx.metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoder_splits_and_merges() {
+        let mut d = FrameDecoder::new(1024);
+        // Split: a frame arriving over three reads.
+        d.push(b"{\"id\"");
+        assert_eq!(d.next_frame().unwrap(), None);
+        d.push(b":1");
+        assert_eq!(d.next_frame().unwrap(), None);
+        d.push(b"}\n");
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"id\":1}"));
+        // Merged: three frames in one read, pulled out one by one.
+        d.push(b"{\"a\":1}\n{\"b\":2}\n{\"c\":3}\n");
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"a\":1}"));
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"b\":2}"));
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"c\":3}"));
+        assert_eq!(d.next_frame().unwrap(), None);
+        assert_eq!(d.buffered(), 0);
+    }
+
+    #[test]
+    fn decoder_trims_crlf_and_skips_blank_lines() {
+        let mut d = FrameDecoder::new(1024);
+        d.push(b"{\"x\":1}\r\n\n  \n{\"y\":2}\n");
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"x\":1}"));
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"y\":2}"));
+        assert_eq!(d.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn decoder_split_point_inside_utf8_is_safe() {
+        let mut d = FrameDecoder::new(1024);
+        let frame = "{\"s\":\"héllo\"}\n".as_bytes();
+        // Push one byte at a time: every split point, including mid-é.
+        for &b in frame {
+            d.push(&[b]);
+        }
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"s\":\"héllo\"}"));
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_frames_and_recovers() {
+        let mut d = FrameDecoder::new(16);
+        d.push(b"aaaaaaaaaaaaaaaaaaaaaaaa");
+        let err = d.next_frame().unwrap_err();
+        assert!(err.contains("max_frame"), "{err}");
+        // Buffer reset: subsequent well-formed frames decode.
+        d.push(b"{\"ok\":1}\n");
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("{\"ok\":1}"));
+    }
+
+    #[test]
+    fn decoder_incremental_scan_finds_late_newline() {
+        let mut d = FrameDecoder::new(1024);
+        d.push(b"abc");
+        assert_eq!(d.next_frame().unwrap(), None);
+        d.push(b"def");
+        assert_eq!(d.next_frame().unwrap(), None);
+        d.push(b"\n");
+        assert_eq!(d.next_frame().unwrap().as_deref(), Some("abcdef"));
+    }
+
+    #[test]
+    fn conn_handle_accounting() {
+        let h = ConnHandle::detached(7);
+        assert_eq!(h.conn_id, 7);
+        h.begin_request();
+        h.begin_request();
+        assert_eq!(h.in_flight(), 2);
+        h.send("a".into());
+        assert_eq!(h.in_flight(), 1);
+        // Admin replies don't retire requests.
+        h.send_reply("b".into());
+        assert_eq!(h.in_flight(), 1);
+        assert!(h.has_output());
+        assert_eq!(h.take_lines(), vec!["a".to_string(), "b".to_string()]);
+        assert!(!h.has_output());
+        // The counter saturates at zero instead of underflowing.
+        h.send("c".into());
+        h.send("d".into());
+        assert_eq!(h.in_flight(), 0);
+    }
+
+    #[test]
+    fn selector_waker_interrupts_wait() {
+        let (selector, waker) = sys::pair().unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            waker.wake();
+        });
+        let mut out = Vec::new();
+        let t0 = std::time::Instant::now();
+        selector.wait(Duration::from_secs(5), &mut out).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(4), "waker did not interrupt the wait");
+        t.join().unwrap();
+    }
+}

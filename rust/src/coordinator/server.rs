@@ -1,32 +1,37 @@
-//! TCP front-end: newline-delimited JSON requests in, responses out.
+//! TCP front-end: the evented reactor core behind a validated config.
 //!
-//! Topology: N connection readers parse requests and route each one to
-//! its model's shard (rendezvous hash on model name — see
-//! [`super::shard`]). Every shard owns an independent
-//! `(batcher, worker pool, registry partition, response routes)` tuple:
-//! its workers pull batches from its [`DynamicBatcher`], execute them
-//! against its registry partition, and route responses back through
-//! *its* per-connection channel table — a hot model saturating one
-//! shard cannot serialize other models' responses behind a global lock.
-//! Admin lines (`{"cmd": "stats"|"metrics"|"models"|"shutdown"}`) are
-//! answered by the reader through the connection's single writer-half
-//! channel, so the socket has exactly one writing thread.
+//! Topology (see [`super::reactor`] for the connection state machine):
+//!
+//! ```text
+//! accept thread ──► least-loaded reactor adopts the socket
+//! reactor 0..R  ──► epoll multiplex: decode NDJSON frames ──► shard
+//! shard 0..S    ──► DynamicBatcher ──► worker pool ──► registry part.
+//! worker        ──► ConnHandle outbox ──► reactor flushes the socket
+//! ```
+//!
+//! Every shard owns an independent `(batcher, worker pool, registry
+//! partition, response routes)` tuple: a hot model saturating one shard
+//! cannot serialize other models' responses behind a global lock. Every
+//! reactor owns its connections outright — no thread-per-connection,
+//! no per-socket writer threads — so thousands of idle connections cost
+//! file descriptors, not stacks.
 
 use super::batcher::BatcherConfig;
 use super::metrics::Metrics;
-use super::protocol::{Request, Response};
-use super::shard::{ResponseTx, ShardSet};
+use super::reactor::{self, ConnHandle, ConnLimits, ReactorCtx, ReactorShared};
+use super::shard::ShardSet;
 use super::state::ModelRegistry;
-use super::worker::execute_batch;
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use super::worker::run_shard_worker;
+use anyhow::{bail, Context, Result};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Server knobs.
+/// Server knobs. Construct via [`ServerConfig::builder`] (validated) or
+/// keep `Default` and override fields; [`Server::start`] re-validates
+/// either way, so nonsense (0 shards, a pipelining cap of 0) is
+/// rejected before any thread spawns.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Bind address, e.g. "127.0.0.1:7070" (port 0 = ephemeral).
@@ -35,10 +40,23 @@ pub struct ServerConfig {
     pub shards: usize,
     /// Worker threads executing batches, *per shard*.
     pub workers: usize,
+    /// Reactor threads multiplexing all connections (min 1).
+    pub reactors: usize,
     pub batcher: BatcherConfig,
     /// Reject new requests once this many columns are queued on the
     /// target shard (backpressure).
     pub max_queue_depth: usize,
+    /// Pause reading a connection once this many of its requests are in
+    /// flight (pipelining backpressure).
+    pub max_pipeline: usize,
+    /// Pause reading a connection once this many response bytes are
+    /// waiting on its write buffer (slow-reader backpressure).
+    pub write_buf_cap: usize,
+    /// Reject request lines longer than this many bytes.
+    pub max_frame: usize,
+    /// Optional kernel `SO_SNDBUF` override for accepted sockets
+    /// (tests shrink it to make write backpressure deterministic).
+    pub sock_buf: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -47,9 +65,142 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:0".into(),
             shards: 2,
             workers: 2,
+            reactors: 2,
             batcher: BatcherConfig::default(),
             max_queue_depth: 10_000,
+            max_pipeline: 256,
+            write_buf_cap: 256 * 1024,
+            max_frame: 1024 * 1024,
+            sock_buf: None,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Start building a config from the defaults.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder { config: ServerConfig::default() }
+    }
+
+    /// Reject nonsense at construction instead of at runtime.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("config: shards must be >= 1");
+        }
+        if self.workers == 0 {
+            bail!("config: workers must be >= 1 (per shard)");
+        }
+        if self.reactors == 0 {
+            bail!("config: reactors must be >= 1");
+        }
+        if self.max_pipeline == 0 {
+            bail!("config: max_pipeline must be >= 1");
+        }
+        if self.max_frame < 64 {
+            bail!("config: max_frame must be >= 64 bytes");
+        }
+        if self.batcher.max_batch == 0 {
+            bail!("config: batcher.max_batch must be >= 1");
+        }
+        if self.max_queue_depth < self.batcher.max_batch {
+            bail!(
+                "config: max_queue_depth {} < batcher.max_batch {} would deadlock full flushes",
+                self.max_queue_depth,
+                self.batcher.max_batch
+            );
+        }
+        if self.batcher.adaptive && self.batcher.min_wait > self.batcher.max_wait {
+            bail!(
+                "config: batcher.min_wait {:?} > max_wait {:?}",
+                self.batcher.min_wait,
+                self.batcher.max_wait
+            );
+        }
+        if !(0.0..=1.0).contains(&self.batcher.p50_fraction) {
+            bail!("config: batcher.p50_fraction {} outside [0, 1]", self.batcher.p50_fraction);
+        }
+        Ok(())
+    }
+}
+
+/// Chainable builder over [`ServerConfig`]; [`ServerConfigBuilder::build`]
+/// validates.
+#[derive(Clone, Debug)]
+pub struct ServerConfigBuilder {
+    config: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.config.addr = addr.into();
+        self
+    }
+
+    pub fn shards(mut self, n: usize) -> Self {
+        self.config.shards = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.config.workers = n;
+        self
+    }
+
+    pub fn reactors(mut self, n: usize) -> Self {
+        self.config.reactors = n;
+        self
+    }
+
+    pub fn batcher(mut self, batcher: BatcherConfig) -> Self {
+        self.config.batcher = batcher;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.config.batcher.max_batch = n;
+        self
+    }
+
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.config.batcher.max_wait = d;
+        self
+    }
+
+    /// Derive the flush deadline from live service latency.
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.config.batcher.adaptive = on;
+        self
+    }
+
+    pub fn max_queue_depth(mut self, n: usize) -> Self {
+        self.config.max_queue_depth = n;
+        self
+    }
+
+    pub fn max_pipeline(mut self, n: usize) -> Self {
+        self.config.max_pipeline = n;
+        self
+    }
+
+    pub fn write_buf_cap(mut self, bytes: usize) -> Self {
+        self.config.write_buf_cap = bytes;
+        self
+    }
+
+    pub fn max_frame(mut self, bytes: usize) -> Self {
+        self.config.max_frame = bytes;
+        self
+    }
+
+    pub fn sock_buf(mut self, bytes: usize) -> Self {
+        self.config.sock_buf = Some(bytes);
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ServerConfig> {
+        self.config.validate()?;
+        Ok(self.config)
     }
 }
 
@@ -60,6 +211,8 @@ pub struct Server {
     /// The user-facing catalog (the shards hold partitions of it).
     pub registry: Arc<ModelRegistry>,
     pub shards: Arc<ShardSet>,
+    /// The reactor cores (connection counts feed `stats`).
+    pub reactors: Vec<Arc<ReactorShared>>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -69,6 +222,7 @@ impl Server {
     /// partitioned across shards here; models registered *after* start
     /// are adopted lazily by the owning shard on first request.
     pub fn start(config: ServerConfig, registry: Arc<ModelRegistry>) -> Result<Server> {
+        config.validate()?;
         let listener = TcpListener::bind(&config.addr)
             .with_context(|| format!("binding {}", config.addr))?;
         let local_addr = listener.local_addr()?;
@@ -82,78 +236,70 @@ impl Server {
             }
         }
         let shutdown = Arc::new(AtomicBool::new(false));
-        let next_conn_id = Arc::new(AtomicU64::new(1));
-        let mut threads = Vec::new();
 
-        // Per-shard worker pools: pull batches → execute against the
-        // shard's partition → route via the shard's channel table, and
-        // feed the observed service latency back into the shard's
-        // adaptive deadline.
+        // Reactor cores: one selector + shared handle each.
+        let mut reactors = Vec::new();
+        let mut selectors = Vec::new();
+        for id in 0..config.reactors {
+            let (selector, shared) = reactor::new_reactor(id).context("creating reactor")?;
+            reactors.push(shared);
+            selectors.push(selector);
+        }
+        let ctx = ReactorCtx {
+            shards: shards.clone(),
+            metrics: metrics.clone(),
+            registry: registry.clone(),
+            shutdown: shutdown.clone(),
+            reactors: reactors.clone(),
+            limits: ConnLimits {
+                max_pipeline: config.max_pipeline,
+                write_buf_cap: config.write_buf_cap,
+                max_frame: config.max_frame,
+                max_queue_depth: config.max_queue_depth,
+                sock_buf: config.sock_buf,
+            },
+        };
+        let mut threads = Vec::new();
+        for (shared, selector) in reactors.iter().zip(selectors) {
+            let shared = shared.clone();
+            let ctx = ctx.clone();
+            threads.push(std::thread::spawn(move || reactor::run_reactor(selector, shared, ctx)));
+        }
+
+        // Per-shard worker pools.
         for shard in shards.shards() {
-            for _ in 0..config.workers.max(1) {
+            for _ in 0..config.workers {
                 let shard = shard.clone();
                 let metrics = metrics.clone();
                 let catalog = registry.clone();
                 threads.push(std::thread::spawn(move || {
-                    while let Some(batch) = shard.batcher.next_batch() {
-                        // Lazily adopt models registered in the catalog
-                        // after start(): the reader routed this batch here
-                        // by name, so this shard owns the model.
-                        if shard.registry.get(&batch.model).is_none() {
-                            if let Some(state) = catalog.get(&batch.model) {
-                                shard.registry.insert_state(state);
-                            }
-                        }
-                        let t0 = Instant::now();
-                        let responses = execute_batch(&shard.registry, &metrics, &batch);
-                        // Only engine-executed batches feed the adaptive
-                        // deadline — rejected batches (unknown model, bad
-                        // widths) finish in ~0 µs and would otherwise drag
-                        // the shard's deadline to min_wait.
-                        if responses.iter().any(|r| r.ok) {
-                            shard.batcher.observe_latency(t0.elapsed().as_micros() as u64);
-                        }
-                        let routes = shard.routes.lock().unwrap();
-                        for (mut resp, req) in responses.into_iter().zip(&batch.requests) {
-                            // Requests carry the connection id in the top
-                            // bits of the wire id (see conn loop); restore
-                            // the client's id before serializing.
-                            let conn = req.id >> 32;
-                            resp.id &= 0xFFFF_FFFF;
-                            if let Some(tx) = routes.get(&conn) {
-                                let _ = tx.send(resp.to_json());
-                            }
-                        }
-                    }
+                    run_shard_worker(shard, metrics, catalog)
                 }));
             }
         }
 
-        // Accept loop.
+        // Accept loop: hand each socket to the least-loaded reactor.
         {
             let shutdown = shutdown.clone();
             let shards = shards.clone();
             let metrics = metrics.clone();
-            let registry = registry.clone();
-            let max_depth = config.max_queue_depth;
+            let reactors = reactors.clone();
             threads.push(std::thread::spawn(move || {
+                let mut next_conn_id = 1u64;
                 while !shutdown.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            let conn_id = next_conn_id.fetch_add(1, Ordering::Relaxed);
-                            let (tx, rx) = mpsc::channel::<String>();
-                            shards.add_route(conn_id, &tx);
-                            spawn_connection(
-                                conn_id,
-                                stream,
-                                shards.clone(),
-                                metrics.clone(),
-                                registry.clone(),
-                                shutdown.clone(),
-                                tx,
-                                rx,
-                                max_depth,
-                            );
+                            let conn_id = next_conn_id;
+                            next_conn_id += 1;
+                            let target = reactors
+                                .iter()
+                                .min_by_key(|r| r.conn_count())
+                                .expect("validated: at least one reactor");
+                            let handle = ConnHandle::new(conn_id, target.clone());
+                            shards.add_route(conn_id, &handle);
+                            metrics.connections_total.fetch_add(1, Ordering::Relaxed);
+                            metrics.connections_open.fetch_add(1, Ordering::Relaxed);
+                            target.adopt(conn_id, stream, handle);
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(5));
@@ -164,260 +310,26 @@ impl Server {
             }));
         }
 
-        Ok(Server { local_addr, metrics, registry, shards, shutdown, threads })
+        Ok(Server { local_addr, metrics, registry, shards, reactors, shutdown, threads })
     }
 
     /// Stop accepting, drain queues, join threads.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         self.shards.close();
+        for r in &self.reactors {
+            r.wake();
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn spawn_connection(
-    conn_id: u64,
-    stream: TcpStream,
-    shards: Arc<ShardSet>,
-    metrics: Arc<Metrics>,
-    registry: Arc<ModelRegistry>,
-    shutdown: Arc<AtomicBool>,
-    tx: ResponseTx,
-    replies: mpsc::Receiver<String>,
-    max_depth: usize,
-) {
-    // Writer half: the ONLY thread writing this socket. Everything —
-    // batch responses from shard workers, admin replies, inline errors —
-    // arrives as pre-serialized lines on one channel, so frames can
-    // never interleave.
-    let write_stream = stream.try_clone().expect("clone stream");
-    std::thread::spawn(move || {
-        let mut w = BufWriter::new(write_stream);
-        while let Ok(line) = replies.recv() {
-            if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
-                break;
-            }
-        }
-    });
-
-    // Reader half: parse request lines, route to the model's shard;
-    // admin and error replies go through the writer channel (`tx`).
-    std::thread::spawn(move || {
-        let mut reader = BufReader::new(stream);
-        let mut line = String::new();
-        loop {
-            line.clear();
-            match reader.read_line(&mut line) {
-                Ok(0) | Err(_) => break, // EOF / error → drop connection
-                Ok(_) => {}
-            }
-            let trimmed = line.trim();
-            if trimmed.is_empty() {
-                continue;
-            }
-            // Admin commands bypass the batcher.
-            if let Ok(j) = crate::util::json::Json::parse(trimmed) {
-                if let Some(cmd) = j.get("cmd").as_str() {
-                    use crate::util::json::Json;
-                    let reply = match cmd {
-                        "stats" => metrics.to_json_with(&shards.depths()),
-                        "metrics" => {
-                            // The Prometheus-ish exposition framed in ONE
-                            // JSON line, keeping the wire line-oriented
-                            // (Client::metrics_text unwraps the frame).
-                            let text = metrics.to_prometheus(&shards.depths());
-                            Json::obj(vec![("metrics", Json::str(text))]).to_string()
-                        }
-                        "models" => {
-                            let items = registry.names().into_iter().map(Json::str);
-                            Json::arr(items.collect()).to_string()
-                        }
-                        "shutdown" => {
-                            shutdown.store(true, Ordering::Relaxed);
-                            shards.close();
-                            "{\"ok\":true}".to_string()
-                        }
-                        other => {
-                            let msg = Json::str(format!("unknown cmd '{other}'"));
-                            Json::obj(vec![("error", msg)]).to_string()
-                        }
-                    };
-                    let _ = tx.send(reply);
-                    continue;
-                }
-            }
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            match Request::from_json(trimmed) {
-                Ok(mut req) => {
-                    let shard = shards.shard_for(&req.model);
-                    if shard.batcher.depth() >= max_depth {
-                        // Backpressure: reject instead of queueing unboundedly.
-                        let resp = Response::err(
-                            req.id,
-                            format!("server overloaded (shard {} queue full)", shard.id),
-                        );
-                        metrics.responses_err.fetch_add(1, Ordering::Relaxed);
-                        let _ = tx.send(resp.to_json());
-                        continue;
-                    }
-                    // Tag the request id with the connection for routing.
-                    req.id = (conn_id << 32) | (req.id & 0xFFFF_FFFF);
-                    shard.batcher.submit(req);
-                }
-                Err(e) => {
-                    metrics.responses_err.fetch_add(1, Ordering::Relaxed);
-                    let resp = Response::err(0, format!("bad request: {e:#}"));
-                    let _ = tx.send(resp.to_json());
-                }
-            }
-        }
-        shards.remove_route(conn_id);
-    });
-}
-
-/// Minimal blocking client for tests, examples, and the CLI.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
-    next_id: u64,
-    /// Responses read while waiting for a different id (out-of-order
-    /// completions across interleaved call/call_many sequences).
-    pending: HashMap<u64, Response>,
-}
-
-impl Client {
-    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        let reader = BufReader::new(stream.try_clone()?);
-        let writer = BufWriter::new(stream);
-        Ok(Client { reader, writer, next_id: 1, pending: HashMap::new() })
-    }
-
-    fn read_response(&mut self) -> Result<Response> {
-        let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            anyhow::bail!("server closed connection");
-        }
-        Response::from_json(line.trim())
-    }
-
-    /// Send one request and wait for *its* response: responses on one
-    /// connection come back in completion order, so anything with a
-    /// different id (including errors destined for other in-flight
-    /// requests) is buffered, never stolen.
-    pub fn call(
-        &mut self,
-        model: &str,
-        op: super::protocol::OpKind,
-        column: Vec<f32>,
-    ) -> Result<Response> {
-        let id = self.next_id;
-        self.next_id += 1;
-        let req = Request { id, model: model.into(), op, column };
-        writeln!(self.writer, "{}", req.to_json())?;
-        self.writer.flush()?;
-        if let Some(resp) = self.pending.remove(&id) {
-            return Ok(resp);
-        }
-        loop {
-            let resp = self.read_response()?;
-            if resp.id == id {
-                return Ok(resp);
-            }
-            self.check_unroutable(&resp)?;
-            self.pending.insert(resp.id, resp);
-        }
-    }
-
-    /// An error response with id 0 is connection-level (the server could
-    /// not parse a line): no request owns it, so waiting on would hang —
-    /// surface it instead. (Client ids start at 1.)
-    fn check_unroutable(&self, resp: &Response) -> Result<()> {
-        if resp.id == 0 && !resp.ok {
-            anyhow::bail!("server error: {}", resp.error.as_deref().unwrap_or("unknown"));
-        }
-        Ok(())
-    }
-
-    /// Fire-and-collect: send all columns, then read all responses
-    /// (exercises batching: the server coalesces in-flight requests).
-    pub fn call_many(
-        &mut self,
-        model: &str,
-        op: super::protocol::OpKind,
-        columns: Vec<Vec<f32>>,
-    ) -> Result<Vec<Response>> {
-        let n = columns.len();
-        let first_id = self.next_id;
-        for column in columns {
-            let id = self.next_id;
-            self.next_id += 1;
-            let req = Request { id, model: model.into(), op, column };
-            writeln!(self.writer, "{}", req.to_json())?;
-        }
-        self.writer.flush()?;
-        let mut got: Vec<Option<Response>> = vec![None; n];
-        let mut filled = 0;
-        for (idx, slot) in got.iter_mut().enumerate() {
-            if let Some(resp) = self.pending.remove(&(first_id + idx as u64)) {
-                *slot = Some(resp);
-                filled += 1;
-            }
-        }
-        while filled < n {
-            let resp = self.read_response()?;
-            // checked_sub: a stray response below first_id must buffer,
-            // not underflow.
-            match resp.id.checked_sub(first_id) {
-                Some(idx) if (idx as usize) < n && got[idx as usize].is_none() => {
-                    got[idx as usize] = Some(resp);
-                    filled += 1;
-                }
-                _ => {
-                    self.check_unroutable(&resp)?;
-                    self.pending.insert(resp.id, resp);
-                }
-            }
-        }
-        Ok(got.into_iter().map(|o| o.unwrap()).collect())
-    }
-
-    /// Admin command returning the raw reply (`stats`, `models`,
-    /// `shutdown` answer with one JSON line; `metrics` is delegated to
-    /// [`Client::metrics_text`] so its multi-line exposition cannot
-    /// desync the connection).
-    pub fn admin(&mut self, cmd: &str) -> Result<String> {
-        if cmd == "metrics" {
-            return self.metrics_text();
-        }
-        writeln!(self.writer, "{{\"cmd\":\"{cmd}\"}}")?;
-        self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Ok(line.trim().to_string())
-    }
-
-    /// The `metrics` admin command: returns the Prometheus-ish
-    /// exposition text (framed in one JSON line on the wire).
-    pub fn metrics_text(&mut self) -> Result<String> {
-        writeln!(self.writer, "{{\"cmd\":\"metrics\"}}")?;
-        self.writer.flush()?;
-        let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            anyhow::bail!("server closed connection");
-        }
-        let j = crate::util::json::Json::parse(line.trim()).context("metrics frame")?;
-        let text = j.get("metrics").as_str().context("metrics frame missing 'metrics'")?;
-        Ok(text.to_string())
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::client::{Call, Client};
     use crate::coordinator::protocol::OpKind;
     use crate::coordinator::state::ExecEngine;
     use crate::util::prop::assert_close;
@@ -426,21 +338,34 @@ mod tests {
     fn start_test_server() -> Server {
         let registry = Arc::new(ModelRegistry::new());
         registry.create("m8", 8, ExecEngine::Native { k: 4 }, 21);
-        Server::start(
-            ServerConfig {
-                addr: "127.0.0.1:0".into(),
-                shards: 2,
-                workers: 2,
-                batcher: BatcherConfig {
-                    max_batch: 8,
-                    max_wait: Duration::from_millis(2),
-                    ..Default::default()
-                },
-                max_queue_depth: 100,
-            },
-            registry,
-        )
-        .unwrap()
+        let config = ServerConfig::builder()
+            .shards(2)
+            .workers(2)
+            .max_batch(8)
+            .max_wait(Duration::from_millis(2))
+            .max_queue_depth(100)
+            .build()
+            .unwrap();
+        Server::start(config, registry).unwrap()
+    }
+
+    #[test]
+    fn builder_rejects_nonsense() {
+        assert!(ServerConfig::builder().shards(0).build().is_err());
+        assert!(ServerConfig::builder().workers(0).build().is_err());
+        assert!(ServerConfig::builder().reactors(0).build().is_err());
+        assert!(ServerConfig::builder().max_pipeline(0).build().is_err());
+        assert!(ServerConfig::builder().max_frame(8).build().is_err());
+        assert!(ServerConfig::builder().max_batch(0).build().is_err());
+        // A queue shallower than one full batch can never flush full.
+        assert!(ServerConfig::builder().max_batch(64).max_queue_depth(32).build().is_err());
+        // Defaults are valid; errors carry the offending knob's name.
+        assert!(ServerConfig::builder().build().is_ok());
+        let err = ServerConfig::builder().shards(0).build().unwrap_err();
+        assert!(format!("{err:#}").contains("shards"), "{err:#}");
+        // Server::start re-validates raw structs too.
+        let bad = ServerConfig { reactors: 0, ..ServerConfig::default() };
+        assert!(Server::start(bad, Arc::new(ModelRegistry::new())).is_err());
     }
 
     #[test]
@@ -449,9 +374,9 @@ mod tests {
         let mut client = Client::connect(&server.local_addr).unwrap();
         let mut rng = Rng::new(22);
         let col: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
-        let fwd = client.call("m8", OpKind::Apply, col.clone()).unwrap();
+        let fwd = client.call(Call::apply("m8", col.clone())).unwrap();
         assert!(fwd.ok, "{:?}", fwd.error);
-        let back = client.call("m8", OpKind::Inverse, fwd.column.clone()).unwrap();
+        let back = client.call(Call::inverse("m8", fwd.column.clone())).unwrap();
         assert!(back.ok);
         assert_close(&back.column, &col, 1e-2, 1e-2).unwrap();
         server.stop();
@@ -462,19 +387,23 @@ mod tests {
         let server = start_test_server();
         let mut client = Client::connect(&server.local_addr).unwrap();
         let mut rng = Rng::new(23);
-        let cols: Vec<Vec<f32>> =
-            (0..32).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
-        let responses = client.call_many("m8", OpKind::Apply, cols).unwrap();
+        let calls: Vec<Call> = (0..32)
+            .map(|_| Call::apply("m8", (0..8).map(|_| rng.normal_f32()).collect()))
+            .collect();
+        let responses = client.call_many(calls).unwrap();
         assert_eq!(responses.len(), 32);
         assert!(responses.iter().all(|r| r.ok));
         // At least one response should have shared a batch.
         let max_bs = responses.iter().map(|r| r.batch_size).max().unwrap();
         assert!(max_bs > 1, "no batching observed (max batch {max_bs})");
-        // Stats report them all, with one depth slot per shard.
+        // Stats report them all, with one depth slot per shard and one
+        // connection slot per reactor.
         let stats = client.admin("stats").unwrap();
         let j = crate::util::json::Json::parse(&stats).unwrap();
         assert_eq!(j.get("responses_ok").as_usize(), Some(32));
         assert_eq!(j.get("shard_depth").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("reactor_conns").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("connections_open").as_usize(), Some(1));
         server.stop();
     }
 
@@ -482,7 +411,7 @@ mod tests {
     fn unknown_model_surfaces_error() {
         let server = start_test_server();
         let mut client = Client::connect(&server.local_addr).unwrap();
-        let resp = client.call("ghost", OpKind::Apply, vec![0.0; 8]).unwrap();
+        let resp = client.call(Call::apply("ghost", vec![0.0; 8])).unwrap();
         assert!(!resp.ok);
         assert!(resp.error.unwrap().contains("unknown model"));
         server.stop();
@@ -501,13 +430,15 @@ mod tests {
     fn metrics_admin_returns_prometheus_text() {
         let server = start_test_server();
         let mut client = Client::connect(&server.local_addr).unwrap();
-        let _ = client.call("m8", OpKind::Apply, vec![0.5; 8]).unwrap();
+        let _ = client.call(Call::apply("m8", vec![0.5; 8])).unwrap();
         let text = client.metrics_text().unwrap();
         assert!(text.contains("orthoserve_requests_total"), "{text}");
         assert!(text.contains("orthoserve_shard_queue_depth{shard=\"1\"}"), "{text}");
         assert!(text.contains("orthoserve_latency_us_count{op=\"apply\"} 1"), "{text}");
+        assert!(text.contains("orthoserve_connections_open 1"), "{text}");
+        assert!(text.contains("orthoserve_reactor_connections{reactor=\"0\"}"), "{text}");
         // The connection is still usable for ordinary calls afterwards.
-        let r = client.call("m8", OpKind::Apply, vec![0.25; 8]).unwrap();
+        let r = client.call(Call::new("m8", OpKind::Apply, vec![0.25; 8])).unwrap();
         assert!(r.ok);
         server.stop();
     }
@@ -517,7 +448,7 @@ mod tests {
         let server = start_test_server();
         server.registry.create("late", 8, ExecEngine::Native { k: 4 }, 33);
         let mut client = Client::connect(&server.local_addr).unwrap();
-        let r = client.call("late", OpKind::Apply, vec![0.5; 8]).unwrap();
+        let r = client.call(Call::apply("late", vec![0.5; 8])).unwrap();
         assert!(r.ok, "{:?}", r.error);
         assert_eq!(r.column.len(), 8);
         server.stop();
@@ -534,7 +465,7 @@ mod tests {
                     let mut rng = Rng::new(100 + t);
                     for _ in 0..10 {
                         let col: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
-                        let r = client.call("m8", OpKind::Apply, col).unwrap();
+                        let r = client.call(Call::apply("m8", col)).unwrap();
                         assert!(r.ok);
                         assert_eq!(r.column.len(), 8);
                     }

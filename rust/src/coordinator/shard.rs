@@ -15,13 +15,13 @@
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::state::{ModelRegistry, ModelState};
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 
-/// Per-connection reply channel (registered in each shard's routes).
+/// Per-connection reply handle (registered in each shard's routes).
 /// Carries fully serialized wire lines — responses *and* inline admin /
-/// error replies — so the connection's writer half is the only thread
-/// that ever writes to the socket.
-pub type ResponseTx = mpsc::Sender<String>;
+/// error replies — into the connection's reactor outbox, so the owning
+/// reactor thread is the only thread that ever writes to the socket.
+pub use super::reactor::ResponseTx;
 
 /// One independent serving shard.
 pub struct Shard {
@@ -29,7 +29,7 @@ pub struct Shard {
     pub batcher: DynamicBatcher,
     /// The registry partition: only models placed on this shard.
     pub registry: ModelRegistry,
-    /// conn id → response channel, touched only by this shard's workers
+    /// conn id → response handle, touched only by this shard's workers
     /// and connection setup/teardown.
     pub routes: Mutex<HashMap<u64, ResponseTx>>,
 }
@@ -87,14 +87,14 @@ impl ShardSet {
         self.shards.iter().map(|s| s.batcher.depth()).collect()
     }
 
-    /// Register a connection's response channel with every shard.
+    /// Register a connection's response handle with every shard.
     pub fn add_route(&self, conn_id: u64, tx: &ResponseTx) {
         for s in &self.shards {
             s.routes.lock().unwrap().insert(conn_id, tx.clone());
         }
     }
 
-    /// Remove a connection's response channel from every shard.
+    /// Remove a connection's response handle from every shard.
     pub fn remove_route(&self, conn_id: u64) {
         for s in &self.shards {
             s.routes.lock().unwrap().remove(&conn_id);
@@ -197,11 +197,15 @@ mod tests {
     #[test]
     fn routes_added_and_removed_everywhere() {
         let set = ShardSet::new(2, BatcherConfig::default());
-        let (tx, _rx) = std::sync::mpsc::channel();
+        let tx = crate::coordinator::reactor::ConnHandle::detached(7);
         set.add_route(7, &tx);
         for s in set.shards() {
             assert!(s.routes.lock().unwrap().contains_key(&7));
         }
+        // A worker send lands in the handle's outbox via the route.
+        let shard0 = &set.shards()[0];
+        shard0.routes.lock().unwrap().get(&7).unwrap().send_reply("line".into());
+        assert_eq!(tx.take_lines(), vec!["line".to_string()]);
         set.remove_route(7);
         for s in set.shards() {
             assert!(s.routes.lock().unwrap().is_empty());

@@ -6,10 +6,49 @@
 use super::batcher::Batch;
 use super::metrics::Metrics;
 use super::protocol::Response;
+use super::shard::Shard;
 use super::state::ModelRegistry;
 use crate::linalg::Mat;
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// One shard worker loop: pull batches from the shard's batcher until
+/// it closes, execute them against the shard's registry partition, feed
+/// the observed service latency back into the shard's adaptive
+/// deadline, and retire responses into each connection's reactor
+/// outbox (the [`super::reactor`] flushes them to the socket).
+pub fn run_shard_worker(shard: Arc<Shard>, metrics: Arc<Metrics>, catalog: Arc<ModelRegistry>) {
+    while let Some(batch) = shard.batcher.next_batch() {
+        // Lazily adopt models registered in the catalog after start():
+        // the reactor routed this batch here by name, so this shard
+        // owns the model.
+        if shard.registry.get(&batch.model).is_none() {
+            if let Some(state) = catalog.get(&batch.model) {
+                shard.registry.insert_state(state);
+            }
+        }
+        let t0 = Instant::now();
+        let responses = execute_batch(&shard.registry, &metrics, &batch);
+        // Only engine-executed batches feed the adaptive deadline —
+        // rejected batches (unknown model, bad widths) finish in ~0 µs
+        // and would otherwise drag the shard's deadline to min_wait.
+        if responses.iter().any(|r| r.ok) {
+            shard.batcher.observe_latency(t0.elapsed().as_micros() as u64);
+        }
+        let routes = shard.routes.lock().unwrap();
+        for (mut resp, req) in responses.into_iter().zip(&batch.requests) {
+            // Requests carry the connection id in the top bits of the
+            // wire id (tagged by the reactor); restore the client's id
+            // before serializing.
+            let conn = req.id >> 32;
+            resp.id &= 0xFFFF_FFFF;
+            if let Some(tx) = routes.get(&conn) {
+                tx.send(resp.to_json());
+            }
+        }
+    }
+}
 
 /// Execute one batch against the registry, producing one response per
 /// request (errors fan out to every member of a failed batch).

@@ -16,7 +16,7 @@
 use anyhow::{bail, Context, Result};
 use fasth::bench_harness::figures::{self, BudgetCfg};
 use fasth::bench_harness::DEFAULT_SIZES;
-use fasth::coordinator::{Client, ExecEngine, ModelRegistry, Server, ServerConfig};
+use fasth::coordinator::{Client, ClientConfig, ExecEngine, ModelRegistry, Server, ServerConfig};
 use fasth::svd::MatrixOp;
 use fasth::util::Rng;
 use std::collections::HashMap;
@@ -110,7 +110,7 @@ fn print_usage() {
          \n\
          bench      --fig 1|3|4|k|rnn|all  [--sizes 64,128,...] [--budget secs] [--reps n]\n\
          serve      [--addr host:port] [--d 64] [--engine native|pjrt] [--artifacts dir]\n\
-                    [--shards n] [--adaptive] [--rect ROWSxCOLS[@RANK]]\n\
+                    [--shards n] [--reactors n] [--adaptive] [--rect ROWSxCOLS[@RANK]]\n\
          train      --task rnn|spiral [--steps n] [--hidden d] [--lr f]\n\
          experiment <name|all> [--budget smoke|paper] [--seed-offset n] [--out dir]\n\
                     [--serial]   (names: char_lm copy_mem flow_d8 flow_d16 flow_d32\n\
@@ -195,6 +195,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let d: usize = flags.get("d").map(|s| s.parse()).transpose()?.unwrap_or(64);
     let engine_kind = flags.get("engine").map(|s| s.as_str()).unwrap_or("native");
     let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let reactors: usize = flags.get("reactors").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let adaptive = flags.contains_key("adaptive");
 
     let registry = Arc::new(ModelRegistry::new());
@@ -234,23 +235,27 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         rect_banner = format!(" + {name}");
     }
 
-    let batcher = fasth::coordinator::BatcherConfig { adaptive, ..Default::default() };
-    let server = Server::start(
-        ServerConfig { addr: addr.clone(), shards, batcher, ..Default::default() },
-        registry.clone(),
-    )?;
+    let config = ServerConfig::builder()
+        .addr(addr)
+        .shards(shards)
+        .reactors(reactors)
+        .adaptive(adaptive)
+        .build()?;
+    let server = Server::start(config, registry.clone())?;
     println!(
-        "orthoserve listening on {} ({shards} shards, model svd_{d}{rect_banner}, engine \
-         {engine_kind}, adaptive deadline {})",
+        "orthoserve listening on {} ({shards} shards, {reactors} reactors, model \
+         svd_{d}{rect_banner}, engine {engine_kind}, adaptive deadline {})",
         server.local_addr,
         if adaptive { "on" } else { "off" }
     );
     println!("send {{\"cmd\":\"shutdown\"}} to stop.");
     // Keep the process alive until a client asks for shutdown; probe the
-    // listener liveness cheaply.
+    // listener liveness cheaply (handshake off: a probe must not block
+    // on a hello reply while the reactors are mid-teardown).
+    let probe_cfg = ClientConfig { handshake: false, ..Default::default() };
     loop {
         std::thread::sleep(std::time::Duration::from_millis(200));
-        if Client::connect(&server.local_addr).is_err() {
+        if Client::connect_with(&server.local_addr, probe_cfg.clone()).is_err() {
             break;
         }
     }

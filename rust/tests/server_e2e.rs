@@ -3,9 +3,7 @@
 //! rectangular model served via apply/pinv), PJRT-backed serving when
 //! artifacts exist, and backpressure.
 
-use fasth::coordinator::{
-    BatcherConfig, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig,
-};
+use fasth::coordinator::{Call, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig};
 use fasth::util::prop::assert_close;
 use fasth::util::Rng;
 use std::sync::Arc;
@@ -24,21 +22,15 @@ fn native_server(d: usize, max_batch: usize) -> Server {
         ExecEngine::Native { k: 8 },
         0xE2E + 1,
     );
-    Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            shards: 2,
-            workers: 2,
-            batcher: BatcherConfig {
-                max_batch,
-                max_wait: Duration::from_millis(2),
-                ..Default::default()
-            },
-            max_queue_depth: 10_000,
-        },
-        registry,
-    )
-    .expect("start server")
+    let config = ServerConfig::builder()
+        .shards(2)
+        .workers(2)
+        .max_batch(max_batch)
+        .max_wait(Duration::from_millis(2))
+        .max_queue_depth(10_000)
+        .build()
+        .expect("valid config");
+    Server::start(config, registry).expect("start server")
 }
 
 #[test]
@@ -48,9 +40,9 @@ fn apply_inverse_roundtrip_over_tcp() {
     let mut rng = Rng::new(1);
     for _ in 0..5 {
         let col: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
-        let fwd = client.call("svd_16", OpKind::Apply, col.clone()).unwrap();
+        let fwd = client.call(Call::apply("svd_16", col.clone())).unwrap();
         assert!(fwd.ok);
-        let back = client.call("svd_16", OpKind::Inverse, fwd.column).unwrap();
+        let back = client.call(Call::inverse("svd_16", fwd.column)).unwrap();
         assert!(back.ok);
         assert_close(&back.column, &col, 1e-2, 1e-2).unwrap();
     }
@@ -68,16 +60,16 @@ fn rect_model_apply_pinv_roundtrip_over_tcp() {
     let mut rng = Rng::new(7);
     for _ in 0..3 {
         let col: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
-        let fwd = client.call("rect_32x16", OpKind::Apply, col.clone()).unwrap();
+        let fwd = client.call(Call::apply("rect_32x16", col.clone())).unwrap();
         assert!(fwd.ok, "{:?}", fwd.error);
         assert_eq!(fwd.column.len(), 32, "apply must widen 16→32");
-        let back = client.call("rect_32x16", OpKind::Pinv, fwd.column).unwrap();
+        let back = client.call(Call::pinv("rect_32x16", fwd.column)).unwrap();
         assert!(back.ok, "{:?}", back.error);
         assert_eq!(back.column.len(), 16, "pinv must narrow 32→16");
         assert_close(&back.column, &col, 1e-2, 1e-2).unwrap();
     }
     // Square-only ops on the rect model surface a per-batch error.
-    let bad = client.call("rect_32x16", OpKind::Expm, vec![0.0; 16]).unwrap();
+    let bad = client.call(Call::expm("rect_32x16", vec![0.0; 16])).unwrap();
     assert!(!bad.ok);
     assert!(bad.error.unwrap().contains("square"));
     server.stop();
@@ -90,10 +82,10 @@ fn stats_report_shard_depth_and_per_op_histograms() {
     let mut rng = Rng::new(9);
     let col: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
     for _ in 0..4 {
-        assert!(client.call("svd_12", OpKind::Apply, col.clone()).unwrap().ok);
+        assert!(client.call(Call::apply("svd_12", col.clone())).unwrap().ok);
     }
     let rcol: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
-    assert!(client.call("rect_24x12", OpKind::Apply, rcol).unwrap().ok);
+    assert!(client.call(Call::apply("rect_24x12", rcol)).unwrap().ok);
     let stats = client.admin("stats").unwrap();
     let j = fasth::util::json::Json::parse(&stats).unwrap();
     // One live-depth slot per shard.
@@ -110,9 +102,10 @@ fn burst_gets_coalesced_into_batches() {
     let server = native_server(16, 16);
     let mut client = Client::connect(&server.local_addr).unwrap();
     let mut rng = Rng::new(2);
-    let cols: Vec<Vec<f32>> =
-        (0..64).map(|_| (0..16).map(|_| rng.normal_f32()).collect()).collect();
-    let responses = client.call_many("svd_16", OpKind::Apply, cols).unwrap();
+    let calls: Vec<Call> = (0..64)
+        .map(|_| Call::apply("svd_16", (0..16).map(|_| rng.normal_f32()).collect()))
+        .collect();
+    let responses = client.call_many(calls).unwrap();
     assert_eq!(responses.len(), 64);
     assert!(responses.iter().all(|r| r.ok));
     let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
@@ -133,10 +126,10 @@ fn conservation_under_concurrent_clients() {
                 let mut client = Client::connect(&addr).unwrap();
                 // Interleave both shards' models from every client.
                 let model = if c % 2 == 0 { "svd_12" } else { "rect_24x12" };
-                let cols: Vec<Vec<f32>> = (0..per_client)
-                    .map(|_| (0..12).map(|_| rng.normal_f32()).collect())
+                let calls: Vec<Call> = (0..per_client)
+                    .map(|_| Call::apply(model, (0..12).map(|_| rng.normal_f32()).collect()))
                     .collect();
-                let rs = client.call_many(model, OpKind::Apply, cols).unwrap();
+                let rs = client.call_many(calls).unwrap();
                 assert_eq!(rs.len(), per_client);
                 rs.iter().filter(|r| r.ok).count()
             })
@@ -162,7 +155,7 @@ fn expm_cayley_ops_served() {
     let mut rng = Rng::new(3);
     let col: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
     for op in [OpKind::Expm, OpKind::Cayley] {
-        let r = client.call("svd_12", op, col.clone()).unwrap();
+        let r = client.call(Call::new("svd_12", op, col.clone())).unwrap();
         assert!(r.ok, "{op:?} failed: {:?}", r.error);
         assert_eq!(r.column.len(), 12);
         assert!(r.column.iter().all(|v| v.is_finite()));
@@ -185,27 +178,21 @@ fn pjrt_engine_serves_if_artifacts_present() {
     let d = *engine.manifest().sizes().first().unwrap();
     let registry = Arc::new(ModelRegistry::new());
     registry.create(&format!("svd_{d}"), d, ExecEngine::Pjrt(Arc::new(engine)), 0xE2F);
-    let server = Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            shards: 2,
-            workers: 2,
-            batcher: BatcherConfig {
-                max_batch: 32,
-                max_wait: Duration::from_millis(2),
-                ..Default::default()
-            },
-            max_queue_depth: 1000,
-        },
-        registry.clone(),
-    )
-    .unwrap();
+    let config = ServerConfig::builder()
+        .shards(2)
+        .workers(2)
+        .max_batch(32)
+        .max_wait(Duration::from_millis(2))
+        .max_queue_depth(1000)
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry.clone()).unwrap();
     let mut client = Client::connect(&server.local_addr).unwrap();
     let mut rng = Rng::new(4);
     let col: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
-    let fwd = client.call(&format!("svd_{d}"), OpKind::Apply, col.clone()).unwrap();
+    let fwd = client.call(Call::apply(format!("svd_{d}"), col.clone())).unwrap();
     assert!(fwd.ok, "{:?}", fwd.error);
-    let back = client.call(&format!("svd_{d}"), OpKind::Inverse, fwd.column).unwrap();
+    let back = client.call(Call::inverse(format!("svd_{d}"), fwd.column)).unwrap();
     assert!(back.ok);
     assert_close(&back.column, &col, 2e-2, 2e-2).unwrap();
     // Cross-check against native execution of the same registered weight.
@@ -217,7 +204,7 @@ fn pjrt_engine_serves_if_artifacts_present() {
     }
     let native = param.apply(&x, 32);
     let mut client2 = Client::connect(&server.local_addr).unwrap();
-    let served = client2.call(&format!("svd_{d}"), OpKind::Apply, col).unwrap();
+    let served = client2.call(Call::apply(format!("svd_{d}"), col)).unwrap();
     assert_close(&served.column, &native.col(0), 1e-2, 1e-2).unwrap();
     server.stop();
 }

@@ -4,8 +4,8 @@
 //! adaptive deadlines).
 
 use fasth::coordinator::{
-    rendezvous_place, BatcherConfig, Client, DynamicBatcher, ExecEngine, ModelRegistry, OpKind,
-    Request, Server, ServerConfig,
+    rendezvous_place, BatcherConfig, Call, Client, DynamicBatcher, ExecEngine, ModelRegistry,
+    OpKind, Request, Server, ServerConfig,
 };
 use fasth::util::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -121,21 +121,15 @@ fn multi_model_traffic_across_three_shards() {
         let name = format!("rc_{i}");
         registry.create_rect(&name, 18, 12, None, ExecEngine::Native { k: 4 }, 60 + i);
     }
-    let server = Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            shards: 3,
-            workers: 1,
-            batcher: BatcherConfig {
-                max_batch: 8,
-                max_wait: Duration::from_millis(1),
-                ..Default::default()
-            },
-            max_queue_depth: 10_000,
-        },
-        registry,
-    )
-    .unwrap();
+    let config = ServerConfig::builder()
+        .shards(3)
+        .workers(1)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(1))
+        .max_queue_depth(10_000)
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry).unwrap();
     let addr = server.local_addr;
     let handles: Vec<_> = (0..4)
         .map(|c| {
@@ -146,15 +140,15 @@ fn multi_model_traffic_across_three_shards() {
                     let col: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
                     if i % 2 == 0 {
                         let model = format!("sq_{}", i % 4);
-                        let r = client.call(&model, OpKind::Apply, col).unwrap();
+                        let r = client.call(Call::apply(&model, col)).unwrap();
                         assert!(r.ok, "{model}: {:?}", r.error);
                         assert_eq!(r.column.len(), 12);
                     } else {
                         let model = format!("rc_{}", i % 4);
-                        let fwd = client.call(&model, OpKind::Apply, col).unwrap();
+                        let fwd = client.call(Call::apply(&model, col)).unwrap();
                         assert!(fwd.ok, "{model}: {:?}", fwd.error);
                         assert_eq!(fwd.column.len(), 18);
-                        let back = client.call(&model, OpKind::Pinv, fwd.column).unwrap();
+                        let back = client.call(Call::pinv(&model, fwd.column)).unwrap();
                         assert!(back.ok, "{model} pinv: {:?}", back.error);
                         assert_eq!(back.column.len(), 12);
                     }
@@ -182,30 +176,27 @@ fn multi_model_traffic_across_three_shards() {
 fn adaptive_deadline_server_roundtrips() {
     let registry = Arc::new(ModelRegistry::new());
     registry.create("m16", 16, ExecEngine::Native { k: 4 }, 77);
-    let server = Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            shards: 2,
-            workers: 2,
-            batcher: BatcherConfig {
-                max_batch: 16,
-                max_wait: Duration::from_millis(5),
-                adaptive: true,
-                min_wait: Duration::from_micros(200),
-                p50_fraction: 0.5,
-            },
-            max_queue_depth: 10_000,
-        },
-        registry,
-    )
-    .unwrap();
+    let config = ServerConfig::builder()
+        .shards(2)
+        .workers(2)
+        .batcher(BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            adaptive: true,
+            min_wait: Duration::from_micros(200),
+            p50_fraction: 0.5,
+        })
+        .max_queue_depth(10_000)
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry).unwrap();
     let mut client = Client::connect(&server.local_addr).unwrap();
     let mut rng = Rng::new(42);
     // Sequential single calls: one batch (= one latency observation)
     // each, enough to cross the adaptation threshold deterministically.
     for _ in 0..32 {
         let col: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
-        let r = client.call("m16", OpKind::Apply, col).unwrap();
+        let r = client.call(Call::apply("m16", col)).unwrap();
         assert!(r.ok, "{:?}", r.error);
     }
     // Sub-millisecond d=16 batches must have pulled the serving shard's
@@ -215,9 +206,10 @@ fn adaptive_deadline_server_roundtrips() {
     assert!(adapted < Duration::from_millis(5), "deadline never adapted: {adapted:?}");
     assert!(adapted >= Duration::from_micros(200), "deadline below floor: {adapted:?}");
     // Traffic under the adapted deadline still round-trips correctly.
-    let cols: Vec<Vec<f32>> =
-        (0..64).map(|_| (0..16).map(|_| rng.normal_f32()).collect()).collect();
-    let responses = client.call_many("m16", OpKind::Apply, cols).unwrap();
+    let calls: Vec<Call> = (0..64)
+        .map(|_| Call::apply("m16", (0..16).map(|_| rng.normal_f32()).collect()))
+        .collect();
+    let responses = client.call_many(calls).unwrap();
     assert_eq!(responses.len(), 64);
     assert!(responses.iter().all(|r| r.ok));
     server.stop();
