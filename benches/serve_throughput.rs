@@ -196,6 +196,17 @@ fn main() {
     let stats = admin.admin("stats").expect("stats");
     println!("server stats      : {stats}");
 
+    // Fault-health gate: the bench runs a clean config (no FaultPlan),
+    // so any worker panic or TTL shed during the run is a real
+    // regression. The counters ride in the report and CI's bench-smoke
+    // job greps them for 0.
+    let worker_panics =
+        server.metrics.worker_panics.load(std::sync::atomic::Ordering::Relaxed);
+    let requests_shed =
+        server.metrics.requests_shed_deadline.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(worker_panics, 0, "workers panicked during a clean bench run");
+    assert_eq!(requests_shed, 0, "requests shed during a clean bench run (no TTLs in play)");
+
     let report = Json::obj(vec![
         ("bench", Json::str("serve_throughput")),
         ("shards", Json::num(shards as f64)),
@@ -211,6 +222,8 @@ fn main() {
         ("churn_per_sec", Json::num(churn_per_sec)),
         ("concurrent_conns", Json::num(concurrent_conns as f64)),
         ("concurrent_rounds_secs", Json::num(conc_wall)),
+        ("worker_panics", Json::num(worker_panics as f64)),
+        ("requests_shed", Json::num(requests_shed as f64)),
         ("server_stats", Json::parse(&stats).expect("stats json")),
     ]);
     std::fs::create_dir_all("bench_out").expect("bench_out dir");

@@ -28,6 +28,7 @@
 
 use super::metrics::LatencyHist;
 use super::protocol::{OpKind, Request};
+use super::sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 use std::collections::{BTreeMap, VecDeque};
 use std::ops::Bound;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -72,6 +73,9 @@ pub struct Batch {
     pub model: String,
     pub op: OpKind,
     pub requests: Vec<Request>,
+    /// Requests whose `ttl_ms` expired while queued: shed at dequeue,
+    /// owed a `deadline_exceeded` error instead of execution.
+    pub shed: Vec<Request>,
     /// Why the batch flushed (metrics).
     pub full: bool,
 }
@@ -130,9 +134,9 @@ impl DynamicBatcher {
         self.config
     }
 
-    /// Enqueue a request.
+    /// Enqueue a request unconditionally.
     pub fn submit(&self, req: Request) {
-        let mut q = self.queues.lock().unwrap();
+        let mut q = lock_or_recover(&self.queues);
         q.by_key
             .entry((req.model.clone(), req.op))
             .or_default()
@@ -140,15 +144,38 @@ impl DynamicBatcher {
         self.signal.notify_all();
     }
 
+    /// Enqueue a request only if the total queued depth is below
+    /// `max_depth` and the batcher is still open. Depth check and
+    /// insert happen under one lock acquisition, so N reactors racing
+    /// through this cannot overshoot the cap the way a separate
+    /// `depth()`-then-`submit()` pair could. Returns the request on
+    /// rejection so the caller can answer it.
+    pub fn try_submit(&self, req: Request, max_depth: usize) -> Result<(), Request> {
+        let mut q = lock_or_recover(&self.queues);
+        if q.closed {
+            return Err(req);
+        }
+        let depth: usize = q.by_key.values().map(|v| v.len()).sum();
+        if depth >= max_depth {
+            return Err(req);
+        }
+        q.by_key
+            .entry((req.model.clone(), req.op))
+            .or_default()
+            .push_back(Pending { req, arrived: Instant::now() });
+        self.signal.notify_all();
+        Ok(())
+    }
+
     /// Stop accepting work and wake all consumers (they drain and exit).
     pub fn close(&self) {
-        self.queues.lock().unwrap().closed = true;
+        lock_or_recover(&self.queues).closed = true;
         self.signal.notify_all();
     }
 
     /// Total queued columns (for backpressure decisions).
     pub fn depth(&self) -> usize {
-        self.queues.lock().unwrap().by_key.values().map(|v| v.len()).sum()
+        lock_or_recover(&self.queues).by_key.values().map(|v| v.len()).sum()
     }
 
     /// Feed one observed batch service latency into the adaptive deadline.
@@ -222,7 +249,7 @@ impl DynamicBatcher {
     /// batcher closes (drain remaining, then `None`), or — with work
     /// pending — the deadline of the oldest request arrives.
     pub fn next_batch(&self) -> Option<Batch> {
-        let mut q = self.queues.lock().unwrap();
+        let mut q = lock_or_recover(&self.queues);
         loop {
             let wait = self.current_wait();
             let max_batch = self.current_max_batch();
@@ -269,11 +296,10 @@ impl DynamicBatcher {
             match nearest {
                 Some(deadline) => {
                     let sleep = deadline.saturating_duration_since(Instant::now());
-                    let (qq, _timeout) = self.signal.wait_timeout(q, sleep).unwrap();
-                    q = qq;
+                    q = wait_timeout_or_recover(&self.signal, q, sleep, &self.queues);
                 }
                 None => {
-                    q = self.signal.wait(q).unwrap();
+                    q = wait_or_recover(&self.signal, q, &self.queues);
                 }
             }
         }
@@ -302,12 +328,30 @@ impl DynamicBatcher {
     ) -> Batch {
         let queue = q.by_key.get_mut(key).expect("key exists");
         let take = queue.len().min(max_batch);
-        let requests: Vec<Request> = queue.drain(..take).map(|p| p.req).collect();
+        // Shed requests whose TTL expired while queued: they ride out
+        // in `shed` (owed a deadline_exceeded error) instead of wasting
+        // a batch slot on an answer nobody is waiting for. The batch
+        // may come out narrower than `take`; the remainder of the queue
+        // is picked up by the next flush.
+        let now = Instant::now();
+        let mut requests = Vec::with_capacity(take);
+        let mut shed = Vec::new();
+        for p in queue.drain(..take) {
+            let expired = p
+                .req
+                .ttl_ms
+                .is_some_and(|ttl| now.duration_since(p.arrived) > Duration::from_millis(ttl));
+            if expired {
+                shed.push(p.req);
+            } else {
+                requests.push(p.req);
+            }
+        }
         if queue.is_empty() {
             q.by_key.remove(key);
         }
         q.last_served = Some(key.clone());
-        Batch { model: key.0.clone(), op: key.1, requests, full }
+        Batch { model: key.0.clone(), op: key.1, requests, shed, full }
     }
 }
 
@@ -317,7 +361,7 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64, model: &str, op: OpKind) -> Request {
-        Request { id, model: model.into(), op, column: vec![1.0, 2.0] }
+        Request { id, model: model.into(), op, column: vec![1.0, 2.0], ttl_ms: None }
     }
 
     #[test]
@@ -452,6 +496,112 @@ mod tests {
         let second = b.next_batch().unwrap();
         assert_eq!(second.model, "burst");
         assert!(second.full);
+    }
+
+    #[test]
+    fn try_submit_enforces_cap_and_closed() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        assert!(b.try_submit(req(1, "m", OpKind::Apply), 2).is_ok());
+        assert!(b.try_submit(req(2, "n", OpKind::Apply), 2).is_ok());
+        // Cap counts total depth across keys, and the rejected request
+        // comes back so the caller can answer it.
+        let rejected = b.try_submit(req(3, "m", OpKind::Apply), 2).unwrap_err();
+        assert_eq!(rejected.id, 3);
+        assert_eq!(b.depth(), 2);
+        // A closed batcher rejects even under the cap.
+        b.close();
+        assert!(b.try_submit(req(4, "m", OpKind::Apply), 100).is_err());
+    }
+
+    #[test]
+    fn try_submit_cap_holds_under_racing_producers() {
+        // The TOCTOU this API closes: N threads racing depth-check +
+        // insert must never overshoot the cap. With check and insert
+        // under one lock, acceptances are exactly `cap`.
+        let cap = 64usize;
+        let b = Arc::new(DynamicBatcher::new(BatcherConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        }));
+        let accepted = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let producers: Vec<_> = (0..8)
+            .map(|p| {
+                let b = b.clone();
+                let accepted = accepted.clone();
+                std::thread::spawn(move || {
+                    for i in 0..40u64 {
+                        if b.try_submit(req(p * 100 + i, "m", OpKind::Apply), cap).is_ok() {
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        assert_eq!(accepted.load(Ordering::Relaxed), cap);
+        assert_eq!(b.depth(), cap);
+    }
+
+    #[test]
+    fn expired_ttl_requests_are_shed_at_dequeue() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 10,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        b.submit(Request { ttl_ms: Some(1), ..req(1, "m", OpKind::Apply) });
+        b.submit(Request { ttl_ms: Some(1), ..req(2, "m", OpKind::Apply) });
+        std::thread::sleep(Duration::from_millis(10));
+        // A fresh request (generous TTL) and an immortal one survive.
+        b.submit(Request { ttl_ms: Some(60_000), ..req(3, "m", OpKind::Apply) });
+        b.submit(req(4, "m", OpKind::Apply));
+        b.close();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn unexpired_ttl_requests_ride_normally() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        b.submit(Request { ttl_ms: Some(60_000), ..req(1, "m", OpKind::Apply) });
+        b.submit(Request { ttl_ms: Some(60_000), ..req(2, "m", OpKind::Apply) });
+        let batch = b.next_batch().unwrap();
+        assert!(batch.shed.is_empty());
+        assert_eq!(batch.requests.len(), 2);
+    }
+
+    #[test]
+    fn poisoned_producer_does_not_take_down_the_batcher() {
+        // A thread that panics while holding the queue lock must not
+        // poison every other producer/consumer.
+        let b = Arc::new(DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        }));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            let _g = lock_or_recover(&b2.queues);
+            panic!("poison on purpose");
+        });
+        assert!(t.join().is_err());
+        // Submit and drain still work.
+        b.submit(req(1, "m", OpKind::Apply));
+        b.close();
+        assert_eq!(b.next_batch().unwrap().requests.len(), 1);
     }
 
     #[test]

@@ -14,11 +14,41 @@
 
 use super::protocol::{Hello, OpKind, Request, Response, PROTO_VERSION};
 use crate::util::json::Json;
+use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// Automatic retry of responses the server marked `retryable` (see
+/// `docs/PROTOCOL.md`): capped exponential backoff with full jitter.
+/// Attempt `k` sleeps `U(0, min(base_backoff · 2^(k-1), max_backoff))`
+/// — the jitter decorrelates a thundering herd of clients that were all
+/// rejected by the same overloaded shard at the same instant.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Re-send a retryable failure at most this many times (0 disables
+    /// retries even with a policy installed).
+    pub max_retries: u32,
+    /// Backoff cap for the first retry.
+    pub base_backoff: Duration,
+    /// Backoff cap growth stops here.
+    pub max_backoff: Duration,
+    /// Seed for the jitter RNG (deterministic tests).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(2),
+            max_backoff: Duration::from_millis(200),
+            jitter_seed: 0x5EED,
+        }
+    }
+}
 
 /// Client knobs.
 #[derive(Clone, Debug)]
@@ -35,6 +65,9 @@ pub struct ClientConfig {
     /// Send the version handshake on connect. Off only for talking to
     /// pre-handshake servers or raw-socket testing.
     pub handshake: bool,
+    /// Automatic retry of `retryable` error responses. `None` (the
+    /// default) surfaces every error to the caller untouched.
+    pub retry: Option<RetryPolicy>,
 }
 
 impl Default for ClientConfig {
@@ -43,6 +76,7 @@ impl Default for ClientConfig {
             read_timeout: Duration::from_secs(30),
             max_pending: 1024,
             handshake: true,
+            retry: None,
         }
     }
 }
@@ -53,11 +87,22 @@ pub struct Call {
     model: String,
     op: OpKind,
     column: Vec<f32>,
+    ttl_ms: Option<u64>,
 }
 
 impl Call {
     pub fn new(model: impl Into<String>, op: OpKind, column: Vec<f32>) -> Call {
-        Call { model: model.into(), op, column }
+        Call { model: model.into(), op, column, ttl_ms: None }
+    }
+
+    /// Attach a queue deadline: if the server cannot start executing
+    /// the request within `ttl` of enqueueing it, it sheds the request
+    /// with a `deadline_exceeded` error instead of serving a stale
+    /// answer. Sub-millisecond TTLs round up to 1 ms (a 0 would expire
+    /// instantly).
+    pub fn ttl(mut self, ttl: Duration) -> Call {
+        self.ttl_ms = Some((ttl.as_millis() as u64).max(1));
+        self
     }
 
     /// `y = W·x`.
@@ -96,6 +141,10 @@ impl Call {
     pub fn column(&self) -> &[f32] {
         &self.column
     }
+
+    pub fn ttl_ms(&self) -> Option<u64> {
+        self.ttl_ms
+    }
 }
 
 /// Blocking client for tests, examples, benches, and the CLI.
@@ -109,6 +158,10 @@ pub struct Client {
     pending: HashMap<u64, Response>,
     config: ClientConfig,
     server_proto: Option<u32>,
+    /// Jitter source for retry backoff (seeded from the policy).
+    retry_rng: Rng,
+    /// Total re-sends performed by the retry layer on this connection.
+    retries: u64,
 }
 
 impl Client {
@@ -125,6 +178,7 @@ impl Client {
         }
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
+        let jitter_seed = config.retry.as_ref().map(|r| r.jitter_seed).unwrap_or(1);
         let mut client = Client {
             reader,
             writer,
@@ -132,6 +186,8 @@ impl Client {
             pending: HashMap::new(),
             config,
             server_proto: None,
+            retry_rng: Rng::new(jitter_seed),
+            retries: 0,
         };
         if client.config.handshake {
             client.handshake()?;
@@ -216,8 +272,13 @@ impl Client {
     pub fn send(&mut self, call: &Call) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        let req =
-            Request { id, model: call.model.clone(), op: call.op, column: call.column.clone() };
+        let req = Request {
+            id,
+            model: call.model.clone(),
+            op: call.op,
+            column: call.column.clone(),
+            ttl_ms: call.ttl_ms,
+        };
         writeln!(self.writer, "{}", req.to_json())?;
         self.writer.flush()?;
         Ok(id)
@@ -238,14 +299,48 @@ impl Client {
         }
     }
 
-    /// Send one call and wait for *its* response.
+    /// Send one call and wait for *its* response. With a
+    /// [`RetryPolicy`] installed, responses the server marked
+    /// `retryable` (overloaded, draining, internal_panic,
+    /// deadline_exceeded) are re-sent after a jittered backoff, up to
+    /// `max_retries` times; terminal errors (unknown_model,
+    /// bad_request) and transport errors surface immediately.
     pub fn call(&mut self, call: Call) -> Result<Response> {
         let id = self.send(&call)?;
-        self.wait_for(id)
+        let mut resp = self.wait_for(id)?;
+        let Some(policy) = self.config.retry.clone() else {
+            return Ok(resp);
+        };
+        let mut attempt = 0u32;
+        while !resp.ok && resp.retryable && attempt < policy.max_retries {
+            attempt += 1;
+            self.retries += 1;
+            self.backoff(&policy, attempt);
+            let id = self.send(&call)?;
+            resp = self.wait_for(id)?;
+        }
+        Ok(resp)
+    }
+
+    /// Sleep `U(0, min(base · 2^(attempt-1), max_backoff))`.
+    fn backoff(&mut self, policy: &RetryPolicy, attempt: u32) {
+        let base = policy.base_backoff.as_micros() as u64;
+        let cap = policy.max_backoff.as_micros() as u64;
+        let exp = base.saturating_mul(1u64 << (attempt - 1).min(20));
+        let ceil = exp.min(cap);
+        let us = (ceil as f64 * self.retry_rng.uniform()) as u64;
+        std::thread::sleep(Duration::from_micros(us));
+    }
+
+    /// Re-sends performed by the retry layer on this connection.
+    pub fn retries(&self) -> u64 {
+        self.retries
     }
 
     /// Pipeline many calls, keeping at most `max_pending` in flight
     /// (exercises batching: the server coalesces in-flight requests).
+    /// With a [`RetryPolicy`] installed, retryable failures are retried
+    /// one at a time after the pipelined pass completes.
     pub fn call_many(&mut self, calls: Vec<Call>) -> Result<Vec<Response>> {
         let n = calls.len();
         let window = self.config.max_pending.max(1);
@@ -262,7 +357,17 @@ impl Client {
         for (slot, id) in out.iter_mut().zip(ids.iter()).skip(waited) {
             *slot = Some(self.wait_for(*id)?);
         }
-        Ok(out.into_iter().map(|o| o.expect("every slot filled")).collect())
+        let mut out: Vec<Response> =
+            out.into_iter().map(|o| o.expect("every slot filled")).collect();
+        if self.config.retry.is_some() {
+            for (slot, call) in out.iter_mut().zip(&calls) {
+                if !slot.ok && slot.retryable {
+                    // call() handles per-attempt backoff and caps.
+                    *slot = self.call(call.clone())?;
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Admin command returning the raw reply (`stats`, `models`,
@@ -302,6 +407,10 @@ mod tests {
         assert_eq!(c.model(), "m");
         assert_eq!(c.op(), OpKind::Apply);
         assert_eq!(c.column(), &[1.0, 2.0]);
+        assert_eq!(c.ttl_ms(), None);
+        assert_eq!(c.clone().ttl(Duration::from_millis(40)).ttl_ms(), Some(40));
+        // Sub-millisecond TTLs round up instead of expiring instantly.
+        assert_eq!(c.clone().ttl(Duration::from_micros(10)).ttl_ms(), Some(1));
         assert_eq!(Call::inverse("m", vec![0.0]).op(), OpKind::Inverse);
         assert_eq!(Call::expm("m", vec![0.0]).op(), OpKind::Expm);
         assert_eq!(Call::cayley("m", vec![0.0]).op(), OpKind::Cayley);
@@ -358,6 +467,65 @@ mod tests {
         assert_eq!(client.server_proto(), Some(1));
         let err = client.call(Call::apply("m", vec![0.0])).unwrap_err();
         assert!(format!("{err:#}").contains("max_pending"), "{err:#}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn retryable_errors_are_retried_terminal_are_not() {
+        // A fake server: answers the handshake, rejects the first two
+        // requests as overloaded (retryable), serves the third, then
+        // answers one more with unknown_model (terminal).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut w = BufWriter::new(stream);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap(); // hello
+            writeln!(w, "{{\"ok\":true,\"proto\":1}}").unwrap();
+            w.flush().unwrap();
+            for n in 0..4u32 {
+                line.clear();
+                r.read_line(&mut line).unwrap();
+                let id = Json::parse(line.trim()).unwrap().get("id").as_f64().unwrap() as u64;
+                let reply = match n {
+                    0 | 1 => format!(
+                        "{{\"id\":{id},\"ok\":false,\"error\":\"server overloaded\",\
+                         \"code\":\"overloaded\",\"retryable\":true}}"
+                    ),
+                    2 => format!("{{\"id\":{id},\"ok\":true,\"column\":[7]}}"),
+                    _ => format!(
+                        "{{\"id\":{id},\"ok\":false,\"error\":\"unknown model 'm'\",\
+                         \"code\":\"unknown_model\",\"retryable\":false}}"
+                    ),
+                };
+                writeln!(w, "{reply}").unwrap();
+                w.flush().unwrap();
+            }
+        });
+        let cfg = ClientConfig {
+            read_timeout: Duration::from_secs(2),
+            retry: Some(RetryPolicy {
+                base_backoff: Duration::from_micros(100),
+                max_backoff: Duration::from_millis(1),
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut client = Client::connect_with(&addr, cfg).unwrap();
+        // Two overloaded rejections are retried through to the success.
+        let resp = client.call(Call::apply("m", vec![0.0])).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.column, vec![7.0]);
+        assert_eq!(client.retries(), 2);
+        // A terminal error surfaces immediately — no extra sends (the
+        // fake server would hang the read if a 5th request arrived,
+        // and the retry counter must not move).
+        let resp = client.call(Call::apply("m", vec![0.0])).unwrap();
+        assert!(!resp.ok);
+        assert!(!resp.retryable);
+        assert_eq!(client.retries(), 2);
         t.join().unwrap();
     }
 }

@@ -1,0 +1,207 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a small, seeded schedule of failures threaded
+//! through the worker loop and the reactor flush path (only when the
+//! operator opts in via `ServerConfig::faults` — production configs
+//! carry `None` and pay nothing):
+//!
+//! - **panic-on-nth-batch**: `batch_fault` schedules a panic on every
+//!   Nth batch executed server-wide, exercising `catch_unwind`
+//!   isolation, the structured `internal_panic` error fan-out, and the
+//!   supervisor's worker respawn.
+//! - **added batch latency**: `batch_fault` schedules a sleep on every
+//!   Nth batch, exercising TTL shedding (`deadline_exceeded`) and
+//!   adaptive-deadline behavior under slow service.
+//! - **connection drop on nth flush**: `drop_this_flush` kills the
+//!   connection instead of flushing on every Nth non-empty flush,
+//!   exercising client reconnect/retry and route teardown.
+//!
+//! Counters are process-global (shared through the plan's `Arc`), so a
+//! given seed produces the same fault *ordinals* regardless of how many
+//! workers or reactors race — the chaos suite in
+//! `rust/tests/server_faults.rs` and the nightly chaos CI lane replay
+//! seeds from `FASTH_FAULT_SEED`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What `before_batch` decided for the current batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchFault {
+    /// Execute normally.
+    None,
+    /// Sleep this long before executing (injected service latency).
+    Delay(Duration),
+    /// The batch ordinal that panics (after any scheduled delay).
+    Panic(u64),
+}
+
+#[derive(Debug, Default)]
+struct FaultSeq {
+    batches: AtomicU64,
+    flushes: AtomicU64,
+}
+
+/// A seeded, deterministic schedule of injected failures.
+///
+/// Cloning shares the ordinal counters, so one plan handed to every
+/// worker and reactor fires each fault exactly once per schedule slot.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Panic on every Nth batch (0 = never).
+    pub panic_every: u64,
+    /// Sleep `delay` before every Nth batch (0 = never).
+    pub delay_every: u64,
+    pub delay: Duration,
+    /// Drop the connection instead of flushing on every Nth non-empty
+    /// flush (0 = never).
+    pub drop_conn_every: u64,
+    seq: Arc<FaultSeq>,
+}
+
+impl FaultPlan {
+    /// An empty plan: injects nothing until knobs are set.
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Derive a mixed panic + latency plan from a seed (the chaos-lane
+    /// entry point): `panic_every` ∈ [3, 9], `delay_every` ∈ [2, 6],
+    /// `delay` ∈ [1, 15] ms. Connection drops stay opt-in
+    /// ([`FaultPlan::drop_conn_every`]) because which connection a
+    /// global flush ordinal lands on is scheduling-dependent.
+    pub fn from_seed(seed: u64) -> FaultPlan {
+        let a = splitmix64(seed);
+        let b = splitmix64(a);
+        let c = splitmix64(b);
+        FaultPlan {
+            panic_every: 3 + a % 7,
+            delay_every: 2 + b % 5,
+            delay: Duration::from_millis(1 + c % 15),
+            drop_conn_every: 0,
+            seq: Arc::new(FaultSeq::default()),
+        }
+    }
+
+    /// Panic on every `n`th batch.
+    pub fn panic_every(mut self, n: u64) -> FaultPlan {
+        self.panic_every = n;
+        self
+    }
+
+    /// Sleep `delay` before every `n`th batch.
+    pub fn delay_every(mut self, n: u64, delay: Duration) -> FaultPlan {
+        self.delay_every = n;
+        self.delay = delay;
+        self
+    }
+
+    /// Drop the connection instead of flushing on every `n`th flush.
+    pub fn drop_conn_every(mut self, n: u64) -> FaultPlan {
+        self.drop_conn_every = n;
+        self
+    }
+
+    /// Consume one batch ordinal and return the scheduled fault. The
+    /// caller (the worker loop) sleeps on `Delay` and `panic!`s on
+    /// `Panic` *inside* its `catch_unwind` region.
+    pub fn batch_fault(&self) -> BatchFault {
+        let n = self.seq.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.panic_every > 0 && n % self.panic_every == 0 {
+            return BatchFault::Panic(n);
+        }
+        if self.delay_every > 0 && n % self.delay_every == 0 {
+            return BatchFault::Delay(self.delay);
+        }
+        BatchFault::None
+    }
+
+    /// Consume one flush ordinal; `true` means the reactor should drop
+    /// the connection instead of writing. Call only with bytes pending,
+    /// so empty service passes don't burn schedule slots.
+    pub fn drop_this_flush(&self) -> bool {
+        if self.drop_conn_every == 0 {
+            return false;
+        }
+        let n = self.seq.flushes.fetch_add(1, Ordering::Relaxed) + 1;
+        n % self.drop_conn_every == 0
+    }
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let p = FaultPlan::new();
+        for _ in 0..64 {
+            assert_eq!(p.batch_fault(), BatchFault::None);
+            assert!(!p.drop_this_flush());
+        }
+    }
+
+    #[test]
+    fn panic_beats_delay_on_shared_ordinals() {
+        // panic_every=2, delay_every=3: ordinal 6 panics (panic wins).
+        let p = FaultPlan::new()
+            .panic_every(2)
+            .delay_every(3, Duration::from_millis(5));
+        let faults: Vec<BatchFault> = (0..6).map(|_| p.batch_fault()).collect();
+        assert_eq!(faults[0], BatchFault::None); // 1
+        assert_eq!(faults[1], BatchFault::Panic(2)); // 2
+        assert_eq!(faults[2], BatchFault::Delay(Duration::from_millis(5))); // 3
+        assert_eq!(faults[3], BatchFault::Panic(4)); // 4
+        assert_eq!(faults[4], BatchFault::None); // 5
+        assert_eq!(faults[5], BatchFault::Panic(6)); // 6: panic wins
+    }
+
+    #[test]
+    fn clones_share_the_schedule() {
+        // Two clones (two "workers") split the same ordinal sequence —
+        // exactly one panic fires across both for panic_every=2, n=2.
+        let p = FaultPlan::new().panic_every(2);
+        let q = p.clone();
+        let a = p.batch_fault();
+        let b = q.batch_fault();
+        assert_eq!(
+            [a, b].iter().filter(|f| matches!(f, BatchFault::Panic(_))).count(),
+            1,
+            "{a:?} {b:?}"
+        );
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_in_range() {
+        for seed in [0u64, 1, 0xFA17, u64::MAX] {
+            let p = FaultPlan::from_seed(seed);
+            let q = FaultPlan::from_seed(seed);
+            assert_eq!(p.panic_every, q.panic_every);
+            assert_eq!(p.delay_every, q.delay_every);
+            assert_eq!(p.delay, q.delay);
+            assert!((3..=9).contains(&p.panic_every), "{p:?}");
+            assert!((2..=6).contains(&p.delay_every), "{p:?}");
+            assert!(p.delay >= Duration::from_millis(1) && p.delay <= Duration::from_millis(15));
+            assert_eq!(p.drop_conn_every, 0);
+        }
+        // Different seeds disagree somewhere (sanity, not crypto).
+        let plans: Vec<u64> =
+            (0..16).map(|s| FaultPlan::from_seed(s).panic_every).collect();
+        assert!(plans.iter().any(|&e| e != plans[0]), "{plans:?}");
+    }
+
+    #[test]
+    fn flush_drops_fire_on_schedule() {
+        let p = FaultPlan::new().drop_conn_every(3);
+        let drops: Vec<bool> = (0..6).map(|_| p.drop_this_flush()).collect();
+        assert_eq!(drops, vec![false, false, true, false, false, true]);
+    }
+}

@@ -2,7 +2,7 @@
 //! (aggregate and per-op), with JSON (`stats` admin) and Prometheus-ish
 //! text (`metrics` admin) renderers.
 
-use super::protocol::OpKind;
+use super::protocol::{ErrorCode, OpKind};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Histogram bucket upper bounds in microseconds (last bucket = +∞).
@@ -92,6 +92,18 @@ pub struct Metrics {
     pub conn_pauses: AtomicU64,
     pub bytes_read: AtomicU64,
     pub bytes_written: AtomicU64,
+    /// Worker panics caught by the `catch_unwind` isolation layer.
+    pub worker_panics: AtomicU64,
+    /// Workers respawned by the supervisor after a panic exit.
+    pub worker_respawns: AtomicU64,
+    /// Requests shed at dequeue because their `ttl_ms` had expired.
+    pub requests_shed_deadline: AtomicU64,
+    /// Wall time the last graceful drain took (gauge, µs; 0 = never
+    /// drained).
+    pub drain_duration_us: AtomicU64,
+    /// Failed responses by [`ErrorCode::index`] (each bump also counts
+    /// in `responses_err` via [`Metrics::count_err_code`]).
+    err_by_code: [AtomicU64; ErrorCode::ALL.len()],
     latency: LatencyHist,
     /// Per-op latency histograms, indexed by [`OpKind::index`].
     per_op: [LatencyHist; OpKind::ALL.len()],
@@ -116,6 +128,20 @@ impl Metrics {
     /// The latency histogram of one op (tests / dashboards).
     pub fn op_hist(&self, op: OpKind) -> &LatencyHist {
         &self.per_op[op.index()]
+    }
+
+    /// Count `n` failed responses under `code` (bumps both the per-code
+    /// counter and the `responses_err` aggregate, keeping the invariant
+    /// `responses_err == Σ err_by_code` for every error emitted through
+    /// this path).
+    pub fn count_err_code(&self, code: ErrorCode, n: u64) {
+        self.responses_err.fetch_add(n, Ordering::Relaxed);
+        self.err_by_code[code.index()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Failed responses recorded under `code`.
+    pub fn err_code_count(&self, code: ErrorCode) -> u64 {
+        self.err_by_code[code.index()].load(Ordering::Relaxed)
     }
 
     /// Mean batch size so far (the FastH utilization knob).
@@ -171,6 +197,10 @@ impl Metrics {
         }
         let depths: Vec<Json> = shard_depths.iter().map(|&d| Json::num(d as f64)).collect();
         let reactors: Vec<Json> = reactor_conns.iter().map(|&c| Json::num(c as f64)).collect();
+        let by_code: Vec<(&str, Json)> = ErrorCode::ALL
+            .into_iter()
+            .map(|c| (c.name(), Json::num(self.err_code_count(c) as f64)))
+            .collect();
         Json::obj(vec![
             ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
             ("responses_ok", Json::num(self.responses_ok.load(Ordering::Relaxed) as f64)),
@@ -202,6 +232,20 @@ impl Metrics {
             ("conn_pauses", Json::num(self.conn_pauses.load(Ordering::Relaxed) as f64)),
             ("bytes_read", Json::num(self.bytes_read.load(Ordering::Relaxed) as f64)),
             ("bytes_written", Json::num(self.bytes_written.load(Ordering::Relaxed) as f64)),
+            ("worker_panics", Json::num(self.worker_panics.load(Ordering::Relaxed) as f64)),
+            (
+                "worker_respawns",
+                Json::num(self.worker_respawns.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "requests_shed_deadline",
+                Json::num(self.requests_shed_deadline.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "drain_duration_us",
+                Json::num(self.drain_duration_us.load(Ordering::Relaxed) as f64),
+            ),
+            ("responses_err_by_code", Json::obj(by_code)),
             ("per_op", Json::obj(per_op)),
         ])
         .to_string()
@@ -212,7 +256,7 @@ impl Metrics {
     pub fn to_prometheus(&self, shard_depths: &[usize], reactor_conns: &[usize]) -> String {
         use std::fmt::Write;
         let mut out = String::new();
-        let counters: [(&str, &AtomicU64); 12] = [
+        let counters: [(&str, &AtomicU64); 16] = [
             ("orthoserve_requests_total", &self.requests),
             ("orthoserve_responses_ok_total", &self.responses_ok),
             ("orthoserve_responses_err_total", &self.responses_err),
@@ -225,9 +269,21 @@ impl Metrics {
             ("orthoserve_conn_pauses_total", &self.conn_pauses),
             ("orthoserve_bytes_read_total", &self.bytes_read),
             ("orthoserve_bytes_written_total", &self.bytes_written),
+            ("orthoserve_worker_panics_total", &self.worker_panics),
+            ("orthoserve_worker_respawns_total", &self.worker_respawns),
+            ("orthoserve_requests_shed_deadline_total", &self.requests_shed_deadline),
+            ("orthoserve_drain_duration_us", &self.drain_duration_us),
         ];
         for (name, c) in counters {
             let _ = writeln!(out, "{name} {}", c.load(Ordering::Relaxed));
+        }
+        for code in ErrorCode::ALL {
+            let _ = writeln!(
+                out,
+                "orthoserve_responses_err_by_code_total{{code=\"{}\"}} {}",
+                code.name(),
+                self.err_code_count(code)
+            );
         }
         let _ = writeln!(out, "orthoserve_mean_batch_size {}", self.mean_batch_size());
         for op in OpKind::ALL {
@@ -330,6 +386,35 @@ mod tests {
         let apply = j.get("per_op").get("apply");
         assert_eq!(apply.get("count").as_usize(), Some(1));
         assert_eq!(apply.get("hist").as_arr().unwrap().len(), LATENCY_BUCKETS_US.len());
+    }
+
+    #[test]
+    fn err_codes_aggregate_and_render() {
+        let m = Metrics::new();
+        m.count_err_code(ErrorCode::Overloaded, 2);
+        m.count_err_code(ErrorCode::InternalPanic, 1);
+        m.worker_panics.fetch_add(1, Ordering::Relaxed);
+        m.requests_shed_deadline.fetch_add(3, Ordering::Relaxed);
+        m.drain_duration_us.store(1234, Ordering::Relaxed);
+        // Per-code counts feed the responses_err aggregate.
+        assert_eq!(m.responses_err.load(Ordering::Relaxed), 3);
+        assert_eq!(m.err_code_count(ErrorCode::Overloaded), 2);
+        assert_eq!(m.err_code_count(ErrorCode::BadRequest), 0);
+        let j = crate::util::json::Json::parse(&m.to_json()).unwrap();
+        assert_eq!(j.get("worker_panics").as_usize(), Some(1));
+        assert_eq!(j.get("requests_shed_deadline").as_usize(), Some(3));
+        assert_eq!(j.get("drain_duration_us").as_usize(), Some(1234));
+        let by_code = j.get("responses_err_by_code");
+        assert_eq!(by_code.get("overloaded").as_usize(), Some(2));
+        assert_eq!(by_code.get("internal_panic").as_usize(), Some(1));
+        assert_eq!(by_code.get("deadline_exceeded").as_usize(), Some(0));
+        let text = m.to_prometheus(&[], &[]);
+        assert!(text.contains("orthoserve_worker_panics_total 1"), "{text}");
+        assert!(text.contains("orthoserve_requests_shed_deadline_total 3"), "{text}");
+        assert!(
+            text.contains("orthoserve_responses_err_by_code_total{code=\"overloaded\"} 2"),
+            "{text}"
+        );
     }
 
     #[test]

@@ -13,31 +13,42 @@
 //!   rectangular [`crate::svd::rect::RectSvdParam`] entries with a
 //!   native-FastH or PJRT-artifact execution engine),
 //! - [`batcher`]: the dynamic batcher (flush on size or adaptive
-//!   deadline, with per-key fairness),
+//!   deadline, with per-key fairness and TTL shedding at dequeue),
 //! - [`shard`]: S independent `(batcher, worker pool, registry
 //!   partition, response routes)` shards, models placed by rendezvous
 //!   hashing on name,
-//! - [`worker`]: batch execution (assemble `X`, run, scatter results),
+//! - [`worker`]: batch execution (assemble `X`, run, scatter results)
+//!   behind a `catch_unwind` panic-isolation boundary,
 //! - [`reactor`]: the evented I/O core — N reactor threads multiplex
 //!   every connection (epoll on Linux, poll-tick fallback elsewhere)
 //!   with per-connection pipelining backpressure,
 //! - [`server`]: the TCP front-end wiring reactors, shards, and workers,
-//! - [`client`]: the blocking client ([`Call`] builder + [`ClientConfig`]).
+//!   with a worker supervisor (respawn on panic) and graceful drain,
+//! - [`client`]: the blocking client ([`Call`] builder + [`ClientConfig`],
+//!   optional [`RetryPolicy`] for `retryable` error envelopes),
+//! - [`sync`]: poison-tolerant lock helpers every coordinator lock
+//!   routes through,
+//! - [`faults`]: seeded deterministic fault injection ([`FaultPlan`])
+//!   for the chaos suite.
 
 pub mod batcher;
 pub mod client;
+pub mod faults;
 pub mod metrics;
 pub mod protocol;
 pub mod reactor;
 pub mod server;
 pub mod shard;
 pub mod state;
+pub mod sync;
 pub mod worker;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use client::{Call, Client, ClientConfig};
-pub use protocol::{OpKind, Request, Response, PROTO_VERSION};
+pub use client::{Call, Client, ClientConfig, RetryPolicy};
+pub use faults::{BatchFault, FaultPlan};
+pub use protocol::{ErrorCode, OpKind, Request, Response, PROTO_VERSION};
 pub use reactor::{ConnHandle, FrameDecoder, ResponseTx};
 pub use server::{Server, ServerConfig, ServerConfigBuilder};
 pub use shard::{rendezvous_place, Shard, ShardSet};
 pub use state::{ExecEngine, ModelEntry, ModelRegistry};
+pub use worker::WorkerExit;

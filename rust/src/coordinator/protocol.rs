@@ -30,6 +30,86 @@ pub mod v1 {
     /// The protocol version this module defines.
     pub const VERSION: u32 = 1;
 
+    /// Machine-readable error classification on failed responses (the
+    /// `code` field of the error envelope). Added additively in-place —
+    /// clients predating it see the same `ok:false` + `error` string as
+    /// before. Each code carries a fixed retryability: because every
+    /// served op is pure (apply/inverse/expm/cayley/pinv are stateless
+    /// matrix actions), a request that *provably never executed* — or
+    /// whose re-execution is idempotent — is safe to resend.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+    pub enum ErrorCode {
+        /// The target shard's queue was at `max_queue_depth`; the
+        /// request was never enqueued.
+        Overloaded,
+        /// The request's `ttl_ms` expired while queued; shed before
+        /// execution.
+        DeadlineExceeded,
+        /// The server is draining for shutdown; the request was never
+        /// enqueued. Retry against a replacement instance.
+        Draining,
+        /// A worker panicked executing the batch this request rode in.
+        /// Ops are idempotent, so a retry is safe.
+        InternalPanic,
+        /// No model registered under the requested name.
+        UnknownModel,
+        /// The request itself is invalid (parse failure, wrong column
+        /// length, op/shape mismatch, oversized frame).
+        BadRequest,
+    }
+
+    impl ErrorCode {
+        /// Every code, in stable order (per-code metrics index on this).
+        pub const ALL: [ErrorCode; 6] = [
+            ErrorCode::Overloaded,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Draining,
+            ErrorCode::InternalPanic,
+            ErrorCode::UnknownModel,
+            ErrorCode::BadRequest,
+        ];
+
+        /// Position in [`ErrorCode::ALL`].
+        pub fn index(self) -> usize {
+            match self {
+                ErrorCode::Overloaded => 0,
+                ErrorCode::DeadlineExceeded => 1,
+                ErrorCode::Draining => 2,
+                ErrorCode::InternalPanic => 3,
+                ErrorCode::UnknownModel => 4,
+                ErrorCode::BadRequest => 5,
+            }
+        }
+
+        pub fn name(self) -> &'static str {
+            match self {
+                ErrorCode::Overloaded => "overloaded",
+                ErrorCode::DeadlineExceeded => "deadline_exceeded",
+                ErrorCode::Draining => "draining",
+                ErrorCode::InternalPanic => "internal_panic",
+                ErrorCode::UnknownModel => "unknown_model",
+                ErrorCode::BadRequest => "bad_request",
+            }
+        }
+
+        pub fn parse(s: &str) -> Option<ErrorCode> {
+            ErrorCode::ALL.into_iter().find(|c| c.name() == s)
+        }
+
+        /// Whether a client may safely resend the failed request.
+        /// Transient server states are retryable; requests the server
+        /// will deterministically reject again are not.
+        pub fn retryable(self) -> bool {
+            match self {
+                ErrorCode::Overloaded
+                | ErrorCode::DeadlineExceeded
+                | ErrorCode::Draining
+                | ErrorCode::InternalPanic => true,
+                ErrorCode::UnknownModel | ErrorCode::BadRequest => false,
+            }
+        }
+    }
+
     /// Connection handshake frame: `{"cmd":"hello","proto":1}`.
     #[derive(Clone, Copy, Debug, PartialEq, Eq)]
     pub struct Hello {
@@ -126,11 +206,16 @@ pub mod v1 {
         pub model: String,
         pub op: OpKind,
         pub column: Vec<f32>,
+        /// Optional deadline: if the request waits in a shard queue for
+        /// longer than this many milliseconds, the batcher sheds it at
+        /// dequeue with `code=deadline_exceeded` instead of wasting
+        /// engine time on an answer the client stopped waiting for.
+        pub ttl_ms: Option<u64>,
     }
 
     impl Request {
         pub fn to_json(&self) -> String {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("id", Json::num(self.id as f64)),
                 ("model", Json::str(&self.model)),
                 ("op", Json::str(self.op.name())),
@@ -138,8 +223,11 @@ pub mod v1 {
                     "column",
                     Json::arr(self.column.iter().map(|&x| Json::num(x as f64)).collect()),
                 ),
-            ])
-            .to_string()
+            ];
+            if let Some(ttl) = self.ttl_ms {
+                fields.push(("ttl_ms", Json::num(ttl as f64)));
+            }
+            Json::obj(fields).to_string()
         }
 
         pub fn from_json(line: &str) -> Result<Request> {
@@ -157,7 +245,8 @@ pub mod v1 {
             if column.is_empty() {
                 bail!("request: empty column");
             }
-            Ok(Request { id, model, op, column })
+            let ttl_ms = j.get("ttl_ms").as_f64().map(|t| t.max(0.0) as u64);
+            Ok(Request { id, model, op, column, ttl_ms })
         }
     }
 
@@ -168,6 +257,12 @@ pub mod v1 {
         pub ok: bool,
         pub column: Vec<f32>,
         pub error: Option<String>,
+        /// Machine-readable classification on failures (absent on
+        /// success and on frames from pre-code servers).
+        pub code: Option<ErrorCode>,
+        /// Whether the client may safely resend the failed request
+        /// (`false` on success frames; meaningful only with `ok:false`).
+        pub retryable: bool,
         /// How many requests shared the executed batch.
         pub batch_size: usize,
         /// End-to-end service latency.
@@ -176,15 +271,35 @@ pub mod v1 {
 
     impl Response {
         pub fn ok(id: u64, column: Vec<f32>, batch_size: usize, latency_us: u64) -> Response {
-            Response { id, ok: true, column, error: None, batch_size, latency_us }
+            Response {
+                id,
+                ok: true,
+                column,
+                error: None,
+                code: None,
+                retryable: false,
+                batch_size,
+                latency_us,
+            }
         }
 
+        /// An error envelope with the default `bad_request`
+        /// classification (non-retryable). Prefer [`Response::err_code`]
+        /// where a more specific code applies.
         pub fn err(id: u64, msg: impl Into<String>) -> Response {
+            Response::err_code(id, ErrorCode::BadRequest, msg)
+        }
+
+        /// An error envelope carrying an explicit code; `retryable`
+        /// follows the code's fixed classification.
+        pub fn err_code(id: u64, code: ErrorCode, msg: impl Into<String>) -> Response {
             Response {
                 id,
                 ok: false,
                 column: Vec::new(),
                 error: Some(msg.into()),
+                code: Some(code),
+                retryable: code.retryable(),
                 batch_size: 0,
                 latency_us: 0,
             }
@@ -204,6 +319,10 @@ pub mod v1 {
             if let Some(e) = &self.error {
                 fields.push(("error", Json::str(e)));
             }
+            if let Some(c) = self.code {
+                fields.push(("code", Json::str(c.name())));
+                fields.push(("retryable", Json::Bool(self.retryable)));
+            }
             Json::obj(fields).to_string()
         }
 
@@ -220,6 +339,10 @@ pub mod v1 {
                     .filter_map(|v| v.as_f64().map(|f| f as f32))
                     .collect(),
                 error: j.get("error").as_str().map(|s| s.to_string()),
+                // Unknown code strings stay None (forward compatibility:
+                // a v1 server may grow codes without a version bump).
+                code: j.get("code").as_str().and_then(ErrorCode::parse),
+                retryable: j.get("retryable").as_bool().unwrap_or(false),
                 batch_size: j.get("batch_size").as_usize().unwrap_or(0),
                 latency_us: j.get("latency_us").as_f64().unwrap_or(0.0) as u64,
             })
@@ -230,7 +353,7 @@ pub mod v1 {
 /// The protocol version this build of the coordinator speaks.
 pub const PROTO_VERSION: u32 = v1::VERSION;
 
-pub use v1::{Hello, OpKind, Request, Response};
+pub use v1::{ErrorCode, Hello, OpKind, Request, Response};
 
 #[cfg(test)]
 mod tests {
@@ -243,9 +366,16 @@ mod tests {
             model: "svd_64".into(),
             op: OpKind::Inverse,
             column: vec![1.0, -2.5, 3.25],
+            ttl_ms: None,
         };
         let back = Request::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
+        // ttl_ms is optional on the wire: absent stays None, present
+        // round-trips.
+        assert!(!r.to_json().contains("ttl_ms"));
+        let with_ttl = Request { ttl_ms: Some(250), ..r };
+        let back = Request::from_json(&with_ttl.to_json()).unwrap();
+        assert_eq!(back, with_ttl);
     }
 
     #[test]
@@ -253,10 +383,39 @@ mod tests {
         let r = Response::ok(7, vec![0.5, 1.5], 4, 999);
         let back = Response::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
+        // Success frames carry no code/retryable noise.
+        assert!(!r.to_json().contains("code"));
         let e = Response::err(8, "boom");
         let back = Response::from_json(&e.to_json()).unwrap();
         assert!(!back.ok);
         assert_eq!(back.error.as_deref(), Some("boom"));
+        assert_eq!(back.code, Some(ErrorCode::BadRequest));
+        assert!(!back.retryable);
+        let e = Response::err_code(9, ErrorCode::Overloaded, "queue full");
+        let back = Response::from_json(&e.to_json()).unwrap();
+        assert_eq!(back, e);
+        assert_eq!(back.code, Some(ErrorCode::Overloaded));
+        assert!(back.retryable);
+        // Pre-code frames (old servers) parse with code None.
+        let old = Response::from_json(r#"{"id":3,"ok":false,"error":"boom"}"#).unwrap();
+        assert_eq!(old.code, None);
+        assert!(!old.retryable);
+    }
+
+    #[test]
+    fn error_codes_are_stable_and_classified() {
+        for (i, code) in ErrorCode::ALL.into_iter().enumerate() {
+            assert_eq!(code.index(), i);
+            assert_eq!(ErrorCode::parse(code.name()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("nonsense"), None);
+        // Transient server states retry; deterministic rejections don't.
+        assert!(ErrorCode::Overloaded.retryable());
+        assert!(ErrorCode::DeadlineExceeded.retryable());
+        assert!(ErrorCode::Draining.retryable());
+        assert!(ErrorCode::InternalPanic.retryable());
+        assert!(!ErrorCode::UnknownModel.retryable());
+        assert!(!ErrorCode::BadRequest.retryable());
     }
 
     #[test]

@@ -21,10 +21,12 @@
 //! waker; the reactor serializes all socket writes, so frames can never
 //! interleave.
 
+use super::faults::FaultPlan;
 use super::metrics::Metrics;
-use super::protocol::{Request, Response, PROTO_VERSION};
+use super::protocol::{ErrorCode, Request, Response, PROTO_VERSION};
 use super::shard::ShardSet;
 use super::state::ModelRegistry;
+use super::sync::lock_or_recover;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -216,6 +218,7 @@ mod sys {
 /// efficient — Linux gets the real epoll path.
 #[cfg(not(target_os = "linux"))]
 mod sys {
+    use super::super::sync::{lock_or_recover, wait_timeout_or_recover};
     use super::Event;
     use std::collections::HashMap;
     use std::io;
@@ -248,17 +251,17 @@ mod sys {
 
     impl Selector {
         pub fn register(&self, _s: &TcpStream, id: u64, r: bool, w: bool) -> io::Result<()> {
-            self.inner.interest.lock().unwrap().insert(id, (r, w));
+            lock_or_recover(&self.inner.interest).insert(id, (r, w));
             Ok(())
         }
 
         pub fn reregister(&self, _s: &TcpStream, id: u64, r: bool, w: bool) -> io::Result<()> {
-            self.inner.interest.lock().unwrap().insert(id, (r, w));
+            lock_or_recover(&self.inner.interest).insert(id, (r, w));
             Ok(())
         }
 
         pub fn deregister(&self, _s: &TcpStream, id: u64) -> io::Result<()> {
-            self.inner.interest.lock().unwrap().remove(&id);
+            lock_or_recover(&self.inner.interest).remove(&id);
             Ok(())
         }
 
@@ -266,15 +269,15 @@ mod sys {
             out.clear();
             let tick = timeout.min(Duration::from_millis(2));
             {
-                let gate = self.inner.gate.lock().unwrap();
+                let gate = lock_or_recover(&self.inner.gate);
                 let mut gate = if *gate {
                     gate
                 } else {
-                    self.inner.cv.wait_timeout(gate, tick).unwrap().0
+                    wait_timeout_or_recover(&self.inner.cv, gate, tick, &self.inner.gate)
                 };
                 *gate = false;
             }
-            for (&id, &(r, w)) in self.inner.interest.lock().unwrap().iter() {
+            for (&id, &(r, w)) in lock_or_recover(&self.inner.interest).iter() {
                 if r || w {
                     out.push(Event { id, readable: r, writable: w, hangup: false });
                 }
@@ -285,7 +288,7 @@ mod sys {
 
     impl Waker {
         pub fn wake(&self) {
-            *self.inner.gate.lock().unwrap() = true;
+            *lock_or_recover(&self.inner.gate) = true;
             self.inner.cv.notify_all();
         }
     }
@@ -365,6 +368,11 @@ pub struct ConnHandle {
     pub conn_id: u64,
     outbox: Mutex<Vec<String>>,
     in_flight: AtomicUsize,
+    /// Bytes sitting in the reactor-private write buffer after the last
+    /// service pass — published here so the drain loop in
+    /// [`super::server`] can see across threads when a connection is
+    /// truly flushed (outbox empty alone is not enough).
+    unflushed: AtomicUsize,
     reactor: Option<Arc<ReactorShared>>,
 }
 
@@ -378,6 +386,7 @@ impl ConnHandle {
             conn_id,
             outbox: Mutex::new(Vec::new()),
             in_flight: AtomicUsize::new(0),
+            unflushed: AtomicUsize::new(0),
             reactor: Some(reactor),
         })
     }
@@ -388,6 +397,7 @@ impl ConnHandle {
             conn_id,
             outbox: Mutex::new(Vec::new()),
             in_flight: AtomicUsize::new(0),
+            unflushed: AtomicUsize::new(0),
             reactor: None,
         })
     }
@@ -407,7 +417,7 @@ impl ConnHandle {
     }
 
     fn push(&self, line: String) {
-        self.outbox.lock().unwrap().push(line);
+        lock_or_recover(&self.outbox).push(line);
         if let Some(r) = &self.reactor {
             r.notify(self.conn_id);
         }
@@ -419,17 +429,36 @@ impl ConnHandle {
         self.in_flight.fetch_add(1, Ordering::AcqRel);
     }
 
+    /// Un-count a request that never reached a worker (e.g. its submit
+    /// was rejected by the queue cap) — saturates at zero like `send`.
+    pub fn end_request(&self) {
+        let dec = |v: usize| v.checked_sub(1);
+        let _ = self.in_flight.fetch_update(Ordering::AcqRel, Ordering::Acquire, dec);
+    }
+
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::Acquire)
     }
 
+    /// Publish the connection's pending write-buffer bytes (reactor
+    /// thread, after each service pass).
+    pub fn set_unflushed(&self, bytes: usize) {
+        self.unflushed.store(bytes, Ordering::Release);
+    }
+
+    /// Write-buffer bytes not yet accepted by the socket as of the last
+    /// service pass.
+    pub fn unflushed(&self) -> usize {
+        self.unflushed.load(Ordering::Acquire)
+    }
+
     /// Drain all queued lines (reactor thread only).
     pub fn take_lines(&self) -> Vec<String> {
-        std::mem::take(&mut *self.outbox.lock().unwrap())
+        std::mem::take(&mut *lock_or_recover(&self.outbox))
     }
 
     pub fn has_output(&self) -> bool {
-        !self.outbox.lock().unwrap().is_empty()
+        !lock_or_recover(&self.outbox).is_empty()
     }
 }
 
@@ -461,7 +490,7 @@ pub fn new_reactor(id: usize) -> io::Result<(Selector, Arc<ReactorShared>)> {
 impl ReactorShared {
     /// Mark a connection as having pending output and ring the reactor.
     pub fn notify(&self, conn_id: u64) {
-        self.dirty.lock().unwrap().push(conn_id);
+        lock_or_recover(&self.dirty).push(conn_id);
         self.waker.wake();
     }
 
@@ -472,7 +501,7 @@ impl ReactorShared {
 
     /// Hand a freshly accepted connection to this reactor.
     pub fn adopt(&self, conn_id: u64, stream: TcpStream, handle: ResponseTx) {
-        self.incoming.lock().unwrap().push((conn_id, stream, handle));
+        lock_or_recover(&self.incoming).push((conn_id, stream, handle));
         self.waker.wake();
     }
 
@@ -505,9 +534,14 @@ pub struct ReactorCtx {
     pub metrics: Arc<Metrics>,
     pub registry: Arc<ModelRegistry>,
     pub shutdown: Arc<AtomicBool>,
+    /// Graceful drain in progress: new requests are rejected with
+    /// `code=draining` while in-flight responses still flush.
+    pub draining: Arc<AtomicBool>,
     /// All reactors (for `stats` gauges and shutdown fan-out).
     pub reactors: Vec<Arc<ReactorShared>>,
     pub limits: ConnLimits,
+    /// Injected failures for the chaos suite (`None` in production).
+    pub faults: Option<FaultPlan>,
 }
 
 impl ReactorCtx {
@@ -583,7 +617,7 @@ impl Conn {
                 Ok(Some(line)) => self.handle_frame(ctx, &line),
                 Ok(None) => break,
                 Err(msg) => {
-                    ctx.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+                    ctx.metrics.count_err_code(ErrorCode::BadRequest, 1);
                     self.push_line(&Response::err(0, msg).to_json());
                     self.close_after_flush = true;
                 }
@@ -598,33 +632,57 @@ impl Conn {
 
     /// One decoded line: admin command or single-column request.
     fn handle_frame(&mut self, ctx: &ReactorCtx, line: &str) {
-        if let Ok(j) = Json::parse(line) {
+        let parsed = Json::parse(line);
+        if let Ok(j) = &parsed {
             if let Some(cmd) = j.get("cmd").as_str() {
                 let cmd = cmd.to_string();
-                self.handle_admin(ctx, &cmd, &j);
+                self.handle_admin(ctx, &cmd, j);
                 return;
             }
         }
         ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
         match Request::from_json(line) {
             Ok(mut req) => {
-                let shard = ctx.shards.shard_for(&req.model);
-                if shard.batcher.depth() >= ctx.limits.max_queue_depth {
-                    // Queue backpressure: reject instead of queueing
-                    // unboundedly.
-                    ctx.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
-                    let msg = format!("server overloaded (shard {} queue full)", shard.id);
-                    self.push_line(&Response::err(req.id, msg).to_json());
+                let client_id = req.id & 0xFFFF_FFFF;
+                if ctx.draining.load(Ordering::Relaxed) {
+                    // Graceful drain: answer instead of queueing work
+                    // that would race server teardown.
+                    ctx.metrics.count_err_code(ErrorCode::Draining, 1);
+                    let resp = Response::err_code(
+                        client_id,
+                        ErrorCode::Draining,
+                        "server draining; retry against another instance",
+                    );
+                    self.push_line(&resp.to_json());
                     return;
                 }
+                let shard = ctx.shards.shard_for(&req.model);
+                let shard_id = shard.id;
                 // Tag the wire id with the connection for routing.
-                req.id = (self.handle.conn_id << 32) | (req.id & 0xFFFF_FFFF);
+                req.id = (self.handle.conn_id << 32) | client_id;
                 self.handle.begin_request();
-                shard.batcher.submit(req);
+                // Queue backpressure: depth check and enqueue are one
+                // atomic step inside try_submit, so reactors racing on
+                // the same shard cannot overshoot the cap.
+                if shard.batcher.try_submit(req, ctx.limits.max_queue_depth).is_err() {
+                    self.handle.end_request();
+                    ctx.metrics.count_err_code(ErrorCode::Overloaded, 1);
+                    let msg = format!("server overloaded (shard {shard_id} queue full)");
+                    let resp = Response::err_code(client_id, ErrorCode::Overloaded, msg);
+                    self.push_line(&resp.to_json());
+                }
             }
             Err(e) => {
-                ctx.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
-                self.push_line(&Response::err(0, format!("bad request: {e:#}")).to_json());
+                // Echo the frame's numeric id when it carries one, so
+                // pipelined clients can correlate the rejection.
+                let id = parsed
+                    .as_ref()
+                    .ok()
+                    .and_then(|j| j.get("id").as_f64())
+                    .map(|v| v.max(0.0) as u64 & 0xFFFF_FFFF)
+                    .unwrap_or(0);
+                ctx.metrics.count_err_code(ErrorCode::BadRequest, 1);
+                self.push_line(&Response::err(id, format!("bad request: {e:#}")).to_json());
             }
         }
     }
@@ -714,6 +772,16 @@ impl Conn {
 
     /// Write as much of the buffer as the socket accepts.
     fn try_flush(&mut self, ctx: &ReactorCtx) {
+        // Fault injection: kill the connection instead of flushing.
+        // Only a flush with bytes pending consumes a schedule slot.
+        if self.pending_write() > 0 {
+            if let Some(plan) = &ctx.faults {
+                if plan.drop_this_flush() {
+                    self.close_now = true;
+                    return;
+                }
+            }
+        }
         while self.wpos < self.wbuf.len() {
             match self.stream.write(&self.wbuf[self.wpos..]) {
                 Ok(0) => {
@@ -748,6 +816,8 @@ impl Conn {
         self.try_flush(ctx);
         self.process_pending(ctx);
         self.try_flush(ctx);
+        // Publish what the socket would not accept, for the drain loop.
+        self.handle.set_unflushed(self.pending_write());
     }
 
     /// Re-sync selector interest with the state machine.
@@ -809,7 +879,7 @@ pub fn run_reactor(selector: Selector, shared: Arc<ReactorShared>, ctx: ReactorC
         touched.clear();
 
         // Adopt connections handed over by the accept thread.
-        let pending: Vec<_> = shared.incoming.lock().unwrap().drain(..).collect();
+        let pending: Vec<_> = lock_or_recover(&shared.incoming).drain(..).collect();
         for (conn_id, stream, handle) in pending {
             let ready = stream.set_nonblocking(true).is_ok()
                 && selector.register(&stream, conn_id, true, false).is_ok();
@@ -828,7 +898,7 @@ pub fn run_reactor(selector: Selector, shared: Arc<ReactorShared>, ctx: ReactorC
         }
 
         // Connections with fresh worker output.
-        let mut dirty = std::mem::take(&mut *shared.dirty.lock().unwrap());
+        let mut dirty = std::mem::take(&mut *lock_or_recover(&shared.dirty));
         dirty.sort_unstable();
         dirty.dedup();
         for conn_id in dirty {
@@ -954,6 +1024,17 @@ mod tests {
         h.send("c".into());
         h.send("d".into());
         assert_eq!(h.in_flight(), 0);
+        // end_request un-counts a rejected submit, saturating too.
+        h.begin_request();
+        h.end_request();
+        h.end_request();
+        assert_eq!(h.in_flight(), 0);
+        // unflushed bytes are published and readable across threads.
+        assert_eq!(h.unflushed(), 0);
+        h.set_unflushed(37);
+        assert_eq!(h.unflushed(), 37);
+        h.set_unflushed(0);
+        assert_eq!(h.unflushed(), 0);
     }
 
     #[test]

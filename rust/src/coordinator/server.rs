@@ -17,16 +17,17 @@
 //! file descriptors, not stacks.
 
 use super::batcher::BatcherConfig;
+use super::faults::FaultPlan;
 use super::metrics::Metrics;
 use super::reactor::{self, ConnHandle, ConnLimits, ReactorCtx, ReactorShared};
-use super::shard::ShardSet;
+use super::shard::{Shard, ShardSet};
 use super::state::ModelRegistry;
-use super::worker::run_shard_worker;
+use super::worker::{run_shard_worker, WorkerExit};
 use anyhow::{bail, Context, Result};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Server knobs. Construct via [`ServerConfig::builder`] (validated) or
 /// keep `Default` and override fields; [`Server::start`] re-validates
@@ -57,6 +58,12 @@ pub struct ServerConfig {
     /// Optional kernel `SO_SNDBUF` override for accepted sockets
     /// (tests shrink it to make write backpressure deterministic).
     pub sock_buf: Option<usize>,
+    /// How long [`Server::stop`] waits for in-flight work to finish and
+    /// flush before tearing reactors down.
+    pub drain_timeout: Duration,
+    /// Deterministic fault injection (chaos tests only; `None` serves
+    /// clean).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +79,8 @@ impl Default for ServerConfig {
             write_buf_cap: 256 * 1024,
             max_frame: 1024 * 1024,
             sock_buf: None,
+            drain_timeout: Duration::from_secs(5),
+            faults: None,
         }
     }
 }
@@ -197,6 +206,17 @@ impl ServerConfigBuilder {
         self
     }
 
+    pub fn drain_timeout(mut self, d: Duration) -> Self {
+        self.config.drain_timeout = d;
+        self
+    }
+
+    /// Inject a deterministic fault schedule (chaos tests).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.config.faults = Some(plan);
+        self
+    }
+
     /// Validate and produce the config.
     pub fn build(self) -> Result<ServerConfig> {
         self.config.validate()?;
@@ -214,6 +234,10 @@ pub struct Server {
     /// The reactor cores (connection counts feed `stats`).
     pub reactors: Vec<Arc<ReactorShared>>,
     shutdown: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    /// Set by the supervisor once every worker has retired.
+    workers_done: Arc<AtomicBool>,
+    drain_timeout: Duration,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -236,6 +260,8 @@ impl Server {
             }
         }
         let shutdown = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
+        let workers_done = Arc::new(AtomicBool::new(false));
 
         // Reactor cores: one selector + shared handle each.
         let mut reactors = Vec::new();
@@ -250,6 +276,7 @@ impl Server {
             metrics: metrics.clone(),
             registry: registry.clone(),
             shutdown: shutdown.clone(),
+            draining: draining.clone(),
             reactors: reactors.clone(),
             limits: ConnLimits {
                 max_pipeline: config.max_pipeline,
@@ -258,6 +285,7 @@ impl Server {
                 max_queue_depth: config.max_queue_depth,
                 sock_buf: config.sock_buf,
             },
+            faults: config.faults.clone(),
         };
         let mut threads = Vec::new();
         for (shared, selector) in reactors.iter().zip(selectors) {
@@ -266,27 +294,70 @@ impl Server {
             threads.push(std::thread::spawn(move || reactor::run_reactor(selector, shared, ctx)));
         }
 
-        // Per-shard worker pools.
-        for shard in shards.shards() {
-            for _ in 0..config.workers {
-                let shard = shard.clone();
-                let metrics = metrics.clone();
-                let catalog = registry.clone();
-                threads.push(std::thread::spawn(move || {
-                    run_shard_worker(shard, metrics, catalog)
-                }));
-            }
+        // Worker supervisor: owns the per-shard pools. A worker that
+        // returns `Died` (its batch panicked) is replaced with a fresh
+        // thread on the same shard — safe to do unconditionally because
+        // each panic consumes its batch, so a deterministic poison
+        // request costs one respawn per occurrence, never a hot loop on
+        // the same batch. Workers that return `Closed` (batcher drained
+        // after close) retire; once all have, `workers_done` flips for
+        // the drain loop in [`Server::stop`].
+        {
+            let metrics = metrics.clone();
+            let catalog = registry.clone();
+            let shards = shards.clone();
+            let faults = config.faults.clone();
+            let workers_done = workers_done.clone();
+            let per_shard = config.workers;
+            threads.push(std::thread::spawn(move || {
+                let spawn = |shard: Arc<Shard>| {
+                    let metrics = metrics.clone();
+                    let catalog = catalog.clone();
+                    let faults = faults.clone();
+                    std::thread::spawn(move || run_shard_worker(shard, metrics, catalog, faults))
+                };
+                let mut slots: Vec<(Arc<Shard>, std::thread::JoinHandle<WorkerExit>)> = Vec::new();
+                for shard in shards.shards() {
+                    for _ in 0..per_shard {
+                        slots.push((shard.clone(), spawn(shard.clone())));
+                    }
+                }
+                while !slots.is_empty() {
+                    let mut live = Vec::with_capacity(slots.len());
+                    for (shard, handle) in slots.drain(..) {
+                        if !handle.is_finished() {
+                            live.push((shard, handle));
+                            continue;
+                        }
+                        match handle.join() {
+                            Ok(WorkerExit::Closed) => {}
+                            Ok(WorkerExit::Died) | Err(_) => {
+                                metrics.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                                live.push((shard.clone(), spawn(shard)));
+                            }
+                        }
+                    }
+                    slots = live;
+                    if !slots.is_empty() {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+                workers_done.store(true, Ordering::Release);
+            }));
         }
 
         // Accept loop: hand each socket to the least-loaded reactor.
+        // Exits as soon as a drain starts — no new connections while
+        // the server is saying goodbye.
         {
             let shutdown = shutdown.clone();
+            let draining = draining.clone();
             let shards = shards.clone();
             let metrics = metrics.clone();
             let reactors = reactors.clone();
             threads.push(std::thread::spawn(move || {
                 let mut next_conn_id = 1u64;
-                while !shutdown.load(Ordering::Relaxed) {
+                while !shutdown.load(Ordering::Relaxed) && !draining.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             let conn_id = next_conn_id;
@@ -310,13 +381,50 @@ impl Server {
             }));
         }
 
-        Ok(Server { local_addr, metrics, registry, shards, reactors, shutdown, threads })
+        Ok(Server {
+            local_addr,
+            metrics,
+            registry,
+            shards,
+            reactors,
+            shutdown,
+            draining,
+            workers_done,
+            drain_timeout: config.drain_timeout,
+            threads,
+        })
     }
 
-    /// Stop accepting, drain queues, join threads.
+    /// Graceful stop: reject new work with `code=draining`, let workers
+    /// finish and flush what is already in flight (bounded by the
+    /// configured `drain_timeout`), then tear down and join every
+    /// thread. The observed drain time lands in the
+    /// `drain_duration_us` metric.
     pub fn stop(mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
+        let t0 = Instant::now();
+        // Phase 1: stop intake. Reactors answer new requests with
+        // `draining`; the accept loop exits; closed batchers let the
+        // workers drain their queues and retire.
+        self.draining.store(true, Ordering::Relaxed);
         self.shards.close();
+        for r in &self.reactors {
+            r.wake();
+        }
+        // Phase 2: bounded drain — every worker retired and every live
+        // connection's responses handed to the socket.
+        let deadline = t0 + self.drain_timeout;
+        while Instant::now() < deadline {
+            if self.workers_done.load(Ordering::Acquire) && self.shards.drained() {
+                break;
+            }
+            for r in &self.reactors {
+                r.wake();
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.metrics.drain_duration_us.store(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        // Phase 3: tear down reactors and join everything.
+        self.shutdown.store(true, Ordering::Relaxed);
         for r in &self.reactors {
             r.wake();
         }

@@ -14,6 +14,7 @@
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::state::{ModelRegistry, ModelState};
+use super::sync::lock_or_recover;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -90,14 +91,14 @@ impl ShardSet {
     /// Register a connection's response handle with every shard.
     pub fn add_route(&self, conn_id: u64, tx: &ResponseTx) {
         for s in &self.shards {
-            s.routes.lock().unwrap().insert(conn_id, tx.clone());
+            lock_or_recover(&s.routes).insert(conn_id, tx.clone());
         }
     }
 
     /// Remove a connection's response handle from every shard.
     pub fn remove_route(&self, conn_id: u64) {
         for s in &self.shards {
-            s.routes.lock().unwrap().remove(&conn_id);
+            lock_or_recover(&s.routes).remove(&conn_id);
         }
     }
 
@@ -106,6 +107,20 @@ impl ShardSet {
         for s in &self.shards {
             s.batcher.close();
         }
+    }
+
+    /// True when every live connection owes the wire nothing: no
+    /// requests in flight, no outbox lines, no unflushed write-buffer
+    /// bytes. Every shard's routes hold the same connection set, so
+    /// shard 0 is representative. Used by the graceful-drain loop in
+    /// [`super::server`].
+    pub fn drained(&self) -> bool {
+        let Some(first) = self.shards.first() else {
+            return true;
+        };
+        lock_or_recover(&first.routes)
+            .values()
+            .all(|h| h.in_flight() == 0 && !h.has_output() && h.unflushed() == 0)
     }
 }
 
@@ -200,15 +215,36 @@ mod tests {
         let tx = crate::coordinator::reactor::ConnHandle::detached(7);
         set.add_route(7, &tx);
         for s in set.shards() {
-            assert!(s.routes.lock().unwrap().contains_key(&7));
+            assert!(lock_or_recover(&s.routes).contains_key(&7));
         }
         // A worker send lands in the handle's outbox via the route.
         let shard0 = &set.shards()[0];
-        shard0.routes.lock().unwrap().get(&7).unwrap().send_reply("line".into());
+        lock_or_recover(&shard0.routes).get(&7).unwrap().send_reply("line".into());
         assert_eq!(tx.take_lines(), vec!["line".to_string()]);
         set.remove_route(7);
         for s in set.shards() {
-            assert!(s.routes.lock().unwrap().is_empty());
+            assert!(lock_or_recover(&s.routes).is_empty());
         }
+    }
+
+    #[test]
+    fn drained_tracks_connection_debt() {
+        let set = ShardSet::new(2, BatcherConfig::default());
+        assert!(set.drained(), "no connections: vacuously drained");
+        let tx = crate::coordinator::reactor::ConnHandle::detached(9);
+        set.add_route(9, &tx);
+        assert!(set.drained(), "idle connection owes nothing");
+        tx.begin_request();
+        assert!(!set.drained(), "in-flight request blocks drain");
+        tx.send("resp".into());
+        assert!(!set.drained(), "undelivered outbox line blocks drain");
+        let _ = tx.take_lines();
+        assert!(set.drained());
+        tx.set_unflushed(12);
+        assert!(!set.drained(), "unflushed socket bytes block drain");
+        tx.set_unflushed(0);
+        assert!(set.drained());
+        set.remove_route(9);
+        assert!(set.drained());
     }
 }

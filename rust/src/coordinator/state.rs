@@ -3,6 +3,7 @@
 //! rectangular ([`RectSvdParam`] with an optional served rank) — the
 //! registry partition owned by each shard holds [`ModelState`]s of both.
 
+use super::sync::{read_or_recover, write_or_recover};
 use crate::linalg::Mat;
 use crate::runtime::pjrt::{ArtifactEngine, Tensor};
 use crate::svd::rect::RectSvdParam;
@@ -311,19 +312,19 @@ impl ModelRegistry {
 
     /// Register a pre-built model state (shard partitioning path).
     pub fn insert_state(&self, state: Arc<ModelState>) {
-        self.models.write().unwrap().insert(state.name.clone(), state);
+        write_or_recover(&self.models).insert(state.name.clone(), state);
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<ModelState>> {
-        self.models.read().unwrap().get(name).cloned()
+        read_or_recover(&self.models).get(name).cloned()
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.models.read().unwrap().keys().cloned().collect()
+        read_or_recover(&self.models).keys().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        read_or_recover(&self.models).len()
     }
     pub fn is_empty(&self) -> bool {
         self.len() == 0

@@ -1,0 +1,154 @@
+//! Poison-tolerant locking for the serving stack.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked lock holder into a
+//! cascade: every sibling worker/reactor that touches the same lock
+//! panics on the `PoisonError`, and a single bug in batch execution
+//! takes down the whole shard. All coordinator locks route through
+//! these helpers instead: a poisoned lock is *recovered* (the poison
+//! flag is cleared and the guard returned), because every protected
+//! structure here — queue maps, route tables, outbox vectors — is
+//! valid after any partial mutation (the panicking sections never
+//! leave multi-step invariants half-applied; see the callers).
+//!
+//! Panic isolation proper lives in [`super::worker`] (`catch_unwind`
+//! around batch execution) and the supervisor respawn loop in
+//! [`super::server`]; these helpers are the containment layer that
+//! keeps an escaped panic from spreading through shared state.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering (and clearing) poison instead of panicking.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Read-lock an `RwLock`, recovering poison instead of panicking.
+pub fn read_or_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            l.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Write-lock an `RwLock`, recovering poison instead of panicking.
+pub fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            l.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// `Condvar::wait` that survives a holder's panic: the mutex is needed
+/// to clear the poison flag the failed wait would otherwise re-raise.
+pub fn wait_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    m: &'a Mutex<T>,
+) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// `Condvar::wait_timeout` that survives a holder's panic.
+pub fn wait_timeout_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+    m: &'a Mutex<T>,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _timeout)) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner().0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Poison `m` by panicking a thread while it holds the lock.
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison on purpose");
+        });
+        assert!(t.join().is_err());
+        assert!(m.is_poisoned());
+    }
+
+    #[test]
+    fn mutex_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        poison(&m);
+        // A recovering lock succeeds, clears the flag, and the data is
+        // still the last value written.
+        assert_eq!(*lock_or_recover(&m), 7);
+        assert!(!m.is_poisoned());
+        // Plain locking works again afterwards.
+        *m.lock().unwrap() = 8;
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = l.clone();
+        let t = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison on purpose");
+        });
+        assert!(t.join().is_err());
+        assert!(l.is_poisoned());
+        assert_eq!(read_or_recover(&l).len(), 3);
+        assert!(!l.is_poisoned());
+        write_or_recover(&l).push(4);
+        assert_eq!(l.read().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn condvar_wait_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(false));
+        let cv = Arc::new(Condvar::new());
+        // Waiter: survives the poisoning notifier and sees the flag.
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let waiter = std::thread::spawn(move || {
+            let mut g = lock_or_recover(&m2);
+            while !*g {
+                g = wait_timeout_or_recover(&cv2, g, Duration::from_millis(50), &m2);
+            }
+        });
+        // Notifier: sets the flag, then panics with the lock held.
+        let (m3, cv3) = (m.clone(), cv.clone());
+        let notifier = std::thread::spawn(move || {
+            let mut g = m3.lock().unwrap();
+            *g = true;
+            cv3.notify_all();
+            panic!("poison on purpose");
+        });
+        assert!(notifier.join().is_err());
+        waiter.join().expect("waiter must survive the poisoned mutex");
+    }
+}

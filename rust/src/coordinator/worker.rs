@@ -2,23 +2,55 @@
 //! scatter per-column results back to their requests. Input and output
 //! widths may differ (rect models: `apply` is `cols→rows`, `pinv` is
 //! `rows→cols`).
+//!
+//! The worker loop is the panic-isolation boundary of the serving
+//! stack: batch execution runs under `catch_unwind`, so a bug (or an
+//! injected [`FaultPlan`] panic) in one batch turns into per-request
+//! `internal_panic` errors for exactly that batch instead of a dead
+//! shard. A worker that caught a panic still delivers its responses,
+//! then exits with [`WorkerExit::Died`] so the supervisor in
+//! [`super::server`] can respawn a fresh one.
 
 use super::batcher::Batch;
+use super::faults::{BatchFault, FaultPlan};
 use super::metrics::Metrics;
-use super::protocol::Response;
+use super::protocol::{ErrorCode, Response};
 use super::shard::Shard;
 use super::state::ModelRegistry;
+use super::sync::lock_or_recover;
 use crate::linalg::Mat;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Why a worker loop returned (the supervisor's respawn signal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerExit {
+    /// The batcher closed: normal drain, do not respawn.
+    Closed,
+    /// A batch panicked. The batch was answered with `internal_panic`
+    /// errors; the thread should be replaced by a fresh worker.
+    Died,
+}
 
 /// One shard worker loop: pull batches from the shard's batcher until
 /// it closes, execute them against the shard's registry partition, feed
 /// the observed service latency back into the shard's adaptive
 /// deadline, and retire responses into each connection's reactor
 /// outbox (the [`super::reactor`] flushes them to the socket).
-pub fn run_shard_worker(shard: Arc<Shard>, metrics: Arc<Metrics>, catalog: Arc<ModelRegistry>) {
+///
+/// Execution runs inside `catch_unwind`: a panicking batch produces
+/// structured `internal_panic` responses for its members and a
+/// [`WorkerExit::Died`] return. Requests whose TTL expired in the
+/// queue (`batch.shed`) are answered with `deadline_exceeded` without
+/// touching the engine.
+pub fn run_shard_worker(
+    shard: Arc<Shard>,
+    metrics: Arc<Metrics>,
+    catalog: Arc<ModelRegistry>,
+    faults: Option<FaultPlan>,
+) -> WorkerExit {
     while let Some(batch) = shard.batcher.next_batch() {
         // Lazily adopt models registered in the catalog after start():
         // the reactor routed this batch here by name, so this shard
@@ -28,15 +60,63 @@ pub fn run_shard_worker(shard: Arc<Shard>, metrics: Arc<Metrics>, catalog: Arc<M
                 shard.registry.insert_state(state);
             }
         }
-        let t0 = Instant::now();
-        let responses = execute_batch(&shard.registry, &metrics, &batch);
-        // Only engine-executed batches feed the adaptive deadline —
-        // rejected batches (unknown model, bad widths) finish in ~0 µs
-        // and would otherwise drag the shard's deadline to min_wait.
-        if responses.iter().any(|r| r.ok) {
-            shard.batcher.observe_latency(t0.elapsed().as_micros() as u64);
+        let mut died = false;
+        let mut responses: Vec<Response> = Vec::new();
+        if !batch.requests.is_empty() {
+            let t0 = Instant::now();
+            // The injected fault fires *inside* the unwind boundary, so
+            // a scheduled panic exercises exactly the path a real batch
+            // bug would take. Shared state is safe to reuse after an
+            // unwind here: execute_batch mutates only its own locals,
+            // and the coordinator locks recover poison (see sync.rs).
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(plan) = &faults {
+                    match plan.batch_fault() {
+                        BatchFault::Delay(d) => std::thread::sleep(d),
+                        BatchFault::Panic(n) => {
+                            panic!("injected fault: panic on batch ordinal {n}")
+                        }
+                        BatchFault::None => {}
+                    }
+                }
+                execute_batch(&shard.registry, &metrics, &batch)
+            }));
+            match outcome {
+                Ok(rs) => {
+                    // Only engine-executed batches feed the adaptive
+                    // deadline — rejected batches (unknown model, bad
+                    // widths) finish in ~0 µs and would otherwise drag
+                    // the shard's deadline to min_wait.
+                    if rs.iter().any(|r| r.ok) {
+                        shard.batcher.observe_latency(t0.elapsed().as_micros() as u64);
+                    }
+                    responses = rs;
+                }
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                    metrics.count_err_code(ErrorCode::InternalPanic, batch.requests.len() as u64);
+                    responses = batch
+                        .requests
+                        .iter()
+                        .map(|r| {
+                            Response::err_code(
+                                r.id,
+                                ErrorCode::InternalPanic,
+                                format!("worker panicked executing batch: {msg}"),
+                            )
+                        })
+                        .collect();
+                    died = true;
+                }
+            }
         }
-        let routes = shard.routes.lock().unwrap();
+        if !batch.shed.is_empty() {
+            let n = batch.shed.len() as u64;
+            metrics.requests_shed_deadline.fetch_add(n, Ordering::Relaxed);
+            metrics.count_err_code(ErrorCode::DeadlineExceeded, n);
+        }
+        let routes = lock_or_recover(&shard.routes);
         for (mut resp, req) in responses.into_iter().zip(&batch.requests) {
             // Requests carry the connection id in the top bits of the
             // wire id (tagged by the reactor); restore the client's id
@@ -47,6 +127,34 @@ pub fn run_shard_worker(shard: Arc<Shard>, metrics: Arc<Metrics>, catalog: Arc<M
                 tx.send(resp.to_json());
             }
         }
+        for req in &batch.shed {
+            let conn = req.id >> 32;
+            let resp = Response::err_code(
+                req.id & 0xFFFF_FFFF,
+                ErrorCode::DeadlineExceeded,
+                format!("request ttl {} ms expired in queue", req.ttl_ms.unwrap_or(0)),
+            );
+            if let Some(tx) = routes.get(&conn) {
+                tx.send(resp.to_json());
+            }
+        }
+        drop(routes);
+        if died {
+            return WorkerExit::Died;
+        }
+    }
+    WorkerExit::Closed
+}
+
+/// Best-effort text of a caught panic payload (`&str` and `String`
+/// cover `panic!` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -65,11 +173,17 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
     let model = match registry.get(&batch.model) {
         Some(m) => m,
         None => {
-            metrics.responses_err.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+            metrics.count_err_code(ErrorCode::UnknownModel, batch.requests.len() as u64);
             return batch
                 .requests
                 .iter()
-                .map(|r| Response::err(r.id, format!("unknown model '{}'", batch.model)))
+                .map(|r| {
+                    Response::err_code(
+                        r.id,
+                        ErrorCode::UnknownModel,
+                        format!("unknown model '{}'", batch.model),
+                    )
+                })
                 .collect();
         }
     };
@@ -78,23 +192,24 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
     let d_in = match model.dims(batch.op) {
         Ok((d_in, _)) => d_in,
         Err(e) => {
-            metrics.responses_err.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+            metrics.count_err_code(ErrorCode::BadRequest, batch.requests.len() as u64);
             return batch
                 .requests
                 .iter()
-                .map(|r| Response::err(r.id, format!("{e:#}")))
+                .map(|r| Response::err_code(r.id, ErrorCode::BadRequest, format!("{e:#}")))
                 .collect();
         }
     };
     // Column-length validation before assembling the batch.
     if let Some(bad) = batch.requests.iter().find(|r| r.column.len() != d_in) {
-        metrics.responses_err.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+        metrics.count_err_code(ErrorCode::BadRequest, batch.requests.len() as u64);
         return batch
             .requests
             .iter()
             .map(|r| {
-                Response::err(
+                Response::err_code(
                     r.id,
+                    ErrorCode::BadRequest,
                     format!(
                         "column length {} != op input dim {d_in} (first offender id {})",
                         r.column.len(),
@@ -129,8 +244,12 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
                 .collect()
         }
         Err(e) => {
-            metrics.responses_err.fetch_add(m as u64, Ordering::Relaxed);
-            batch.requests.iter().map(|r| Response::err(r.id, format!("{e:#}"))).collect()
+            metrics.count_err_code(ErrorCode::BadRequest, m as u64);
+            batch
+                .requests
+                .iter()
+                .map(|r| Response::err_code(r.id, ErrorCode::BadRequest, format!("{e:#}")))
+                .collect()
         }
     }
 }
@@ -157,8 +276,15 @@ mod tests {
             requests: cols
                 .into_iter()
                 .enumerate()
-                .map(|(i, column)| Request { id: i as u64, model: model.into(), op, column })
+                .map(|(i, column)| Request {
+                    id: i as u64,
+                    model: model.into(),
+                    op,
+                    column,
+                    ttl_ms: None,
+                })
                 .collect(),
+            shed: vec![],
             full: true,
         }
     }
@@ -197,7 +323,10 @@ mod tests {
         let batch = make_batch("ghost", OpKind::Apply, vec![vec![0.0; 8]; 3]);
         let responses = execute_batch(&reg, &metrics, &batch);
         assert!(responses.iter().all(|r| !r.ok));
+        assert!(responses.iter().all(|r| r.code == Some(ErrorCode::UnknownModel)));
+        assert!(responses.iter().all(|r| !r.retryable), "unknown_model is terminal");
         assert_eq!(metrics.responses_err.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.err_code_count(ErrorCode::UnknownModel), 3);
     }
 
     #[test]
@@ -206,7 +335,8 @@ mod tests {
         let batch = make_batch("m8", OpKind::Apply, vec![vec![0.0; 8], vec![0.0; 7]]);
         let responses = execute_batch(&reg, &metrics, &batch);
         assert!(responses.iter().all(|r| !r.ok));
-        let _ = metrics;
+        assert!(responses.iter().all(|r| r.code == Some(ErrorCode::BadRequest)));
+        assert_eq!(metrics.err_code_count(ErrorCode::BadRequest), 2);
     }
 
     #[test]
@@ -250,5 +380,15 @@ mod tests {
             execute_batch(&reg, &metrics, &make_batch("r", OpKind::Expm, vec![vec![0.0; 8]; 2]));
         assert!(bad.iter().all(|r| !r.ok));
         assert!(bad[0].error.as_ref().unwrap().contains("square"));
+    }
+
+    #[test]
+    fn panic_message_covers_common_payloads() {
+        let p1 = catch_unwind(|| panic!("static str")).unwrap_err();
+        assert_eq!(panic_message(p1.as_ref()), "static str");
+        let p2 = catch_unwind(|| panic!("{} {}", "formatted", 7)).unwrap_err();
+        assert_eq!(panic_message(p2.as_ref()), "formatted 7");
+        let p3 = catch_unwind(|| std::panic::panic_any(42u32)).unwrap_err();
+        assert_eq!(panic_message(p3.as_ref()), "non-string panic payload");
     }
 }

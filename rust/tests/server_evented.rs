@@ -6,7 +6,8 @@
 //! connection is torn down and the gauges return to zero).
 
 use fasth::coordinator::{
-    Call, Client, ExecEngine, ModelRegistry, OpKind, Request, Response, Server, ServerConfig,
+    Call, Client, ErrorCode, ExecEngine, FaultPlan, ModelRegistry, OpKind, Request, Response,
+    Server, ServerConfig,
 };
 use fasth::util::Rng;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -16,7 +17,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn request_line(id: u64, model: &str, column: Vec<f32>) -> String {
-    Request { id, model: model.into(), op: OpKind::Apply, column }.to_json()
+    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None }.to_json()
 }
 
 /// Flood one raw connection with far more requests than `max_pipeline`
@@ -188,6 +189,110 @@ fn hello_handshake_and_version_rejection() {
     let resp = Response::from_json(line.trim()).unwrap();
     assert!(resp.ok, "{:?}", resp.error);
     assert_eq!(resp.id, 7);
+    server.stop();
+}
+
+/// Overload across racing reactors: three reactors flooding one shard
+/// far past `max_queue_depth` (service slowed by injected latency so
+/// the queue actually backs up). The depth check and enqueue are one
+/// atomic step inside the batcher, so a sampler hammering the depth
+/// gauge must never observe the cap exceeded; every request gets
+/// exactly one response; and rejections carry the structured
+/// `code=overloaded, retryable=true` envelope.
+#[test]
+fn overload_rejections_never_overshoot_queue_cap() {
+    let cap = 32usize;
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create("m8", 8, ExecEngine::Native { k: 4 }, 0x0E8);
+    let config = ServerConfig::builder()
+        .shards(1)
+        .workers(1)
+        .reactors(3)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(1))
+        .max_queue_depth(cap)
+        .faults(FaultPlan::new().delay_every(1, Duration::from_millis(15)))
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry).unwrap();
+    let addr = server.local_addr;
+
+    // Sampler: the cap invariant must hold at every observable instant,
+    // not just at quiescence.
+    let shards = server.shards.clone();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let sampler = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut max_depth = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let depth: usize = shards.depths().iter().sum();
+                max_depth = max_depth.max(depth);
+                std::thread::yield_now();
+            }
+            max_depth
+        })
+    };
+
+    let floods = 3usize;
+    let per_conn = 200u64;
+    let flooders: Vec<_> = (0..floods)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream);
+                for id in 1..=per_conn {
+                    writeln!(writer, "{}", request_line(id, "m8", vec![0.5; 8])).unwrap();
+                }
+                writer.flush().unwrap();
+                // Exactly one response per id. Order is NOT asserted:
+                // rejections are answered inline by the reactor while
+                // served responses come back from the worker, so the
+                // two streams interleave.
+                let mut seen = std::collections::BTreeSet::new();
+                let (mut served, mut rejected) = (0u64, 0u64);
+                let mut line = String::new();
+                for nth in 1..=per_conn {
+                    line.clear();
+                    assert!(reader.read_line(&mut line).unwrap() > 0, "EOF before response {nth}");
+                    let resp = Response::from_json(line.trim()).unwrap();
+                    assert!(
+                        (1..=per_conn).contains(&resp.id) && seen.insert(resp.id),
+                        "duplicate or alien response id {}",
+                        resp.id
+                    );
+                    if resp.ok {
+                        served += 1;
+                    } else {
+                        assert_eq!(
+                            resp.code,
+                            Some(ErrorCode::Overloaded),
+                            "unexpected rejection: {:?}",
+                            resp.error
+                        );
+                        assert!(resp.retryable, "overloaded must be marked retryable");
+                        rejected += 1;
+                    }
+                }
+                (served, rejected)
+            })
+        })
+        .collect();
+    let (mut served, mut rejected) = (0u64, 0u64);
+    for f in flooders {
+        let (s, r) = f.join().unwrap();
+        served += s;
+        rejected += r;
+    }
+    stop.store(true, Ordering::Relaxed);
+    let max_depth = sampler.join().unwrap();
+
+    assert_eq!(served + rejected, floods as u64 * per_conn, "responses lost or duplicated");
+    assert!(served >= 1, "nothing served under flood");
+    assert!(rejected >= 1, "flood of {} past cap {cap} never rejected", floods as u64 * per_conn);
+    assert!(max_depth <= cap, "queue cap overshot: observed depth {max_depth} > cap {cap}");
     server.stop();
 }
 

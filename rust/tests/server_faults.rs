@@ -1,0 +1,352 @@
+//! Chaos suite: deterministic fault injection against the full serving
+//! stack. Every test drives a real server over real sockets with a
+//! seeded [`FaultPlan`] and asserts the fault-tolerance contract:
+//! every request gets exactly one response, no client ever hangs, and
+//! the server keeps serving after every injected failure.
+//!
+//! The nightly chaos CI lane replays this suite under rotating seeds
+//! via the `FASTH_FAULT_SEED` environment variable (see
+//! `seeded_chaos_every_request_answered_and_server_survives`).
+
+use fasth::coordinator::{
+    Call, Client, ClientConfig, ErrorCode, ExecEngine, FaultPlan, ModelRegistry, OpKind, Request,
+    Response, RetryPolicy, Server, ServerConfig,
+};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The chaos seed: `FASTH_FAULT_SEED` when set (the nightly lane
+/// rotates it by date), a fixed default otherwise so plain `cargo test`
+/// is reproducible.
+fn chaos_seed() -> u64 {
+    std::env::var("FASTH_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xFA17)
+}
+
+fn request_line(id: u64, model: &str, column: Vec<f32>) -> String {
+    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None }.to_json()
+}
+
+fn registry_with_m8() -> Arc<ModelRegistry> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create("m8", 8, ExecEngine::Native { k: 4 }, 0xFA17);
+    registry
+}
+
+/// Every 4th batch panics. With one worker, one-column batches, and a
+/// sequential client, batch ordinals are exactly the request ordinals:
+/// requests 4, 8, 12, 16, 20 fail with a structured `internal_panic`
+/// envelope, every other request succeeds, the panicking workers are
+/// respawned, and the server serves normally afterwards.
+#[test]
+fn panics_are_isolated_and_workers_respawn() {
+    let config = ServerConfig::builder()
+        .shards(1)
+        .workers(1)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .faults(FaultPlan::new().panic_every(4))
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry_with_m8()).unwrap();
+
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let n = 20u64;
+    let mut failed = 0u64;
+    for i in 1..=n {
+        let resp = client.call(Call::apply("m8", vec![0.5; 8])).unwrap();
+        if resp.ok {
+            assert_eq!(resp.column.len(), 8, "request {i}");
+        } else {
+            failed += 1;
+            assert_eq!(resp.code, Some(ErrorCode::InternalPanic), "request {i}: {:?}", resp.error);
+            assert!(resp.retryable, "internal_panic must be marked retryable");
+            let msg = resp.error.as_deref().unwrap_or("");
+            assert!(msg.contains("panic"), "request {i}: unhelpful error {msg:?}");
+        }
+    }
+    assert_eq!(failed, n / 4, "panic_every(4) over {n} one-column batches");
+    assert_eq!(server.metrics.worker_panics.load(Ordering::Relaxed), n / 4);
+    assert_eq!(server.metrics.err_code_count(ErrorCode::InternalPanic), n / 4);
+
+    // The supervisor replaces every panicked worker (the sweep is
+    // asynchronous; poll briefly).
+    let t0 = Instant::now();
+    while server.metrics.worker_respawns.load(Ordering::Relaxed) < n / 4 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "supervisor respawned only {} of {} panicked workers",
+            server.metrics.worker_respawns.load(Ordering::Relaxed),
+            n / 4
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Still serving after every panic.
+    let resp = client.call(Call::apply("m8", vec![0.25; 8])).unwrap();
+    assert!(resp.ok, "server dead after panics: {:?}", resp.error);
+    server.stop();
+}
+
+/// Injected service latency makes queued requests outlive their TTL:
+/// the batcher sheds them at dequeue with `deadline_exceeded` instead
+/// of serving stale answers, while the TTL-less request rides normally.
+#[test]
+fn expired_requests_are_shed_with_deadline_exceeded() {
+    let config = ServerConfig::builder()
+        .shards(1)
+        .workers(1)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(1))
+        .faults(FaultPlan::new().delay_every(1, Duration::from_millis(60)))
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry_with_m8()).unwrap();
+
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    // No TTL: occupies the single worker for the injected 60 ms.
+    let slow_id = client.send(&Call::apply("m8", vec![0.5; 8])).unwrap();
+    std::thread::sleep(Duration::from_millis(15));
+    // These queue behind the delayed batch and expire (10 ms TTL) long
+    // before the worker frees up.
+    let doomed = 4usize;
+    let mut ids = Vec::new();
+    for _ in 0..doomed {
+        let call = Call::apply("m8", vec![0.5; 8]).ttl(Duration::from_millis(10));
+        ids.push(client.send(&call).unwrap());
+    }
+    let slow = client.wait_for(slow_id).unwrap();
+    assert!(slow.ok, "TTL-less request must ride: {:?}", slow.error);
+    for id in ids {
+        let resp = client.wait_for(id).unwrap();
+        assert!(!resp.ok, "request {id} should have been shed");
+        assert_eq!(resp.code, Some(ErrorCode::DeadlineExceeded), "{:?}", resp.error);
+        assert!(resp.retryable, "deadline_exceeded must be marked retryable");
+        assert!(
+            resp.error.as_deref().unwrap_or("").contains("expired"),
+            "unhelpful shed message: {:?}",
+            resp.error
+        );
+    }
+    assert_eq!(server.metrics.requests_shed_deadline.load(Ordering::Relaxed), doomed as u64);
+    assert_eq!(server.metrics.err_code_count(ErrorCode::DeadlineExceeded), doomed as u64);
+    server.stop();
+}
+
+/// Every 3rd non-empty flush drops the connection instead of writing.
+/// Clients see clean EOFs (never hangs), reconnects keep working, and
+/// the server keeps serving throughout.
+#[test]
+fn dropped_connections_recover_on_reconnect() {
+    let config = ServerConfig::builder()
+        .shards(1)
+        .workers(1)
+        .max_batch(4)
+        .max_wait(Duration::from_millis(1))
+        .faults(FaultPlan::new().drop_conn_every(3))
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry_with_m8()).unwrap();
+
+    let mut served = 0usize;
+    let mut dropped = 0usize;
+    for id in 1..=12u64 {
+        // Raw connection, no handshake: exactly one flush per response,
+        // so the drop schedule advances once per connection.
+        let stream = TcpStream::connect(server.local_addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "{}", request_line(id, "m8", vec![0.5; 8])).unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => dropped += 1, // injected drop: clean EOF, no hang
+            Ok(_) => {
+                let resp = Response::from_json(line.trim()).unwrap();
+                assert!(resp.ok, "conn {id}: {:?}", resp.error);
+                assert_eq!(resp.id, id);
+                served += 1;
+            }
+            Err(e) => panic!("conn {id}: read failed with {e} instead of EOF or response"),
+        }
+    }
+    assert!(dropped >= 1, "drop_conn_every(3) never fired over 12 connections");
+    assert!(served >= 6, "only {served}/12 connections served around the injected drops");
+    server.stop();
+}
+
+/// `Server::stop` drains: work accepted before the stop completes and
+/// its responses reach the client even though the worker is slowed by
+/// injected latency, and the observed drain time lands in the metric.
+#[test]
+fn graceful_drain_flushes_accepted_work() {
+    let config = ServerConfig::builder()
+        .shards(1)
+        .workers(1)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .faults(FaultPlan::new().delay_every(1, Duration::from_millis(10)))
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry_with_m8()).unwrap();
+
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let call = Call::apply("m8", vec![0.5; 8]);
+    let ids: Vec<u64> = (0..8).map(|_| client.send(&call).unwrap()).collect();
+
+    // Wait for the reactor to admit all 8 (frames still in the socket
+    // buffer when the drain flag flips would be rejected, not drained),
+    // then stop while ~10 ms/batch of accepted work is still queued.
+    let metrics = server.metrics.clone();
+    let t0 = Instant::now();
+    while metrics.requests.load(Ordering::Relaxed) < ids.len() as u64 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "requests never admitted");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    std::thread::sleep(Duration::from_millis(20));
+    let stopper = std::thread::spawn(move || server.stop());
+    for id in ids {
+        let resp = client.wait_for(id).unwrap();
+        assert!(resp.ok, "accepted request {id} lost in drain: {:?}", resp.error);
+    }
+    stopper.join().unwrap();
+    assert!(
+        metrics.drain_duration_us.load(Ordering::Relaxed) > 0,
+        "drain_duration_us never recorded"
+    );
+}
+
+/// Once a drain begins, new requests are answered with a structured
+/// `draining` rejection (retryable — another instance could serve
+/// them) while already-accepted work still completes.
+#[test]
+fn draining_rejects_new_requests_while_finishing_accepted_ones() {
+    let config = ServerConfig::builder()
+        .shards(1)
+        .workers(1)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(1))
+        .faults(FaultPlan::new().delay_every(1, Duration::from_millis(300)))
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry_with_m8()).unwrap();
+
+    // Both connections exist before the drain (the accept loop stops
+    // taking new sockets once draining starts).
+    let mut client_a = Client::connect(&server.local_addr).unwrap();
+    let mut client_b = Client::connect(&server.local_addr).unwrap();
+
+    // A's request is executing (held ~300 ms by injected latency) when
+    // the drain begins.
+    let id_a = client_a.send(&Call::apply("m8", vec![0.5; 8])).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let stopper = std::thread::spawn(move || server.stop());
+    std::thread::sleep(Duration::from_millis(50));
+
+    let resp_b = client_b.call(Call::apply("m8", vec![0.5; 8])).unwrap();
+    assert!(!resp_b.ok, "request sent mid-drain must be rejected");
+    assert_eq!(resp_b.code, Some(ErrorCode::Draining), "{:?}", resp_b.error);
+    assert!(resp_b.retryable, "draining must be marked retryable");
+
+    let resp_a = client_a.wait_for(id_a).unwrap();
+    assert!(resp_a.ok, "accepted request dropped by drain: {:?}", resp_a.error);
+    stopper.join().unwrap();
+}
+
+/// The seeded chaos run the nightly lane replays: a mixed panic +
+/// latency plan derived from `FASTH_FAULT_SEED`, retrying clients
+/// hammering two shards from four threads. The contract under chaos:
+/// every call returns exactly one response (no hangs, no transport
+/// errors — the plan injects no connection drops), the response ledger
+/// balances, panics actually fired, and the server serves and stops
+/// cleanly afterwards.
+#[test]
+fn seeded_chaos_every_request_answered_and_server_survives() {
+    let seed = chaos_seed();
+    let plan = FaultPlan::from_seed(seed);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create("m8", 8, ExecEngine::Native { k: 4 }, seed);
+    registry.create("m16", 16, ExecEngine::Native { k: 8 }, seed ^ 1);
+    let config = ServerConfig::builder()
+        .shards(2)
+        .workers(2)
+        .reactors(2)
+        .max_batch(4)
+        .max_wait(Duration::from_millis(1))
+        .max_queue_depth(1000)
+        .faults(plan.clone())
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry).unwrap();
+    let addr = server.local_addr;
+
+    let threads = 4usize;
+    let per_thread = 25usize;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let cfg = ClientConfig {
+                    read_timeout: Duration::from_secs(10),
+                    retry: Some(RetryPolicy {
+                        jitter_seed: seed ^ t as u64,
+                        base_backoff: Duration::from_micros(200),
+                        ..Default::default()
+                    }),
+                    ..Default::default()
+                };
+                let mut client = Client::connect_with(&addr, cfg).unwrap();
+                let mut ok = 0usize;
+                for i in 0..per_thread {
+                    let (model, d) = if (t + i) % 2 == 0 { ("m8", 8) } else { ("m16", 16) };
+                    // Exactly-one-response: call() must always return —
+                    // a hang here trips the read timeout and panics.
+                    let resp = client.call(Call::apply(model, vec![0.5; d])).unwrap();
+                    if resp.ok {
+                        ok += 1;
+                    } else {
+                        // Only the injected fault surfaces; never a
+                        // parse or routing error.
+                        assert_eq!(
+                            resp.code,
+                            Some(ErrorCode::InternalPanic),
+                            "thread {t} call {i}: {:?}",
+                            resp.error
+                        );
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(served > 0, "seed {seed:#x}: nothing served under plan {plan:?}");
+
+    // Quiescent ledger: every request the reactors admitted was
+    // answered exactly once, ok or err — nothing double-counted,
+    // nothing lost (retries count on both sides).
+    let m = &server.metrics;
+    let requests = m.requests.load(Ordering::Relaxed);
+    let ok = m.responses_ok.load(Ordering::Relaxed);
+    let err = m.responses_err.load(Ordering::Relaxed);
+    assert_eq!(
+        requests,
+        ok + err,
+        "seed {seed:#x}: response ledger out of balance (requests {requests}, ok {ok}, err {err})"
+    );
+    assert!(
+        m.worker_panics.load(Ordering::Relaxed) >= 1,
+        "seed {seed:#x}: plan {plan:?} never panicked over {requests} requests"
+    );
+
+    // Still serves after the storm (retry rides over a residual panic).
+    let cfg = ClientConfig { retry: Some(RetryPolicy::default()), ..Default::default() };
+    let mut client = Client::connect_with(&addr, cfg).unwrap();
+    let survived = (0..5).any(|_| {
+        client.call(Call::apply("m8", vec![0.5; 8])).map(|r| r.ok).unwrap_or(false)
+    });
+    assert!(survived, "seed {seed:#x}: server unserviceable after chaos");
+    server.stop();
+}
