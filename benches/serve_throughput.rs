@@ -1,5 +1,5 @@
 //! Serving throughput bench: spin up the evented coordinator on
-//! loopback and drive it through three phases —
+//! loopback and drive it through four phases —
 //!
 //!   1. **pipelined throughput**: M concurrent clients with mixed
 //!      square + rect traffic (p50/p99 latency, mean batch size,
@@ -10,7 +10,12 @@
 //!   3. **concurrency**: FASTH_SERVE_CONNS (default 1024) connections
 //!      held open *simultaneously* on ≤ 4 reactor threads, each with a
 //!      request in flight — the evented core's reason to exist (the
-//!      thread-per-connection ancestor needed 2 threads per socket).
+//!      thread-per-connection ancestor needed 2 threads per socket),
+//!   4. **low-rank frontier**: a graded-spectrum d=256 model served
+//!      exactly and at `rank = d/8` through the per-request rank knob;
+//!      reports `rank_speedup` (mean service latency, exact / rank)
+//!      and `rank_rel_err` (Frobenius, vs the exact lane), gated
+//!      against the Eckart–Young tail of the known spectrum.
 //!
 //! Results land in `bench_out/BENCH_serving.json` — the serving leg of
 //! the PR-over-PR perf trajectory (CI's bench-smoke job uploads it).
@@ -18,11 +23,13 @@
 //! `cargo bench --bench serve_throughput`
 //! env: FASTH_SERVE_CLIENTS (4), FASTH_SERVE_REQUESTS (200 per client),
 //!      FASTH_SERVE_SHARDS (2), FASTH_SERVE_REACTORS (4),
-//!      FASTH_SERVE_CHURN (300), FASTH_SERVE_CONNS (1024).
+//!      FASTH_SERVE_CHURN (300), FASTH_SERVE_CONNS (1024),
+//!      FASTH_SERVE_LOWRANK_REQUESTS (256).
 //! The concurrency phase needs ~3 fds per connection; raise `ulimit -n`
 //! (CI uses 8192) or shrink FASTH_SERVE_CONNS on tight systems.
 
 use fasth::coordinator::{Call, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig};
+use fasth::svd::SvdParam;
 use fasth::util::json::Json;
 use fasth::util::Rng;
 use std::sync::Arc;
@@ -45,6 +52,17 @@ fn main() {
     let registry = Arc::new(ModelRegistry::new());
     registry.create("svd_64", d, ExecEngine::Native { k: 16 }, 0xBE);
     registry.create_rect("rect_96x64", rect_rows, d, None, ExecEngine::Native { k: 16 }, 0xBF);
+    // Phase 4's model must exist before start: registration partitions
+    // the registry across shards (rendezvous placement), so the graded
+    // model is pinned to its owning shard like any other.
+    let d_lr = 256usize;
+    let graded_sigma: Vec<f32> = (0..d_lr).map(|i| 0.9f32.powi(i as i32)).collect();
+    {
+        let mut prng = Rng::new(0x10E0);
+        let mut param = SvdParam::random_full(d_lr, &mut prng);
+        param.sigma.copy_from_slice(&graded_sigma);
+        registry.insert("graded_256", param, ExecEngine::Native { k: 16 });
+    }
     let config = ServerConfig::builder()
         .shards(shards)
         .workers(2)
@@ -55,7 +73,7 @@ fn main() {
         .max_queue_depth(100_000)
         .build()
         .expect("valid config");
-    let server = Server::start(config, registry).expect("server start");
+    let server = Server::start(config, Arc::clone(&registry)).expect("server start");
     let addr = server.local_addr;
     println!(
         "== serve_throughput: {shards} shards × 2 workers, {reactors} reactors, {n_clients} \
@@ -192,6 +210,83 @@ fn main() {
     );
     drop(swarm);
 
+    // ---- phase 4: low-rank serving frontier ---------------------------
+    // The graded-spectrum (σ_i = 0.9^i) d=256 model registered at
+    // startup — the regime where truncation earns its keep. rank =
+    // d/8 = 32 drops only the σ-tail past index 32 (≈ 3.5% of the
+    // operator in Frobenius norm) while the LowRank kernels run
+    // O((m+n)·r) per column instead of the exact O(d²) FastH product.
+    let rank = d_lr / 8;
+    let lr_requests = env_usize("FASTH_SERVE_LOWRANK_REQUESTS", 256);
+    let mut lr_client = Client::connect(&addr).expect("lowrank connect");
+    let mut prng = Rng::new(0x10E1);
+    let cols: Vec<Vec<f32>> = (0..lr_requests)
+        .map(|_| (0..d_lr).map(|_| prng.normal_f32()).collect())
+        .collect();
+    // Warm both lanes: the rank lane pays its one-off sketch here, so
+    // the measured section sees only cache hits (steady state).
+    let warm = lr_client.call(Call::apply("graded_256", cols[0].clone())).expect("warm exact");
+    assert!(warm.ok, "warm exact failed: {:?}", warm.error);
+    let warm = lr_client
+        .call(Call::apply("graded_256", cols[0].clone()).rank(rank))
+        .expect("warm rank");
+    assert!(warm.ok, "warm rank failed: {:?}", warm.error);
+
+    // Drive one pipelined burst per lane; mean *service* latency
+    // (server-side, batching + compute) isolates the kernel win from
+    // JSON/transport overhead that both lanes pay identically.
+    let mut run_lane = |rank_opt: Option<usize>| -> (f64, Vec<Vec<f32>>) {
+        let calls: Vec<Call> = cols
+            .iter()
+            .map(|c| {
+                let call = Call::apply("graded_256", c.clone());
+                match rank_opt {
+                    Some(r) => call.rank(r),
+                    None => call,
+                }
+            })
+            .collect();
+        let rs = lr_client.call_many(calls).expect("lowrank call_many");
+        let mut total_us = 0u64;
+        let mut out = Vec::with_capacity(rs.len());
+        for r in rs {
+            assert!(r.ok, "lowrank lane (rank {rank_opt:?}) failed: {:?}", r.error);
+            total_us += r.latency_us;
+            out.push(r.column);
+        }
+        (total_us as f64 / out.len() as f64, out)
+    };
+    let (exact_us, exact_cols) = run_lane(None);
+    let (rank_us, rank_cols) = run_lane(Some(rank));
+    let rank_speedup = exact_us / rank_us.max(1e-9);
+    let (mut err_sq, mut ref_sq) = (0.0f64, 0.0f64);
+    for (ye, yr) in exact_cols.iter().zip(&rank_cols) {
+        for (a, b) in ye.iter().zip(yr) {
+            err_sq += ((a - b) as f64).powi(2);
+            ref_sq += (*a as f64).powi(2);
+        }
+    }
+    let rank_rel_err = (err_sq / ref_sq.max(1e-30)).sqrt();
+    // Eckart–Young floor for this spectrum: the optimal rank-r
+    // Frobenius error ratio is ‖σ-tail‖/‖σ‖; the sketch must land
+    // within 2× of it (the sketch is near-optimal, traffic is random).
+    let tail: f64 = graded_sigma[rank..].iter().map(|s| (*s as f64).powi(2)).sum();
+    let whole: f64 = graded_sigma.iter().map(|s| (*s as f64).powi(2)).sum();
+    let ey_floor = (tail / whole).sqrt();
+    println!(
+        "low-rank frontier : d={d_lr} rank={rank}: exact {exact_us:.0} µs/req vs rank \
+         {rank_us:.0} µs/req → speedup {rank_speedup:.2}×, rel_err {rank_rel_err:.4} \
+         (Eckart–Young floor {ey_floor:.4})"
+    );
+    assert!(
+        rank_speedup >= 1.5,
+        "rank={rank} speedup {rank_speedup:.2}× below the 1.5× gate"
+    );
+    assert!(
+        rank_rel_err <= 2.0 * ey_floor,
+        "rank_rel_err {rank_rel_err:.4} exceeds 2× Eckart–Young floor {ey_floor:.4}"
+    );
+
     let mut admin = Client::connect(&addr).expect("admin connect");
     let stats = admin.admin("stats").expect("stats");
     println!("server stats      : {stats}");
@@ -224,6 +319,11 @@ fn main() {
         ("concurrent_rounds_secs", Json::num(conc_wall)),
         ("worker_panics", Json::num(worker_panics as f64)),
         ("requests_shed", Json::num(requests_shed as f64)),
+        ("lowrank_d", Json::num(d_lr as f64)),
+        ("lowrank_rank", Json::num(rank as f64)),
+        ("rank_speedup", Json::num(rank_speedup)),
+        ("rank_rel_err", Json::num(rank_rel_err)),
+        ("rank_rel_err_floor", Json::num(ey_floor)),
         ("server_stats", Json::parse(&stats).expect("stats json")),
     ]);
     std::fs::create_dir_all("bench_out").expect("bench_out dir");

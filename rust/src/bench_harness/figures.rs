@@ -27,10 +27,12 @@ fn time<T>(cfg: BudgetCfg, f: impl FnMut() -> T) -> Stats {
 }
 
 /// Block size used by the harness: warm-started from the persistent
-/// tuned-k store (`bench_out/tuned_k.json`, populated by `repro tune-k`),
-/// falling back to the √d heuristic when no measurement exists.
+/// tuned-k store (`bench_out/tuned_k.json`, populated by `repro tune-k`)
+/// under the apply variant — the figures time forward-only kernels, so a
+/// step-tuned k (v1 files migrate to the step key) no longer leaks in
+/// here; without an apply measurement we fall back to the √d heuristic.
 pub fn default_k(d: usize) -> usize {
-    match tune::KCache::global().lookup(d, BATCH_M) {
+    match tune::KCache::global().lookup(d, BATCH_M, tune::KVariant::Apply) {
         Some(t) => t.k.clamp(1, d.max(1)),
         None => tune::KCache::heuristic(d, BATCH_M).min(d),
     }

@@ -1,7 +1,9 @@
 //! Dynamic batcher: coalesce single-column requests into `d×m` batches.
 //!
 //! Policy (vLLM-style continuous batching, simplified to the stateless
-//! case): a queue per `(model, op)` key; flush when either `max_batch`
+//! case): a queue per `(model, op, rank)` key — rank-truncated requests
+//! run a different kernel than exact ones, so mixed-rank traffic still
+//! batches, just never inside one batch; flush when either `max_batch`
 //! columns are waiting (full flush) or the oldest request has waited
 //! past the deadline (deadline flush). Both knobs trade latency against
 //! FastH utilization — the ablation bench `ablation_rnn`/serve example
@@ -72,6 +74,9 @@ struct Pending {
 pub struct Batch {
     pub model: String,
     pub op: OpKind,
+    /// Truncation rank shared by every request in the batch (`None` =
+    /// exact): part of the queue key, so a batch is always uniform.
+    pub rank: Option<usize>,
     pub requests: Vec<Request>,
     /// Requests whose `ttl_ms` expired while queued: shed at dequeue,
     /// owed a `deadline_exceeded` error instead of execution.
@@ -80,11 +85,15 @@ pub struct Batch {
     pub full: bool,
 }
 
+/// Queue key: requests batch together only when they run the same
+/// kernel — same model, same op, same truncation rank (`None` = exact).
+type BatchKey = (String, OpKind, Option<usize>);
+
 #[derive(Default)]
 struct Queues {
-    by_key: BTreeMap<(String, OpKind), VecDeque<Pending>>,
+    by_key: BTreeMap<BatchKey, VecDeque<Pending>>,
     /// Round-robin cursor: full-queue scans start after this key.
-    last_served: Option<(String, OpKind)>,
+    last_served: Option<BatchKey>,
     closed: bool,
 }
 
@@ -138,7 +147,7 @@ impl DynamicBatcher {
     pub fn submit(&self, req: Request) {
         let mut q = lock_or_recover(&self.queues);
         q.by_key
-            .entry((req.model.clone(), req.op))
+            .entry((req.model.clone(), req.op, req.rank))
             .or_default()
             .push_back(Pending { req, arrived: Instant::now() });
         self.signal.notify_all();
@@ -160,7 +169,7 @@ impl DynamicBatcher {
             return Err(req);
         }
         q.by_key
-            .entry((req.model.clone(), req.op))
+            .entry((req.model.clone(), req.op, req.rank))
             .or_default()
             .push_back(Pending { req, arrived: Instant::now() });
         self.signal.notify_all();
@@ -306,8 +315,8 @@ impl DynamicBatcher {
     }
 
     /// First key at/after the round-robin cursor with a full queue.
-    fn next_full(q: &Queues, max_batch: usize) -> Option<(String, OpKind)> {
-        let is_full = |(_k, v): &(&(String, OpKind), &VecDeque<Pending>)| v.len() >= max_batch;
+    fn next_full(q: &Queues, max_batch: usize) -> Option<BatchKey> {
+        let is_full = |(_k, v): &(&BatchKey, &VecDeque<Pending>)| v.len() >= max_batch;
         match &q.last_served {
             Some(last) => q
                 .by_key
@@ -319,13 +328,7 @@ impl DynamicBatcher {
         }
     }
 
-    fn flush(
-        &self,
-        q: &mut Queues,
-        key: &(String, OpKind),
-        full: bool,
-        max_batch: usize,
-    ) -> Batch {
+    fn flush(&self, q: &mut Queues, key: &BatchKey, full: bool, max_batch: usize) -> Batch {
         let queue = q.by_key.get_mut(key).expect("key exists");
         let take = queue.len().min(max_batch);
         // Shed requests whose TTL expired while queued: they ride out
@@ -351,7 +354,7 @@ impl DynamicBatcher {
             q.by_key.remove(key);
         }
         q.last_served = Some(key.clone());
-        Batch { model: key.0.clone(), op: key.1, requests, shed, full }
+        Batch { model: key.0.clone(), op: key.1, rank: key.2, requests, shed, full }
     }
 }
 
@@ -361,7 +364,7 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64, model: &str, op: OpKind) -> Request {
-        Request { id, model: model.into(), op, column: vec![1.0, 2.0], ttl_ms: None }
+        Request { id, model: model.into(), op, column: vec![1.0, 2.0], ttl_ms: None, rank: None }
     }
 
     #[test]
@@ -411,6 +414,30 @@ mod tests {
         assert_eq!(batch.op, OpKind::Apply);
         assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 4]);
         assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn rank_partitions_batches() {
+        // Mixed exact + rank-truncated traffic on one (model, op) must
+        // never share a batch (different kernels), but each rank class
+        // still batches among itself.
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        b.submit(req(1, "m", OpKind::Apply));
+        b.submit(Request { rank: Some(4), ..req(2, "m", OpKind::Apply) });
+        b.submit(Request { rank: Some(4), ..req(3, "m", OpKind::Apply) });
+        b.submit(req(4, "m", OpKind::Apply));
+        let first = b.next_batch().unwrap();
+        let second = b.next_batch().unwrap();
+        let (exact, ranked) =
+            if first.rank.is_none() { (first, second) } else { (second, first) };
+        assert_eq!(exact.rank, None);
+        assert_eq!(exact.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 4]);
+        assert_eq!(ranked.rank, Some(4));
+        assert_eq!(ranked.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 
     #[test]

@@ -88,11 +88,12 @@ pub struct Call {
     op: OpKind,
     column: Vec<f32>,
     ttl_ms: Option<u64>,
+    rank: Option<usize>,
 }
 
 impl Call {
     pub fn new(model: impl Into<String>, op: OpKind, column: Vec<f32>) -> Call {
-        Call { model: model.into(), op, column, ttl_ms: None }
+        Call { model: model.into(), op, column, ttl_ms: None, rank: None }
     }
 
     /// Attach a queue deadline: if the server cannot start executing
@@ -102,6 +103,15 @@ impl Call {
     /// instantly).
     pub fn ttl(mut self, ttl: Duration) -> Call {
         self.ttl_ms = Some((ttl.as_millis() as u64).max(1));
+        self
+    }
+
+    /// Serve through a rank-`r` truncation of the model instead of the
+    /// exact factorization (`apply`/`pinv` only — the server rejects the
+    /// knob on other ops). Cheaper per column at `O((m+n)r)`, with error
+    /// governed by the model's trailing spectrum (Eckart–Young).
+    pub fn rank(mut self, r: usize) -> Call {
+        self.rank = Some(r);
         self
     }
 
@@ -144,6 +154,11 @@ impl Call {
 
     pub fn ttl_ms(&self) -> Option<u64> {
         self.ttl_ms
+    }
+
+    /// The requested truncation rank, if any.
+    pub fn rank_opt(&self) -> Option<usize> {
+        self.rank
     }
 }
 
@@ -278,6 +293,7 @@ impl Client {
             op: call.op,
             column: call.column.clone(),
             ttl_ms: call.ttl_ms,
+            rank: call.rank,
         };
         writeln!(self.writer, "{}", req.to_json())?;
         self.writer.flush()?;
@@ -411,6 +427,8 @@ mod tests {
         assert_eq!(c.clone().ttl(Duration::from_millis(40)).ttl_ms(), Some(40));
         // Sub-millisecond TTLs round up instead of expiring instantly.
         assert_eq!(c.clone().ttl(Duration::from_micros(10)).ttl_ms(), Some(1));
+        assert_eq!(c.rank_opt(), None);
+        assert_eq!(c.clone().rank(4).rank_opt(), Some(4));
         assert_eq!(Call::inverse("m", vec![0.0]).op(), OpKind::Inverse);
         assert_eq!(Call::expm("m", vec![0.0]).op(), OpKind::Expm);
         assert_eq!(Call::cayley("m", vec![0.0]).op(), OpKind::Cayley);

@@ -101,6 +101,11 @@ pub struct Metrics {
     /// Wall time the last graceful drain took (gauge, µs; 0 = never
     /// drained).
     pub drain_duration_us: AtomicU64,
+    /// Rank-truncated batches served from a cached `LowRank`
+    /// (`rank=r` requests; see `state::ModelRegistry::lowrank`).
+    pub lowrank_cache_hits: AtomicU64,
+    /// Rank-truncated batches that sketched a fresh truncation.
+    pub lowrank_cache_misses: AtomicU64,
     /// Failed responses by [`ErrorCode::index`] (each bump also counts
     /// in `responses_err` via [`Metrics::count_err_code`]).
     err_by_code: [AtomicU64; ErrorCode::ALL.len()],
@@ -245,6 +250,14 @@ impl Metrics {
                 "drain_duration_us",
                 Json::num(self.drain_duration_us.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "lowrank_cache_hits",
+                Json::num(self.lowrank_cache_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "lowrank_cache_misses",
+                Json::num(self.lowrank_cache_misses.load(Ordering::Relaxed) as f64),
+            ),
             ("responses_err_by_code", Json::obj(by_code)),
             ("per_op", Json::obj(per_op)),
         ])
@@ -256,7 +269,7 @@ impl Metrics {
     pub fn to_prometheus(&self, shard_depths: &[usize], reactor_conns: &[usize]) -> String {
         use std::fmt::Write;
         let mut out = String::new();
-        let counters: [(&str, &AtomicU64); 16] = [
+        let counters: [(&str, &AtomicU64); 18] = [
             ("orthoserve_requests_total", &self.requests),
             ("orthoserve_responses_ok_total", &self.responses_ok),
             ("orthoserve_responses_err_total", &self.responses_err),
@@ -273,6 +286,8 @@ impl Metrics {
             ("orthoserve_worker_respawns_total", &self.worker_respawns),
             ("orthoserve_requests_shed_deadline_total", &self.requests_shed_deadline),
             ("orthoserve_drain_duration_us", &self.drain_duration_us),
+            ("orthoserve_lowrank_cache_hits_total", &self.lowrank_cache_hits),
+            ("orthoserve_lowrank_cache_misses_total", &self.lowrank_cache_misses),
         ];
         for (name, c) in counters {
             let _ = writeln!(out, "{name} {}", c.load(Ordering::Relaxed));
@@ -400,8 +415,12 @@ mod tests {
         assert_eq!(m.responses_err.load(Ordering::Relaxed), 3);
         assert_eq!(m.err_code_count(ErrorCode::Overloaded), 2);
         assert_eq!(m.err_code_count(ErrorCode::BadRequest), 0);
+        m.lowrank_cache_hits.fetch_add(4, Ordering::Relaxed);
+        m.lowrank_cache_misses.fetch_add(1, Ordering::Relaxed);
         let j = crate::util::json::Json::parse(&m.to_json()).unwrap();
         assert_eq!(j.get("worker_panics").as_usize(), Some(1));
+        assert_eq!(j.get("lowrank_cache_hits").as_usize(), Some(4));
+        assert_eq!(j.get("lowrank_cache_misses").as_usize(), Some(1));
         assert_eq!(j.get("requests_shed_deadline").as_usize(), Some(3));
         assert_eq!(j.get("drain_duration_us").as_usize(), Some(1234));
         let by_code = j.get("responses_err_by_code");
@@ -411,6 +430,8 @@ mod tests {
         let text = m.to_prometheus(&[], &[]);
         assert!(text.contains("orthoserve_worker_panics_total 1"), "{text}");
         assert!(text.contains("orthoserve_requests_shed_deadline_total 3"), "{text}");
+        assert!(text.contains("orthoserve_lowrank_cache_hits_total 4"), "{text}");
+        assert!(text.contains("orthoserve_lowrank_cache_misses_total 1"), "{text}");
         assert!(
             text.contains("orthoserve_responses_err_by_code_total{code=\"overloaded\"} 2"),
             "{text}"

@@ -211,6 +211,12 @@ pub mod v1 {
         /// dequeue with `code=deadline_exceeded` instead of wasting
         /// engine time on an answer the client stopped waiting for.
         pub ttl_ms: Option<u64>,
+        /// Optional truncation rank on `op=apply`/`op=pinv`: serve
+        /// through the model's rank-`r` approximation (`O((m+n)r)` per
+        /// column) instead of the exact factors. Absent = exact, so v1
+        /// clients — and the serialized bytes of rank-less requests —
+        /// are untouched (additive field, same rule as `ttl_ms`).
+        pub rank: Option<usize>,
     }
 
     impl Request {
@@ -226,6 +232,9 @@ pub mod v1 {
             ];
             if let Some(ttl) = self.ttl_ms {
                 fields.push(("ttl_ms", Json::num(ttl as f64)));
+            }
+            if let Some(rank) = self.rank {
+                fields.push(("rank", Json::num(rank as f64)));
             }
             Json::obj(fields).to_string()
         }
@@ -246,7 +255,8 @@ pub mod v1 {
                 bail!("request: empty column");
             }
             let ttl_ms = j.get("ttl_ms").as_f64().map(|t| t.max(0.0) as u64);
-            Ok(Request { id, model, op, column, ttl_ms })
+            let rank = j.get("rank").as_usize();
+            Ok(Request { id, model, op, column, ttl_ms, rank })
         }
     }
 
@@ -367,15 +377,22 @@ mod tests {
             op: OpKind::Inverse,
             column: vec![1.0, -2.5, 3.25],
             ttl_ms: None,
+            rank: None,
         };
         let back = Request::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
         // ttl_ms is optional on the wire: absent stays None, present
         // round-trips.
         assert!(!r.to_json().contains("ttl_ms"));
-        let with_ttl = Request { ttl_ms: Some(250), ..r };
+        let with_ttl = Request { ttl_ms: Some(250), ..r.clone() };
         let back = Request::from_json(&with_ttl.to_json()).unwrap();
         assert_eq!(back, with_ttl);
+        // rank follows the same additive rule: rank-less requests are
+        // byte-identical to pre-rank traffic, present round-trips.
+        assert!(!r.to_json().contains("rank"));
+        let with_rank = Request { rank: Some(4), ..r };
+        let back = Request::from_json(&with_rank.to_json()).unwrap();
+        assert_eq!(back, with_rank);
     }
 
     #[test]

@@ -6,12 +6,13 @@
 use super::sync::{read_or_recover, write_or_recover};
 use crate::linalg::Mat;
 use crate::runtime::pjrt::{ArtifactEngine, Tensor};
+use crate::svd::approx::{randomized_svd, FnOp, LowRank, SketchConfig};
 use crate::svd::rect::RectSvdParam;
 use crate::svd::{MatrixOp, SvdParam};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Result};
-use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::protocol::OpKind;
 
@@ -72,6 +73,90 @@ impl ModelState {
                     param.cols
                 ),
             },
+        }
+    }
+
+    /// Rank-aware [`Self::dims`] (the per-request `rank` knob's
+    /// validation point). Truncation changes the *content* of a frame,
+    /// never its widths — a rank-`r` rect `pinv` still returns
+    /// `cols`-vectors, just confined to the top-`r` right singular
+    /// subspace — but a reduced rank is only meaningful on `apply` /
+    /// `pinv`, and `r` must fit the spectrum. Previously the worker had
+    /// no rank-aware dims query at all, so a truncated rect `pinv`
+    /// could not validate the frame it was about to assemble.
+    pub fn dims_at(&self, op: OpKind, rank: Option<usize>) -> Result<(usize, usize)> {
+        let dims = self.dims(op)?;
+        if let Some(r) = rank {
+            if !matches!(op, OpKind::Apply | OpKind::Pinv) {
+                bail!(
+                    "op '{}' does not accept a truncation rank (apply/pinv only)",
+                    op.name()
+                );
+            }
+            let full = self.min_dim();
+            if r == 0 || r > full {
+                bail!("rank {r} out of range for model '{}' (1..={full})", self.name);
+            }
+        }
+        Ok(dims)
+    }
+
+    /// min(rows, cols) — the length of the model's spectrum, the upper
+    /// bound on any truncation rank.
+    pub fn min_dim(&self) -> usize {
+        match &self.entry {
+            ModelEntry::Square(p) => p.dim(),
+            ModelEntry::Rect { param, .. } => param.rows.min(param.cols),
+        }
+    }
+
+    /// The weight as an abstract [`LinOp`](crate::svd::approx::LinOp):
+    /// forward and transpose products through the Householder factors,
+    /// never materializing `W`. This is what the randomized range-finder
+    /// sketches — `O(d²)` per probe instead of an `O(d³)` densification.
+    /// PJRT-engined models sketch through their native factors (the
+    /// param is always resident; only batch execution is offloaded).
+    pub fn as_linop(&self) -> FnOp<'_> {
+        use crate::householder::fasth;
+        match &self.entry {
+            ModelEntry::Square(p) => {
+                let d = p.dim();
+                let k = self.native_k().clamp(1, d.max(1));
+                FnOp::new(
+                    d,
+                    d,
+                    move |x| p.apply(x, k),
+                    // Wᵀ = V·Σ·Uᵀ (Σ symmetric in the square case).
+                    move |x| {
+                        let y = fasth::fasth_apply_transpose(&p.u, x, k);
+                        let y = crate::svd::param::scale_rows(&y, &p.sigma);
+                        fasth::fasth_apply(&p.v, &y, k)
+                    },
+                )
+            }
+            ModelEntry::Rect { param, .. } => {
+                let (n, m) = (param.rows, param.cols);
+                let k = self.native_k();
+                FnOp::new(
+                    n,
+                    m,
+                    move |x| param.apply(x, k),
+                    // Wᵀ = V·Σᵀ·Uᵀ: the Σᵀ step reshapes n → m rows.
+                    move |y| {
+                        let y1 =
+                            fasth::fasth_apply_transpose(&param.u, y, k.clamp(1, n.max(1)));
+                        let y2 = sigma_t_scale(&param.sigma, &y1, m);
+                        fasth::fasth_apply(&param.v, &y2, k.clamp(1, m.max(1)))
+                    },
+                )
+            }
+        }
+    }
+
+    fn native_k(&self) -> usize {
+        match &self.engine {
+            ExecEngine::Native { k } => *k,
+            ExecEngine::Pjrt(_) => 16,
         }
     }
 
@@ -188,6 +273,22 @@ fn inverse_with_sigma(p: &SvdParam, sigma: &[f32], x: &Mat, k: usize) -> Mat {
     fasth::fasth_apply(&p.v, &y2, k)
 }
 
+/// `Σᵀ·Y` for a rectangular-diagonal `Σ`: scale the first min(n, m)
+/// rows by σ, reshaped to `out_rows` (the adjoint of the Σ inside
+/// `RectSvdParam::apply`, used by the sketch's transpose product).
+fn sigma_t_scale(sigma: &[f32], y: &Mat, out_rows: usize) -> Mat {
+    let mut out = Mat::zeros(out_rows, y.cols());
+    for i in 0..sigma.len().min(out_rows).min(y.rows()) {
+        let s = sigma[i];
+        let src = y.row(i);
+        let dst = out.row_mut(i);
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = s * v;
+        }
+    }
+    out
+}
+
 /// `1/σ`, except Σ⁺'s convention that a zero singular value contributes
 /// zero (matches `RectSvdParam::sigma_pinv_apply`).
 fn recip_or_zero(s: f32) -> f32 {
@@ -238,11 +339,56 @@ fn run_in_col_chunks(
     Ok(out.unwrap_or_else(|| Mat::zeros(x.rows(), 0)))
 }
 
+/// Bound on distinct `(model, rank)` truncations kept resident per
+/// registry partition; beyond it the least-recently-served truncation
+/// is dropped (it re-sketches deterministically on next use).
+const LOWRANK_CAP: usize = 32;
+
+/// LRU of sketched truncations, shared by every worker on the shard.
+#[derive(Default)]
+struct LowRankCache {
+    map: BTreeMap<(String, usize), Arc<LowRank>>,
+    lru: VecDeque<(String, usize)>,
+}
+
+impl LowRankCache {
+    /// Move `key` to most-recently-used.
+    fn touch(&mut self, key: &(String, usize)) {
+        if let Some(pos) = self.lru.iter().position(|k| k == key) {
+            self.lru.remove(pos);
+        }
+        self.lru.push_back(key.clone());
+    }
+
+    fn insert(&mut self, key: (String, usize), lr: Arc<LowRank>) {
+        self.map.insert(key.clone(), lr);
+        self.touch(&key);
+        while self.map.len() > LOWRANK_CAP {
+            let Some(victim) = self.lru.pop_front() else { break };
+            self.map.remove(&victim);
+        }
+    }
+}
+
+/// Deterministic Ω seed per (model, rank): FNV-1a over the name, rank
+/// folded in — every shard and restart sketches the same truncation.
+fn lowrank_seed(name: &str, rank: usize) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ rank as u64
+}
+
 /// Thread-safe registry of served models. The server partitions one
 /// registry per shard (rendezvous-hashed on model name); this type is
-/// both the user-facing catalog and the per-shard partition.
+/// both the user-facing catalog and the per-shard partition. It also
+/// owns the shard's [`LowRank`] truncation cache (per-request `rank`
+/// serving), so cached sketches live and die with their models.
 pub struct ModelRegistry {
     models: RwLock<BTreeMap<String, Arc<ModelState>>>,
+    lowrank: Mutex<LowRankCache>,
 }
 
 impl Default for ModelRegistry {
@@ -253,7 +399,38 @@ impl Default for ModelRegistry {
 
 impl ModelRegistry {
     pub fn new() -> ModelRegistry {
-        ModelRegistry { models: RwLock::new(BTreeMap::new()) }
+        ModelRegistry {
+            models: RwLock::new(BTreeMap::new()),
+            lowrank: Mutex::new(LowRankCache::default()),
+        }
+    }
+
+    /// The rank-`r` truncation of model `name`, sketched on first use
+    /// via the randomized range-finder and cached (bounded LRU,
+    /// [`LOWRANK_CAP`] entries). Returns the factorization and whether
+    /// the lookup hit the cache. Building happens under the cache lock
+    /// so a cold rank is sketched exactly once even when many requests
+    /// race for it; exact (rank-absent) traffic never touches the lock.
+    pub fn lowrank(&self, name: &str, rank: usize) -> Result<(Arc<LowRank>, bool)> {
+        let state =
+            self.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+        state.dims_at(OpKind::Apply, Some(rank))?;
+        let key = (name.to_string(), rank);
+        let mut cache = self.lowrank.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(lr) = cache.map.get(&key).cloned() {
+            cache.touch(&key);
+            return Ok((lr, true));
+        }
+        let mut rng = Rng::new(lowrank_seed(name, rank));
+        let op = state.as_linop();
+        let lr = Arc::new(randomized_svd(&op, rank, &SketchConfig::default(), &mut rng));
+        cache.insert(key, Arc::clone(&lr));
+        Ok((lr, false))
+    }
+
+    /// Resident truncation count (tests, stats).
+    pub fn lowrank_cached(&self) -> usize {
+        self.lowrank.lock().unwrap_or_else(|e| e.into_inner()).map.len()
     }
 
     /// Register a freshly initialized square model of size d.
@@ -482,6 +659,116 @@ mod tests {
         assert_eq!(y2[(2, 1)], narrow[(2, 1)] + 1.0);
         // Executor errors surface.
         assert!(run_in_col_chunks(&narrow, m_art, |_| anyhow::bail!("boom")).is_err());
+    }
+
+    #[test]
+    fn dims_at_validates_rank() {
+        let reg = ModelRegistry::new();
+        reg.create("sq", 8, ExecEngine::Native { k: 4 }, 30);
+        reg.create_rect("rc", 12, 7, None, ExecEngine::Native { k: 4 }, 31);
+        let sq = reg.get("sq").unwrap();
+        let rc = reg.get("rc").unwrap();
+        // rank=None is exactly dims().
+        assert_eq!(sq.dims_at(OpKind::Apply, None).unwrap(), (8, 8));
+        assert_eq!(rc.dims_at(OpKind::Pinv, None).unwrap(), (12, 7));
+        // Truncation preserves frame widths.
+        assert_eq!(sq.dims_at(OpKind::Apply, Some(3)).unwrap(), (8, 8));
+        assert_eq!(rc.dims_at(OpKind::Pinv, Some(4)).unwrap(), (12, 7));
+        assert_eq!(rc.min_dim(), 7);
+        // Out-of-range ranks and rank on square-only ops rejected.
+        assert!(sq.dims_at(OpKind::Apply, Some(0)).is_err());
+        assert!(sq.dims_at(OpKind::Apply, Some(9)).is_err());
+        assert!(rc.dims_at(OpKind::Apply, Some(8)).is_err());
+        assert!(sq.dims_at(OpKind::Inverse, Some(3)).is_err());
+        assert!(sq.dims_at(OpKind::Expm, Some(3)).is_err());
+    }
+
+    #[test]
+    fn as_linop_transpose_is_adjoint() {
+        // <W·x, y> = <x, Wᵀ·y> for both shapes — validates the sketch's
+        // transpose route through the Householder factors.
+        let reg = ModelRegistry::new();
+        reg.create("sq", 10, ExecEngine::Native { k: 4 }, 32);
+        reg.create_rect("rc", 11, 6, None, ExecEngine::Native { k: 4 }, 33);
+        let mut rng = Rng::new(34);
+        for name in ["sq", "rc"] {
+            let model = reg.get(name).unwrap();
+            let op = model.as_linop();
+            use crate::svd::approx::LinOp;
+            let x = Mat::randn(op.cols(), 3, &mut rng);
+            let y = Mat::randn(op.rows(), 3, &mut rng);
+            let wx = op.apply(&x);
+            let wty = op.apply_t(&y);
+            let lhs: f64 =
+                wx.data().iter().zip(y.data()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let rhs: f64 =
+                x.data().iter().zip(wty.data()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{name}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn lowrank_cache_hit_miss_and_validation() {
+        let reg = ModelRegistry::new();
+        reg.create("m", 16, ExecEngine::Native { k: 4 }, 35);
+        let (lr, hit) = reg.lowrank("m", 4).unwrap();
+        assert!(!hit, "first lookup must build");
+        assert_eq!(lr.rank(), 4);
+        let (lr2, hit2) = reg.lowrank("m", 4).unwrap();
+        assert!(hit2, "second lookup must hit");
+        assert!(Arc::ptr_eq(&lr, &lr2), "hit returns the cached Arc");
+        assert_eq!(reg.lowrank_cached(), 1);
+        assert!(reg.lowrank("m", 0).is_err());
+        assert!(reg.lowrank("m", 17).is_err());
+        assert!(reg.lowrank("nope", 4).is_err());
+    }
+
+    #[test]
+    fn lowrank_full_rank_matches_exact_execution() {
+        // At r = d the sketch spans the whole space, so the truncated
+        // route must reproduce the exact engine (square and rect, both
+        // directions).
+        let reg = ModelRegistry::new();
+        reg.create("sq", 12, ExecEngine::Native { k: 4 }, 36);
+        reg.create_rect("rc", 12, 7, None, ExecEngine::Native { k: 4 }, 37);
+        let mut rng = Rng::new(38);
+        for (name, r) in [("sq", 12usize), ("rc", 7)] {
+            let model = reg.get(name).unwrap();
+            let (lr, _) = reg.lowrank(name, r).unwrap();
+            let (d_in, d_out) = model.dims(OpKind::Apply).unwrap();
+            let x = Mat::randn(d_in, 3, &mut rng);
+            let y_exact = model.execute(OpKind::Apply, &x).unwrap();
+            assert!(
+                lr.apply(&x).max_abs_diff(&y_exact) < 1e-2,
+                "{name} apply diff {}",
+                lr.apply(&x).max_abs_diff(&y_exact)
+            );
+            let y = Mat::randn(d_out, 3, &mut rng);
+            let back_exact = model.execute(OpKind::Pinv, &y).unwrap();
+            assert!(
+                lr.pinv(&y).max_abs_diff(&back_exact) < 1e-2,
+                "{name} pinv diff {}",
+                lr.pinv(&y).max_abs_diff(&back_exact)
+            );
+        }
+    }
+
+    #[test]
+    fn lowrank_cache_evicts_least_recent() {
+        let reg = ModelRegistry::new();
+        reg.create("a", 33, ExecEngine::Native { k: 4 }, 39);
+        // Fill the cache past its cap with distinct ranks.
+        for r in 1..=33usize {
+            reg.lowrank("a", r).unwrap();
+        }
+        assert_eq!(reg.lowrank_cached(), 32, "cap enforced");
+        // rank=1 was the least-recently-used entry: it must have been
+        // evicted, so looking it up again is a miss (deterministic
+        // rebuild), while rank=33 is still resident.
+        let (_, hit1) = reg.lowrank("a", 1).unwrap();
+        assert!(!hit1);
+        let (_, hit33) = reg.lowrank("a", 33).unwrap();
+        assert!(hit33);
     }
 
     #[test]

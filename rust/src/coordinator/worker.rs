@@ -14,7 +14,7 @@
 use super::batcher::Batch;
 use super::faults::{BatchFault, FaultPlan};
 use super::metrics::Metrics;
-use super::protocol::{ErrorCode, Response};
+use super::protocol::{ErrorCode, OpKind, Response};
 use super::shard::Shard;
 use super::state::ModelRegistry;
 use super::sync::lock_or_recover;
@@ -187,9 +187,11 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
                 .collect();
         }
     };
-    // The op's in/out widths on this model (errors for e.g. expm on a
-    // rect shape fan out to the whole batch).
-    let d_in = match model.dims(batch.op) {
+    // The op's in/out widths on this model, with the batch's truncation
+    // rank validated against op and spectrum (errors — expm on a rect
+    // shape, rank on a square-only op, r out of range — fan out to the
+    // whole batch).
+    let d_in = match model.dims_at(batch.op, batch.rank) {
         Ok((d_in, _)) => d_in,
         Err(e) => {
             metrics.count_err_code(ErrorCode::BadRequest, batch.requests.len() as u64);
@@ -229,7 +231,24 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
         }
     }
 
-    match model.execute(batch.op, &x) {
+    // Rank-truncated batches route through the registry's LowRank cache
+    // (sketched on first use); exact batches through the model engine.
+    let result = match batch.rank {
+        Some(r) => registry.lowrank(&batch.model, r).map(|(lr, hit)| {
+            if hit {
+                metrics.lowrank_cache_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                metrics.lowrank_cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            match batch.op {
+                OpKind::Pinv => lr.pinv(&x),
+                // dims_at admitted apply/pinv only.
+                _ => lr.apply(&x),
+            }
+        }),
+        None => model.execute(batch.op, &x),
+    };
+    match result {
         Ok(y) => {
             let us = t0.elapsed().as_micros() as u64;
             metrics.responses_ok.fetch_add(m as u64, Ordering::Relaxed);
@@ -270,9 +289,19 @@ mod tests {
     }
 
     fn make_batch(model: &str, op: OpKind, cols: Vec<Vec<f32>>) -> Batch {
+        make_batch_rank(model, op, None, cols)
+    }
+
+    fn make_batch_rank(
+        model: &str,
+        op: OpKind,
+        rank: Option<usize>,
+        cols: Vec<Vec<f32>>,
+    ) -> Batch {
         Batch {
             model: model.into(),
             op,
+            rank,
             requests: cols
                 .into_iter()
                 .enumerate()
@@ -282,6 +311,7 @@ mod tests {
                     op,
                     column,
                     ttl_ms: None,
+                    rank,
                 })
                 .collect(),
             shed: vec![],
@@ -380,6 +410,65 @@ mod tests {
             execute_batch(&reg, &metrics, &make_batch("r", OpKind::Expm, vec![vec![0.0; 8]; 2]));
         assert!(bad.iter().all(|r| !r.ok));
         assert!(bad[0].error.as_ref().unwrap().contains("square"));
+    }
+
+    #[test]
+    fn rank_routes_through_lowrank_cache() {
+        let (reg, metrics) = setup();
+        let mut rng = Rng::new(20);
+        let cols: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        // A full-rank truncation must reproduce the exact engine.
+        let exact = execute_batch(&reg, &metrics, &make_batch("m8", OpKind::Apply, cols.clone()));
+        let full = execute_batch(
+            &reg,
+            &metrics,
+            &make_batch_rank("m8", OpKind::Apply, Some(8), cols.clone()),
+        );
+        for (e, f) in exact.iter().zip(&full) {
+            assert!(f.ok, "{:?}", f.error);
+            assert_close(&f.column, &e.column, 1e-2, 1e-2).unwrap();
+        }
+        assert_eq!(metrics.lowrank_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.lowrank_cache_hits.load(Ordering::Relaxed), 0);
+        // Same (model, rank) again: cache hit, no rebuild.
+        let again = execute_batch(
+            &reg,
+            &metrics,
+            &make_batch_rank("m8", OpKind::Apply, Some(8), cols.clone()),
+        );
+        assert!(again.iter().all(|r| r.ok));
+        assert_eq!(metrics.lowrank_cache_hits.load(Ordering::Relaxed), 1);
+        // pinv at full rank round-trips through the truncated route.
+        let back = execute_batch(
+            &reg,
+            &metrics,
+            &make_batch_rank(
+                "m8",
+                OpKind::Pinv,
+                Some(8),
+                full.iter().map(|r| r.column.clone()).collect(),
+            ),
+        );
+        for (b, c) in back.iter().zip(&cols) {
+            assert!(b.ok);
+            assert_close(&b.column, c, 1e-2, 1e-2).unwrap();
+        }
+    }
+
+    #[test]
+    fn bad_rank_requests_error_the_batch() {
+        let (reg, metrics) = setup();
+        for batch in [
+            make_batch_rank("m8", OpKind::Expm, Some(4), vec![vec![0.0; 8]]),
+            make_batch_rank("m8", OpKind::Inverse, Some(4), vec![vec![0.0; 8]]),
+            make_batch_rank("m8", OpKind::Apply, Some(0), vec![vec![0.0; 8]]),
+            make_batch_rank("m8", OpKind::Apply, Some(9), vec![vec![0.0; 8]]),
+        ] {
+            let rs = execute_batch(&reg, &metrics, &batch);
+            assert!(rs.iter().all(|r| !r.ok), "op {:?} rank {:?}", batch.op, batch.rank);
+            assert!(rs.iter().all(|r| r.code == Some(ErrorCode::BadRequest)));
+        }
     }
 
     #[test]

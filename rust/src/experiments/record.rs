@@ -286,21 +286,41 @@ impl RunRecord {
     }
 
     /// Load every `*.json` artifact in `dir`, sorted by (workload,
-    /// family, seed) so downstream aggregation is order-stable.
+    /// family, seed) so downstream aggregation is order-stable. Strict:
+    /// the first malformed artifact fails the load (the runner's own
+    /// read-back path, where a bad file means a runner bug).
     pub fn load_dir(dir: &Path) -> Result<Vec<RunRecord>, String> {
+        let (records, skipped) = Self::load_dir_lenient(dir)?;
+        if let Some(first) = skipped.first() {
+            return Err(first.clone());
+        }
+        Ok(records)
+    }
+
+    /// Lenient variant for `repro report`: artifacts that fail to parse
+    /// (truncated by a crashed run, half-written by an in-flight one, or
+    /// from an old schema) are *skipped*, their errors returned alongside
+    /// the good records so the caller can warn instead of bailing on a
+    /// partially populated directory.
+    pub fn load_dir_lenient(dir: &Path) -> Result<(Vec<RunRecord>, Vec<String>), String> {
         let mut out = Vec::new();
+        let mut skipped = Vec::new();
         let entries =
             std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
         for entry in entries {
             let path = entry.map_err(|e| e.to_string())?.path();
             if path.extension().and_then(|e| e.to_str()) == Some("json") {
-                out.push(Self::load(&path)?);
+                match Self::load(&path) {
+                    Ok(r) => out.push(r),
+                    Err(e) => skipped.push(e),
+                }
             }
         }
         out.sort_by(|a, b| {
             (&a.workload, &a.family, a.seed).cmp(&(&b.workload, &b.family, b.seed))
         });
-        Ok(out)
+        skipped.sort();
+        Ok((out, skipped))
     }
 }
 
@@ -407,6 +427,24 @@ mod tests {
         // Sorted by (workload, family, seed): "dense" < "rect-svd".
         assert_eq!(loaded[0].family, "dense");
         assert_eq!(loaded[1].seed, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_dirs_load_leniently() {
+        let dir = std::env::temp_dir().join(format!("fasth_rec_part_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        sample_record(1).save(&dir).unwrap();
+        // A half-written artifact (crashed run) and an old-schema one.
+        std::fs::write(dir.join("truncated.json"), "{\"schema_version\": 3, \"exp").unwrap();
+        std::fs::write(dir.join("old.json"), "{\"schema_version\": 0}").unwrap();
+        // Non-JSON files are not records and are ignored outright.
+        std::fs::write(dir.join("notes.txt"), "scratch").unwrap();
+        let (records, skipped) = RunRecord::load_dir_lenient(&dir).unwrap();
+        assert_eq!(records.len(), 1, "the good record survives");
+        assert_eq!(skipped.len(), 2, "both bad artifacts reported: {skipped:?}");
+        // The strict loader surfaces the first failure instead.
+        assert!(RunRecord::load_dir(&dir).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

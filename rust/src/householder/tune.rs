@@ -16,11 +16,41 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 
-/// Result of a tuning run for one `(d, m)` pair.
+/// Which timed kernel a tuned `k` is valid for. The fwd+bwd training
+/// `step` and the forward-only `apply` (the serving hot path) have
+/// different arithmetic-to-traversal ratios, so their optima differ —
+/// caching them under one key silently served the step-tuned `k` to
+/// apply-only callers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KVariant {
+    /// Forward-only `fasth_apply` (serving, inference benches).
+    Apply,
+    /// Full forward+backward training step (`Engine::step`).
+    Step,
+}
+
+impl KVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            KVariant::Apply => "apply",
+            KVariant::Step => "step",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KVariant> {
+        match s {
+            "apply" => Some(KVariant::Apply),
+            "step" => Some(KVariant::Step),
+            _ => None,
+        }
+    }
+}
+
+/// Result of a tuning run for one `(d, m, variant)` triple.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TunedK {
     pub k: usize,
-    /// Mean step time at the chosen k, seconds.
+    /// Mean time of the variant's kernel at the chosen k, seconds.
     pub step_secs: f64,
 }
 
@@ -28,6 +58,19 @@ pub struct TunedK {
 /// time, exactly the paper's protocol. `budget_secs` bounds the whole
 /// search (the paper quotes <1 s at d = 784).
 pub fn tune_k(d: usize, m: usize, c: usize, budget_secs: f64, rng: &mut Rng) -> TunedK {
+    tune_k_variant(d, m, c, budget_secs, KVariant::Step, rng)
+}
+
+/// [`tune_k`] generalized over the timed kernel: `Step` times the full
+/// training step, `Apply` times the forward-only serving kernel.
+pub fn tune_k_variant(
+    d: usize,
+    m: usize,
+    c: usize,
+    budget_secs: f64,
+    variant: KVariant,
+    rng: &mut Rng,
+) -> TunedK {
     let hv = HouseholderVectors::random_full(d, rng);
     let x = Mat::randn(d, m, rng);
     let g = Mat::randn(d, m, rng);
@@ -54,7 +97,12 @@ pub fn tune_k(d: usize, m: usize, c: usize, budget_secs: f64, rng: &mut Rng) -> 
     let mut best = TunedK { k: candidates[0], step_secs: f64::INFINITY };
     for &k in &candidates {
         let engine = Engine::FastH { k };
-        let stats = time_reps_budget(20, per_candidate, || engine.step(&hv, &x, &g));
+        let stats = match variant {
+            KVariant::Step => time_reps_budget(20, per_candidate, || engine.step(&hv, &x, &g)),
+            KVariant::Apply => time_reps_budget(20, per_candidate, || {
+                super::fasth::fasth_apply(&hv, &x, k);
+            }),
+        };
         if stats.mean < best.step_secs {
             best = TunedK { k, step_secs: stats.mean };
         }
@@ -67,11 +115,13 @@ pub fn tune_k(d: usize, m: usize, c: usize, budget_secs: f64, rng: &mut Rng) -> 
 pub const DEFAULT_CACHE_PATH: &str = "bench_out/tuned_k.json";
 
 /// Process-wide cache: "we never need to search for k more than one time"
-/// (§3.3). Keyed by (d, m). Optionally backed by a JSON file so the
-/// search survives the *process* too — the server and benches warm-start
-/// from earlier runs instead of re-measuring.
+/// (§3.3). Keyed by (d, m, [`KVariant`]) — the variant dimension keeps
+/// step-tuned and apply-tuned optima apart. Optionally backed by a JSON
+/// file (schema v2; v1 files migrate on load, see [`load_entries`]) so
+/// the search survives the *process* too — the server and benches
+/// warm-start from earlier runs instead of re-measuring.
 pub struct KCache {
-    map: Mutex<BTreeMap<(usize, usize), TunedK>>,
+    map: Mutex<BTreeMap<(usize, usize, KVariant), TunedK>>,
     /// Backing JSON file; `None` = in-memory only.
     path: Option<PathBuf>,
 }
@@ -112,13 +162,13 @@ impl KCache {
     }
 
     /// Cache hit without triggering a search.
-    pub fn lookup(&self, d: usize, m: usize) -> Option<TunedK> {
-        self.map.lock().unwrap().get(&(d, m)).copied()
+    pub fn lookup(&self, d: usize, m: usize, variant: KVariant) -> Option<TunedK> {
+        self.map.lock().unwrap().get(&(d, m, variant)).copied()
     }
 
     /// Record a tuning result (write-through to the backing file).
-    pub fn insert(&self, d: usize, m: usize, tuned: TunedK) {
-        self.map.lock().unwrap().insert((d, m), tuned);
+    pub fn insert(&self, d: usize, m: usize, variant: KVariant, tuned: TunedK) {
+        self.map.lock().unwrap().insert((d, m, variant), tuned);
         if let Err(e) = self.save() {
             eprintln!("warning: could not persist tuned-k cache: {e}");
         }
@@ -140,14 +190,14 @@ impl KCache {
         std::fs::rename(&tmp, path)
     }
 
-    /// Fetch the tuned k, running the search on a miss (and persisting
-    /// the result when file-backed).
-    pub fn get_or_tune(&self, d: usize, m: usize, rng: &mut Rng) -> TunedK {
-        if let Some(hit) = self.lookup(d, m) {
+    /// Fetch the tuned k for a variant, running the search on a miss
+    /// (and persisting the result when file-backed).
+    pub fn get_or_tune(&self, d: usize, m: usize, variant: KVariant, rng: &mut Rng) -> TunedK {
+        if let Some(hit) = self.lookup(d, m, variant) {
             return hit;
         }
-        let tuned = tune_k(d, m, 2, 0.5, rng);
-        self.insert(d, m, tuned);
+        let tuned = tune_k_variant(d, m, 2, 0.5, variant, rng);
+        self.insert(d, m, variant, tuned);
         tuned
     }
 
@@ -169,11 +219,24 @@ impl KCache {
     }
 }
 
-/// Parse `{"entries": [{"d", "m", "k", "step_secs"}, ...]}`; malformed
-/// entries are skipped, a malformed document yields `None`.
-fn load_entries(path: &Path) -> Option<BTreeMap<(usize, usize), TunedK>> {
+/// On-disk schema version written by [`KCache::save`]. v2 added the
+/// per-entry `variant` field.
+const SCHEMA_VERSION: u64 = 2;
+
+/// Parse the backing file; malformed entries are skipped, a malformed
+/// document yields `None`.
+///
+/// - v2 (`{"version":2,"entries":[{d,m,variant,k,step_secs}]}`):
+///   entries with an unknown variant are dropped.
+/// - v1 (no `version` field, entries without `variant`): migrated in
+///   place to [`KVariant::Step`] — the v1 tuner only ever measured the
+///   fwd+bwd step, so that is the key those numbers are valid for.
+///   Apply-path lookups then miss and fall back to the heuristic until
+///   an apply-variant tune runs. The next save rewrites the file as v2.
+fn load_entries(path: &Path) -> Option<BTreeMap<(usize, usize, KVariant), TunedK>> {
     let text = std::fs::read_to_string(path).ok()?;
     let doc = Json::parse(&text).ok()?;
+    let version = doc.get("version").as_usize().unwrap_or(1);
     let mut map = BTreeMap::new();
     for e in doc.get("entries").as_arr()? {
         let d = e.get("d").as_usize().unwrap_or(0);
@@ -183,24 +246,36 @@ fn load_entries(path: &Path) -> Option<BTreeMap<(usize, usize), TunedK>> {
         if d == 0 || k == 0 || k > d {
             continue; // skip malformed entries (a tampered k could panic us)
         }
-        map.insert((d, m), TunedK { k, step_secs });
+        let variant = if version >= 2 {
+            match e.get("variant").as_str().and_then(KVariant::parse) {
+                Some(v) => v,
+                None => continue, // unknown variant: a future schema's entry
+            }
+        } else {
+            KVariant::Step
+        };
+        map.insert((d, m, variant), TunedK { k, step_secs });
     }
     Some(map)
 }
 
-fn entries_json(map: &BTreeMap<(usize, usize), TunedK>) -> Json {
+fn entries_json(map: &BTreeMap<(usize, usize, KVariant), TunedK>) -> Json {
     let entries = map
         .iter()
-        .map(|(&(d, m), t)| {
+        .map(|(&(d, m, variant), t)| {
             Json::obj(vec![
                 ("d", Json::num(d as f64)),
                 ("m", Json::num(m as f64)),
+                ("variant", Json::str(variant.name())),
                 ("k", Json::num(t.k as f64)),
                 ("step_secs", Json::num(t.step_secs)),
             ])
         })
         .collect();
-    Json::obj(vec![("entries", Json::arr(entries))])
+    Json::obj(vec![
+        ("version", Json::num(SCHEMA_VERSION as f64)),
+        ("entries", Json::arr(entries)),
+    ])
 }
 
 #[cfg(test)]
@@ -228,11 +303,14 @@ mod tests {
         let cache = KCache::new();
         let mut rng = Rng::new(122);
         assert!(cache.is_empty());
-        let a = cache.get_or_tune(48, 4, &mut rng);
+        let a = cache.get_or_tune(48, 4, KVariant::Step, &mut rng);
         assert_eq!(cache.len(), 1);
-        let b = cache.get_or_tune(48, 4, &mut rng);
+        let b = cache.get_or_tune(48, 4, KVariant::Step, &mut rng);
         assert_eq!(a, b, "second call must be a cache hit with identical result");
         assert_eq!(cache.len(), 1);
+        // The apply variant is a distinct key: tuning it adds an entry.
+        cache.get_or_tune(48, 4, KVariant::Apply, &mut rng);
+        assert_eq!(cache.len(), 2);
     }
 
     fn temp_cache_path(tag: &str) -> std::path::PathBuf {
@@ -246,16 +324,48 @@ mod tests {
         {
             let cache = KCache::persistent(&path);
             assert!(cache.is_empty(), "fresh file must start empty");
-            cache.insert(128, 32, TunedK { k: 24, step_secs: 1.5e-3 });
-            cache.insert(64, 8, TunedK { k: 16, step_secs: 0.5e-3 });
+            cache.insert(128, 32, KVariant::Step, TunedK { k: 24, step_secs: 1.5e-3 });
+            cache.insert(128, 32, KVariant::Apply, TunedK { k: 32, step_secs: 0.8e-3 });
+            cache.insert(64, 8, KVariant::Step, TunedK { k: 16, step_secs: 0.5e-3 });
         }
+        // The rewritten file is schema v2.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"version\""), "{text}");
+        assert!(text.contains("\"variant\""), "{text}");
         let reloaded = KCache::persistent(&path);
-        assert_eq!(reloaded.len(), 2);
-        let hit = reloaded.lookup(128, 32).expect("persisted entry");
+        assert_eq!(reloaded.len(), 3);
+        let hit = reloaded.lookup(128, 32, KVariant::Step).expect("persisted entry");
         assert_eq!(hit.k, 24);
         assert!((hit.step_secs - 1.5e-3).abs() < 1e-12);
-        assert_eq!(reloaded.lookup(64, 8).unwrap().k, 16);
-        assert_eq!(reloaded.lookup(256, 32), None);
+        // The two variants of (128, 32) stay distinct across the reload.
+        assert_eq!(reloaded.lookup(128, 32, KVariant::Apply).unwrap().k, 32);
+        assert_eq!(reloaded.lookup(64, 8, KVariant::Step).unwrap().k, 16);
+        assert_eq!(reloaded.lookup(64, 8, KVariant::Apply), None);
+        assert_eq!(reloaded.lookup(256, 32, KVariant::Step), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_files_migrate_to_step_variant() {
+        let path = temp_cache_path("v1migrate");
+        // A pre-versioning file: no "version", no per-entry "variant".
+        let doc = r#"{"entries":[{"d":128,"m":32,"k":24,"step_secs":0.0015},
+                      {"d":64,"m":8,"k":16,"step_secs":0.0005}]}"#;
+        std::fs::write(&path, doc).unwrap();
+        let cache = KCache::persistent(&path);
+        assert_eq!(cache.len(), 2);
+        // v1 numbers came from the step tuner, so they land on Step…
+        assert_eq!(cache.lookup(128, 32, KVariant::Step).unwrap().k, 24);
+        // …and apply-path lookups miss (heuristic fallback territory).
+        assert_eq!(cache.lookup(128, 32, KVariant::Apply), None);
+        // Any write-through upgrades the file to v2 with variants.
+        cache.insert(32, 4, KVariant::Apply, TunedK { k: 12, step_secs: 1e-4 });
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"version\""), "{text}");
+        let reloaded = KCache::persistent(&path);
+        assert_eq!(reloaded.len(), 3);
+        assert_eq!(reloaded.lookup(128, 32, KVariant::Step).unwrap().k, 24);
+        assert_eq!(reloaded.lookup(32, 4, KVariant::Apply).unwrap().k, 12);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -271,7 +381,15 @@ mod tests {
         std::fs::write(&path, doc).unwrap();
         let cache = KCache::persistent(&path);
         assert_eq!(cache.len(), 1);
-        assert_eq!(cache.lookup(32, 16).unwrap().k, 8);
+        assert_eq!(cache.lookup(32, 16, KVariant::Step).unwrap().k, 8);
+        // A v2 file with an unrecognized variant drops that entry.
+        let doc = r#"{"version":2,"entries":[
+                      {"d":32,"m":4,"variant":"warp","k":8,"step_secs":1.0},
+                      {"d":32,"m":4,"variant":"apply","k":8,"step_secs":1.0}]}"#;
+        std::fs::write(&path, doc).unwrap();
+        let cache = KCache::persistent(&path);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.lookup(32, 4, KVariant::Apply).unwrap().k, 8);
         let _ = std::fs::remove_file(&path);
     }
 

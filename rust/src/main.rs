@@ -8,6 +8,7 @@
 //!               (or `all`) at a budget, multi-seed, writing RunRecords
 //!   report      aggregate RunRecords into the Table-2 markdown/JSON
 //!   ops         Table-1 numeric equivalence demo at a given d
+//!   lowrank     approximate-SVD frontier: rank vs error vs speedup
 //!   tune-k      §3.3 one-time block-size search
 //!   selftest    PJRT artifacts vs native numerics
 //!
@@ -92,6 +93,7 @@ fn run(args: &[String]) -> Result<()> {
         "train" => cmd_train(&flags),
         "report" => cmd_report(&flags),
         "ops" => cmd_ops(&flags),
+        "lowrank" => cmd_lowrank(&flags),
         "tune-k" => cmd_tune_k(&flags),
         "selftest" => cmd_selftest(&flags),
         "help" | "--help" | "-h" => {
@@ -117,6 +119,7 @@ fn print_usage() {
                     spiral teacher)\n\
          report     [--dir bench_out/experiments] [--out bench_out/TABLE2.md]\n\
          ops        [--d 64]\n\
+         lowrank    [--d 256] [--ranks 8,16,32,64] [--m 32]\n\
          tune-k     [--d 784] [--m 32] [--budget secs]\n\
          selftest   [--artifacts dir]"
     );
@@ -423,9 +426,22 @@ fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {
         Some(o) => o.clone(),
         None => "bench_out/TABLE2.md".to_string(),
     };
-    let records = RunRecord::load_dir(std::path::Path::new(&dir)).map_err(anyhow::Error::msg)?;
+    // Lenient load: a partially populated dir (crashed or in-flight
+    // `repro experiment`) reports what it has instead of bailing.
+    let (records, skipped) =
+        RunRecord::load_dir_lenient(std::path::Path::new(&dir)).map_err(anyhow::Error::msg)?;
+    for e in &skipped {
+        eprintln!("warning: skipping unreadable record: {e}");
+    }
     if records.is_empty() {
-        bail!("no run records in {dir} (run `repro experiment` first)");
+        bail!("no readable run records in {dir} (run `repro experiment` first)");
+    }
+    if !skipped.is_empty() {
+        eprintln!(
+            "warning: report aggregates {} of {} records",
+            records.len(),
+            records.len() + skipped.len()
+        );
     }
     let budget = records[0].budget.clone();
     let cells = report::aggregate(&records);
@@ -490,25 +506,104 @@ fn cmd_ops(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+// --------------------------------------------------------------- lowrank
+
+/// `repro lowrank [--d 256] [--ranks 8,16,32,64] [--m 32]` — the
+/// accuracy/latency frontier of rank-truncated serving: build a graded-
+/// spectrum model (σ_i = 0.9^i), sketch each requested rank through the
+/// registry's LowRank cache, and report relative error, Eckart–Young
+/// reference (σ_{r+1}), per-batch times, and speedup per rank.
+fn cmd_lowrank(flags: &HashMap<String, String>) -> Result<()> {
+    use fasth::linalg::Mat;
+    use fasth::svd::SvdParam;
+    use fasth::util::timing::time_reps_budget;
+
+    let d: usize = flags.get("d").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let m: usize = flags.get("m").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let ranks: Vec<usize> = match flags.get("ranks") {
+        Some(s) => s
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<usize>().with_context(|| format!("bad rank '{t}'")))
+            .collect::<Result<_>>()?,
+        None => [d / 32, d / 16, d / 8, d / 4, d / 2]
+            .into_iter()
+            .filter(|&r| r >= 1)
+            .collect(),
+    };
+
+    // Graded spectrum so truncation has a meaningful frontier (a flat
+    // random spectrum makes every rank equally bad).
+    let mut rng = Rng::new(0xA9);
+    let mut param = SvdParam::random_full(d, &mut rng);
+    for (i, s) in param.sigma.iter_mut().enumerate() {
+        *s = 0.9f32.powi(i as i32);
+    }
+    let sigma = param.sigma.clone();
+    let reg = ModelRegistry::new();
+    reg.insert("graded", param, ExecEngine::Native { k: 16.min(d.max(1)) });
+    let model = reg.get("graded").expect("just inserted");
+
+    let x = Mat::randn(d, m, &mut rng);
+    let y_exact = model
+        .execute(fasth::coordinator::OpKind::Apply, &x)
+        .map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    let exact_stats = time_reps_budget(20, 0.3, || {
+        model.execute(fasth::coordinator::OpKind::Apply, &x).unwrap()
+    });
+    let norm = y_exact.fro_norm().max(1e-30);
+
+    println!("approximate-SVD frontier at d = {d}, batch m = {m} (σ_i = 0.9^i):");
+    println!("exact apply: {:.3} ms/batch", exact_stats.mean * 1e3);
+    println!("{:>6} {:>12} {:>12} {:>12} {:>9}", "rank", "rel_err", "sigma_r+1", "ms/batch", "speedup");
+    for &r in &ranks {
+        if r == 0 || r > d {
+            eprintln!("warning: skipping rank {r} (out of 1..={d})");
+            continue;
+        }
+        let (lr, _) = reg.lowrank("graded", r).map_err(|e| anyhow::anyhow!("{e:#}"))?;
+        let y_r = lr.apply(&x);
+        let rel = y_exact.sub(&y_r).fro_norm() / norm;
+        let stats = time_reps_budget(20, 0.3, || lr.apply(&x));
+        let sigma_next = if r < d { sigma[r] } else { 0.0 };
+        println!(
+            "{:>6} {:>12.4e} {:>12.4e} {:>12.3} {:>9.2}",
+            r,
+            rel,
+            sigma_next,
+            stats.mean * 1e3,
+            exact_stats.mean / stats.mean.max(1e-12)
+        );
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------- tune-k
 
 fn cmd_tune_k(flags: &HashMap<String, String>) -> Result<()> {
     let d: usize = flags.get("d").map(|s| s.parse()).transpose()?.unwrap_or(784);
     let m: usize = flags.get("m").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let budget: f64 = flags.get("budget").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+    use fasth::householder::tune::{tune_k_variant, KCache, KVariant};
     let mut rng = Rng::new(17);
     let t0 = std::time::Instant::now();
-    let tuned = fasth::householder::tune::tune_k(d, m, 2, budget, &mut rng);
-    println!(
-        "tuned k = {} at d = {d}, m = {m} (step {:.3} ms; search took {:.2}s; √d = {:.1})",
-        tuned.k,
-        tuned.step_secs * 1e3,
-        t0.elapsed().as_secs_f64(),
-        (d as f64).sqrt()
-    );
-    // Persist so later `repro serve` / bench runs warm-start this result.
-    let cache = fasth::householder::tune::KCache::global();
-    cache.insert(d, m, tuned);
+    // Tune both kernels: the training step and the forward-only apply
+    // (each keyed separately in the v2 cache; serving/figures read the
+    // apply entry, training layers read the step entry).
+    let cache = KCache::global();
+    for variant in [KVariant::Step, KVariant::Apply] {
+        let tuned = tune_k_variant(d, m, 2, budget / 2.0, variant, &mut rng);
+        println!(
+            "tuned k = {} at d = {d}, m = {m}, variant = {} ({:.3} ms; √d = {:.1})",
+            tuned.k,
+            variant.name(),
+            tuned.step_secs * 1e3,
+            (d as f64).sqrt()
+        );
+        // Persist so later `repro serve` / bench runs warm-start this result.
+        cache.insert(d, m, variant, tuned);
+    }
+    println!("search took {:.2}s", t0.elapsed().as_secs_f64());
     if let Some(path) = cache.path() {
         println!("cached in {} (warm-starts serve/bench k selection)", path.display());
     }

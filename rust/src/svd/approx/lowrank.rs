@@ -1,0 +1,169 @@
+//! The packed truncated factorization `A ≈ U_r·diag(σ_r)·V_rᵀ` and its
+//! fast serving kernels.
+//!
+//! For an `m×n` operator truncated to rank `r`, `apply` and `pinv` cost
+//! two skinny GEMMs — `O((m+n)·r)` per column — instead of the full
+//! `O(m·n)` product, which is the entire latency story behind the
+//! per-request `rank` knob in serving.
+
+use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+
+/// Below this, a singular value is treated as exactly zero by the
+/// pseudo-inverse kernel (same floor as the serving `pinv` path).
+const SIGMA_FLOOR: f32 = 1e-30;
+
+/// Truncated SVD `A ≈ U·diag(σ)·Vᵀ`: `U` is `m×r`, `V` is `n×r`, and
+/// `σ` holds the `r` leading singular values in descending order.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    /// Left singular vectors, `m×r`.
+    pub u: Mat,
+    /// Leading singular values, descending, `≥ 0`.
+    pub sigma: Vec<f32>,
+    /// Right singular vectors, `n×r`.
+    pub v: Mat,
+}
+
+impl LowRank {
+    /// Assemble from factors, checking the shapes agree on `r`.
+    pub fn from_factors(u: Mat, sigma: Vec<f32>, v: Mat) -> LowRank {
+        assert_eq!(u.cols(), sigma.len(), "U width must equal |σ|");
+        assert_eq!(v.cols(), sigma.len(), "V width must equal |σ|");
+        LowRank { u, sigma, v }
+    }
+
+    /// Truncation rank `r`.
+    pub fn rank(&self) -> usize {
+        self.sigma.len()
+    }
+
+    /// Rows of the approximated operator (`m`).
+    pub fn rows(&self) -> usize {
+        self.u.rows()
+    }
+
+    /// Columns of the approximated operator (`n`).
+    pub fn cols(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// `A_r·X = U·(σ ∘ (Vᵀ·X))` for an `n×b` block — `O((m+n)·r·b)`.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.cols(), "input rows must equal cols()");
+        let mut t = matmul_tn(&self.v, x); // r×b
+        scale_rows_in_place(&mut t, &self.sigma);
+        matmul(&self.u, &t) // m×b
+    }
+
+    /// `A_r⁺·Y = V·(σ⁺ ∘ (Uᵀ·Y))` for an `m×b` block — the truncated
+    /// pseudo-inverse (zero singular values stay zero, not ∞).
+    pub fn pinv(&self, y: &Mat) -> Mat {
+        assert_eq!(y.rows(), self.rows(), "input rows must equal rows()");
+        let inv: Vec<f32> =
+            self.sigma.iter().map(|&s| if s.abs() < SIGMA_FLOOR { 0.0 } else { 1.0 / s }).collect();
+        let mut t = matmul_tn(&self.u, y); // r×b
+        scale_rows_in_place(&mut t, &inv);
+        matmul(&self.v, &t) // n×b
+    }
+
+    /// Spectral-norm estimate of the truncated operator: `σ₁` (exact for
+    /// the truncation itself; a lower bound on `‖A‖₂` of the source).
+    pub fn norm2_estimate(&self) -> f32 {
+        self.sigma.first().copied().unwrap_or(0.0)
+    }
+
+    /// Materialize the dense `m×n` approximation (tests/export; `O(mnr)`).
+    pub fn materialize(&self) -> Mat {
+        let mut us = self.u.clone();
+        for j in 0..us.cols() {
+            let s = self.sigma[j];
+            for i in 0..us.rows() {
+                us[(i, j)] *= s;
+            }
+        }
+        matmul_nt(&us, &self.v) // (U·Σ)·Vᵀ
+    }
+
+    /// Drop trailing singular triplets, keeping the leading `r`.
+    pub fn truncate(&self, r: usize) -> LowRank {
+        let r = r.min(self.rank());
+        LowRank {
+            u: self.u.slice(0, self.rows(), 0, r),
+            sigma: self.sigma[..r].to_vec(),
+            v: self.v.slice(0, self.cols(), 0, r),
+        }
+    }
+}
+
+/// `t[i, :] *= s[i]` — the diagonal Σ in the middle of both kernels.
+fn scale_rows_in_place(t: &mut Mat, s: &[f32]) {
+    assert_eq!(t.rows(), s.len());
+    for i in 0..s.len() {
+        let si = s[i];
+        for v in t.row_mut(i) {
+            *v *= si;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::linalg::qr::random_orthogonal;
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    /// A full-rank LowRank (r = n) from orthogonal factors: apply/pinv
+    /// must match the dense oracle exactly (up to f32).
+    fn full_rank_fixture(m: usize, n: usize, rng: &mut Rng) -> LowRank {
+        let r = m.min(n);
+        let u = random_orthogonal(m, rng).slice(0, m, 0, r);
+        let v = random_orthogonal(n, rng).slice(0, n, 0, r);
+        let sigma: Vec<f32> = (0..r).map(|i| 2.0 - 0.1 * i as f32).collect();
+        LowRank::from_factors(u, sigma, v)
+    }
+
+    #[test]
+    fn apply_matches_materialized() {
+        let mut rng = Rng::new(0xA11);
+        let lr = full_rank_fixture(9, 6, &mut rng);
+        let x = Mat::randn(6, 4, &mut rng);
+        let got = lr.apply(&x);
+        let want = oracle::matmul_f64(&lr.materialize(), &x);
+        assert_close(got.data(), want.data(), 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn pinv_inverts_on_the_range() {
+        // For A = UΣVᵀ with orthonormal factors, A⁺·A·x = V·Vᵀ·x, which
+        // equals x whenever x lies in the row space; with r = n it always
+        // does.
+        let mut rng = Rng::new(0xA12);
+        let lr = full_rank_fixture(10, 5, &mut rng);
+        let x = Mat::randn(5, 3, &mut rng);
+        let back = lr.pinv(&lr.apply(&x));
+        assert_close(back.data(), x.data(), 1e-3, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn pinv_zeroes_dead_directions() {
+        let mut rng = Rng::new(0xA13);
+        let mut lr = full_rank_fixture(6, 6, &mut rng);
+        lr.sigma[5] = 0.0;
+        let y = Mat::randn(6, 2, &mut rng);
+        let z = lr.pinv(&y);
+        assert!(!z.has_non_finite(), "σ = 0 must map to 0, not ∞");
+    }
+
+    #[test]
+    fn norm2_and_truncate() {
+        let mut rng = Rng::new(0xA14);
+        let lr = full_rank_fixture(8, 8, &mut rng);
+        assert_eq!(lr.norm2_estimate(), lr.sigma[0]);
+        let t = lr.truncate(3);
+        assert_eq!(t.rank(), 3);
+        assert_eq!((t.rows(), t.cols()), (8, 8));
+        assert_eq!(t.sigma, lr.sigma[..3]);
+    }
+}

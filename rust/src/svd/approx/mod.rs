@@ -1,0 +1,35 @@
+//! Approximate-SVD subsystem: randomized range-finder, power-method
+//! refinement, and truncated low-rank kernels.
+//!
+//! The paper's premise is that keeping an explicit SVD makes downstream
+//! matrix ops cheap; this module adds the *approximate* tier the related
+//! work points at, so one factorization can serve a whole
+//! accuracy/latency frontier instead of a single exact operating point:
+//!
+//! - [`sketch::randomized_svd`] — the Halko-style randomized
+//!   range-finder (Gaussian sketch `A·Ω`, `q` power iterations with QR
+//!   re-orthogonalization via `linalg::qr`, oversampling `p`) producing
+//!   a truncated `U_r·Σ_r·V_rᵀ` from any dense [`crate::linalg::Mat`]
+//!   or anything implementing [`LinOp`] (the serving models adapt via
+//!   [`FnOp`], so a registered square/rect SVD model sketches without
+//!   ever materializing `W`).
+//! - [`power::power_svd`] / [`power::refine`] — power-method iteration
+//!   of the leading `r` singular triplets with deflation and a
+//!   residual-based stopping rule, standalone or as a polish pass on
+//!   the sketch output (Dembélé, *A Power Method for Computing SVD*).
+//! - [`LowRank`] — the packed `(U_r, σ_r, V_r)` representation with
+//!   `apply`/`pinv`/`norm2_estimate` kernels at `O((m+n)·r)` per column
+//!   instead of the full `O(m·n)` product.
+//!
+//! Every path is validated against `linalg::oracle` with Eckart–Young
+//! bounds (`‖A − A_r‖ ≤ σ_{r+1}` within sketch tolerance) in
+//! `rust/tests/approx_svd.rs`; the serving integration (per-request
+//! `rank` knob, per-(model, rank) cache) lives in `coordinator/`.
+
+mod lowrank;
+mod power;
+mod sketch;
+
+pub use lowrank::LowRank;
+pub use power::{power_svd, refine, PowerConfig};
+pub use sketch::{randomized_svd, thin_qr, FnOp, LinOp, SketchConfig};

@@ -1,0 +1,267 @@
+//! Power-method refinement of leading singular triplets (Dembélé-style):
+//! alternate `u ← A·v/‖·‖`, `v ← Aᵀ·u/‖·‖` on a deflated operator until
+//! the residual `‖Aᵀ·u − σ·v‖/σ` drops below tolerance, peeling one
+//! triplet at a time.
+//!
+//! Standalone it computes a truncated SVD from scratch (random starts);
+//! seeded with a [`super::sketch::randomized_svd`] result it is a cheap
+//! polish pass that tightens the sketch's triplets toward the exact ones.
+
+use super::lowrank::LowRank;
+use super::sketch::LinOp;
+use crate::linalg::mat::{dot, norm_sq};
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// Iteration parameters for [`power_svd`] / [`refine`].
+#[derive(Clone, Copy, Debug)]
+pub struct PowerConfig {
+    /// Per-triplet iteration cap (convergence is linear in the gap
+    /// ratio, so graded spectra converge in a handful of steps).
+    pub max_iters: usize,
+    /// Relative residual target: stop when `‖Aᵀu − σv‖ ≤ tol·σ`.
+    pub tol: f32,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig { max_iters: 200, tol: 1e-4 }
+    }
+}
+
+/// Leading-`r` truncated SVD by deflated power iteration from random
+/// starting vectors.
+pub fn power_svd<A: LinOp + ?Sized>(
+    op: &A,
+    rank: usize,
+    cfg: &PowerConfig,
+    rng: &mut Rng,
+) -> LowRank {
+    power_core(op, rank, None, cfg, rng)
+}
+
+/// Polish an existing truncated factorization: re-run the deflated power
+/// iteration starting from `init`'s right singular vectors, which
+/// typically converges in 1–3 iterations per triplet when `init` came
+/// from the sketch.
+pub fn refine<A: LinOp + ?Sized>(
+    op: &A,
+    init: &LowRank,
+    cfg: &PowerConfig,
+    rng: &mut Rng,
+) -> LowRank {
+    power_core(op, init.rank(), Some(init), cfg, rng)
+}
+
+fn power_core<A: LinOp + ?Sized>(
+    op: &A,
+    rank: usize,
+    init: Option<&LowRank>,
+    cfg: &PowerConfig,
+    rng: &mut Rng,
+) -> LowRank {
+    let (m, n) = (op.rows(), op.cols());
+    let r = rank.clamp(1, m.min(n).max(1));
+    let mut us: Vec<Vec<f32>> = Vec::with_capacity(r);
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(r);
+    let mut sigmas: Vec<f32> = Vec::with_capacity(r);
+
+    for t in 0..r {
+        // Starting direction: the seed's t-th right vector, else random;
+        // always orthogonalized against the triplets already found.
+        let mut v = match init {
+            Some(lr) if t < lr.rank() => lr.v.col(t),
+            _ => random_unit(n, rng),
+        };
+        orthogonalize(&mut v, &vs);
+        if normalize(&mut v) < 1e-12 {
+            v = random_unit(n, rng);
+            orthogonalize(&mut v, &vs);
+            normalize(&mut v);
+        }
+
+        let mut u = vec![0.0f32; m];
+        let mut sigma = 0.0f32;
+        for _ in 0..cfg.max_iters {
+            // Half-step 1: u ← Â·v (Â = deflated A).
+            let mut w = apply_deflated(op, &us, &sigmas, &vs, &v, false);
+            if normalize(&mut w) < 1e-20 {
+                sigma = 0.0;
+                u = w;
+                break;
+            }
+            u = w;
+            // Half-step 2: v ← Âᵀ·u; its norm is the σ estimate.
+            let mut z = apply_deflated(op, &us, &sigmas, &vs, &u, true);
+            sigma = normalize(&mut z);
+            if sigma < 1e-20 {
+                break;
+            }
+            // Residual ‖Âᵀu − σ·v_prev‖/σ: zero exactly at a fixed point.
+            let mut res_sq = 0.0f64;
+            for i in 0..n {
+                let d = z[i] - v[i];
+                res_sq += d as f64 * d as f64;
+            }
+            v = z;
+            if (res_sq.sqrt() as f32) < cfg.tol {
+                break;
+            }
+        }
+        // Numerical hygiene: the deflation is subtractive, so re-project
+        // the converged pair onto the orthogonal complement explicitly.
+        orthogonalize(&mut u, &us);
+        orthogonalize(&mut v, &vs);
+        if normalize(&mut u) < 1e-12 || normalize(&mut v) < 1e-12 {
+            sigma = 0.0;
+        }
+        us.push(u);
+        vs.push(v);
+        sigmas.push(sigma.max(0.0));
+    }
+
+    // Deflation yields σ in descending order up to convergence error;
+    // sort defensively so callers can rely on it.
+    let mut order: Vec<usize> = (0..r).collect();
+    order.sort_by(|&a, &b| sigmas[b].partial_cmp(&sigmas[a]).unwrap());
+    let mut u_m = Mat::zeros(m, r);
+    let mut v_m = Mat::zeros(n, r);
+    let mut s_out = vec![0.0f32; r];
+    for (new, &old) in order.iter().enumerate() {
+        u_m.set_col(new, &us[old]);
+        v_m.set_col(new, &vs[old]);
+        s_out[new] = sigmas[old];
+    }
+    LowRank::from_factors(u_m, s_out, v_m)
+}
+
+/// `Â·x` (or `Âᵀ·x`) where `Â = A − Σ_j σ_j·u_j·v_jᵀ` is `A` with the
+/// already-found triplets deflated away.
+fn apply_deflated<A: LinOp + ?Sized>(
+    op: &A,
+    us: &[Vec<f32>],
+    sigmas: &[f32],
+    vs: &[Vec<f32>],
+    x: &[f32],
+    transpose: bool,
+) -> Vec<f32> {
+    let xm = Mat::from_vec(x.len(), 1, x.to_vec());
+    let mut out = if transpose { op.apply_t(&xm) } else { op.apply(&xm) }.into_vec();
+    for j in 0..us.len() {
+        // (σ u vᵀ)·x = σ (vᵀx) u; transposed: σ (uᵀx) v.
+        let (left, right) = if transpose { (&vs[j], &us[j]) } else { (&us[j], &vs[j]) };
+        let c = sigmas[j] * dot(right, x);
+        for (o, &l) in out.iter_mut().zip(left.iter()) {
+            *o -= c * l;
+        }
+    }
+    out
+}
+
+fn random_unit(n: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut v = Mat::randn(n, 1, rng).into_vec();
+    normalize(&mut v);
+    v
+}
+
+/// Scale to unit norm; returns the pre-scaling norm.
+fn normalize(v: &mut [f32]) -> f32 {
+    let nrm = norm_sq(v).sqrt();
+    if nrm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= nrm;
+        }
+    }
+    nrm
+}
+
+/// One modified-Gram-Schmidt sweep against an orthonormal set.
+fn orthogonalize(v: &mut [f32], basis: &[Vec<f32>]) {
+    for b in basis {
+        let c = dot(b, v);
+        for (x, &bi) in v.iter_mut().zip(b.iter()) {
+            *x -= c * bi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::random_orthogonal;
+    use crate::svd::approx::{randomized_svd, SketchConfig};
+    use crate::util::prop::check;
+
+    fn known_spectrum(m: usize, n: usize, sigma: &[f32], rng: &mut Rng) -> Mat {
+        let r = m.min(n);
+        let mut us = random_orthogonal(m, rng).slice(0, m, 0, r);
+        for j in 0..r {
+            for i in 0..m {
+                us[(i, j)] *= sigma[j];
+            }
+        }
+        let v = random_orthogonal(n, rng).slice(0, n, 0, r);
+        crate::linalg::matmul_nt(&us, &v)
+    }
+
+    #[test]
+    fn converges_on_graded_spectrum() {
+        check("power_graded", 6, |rng| {
+            let m = 10 + rng.below(8);
+            let n = 8 + rng.below(8);
+            let sigma: Vec<f32> = (0..m.min(n)).map(|i| 4.0 * 0.6f32.powi(i as i32)).collect();
+            let a = known_spectrum(m, n, &sigma, rng);
+            let lr = power_svd(&a, 3, &PowerConfig::default(), rng);
+            for i in 0..3 {
+                let rel = (lr.sigma[i] - sigma[i]).abs() / sigma[i];
+                if rel > 0.02 {
+                    return Err(format!("σ_{i}: got {} want {}", lr.sigma[i], sigma[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deflated_factors_stay_orthogonal() {
+        let mut rng = Rng::new(0xF0);
+        let sigma: Vec<f32> = (0..10).map(|i| 3.0 * 0.7f32.powi(i)).collect();
+        let a = known_spectrum(12, 10, &sigma, &mut rng);
+        let lr = power_svd(&a, 5, &PowerConfig::default(), &mut rng);
+        for q in [&lr.u, &lr.v] {
+            let qtq = crate::linalg::matmul_tn(q, q);
+            assert!(
+                qtq.defect_from_identity() < 1e-3,
+                "defect {}",
+                qtq.defect_from_identity()
+            );
+        }
+    }
+
+    #[test]
+    fn refine_tightens_a_coarse_sketch() {
+        let mut rng = Rng::new(0xF1);
+        let sigma: Vec<f32> = (0..12).map(|i| 2.0 * 0.8f32.powi(i)).collect();
+        let a = known_spectrum(12, 12, &sigma, &mut rng);
+        // Deliberately weak sketch: no oversampling, no power iterations.
+        let coarse =
+            randomized_svd(&a, 4, &SketchConfig { oversample: 0, power_iters: 0 }, &mut rng);
+        let polished = refine(&a, &coarse, &PowerConfig::default(), &mut rng);
+        let err_coarse: f32 =
+            (0..4).map(|i| (coarse.sigma[i] - sigma[i]).abs()).sum();
+        let err_polished: f32 =
+            (0..4).map(|i| (polished.sigma[i] - sigma[i]).abs()).sum();
+        assert!(
+            err_polished <= err_coarse + 1e-3,
+            "refine must not regress: {err_polished} vs {err_coarse}"
+        );
+        for i in 0..4 {
+            assert!(
+                (polished.sigma[i] - sigma[i]).abs() / sigma[i] < 0.02,
+                "σ_{i} after polish: {} want {}",
+                polished.sigma[i],
+                sigma[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Randomized range-finder (Halko/Martinsson/Tropp-style, the scheme the
+//! GPU rSVD paper implements): sketch the range of `A` with a Gaussian
+//! test matrix, optionally sharpen it with power iterations, then solve
+//! a small exact SVD in the sketched basis.
+//!
+//! The factorization never needs `A` as a dense matrix — only products
+//! `A·X` and `Aᵀ·X` through the [`LinOp`] trait — so a registered
+//! serving model (Householder products all the way down) sketches
+//! without materializing its weight.
+
+use super::lowrank::LowRank;
+use crate::linalg::mat::norm_sq;
+use crate::linalg::qr::qr;
+use crate::linalg::{matmul, matmul_tn, Mat};
+use crate::svd::jacobi;
+use crate::util::Rng;
+
+/// An `m×n` linear operator exposed through its two matrix products.
+pub trait LinOp {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// `A·X` for an `cols()×b` block.
+    fn apply(&self, x: &Mat) -> Mat;
+    /// `Aᵀ·X` for a `rows()×b` block.
+    fn apply_t(&self, x: &Mat) -> Mat;
+}
+
+/// Dense matrices are trivially operators.
+impl LinOp for Mat {
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+    fn apply(&self, x: &Mat) -> Mat {
+        matmul(self, x)
+    }
+    fn apply_t(&self, x: &Mat) -> Mat {
+        matmul_tn(self, x)
+    }
+}
+
+/// Closure-backed operator — how the coordinator adapts a registered
+/// square/rect SVD model (forward = `W·X` via FastH, transpose =
+/// `V·Σᵀ·Uᵀ·X`) without `svd/` depending on `coordinator/`.
+pub struct FnOp<'a> {
+    rows: usize,
+    cols: usize,
+    fwd: Box<dyn Fn(&Mat) -> Mat + Send + Sync + 'a>,
+    bwd: Box<dyn Fn(&Mat) -> Mat + Send + Sync + 'a>,
+}
+
+impl<'a> FnOp<'a> {
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        fwd: impl Fn(&Mat) -> Mat + Send + Sync + 'a,
+        bwd: impl Fn(&Mat) -> Mat + Send + Sync + 'a,
+    ) -> FnOp<'a> {
+        FnOp { rows, cols, fwd: Box::new(fwd), bwd: Box::new(bwd) }
+    }
+}
+
+impl LinOp for FnOp<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, x: &Mat) -> Mat {
+        (self.fwd)(x)
+    }
+    fn apply_t(&self, x: &Mat) -> Mat {
+        (self.bwd)(x)
+    }
+}
+
+/// Sketch parameters. Defaults follow the standard recommendation
+/// (`p ≈ 5–10` oversampling, `q = 2` power iterations) — enough that the
+/// rank-`r` error sits within a small factor of the optimal `σ_{r+1}`
+/// even on slowly decaying spectra.
+#[derive(Clone, Copy, Debug)]
+pub struct SketchConfig {
+    /// Oversampling `p`: the sketch uses `r + p` test vectors.
+    pub oversample: usize,
+    /// Power iterations `q`: each sharpens the sketch toward the leading
+    /// subspace by a factor of the spectral gap, at 2 extra passes each.
+    pub power_iters: usize,
+}
+
+impl Default for SketchConfig {
+    fn default() -> Self {
+        SketchConfig { oversample: 8, power_iters: 2 }
+    }
+}
+
+/// Thin QR: factor a tall `m×ℓ` block into an orthonormal `m×ℓ` `Q` and
+/// the square `ℓ×ℓ` upper-triangular `R`, materializing `Q` by applying
+/// the Householder reflections of [`qr`] to the `[I_ℓ; 0]` block (the
+/// reflections are zero above their pivot row, so each touches only the
+/// trailing rows).
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, l) = (a.rows(), a.cols());
+    let f = qr(a);
+    let mut q = Mat::zeros(m, l);
+    for i in 0..l {
+        q[(i, i)] = 1.0;
+    }
+    // Q = H₁·(H₂·(…·(H_ℓ·[I;0]))): apply reflections in reverse.
+    for j in (0..l).rev() {
+        let col = f.v.col(j);
+        let vs = norm_sq(&col);
+        if vs < 1e-30 {
+            continue; // identity reflection (zero vector convention)
+        }
+        for c in 0..l {
+            let mut dot = 0.0f64;
+            for i in j..m {
+                dot += col[i] as f64 * q[(i, c)] as f64;
+            }
+            let s = (2.0 * dot / vs as f64) as f32;
+            for i in j..m {
+                q[(i, c)] -= s * col[i];
+            }
+        }
+    }
+    (q, f.r.slice(0, l, 0, l))
+}
+
+/// Randomized truncated SVD of an `m×n` operator.
+///
+/// 1. Sketch: `Y = A·Ω` with Gaussian `Ω` (`n × (r+p)`), `Q = qf(Y)`.
+/// 2. `q` power iterations `Q ← qf(A·qf(Aᵀ·Q))`, re-orthogonalizing
+///    between half-steps so the iterate does not collapse onto the top
+///    singular direction in f32.
+/// 3. Project: `B = Qᵀ·A` (computed as `(Aᵀ·Q)ᵀ`, one transpose pass).
+/// 4. Small exact SVD: thin-QR `Bᵀ = Q_B·R`, one-sided Jacobi on the
+///    square `Rᵀ` (avoids squaring the condition number through a Gram
+///    matrix), then lift: `U = Q·U_R`, `V = Q_B·V_R`.
+/// 5. Truncate to the leading `r` triplets.
+pub fn randomized_svd<A: LinOp + ?Sized>(
+    op: &A,
+    rank: usize,
+    cfg: &SketchConfig,
+    rng: &mut Rng,
+) -> LowRank {
+    let (m, n) = (op.rows(), op.cols());
+    let minmn = m.min(n).max(1);
+    let r = rank.clamp(1, minmn);
+    let l = (r + cfg.oversample).min(minmn);
+
+    let omega = Mat::randn(n, l, rng);
+    let (mut q, _) = thin_qr(&op.apply(&omega)); // m×ℓ
+    for _ in 0..cfg.power_iters {
+        let (qz, _) = thin_qr(&op.apply_t(&q)); // n×ℓ
+        let (qy, _) = thin_qr(&op.apply(&qz)); // m×ℓ
+        q = qy;
+    }
+
+    let bt = op.apply_t(&q); // n×ℓ, equals Bᵀ
+    let (qb, rb) = thin_qr(&bt); // Bᵀ = Q_B·R
+    let s = jacobi::svd(&rb.t()); // Rᵀ = U_R·Σ·V_Rᵀ, ℓ×ℓ
+    // B = Rᵀ·Q_Bᵀ = U_R·Σ·(Q_B·V_R)ᵀ and A ≈ Q·B.
+    let u = matmul(&q, &s.u); // m×ℓ
+    let v = matmul(&qb, &s.v); // n×ℓ
+
+    LowRank::from_factors(
+        u.slice(0, m, 0, r),
+        s.sigma[..r].to_vec(),
+        v.slice(0, n, 0, r),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::oracle;
+    use crate::linalg::qr::random_orthogonal;
+    use crate::util::prop::check;
+
+    /// Dense m×n matrix with a known spectrum (orthogonal factors).
+    fn known_spectrum(m: usize, n: usize, sigma: &[f32], rng: &mut Rng) -> Mat {
+        let r = m.min(n);
+        assert_eq!(sigma.len(), r);
+        let u = random_orthogonal(m, rng).slice(0, m, 0, r);
+        let mut us = u;
+        for j in 0..r {
+            for i in 0..m {
+                us[(i, j)] *= sigma[j];
+            }
+        }
+        let v = random_orthogonal(n, rng).slice(0, n, 0, r);
+        crate::linalg::matmul_nt(&us, &v)
+    }
+
+    #[test]
+    fn thin_qr_is_orthonormal_and_reconstructs() {
+        check("thin_qr", 10, |rng| {
+            let m = 4 + rng.below(30);
+            let l = 1 + rng.below(m.min(12));
+            let a = Mat::randn(m, l, rng);
+            let (q, r) = thin_qr(&a);
+            let qtq = oracle::matmul_f64(&q.t(), &q);
+            if qtq.defect_from_identity() > 1e-4 {
+                return Err(format!("QᵀQ defect {}", qtq.defect_from_identity()));
+            }
+            let recon = oracle::matmul_f64(&q, &r);
+            if recon.max_abs_diff(&a) > 1e-3 {
+                return Err(format!("QR recon err {}", recon.max_abs_diff(&a)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recovers_known_spectrum() {
+        check("sketch_spectrum", 6, |rng| {
+            let m = 12 + rng.below(12);
+            let n = 8 + rng.below(12);
+            let sigma: Vec<f32> =
+                (0..m.min(n)).map(|i| 0.5f32.powi(i as i32 / 2) * 3.0).collect();
+            let a = known_spectrum(m, n, &sigma, rng);
+            let r = 4;
+            let lr = randomized_svd(&a, r, &SketchConfig::default(), rng);
+            for i in 0..r {
+                let rel = (lr.sigma[i] - sigma[i]).abs() / sigma[i];
+                if rel > 0.05 {
+                    return Err(format!("σ_{i}: got {} want {}", lr.sigma[i], sigma[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_at_full_rank() {
+        let mut rng = Rng::new(0x5C1);
+        let a = Mat::randn(10, 7, &mut rng);
+        let lr = randomized_svd(&a, 7, &SketchConfig::default(), &mut rng);
+        assert!(lr.materialize().max_abs_diff(&a) < 1e-3, "full-rank sketch must be exact");
+    }
+
+    #[test]
+    fn fnop_matches_dense() {
+        let mut rng = Rng::new(0x5C2);
+        let a = Mat::randn(9, 6, &mut rng);
+        let op = FnOp::new(9, 6, |x| matmul(&a, x), |x| matmul_tn(&a, x));
+        let lr_op = randomized_svd(&op, 3, &SketchConfig::default(), &mut Rng::new(7));
+        let lr_dense = randomized_svd(&a, 3, &SketchConfig::default(), &mut Rng::new(7));
+        // Same seed → same Ω → identical factorization either way in.
+        assert!(lr_op.materialize().max_abs_diff(&lr_dense.materialize()) < 1e-5);
+    }
+
+    #[test]
+    fn rank_is_clamped() {
+        let mut rng = Rng::new(0x5C3);
+        let a = Mat::randn(6, 4, &mut rng);
+        let lr = randomized_svd(&a, 99, &SketchConfig::default(), &mut rng);
+        assert_eq!(lr.rank(), 4);
+        let lr0 = randomized_svd(&a, 0, &SketchConfig::default(), &mut rng);
+        assert_eq!(lr0.rank(), 1);
+    }
+}

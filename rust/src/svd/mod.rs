@@ -10,13 +10,19 @@
 //!   `O(d³)` way and the SVD `O(d²)`/`O(d)` way,
 //! - [`jacobi`]: a from-scratch one-sided Jacobi SVD, the `O(d³)`
 //!   "just compute the SVD" comparator the paper's introduction argues
-//!   against.
+//!   against,
+//! - [`approx`]: the approximate tier — randomized range-finder,
+//!   power-method triplet refinement, and the packed [`approx::LowRank`]
+//!   truncation with `O((m+n)r)` apply/pinv kernels behind serving's
+//!   per-request `rank` knob.
 
+pub mod approx;
 pub mod jacobi;
 pub mod ops;
 pub mod rect;
 pub mod param;
 
+pub use approx::LowRank;
 pub use ops::{MatrixOp, OpEngine};
 pub use param::SvdParam;
 pub use rect::RectSvdParam;

@@ -1,0 +1,220 @@
+//! Property suite for the approximate-SVD subsystem: Eckart–Young error
+//! bounds for the randomized range-finder, power-method convergence and
+//! deflation orthogonality, and oracle equivalence of the `LowRank`
+//! kernels against `linalg::oracle` / one-sided Jacobi.
+//!
+//! Seeded through `util::prop::check`, so the nightly fuzz lane can
+//! resweep the sketch matrices `Ω` with `FASTH_PROP_SEED=$(date ...)`.
+
+use fasth::linalg::{matmul, matmul_nt, matmul_tn, oracle, Mat};
+use fasth::svd::approx::{power_svd, randomized_svd, refine, thin_qr, PowerConfig, SketchConfig};
+use fasth::svd::jacobi;
+use fasth::util::prop::{assert_close, check};
+use fasth::util::Rng;
+
+/// Build an `m×n` matrix with the exact spectrum `sigma` (descending):
+/// `A = Q_u·diag(σ)·Q_vᵀ` with Haar-ish orthonormal factors from the QR
+/// of Gaussian blocks. Ground truth for every Eckart–Young assertion.
+fn known_spectrum(m: usize, n: usize, sigma: &[f32], rng: &mut Rng) -> Mat {
+    let k = m.min(n);
+    assert_eq!(sigma.len(), k);
+    let (qu, _) = thin_qr(&Mat::randn(m, k, rng));
+    let (qv, _) = thin_qr(&Mat::randn(n, k, rng));
+    matmul_nt(&matmul(&qu, &Mat::diag(sigma)), &qv)
+}
+
+/// Geometric spectrum σ_i = ratio^i — the graded case where truncation
+/// is meaningful and power iterations converge linearly in the gap.
+fn graded(k: usize, ratio: f32) -> Vec<f32> {
+    (0..k).map(|i| ratio.powi(i as i32)).collect()
+}
+
+/// Frobenius Eckart–Young optimum for truncation at `r`:
+/// `min_{rank≤r} ‖A − B‖_F = sqrt(Σ_{i>r} σ_i²)`.
+fn tail_fro(sigma: &[f32], r: usize) -> f32 {
+    sigma[r..].iter().map(|s| s * s).sum::<f32>().sqrt()
+}
+
+#[test]
+fn sketch_respects_eckart_young_frobenius() {
+    check("sketch_eckart_young_fro", 16, |rng| {
+        let m = 8 + (rng.next_u64() % 25) as usize;
+        let n = 8 + (rng.next_u64() % 25) as usize;
+        let k = m.min(n);
+        let sigma = graded(k, 0.8);
+        let a = known_spectrum(m, n, &sigma, rng);
+        let r = 1 + (rng.next_u64() as usize % (k - 1));
+        let lr = randomized_svd(&a, r, &SketchConfig::default(), rng);
+        let err = a.sub(&lr.materialize()).fro_norm();
+        let opt = tail_fro(&sigma, r);
+        // The sketch is not the optimal rank-r approximant, but with
+        // p=8 oversampling and q=2 power iterations it sits within a
+        // small constant of the Eckart–Young floor.
+        if err > 1.5 * opt + 1e-4 {
+            return Err(format!(
+                "m={m} n={n} r={r}: ‖A−A_r‖_F = {err:.4e} > 1.5·σ-tail = {:.4e}",
+                1.5 * opt
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sketch_spectral_error_bounded_by_sigma_next() {
+    check("sketch_eckart_young_spectral", 12, |rng| {
+        let d = 12 + (rng.next_u64() % 21) as usize;
+        let sigma = graded(d, 0.75);
+        let a = known_spectrum(d, d, &sigma, rng);
+        let r = 2 + (rng.next_u64() as usize % (d / 2));
+        let lr = randomized_svd(&a, r, &SketchConfig::default(), rng);
+        // ‖A − A_r‖₂ via a rank-1 power pass on the dense residual; the
+        // spectral Eckart–Young floor is σ_{r+1} exactly.
+        let resid = a.sub(&lr.materialize());
+        let top = power_svd(&resid, 1, &PowerConfig::default(), rng);
+        let err2 = top.sigma[0];
+        let floor = sigma[r];
+        if err2 > 2.0 * floor + 1e-4 {
+            return Err(format!(
+                "d={d} r={r}: ‖A−A_r‖₂ ≈ {err2:.4e} > 2·σ_{{r+1}} = {:.4e}",
+                2.0 * floor
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_rank_sketch_matches_jacobi_oracle() {
+    check("sketch_vs_jacobi", 12, |rng| {
+        let d = 6 + (rng.next_u64() % 15) as usize;
+        let a = Mat::randn(d, d, rng);
+        let lr = randomized_svd(&a, d, &SketchConfig::default(), rng);
+        let exact = jacobi::svd(&a);
+        // Full-rank sketch spans the whole space, so the spectra agree
+        // to f32 working precision regardless of the random Ω.
+        assert_close(&lr.sigma, &exact.sigma, 1e-3, 1e-3)?;
+        let recon = lr.materialize();
+        assert_close(recon.data(), a.data(), 1e-3, 1e-3)
+    });
+}
+
+#[test]
+fn lowrank_kernels_match_oracle_matmul() {
+    check("lowrank_vs_oracle", 16, |rng| {
+        let m = 8 + (rng.next_u64() % 17) as usize;
+        let n = 8 + (rng.next_u64() % 17) as usize;
+        let k = m.min(n);
+        let a = known_spectrum(m, n, &graded(k, 0.7), rng);
+        let r = 1 + (rng.next_u64() as usize % k);
+        let lr = randomized_svd(&a, r, &SketchConfig::default(), rng);
+        let dense = lr.materialize();
+        let x = Mat::randn(n, 3, rng);
+        // apply ≡ the f64 oracle product with the materialized A_r.
+        let fast = lr.apply(&x);
+        let slow = oracle::matmul_f64(&dense, &x);
+        assert_close(fast.data(), slow.data(), 1e-4, 1e-3)?;
+        // pinv ≡ V·Σ⁻¹·Uᵀ against the oracle, computed factor-wise.
+        let y = Mat::randn(m, 3, rng);
+        let fast_p = lr.pinv(&y);
+        let uty = oracle::matmul_f64(&lr.u.t(), &y);
+        let inv_sigma: Vec<f32> = lr.sigma.iter().map(|s| 1.0 / s).collect();
+        let slow_p = oracle::matmul_f64(&lr.v, &oracle::matmul_f64(&Mat::diag(&inv_sigma), &uty));
+        assert_close(fast_p.data(), slow_p.data(), 1e-3, 1e-2)
+    });
+}
+
+#[test]
+fn well_conditioned_pinv_inverts_like_oracle() {
+    check("pinv_vs_oracle_inverse", 12, |rng| {
+        let d = 6 + (rng.next_u64() % 11) as usize;
+        // Condition number ≤ 3: spectrum in [0.5, 1.5].
+        let sigma: Vec<f32> = (0..d).map(|i| 1.5 - i as f32 / (d as f32 - 1.0)).collect();
+        let a = known_spectrum(d, d, &sigma, rng);
+        let lr = randomized_svd(&a, d, &SketchConfig::default(), rng);
+        let y = Mat::randn(d, 2, rng);
+        let x_lr = lr.pinv(&y);
+        let inv = oracle::inverse_f64(&a).ok_or("oracle found A singular")?;
+        let x_oracle = oracle::matmul_f64(&inv, &y);
+        assert_close(x_lr.data(), x_oracle.data(), 1e-2, 1e-2)
+    });
+}
+
+#[test]
+fn power_method_converges_on_graded_spectra() {
+    check("power_convergence", 12, |rng| {
+        let d = 10 + (rng.next_u64() % 15) as usize;
+        let sigma = graded(d, 0.6);
+        let a = known_spectrum(d, d, &sigma, rng);
+        let lr = power_svd(&a, 4, &PowerConfig::default(), rng);
+        assert_close(&lr.sigma, &sigma[..4], 1e-2, 1e-2)
+    });
+}
+
+#[test]
+fn deflation_keeps_factors_orthonormal() {
+    check("deflation_orthogonality", 12, |rng| {
+        let m = 12 + (rng.next_u64() % 13) as usize;
+        let n = 9 + (rng.next_u64() % 13) as usize;
+        let k = m.min(n);
+        let a = known_spectrum(m, n, &graded(k, 0.7), rng);
+        let r = 3 + (rng.next_u64() as usize % 4);
+        for lr in [
+            power_svd(&a, r, &PowerConfig::default(), rng),
+            randomized_svd(&a, r, &SketchConfig::default(), rng),
+        ] {
+            let du = matmul_tn(&lr.u, &lr.u).defect_from_identity();
+            let dv = matmul_tn(&lr.v, &lr.v).defect_from_identity();
+            if du > 1e-3 || dv > 1e-3 {
+                return Err(format!("orthogonality defect UᵀU={du:.2e} VᵀV={dv:.2e}"));
+            }
+            // Deflation must also order the spectrum descending.
+            if lr.sigma.windows(2).any(|w| w[0] < w[1] - 1e-5) {
+                return Err(format!("σ not descending: {:?}", lr.sigma));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn refine_never_degrades_a_coarse_sketch() {
+    check("refine_polish", 8, |rng| {
+        let d = 14 + (rng.next_u64() % 11) as usize;
+        let sigma = graded(d, 0.7);
+        let a = known_spectrum(d, d, &sigma, rng);
+        // Deliberately coarse: no power iterations, minimal oversampling.
+        let coarse_cfg = SketchConfig { oversample: 2, power_iters: 0 };
+        let coarse = randomized_svd(&a, 4, &coarse_cfg, rng);
+        let polished = refine(&a, &coarse, &PowerConfig::default(), rng);
+        let err_coarse = a.sub(&coarse.materialize()).fro_norm();
+        let err_polished = a.sub(&polished.materialize()).fro_norm();
+        if err_polished > err_coarse + 1e-3 {
+            return Err(format!(
+                "refine worsened the sketch: {err_coarse:.4e} → {err_polished:.4e}"
+            ));
+        }
+        // And the polished spectrum should sit near the truth.
+        assert_close(&polished.sigma, &sigma[..4], 2e-2, 2e-2)
+    });
+}
+
+#[test]
+fn truncate_nests_like_the_spectrum() {
+    check("truncate_nesting", 8, |rng| {
+        let d = 16 + (rng.next_u64() % 9) as usize;
+        let sigma = graded(d, 0.8);
+        let a = known_spectrum(d, d, &sigma, rng);
+        let lr8 = randomized_svd(&a, 8, &SketchConfig::default(), rng);
+        let lr4 = lr8.truncate(4);
+        // Truncating a rank-8 factorization to 4 keeps the leading
+        // triplets verbatim — same σ prefix, monotonically larger error.
+        assert_close(&lr4.sigma, &lr8.sigma[..4], 0.0, 0.0)?;
+        let e8 = a.sub(&lr8.materialize()).fro_norm();
+        let e4 = a.sub(&lr4.materialize()).fro_norm();
+        if e4 + 1e-5 < e8 {
+            return Err(format!("rank-4 error {e4:.4e} below rank-8 error {e8:.4e}"));
+        }
+        Ok(())
+    });
+}

@@ -1,7 +1,8 @@
 //! Coordinator end-to-end over real TCP: batching semantics, response
 //! conservation under concurrency, sharded routing (shards ≥ 2 with a
-//! rectangular model served via apply/pinv), PJRT-backed serving when
-//! artifacts exist, and backpressure.
+//! rectangular model served via apply/pinv), mixed exact + truncated
+//! (`rank`) traffic, PJRT-backed serving when artifacts exist, and
+//! backpressure.
 
 use fasth::coordinator::{Call, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig};
 use fasth::util::prop::assert_close;
@@ -160,6 +161,70 @@ fn expm_cayley_ops_served() {
         assert_eq!(r.column.len(), 12);
         assert!(r.column.iter().all(|v| v.is_finite()));
     }
+    server.stop();
+}
+
+#[test]
+fn mixed_exact_and_rank_traffic_across_shards() {
+    let server = native_server(16, 8);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Rng::new(11);
+    let cols: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..16).map(|_| rng.normal_f32()).collect())
+        .collect();
+    // Baseline exact answers before any truncated traffic exists.
+    let exact: Vec<Vec<f32>> = cols
+        .iter()
+        .map(|c| {
+            let r = client.call(Call::apply("svd_16", c.clone())).unwrap();
+            assert!(r.ok, "{:?}", r.error);
+            r.column
+        })
+        .collect();
+    // One pipelined burst interleaving exact, full-rank (r = d), and
+    // truncated (rank = 4) lanes across both shards' models. The
+    // batcher must keep the lanes apart: a rank-4 request coalesced
+    // into an exact batch would corrupt both.
+    let mut calls = Vec::new();
+    for c in &cols {
+        calls.push(Call::apply("svd_16", c.clone()));
+        calls.push(Call::apply("svd_16", c.clone()).rank(16));
+        calls.push(Call::apply("svd_16", c.clone()).rank(4));
+        calls.push(Call::apply("rect_32x16", c.clone()).rank(4));
+    }
+    let rs = client.call_many(calls).unwrap();
+    assert!(rs.iter().all(|r| r.ok), "{:?}", rs.iter().find(|r| !r.ok));
+    for (i, _) in cols.iter().enumerate() {
+        let base = &rs[4 * i].column;
+        // The exact lane is unaffected by concurrent truncated traffic.
+        assert_close(base, &exact[i], 1e-6, 1e-6).unwrap();
+        // Full-rank truncation reproduces the exact operator.
+        assert_close(&rs[4 * i + 1].column, base, 1e-2, 1e-2).unwrap();
+        // rank-4 lanes produce well-formed columns of the exact widths.
+        assert_eq!(rs[4 * i + 2].column.len(), 16);
+        assert!(rs[4 * i + 2].column.iter().all(|v| v.is_finite()));
+        assert_eq!(rs[4 * i + 3].column.len(), 32);
+        assert!(rs[4 * i + 3].column.iter().all(|v| v.is_finite()));
+    }
+    // Cache accounting: exactly one build per distinct (model, rank) —
+    // (svd_16, 16), (svd_16, 4), (rect_32x16, 4) — and, since 12
+    // requests per lane cannot fit a max_batch of 8, at least one
+    // follow-up batch per lane hit the cache.
+    let stats = client.admin("stats").unwrap();
+    let j = fasth::util::json::Json::parse(&stats).unwrap();
+    assert_eq!(j.get("lowrank_cache_misses").as_usize(), Some(3), "{stats}");
+    assert!(j.get("lowrank_cache_hits").as_usize().unwrap() >= 3, "{stats}");
+    // Bad ranks surface as per-request errors, not connection faults.
+    let bad = client
+        .call(Call::apply("svd_16", cols[0].clone()).rank(17))
+        .unwrap();
+    assert!(!bad.ok);
+    assert!(bad.error.unwrap().contains("rank"));
+    let bad_op = client
+        .call(Call::expm("svd_16", cols[0].clone()).rank(4))
+        .unwrap();
+    assert!(!bad_op.ok);
+    assert!(bad_op.error.unwrap().contains("rank"));
     server.stop();
 }
 

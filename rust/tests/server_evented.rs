@@ -17,7 +17,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn request_line(id: u64, model: &str, column: Vec<f32>) -> String {
-    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None }.to_json()
+    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None, rank: None }
+        .to_json()
 }
 
 /// Flood one raw connection with far more requests than `max_pipeline`

@@ -26,7 +26,8 @@ fn chaos_seed() -> u64 {
 }
 
 fn request_line(id: u64, model: &str, column: Vec<f32>) -> String {
-    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None }.to_json()
+    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None, rank: None }
+        .to_json()
 }
 
 fn registry_with_m8() -> Arc<ModelRegistry> {

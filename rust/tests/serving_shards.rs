@@ -13,7 +13,14 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 fn req(id: u64, model: &str) -> Request {
-    Request { id, model: model.into(), op: OpKind::Apply, column: vec![1.0, 2.0], ttl_ms: None }
+    Request {
+        id,
+        model: model.into(),
+        op: OpKind::Apply,
+        column: vec![1.0, 2.0],
+        ttl_ms: None,
+        rank: None,
+    }
 }
 
 /// A sustained full-flush burst on one `(model, op)` key must not delay
