@@ -2,12 +2,21 @@
 //! blocks), LU, expm, and the WY primitives. Used by the §Perf pass to
 //! find the practical roofline of this testbed.
 //!
-//! `cargo bench --bench microbench_linalg` ; env: FASTH_BENCH_BUDGET.
+//! Besides the human-readable table and the CSV, this bench writes a
+//! machine-readable `bench_out/BENCH_linalg.json` snapshot of per-shape
+//! GFLOP/s (stamped with the active kernel dispatch). CI's bench-smoke
+//! job archives that snapshot and gates each run against the previous
+//! one via `repro bench-compare` — >10% GFLOP/s loss on any tracked
+//! shape fails the build.
+//!
+//! `cargo bench --bench microbench_linalg` ; env: FASTH_BENCH_BUDGET,
+//! FASTH_FORCE_SCALAR.
 
 mod common;
 
 use fasth::householder::{fasth::build_blocks, HouseholderVectors};
 use fasth::linalg::{expm, gemm, lu, Mat};
+use fasth::util::json::Json;
 use fasth::util::timing::{fmt_secs, Report};
 use fasth::util::Rng;
 
@@ -15,6 +24,9 @@ fn main() {
     let cfg = common::budget(0.4);
     let mut rng = Rng::new(0x111CA0);
     let mut report = Report::new("linalg microbenches");
+    // (shape key, GFLOP/s) pairs for BENCH_linalg.json — every tracked
+    // shape the CI regression gate watches is collected here.
+    let mut shapes: Vec<(String, f64)> = Vec::new();
 
     for &n in &[128usize, 256, 512, 1024] {
         let a = Mat::randn(n, n, &mut rng);
@@ -23,7 +35,8 @@ fn main() {
             gemm::matmul(&a, &b)
         });
         let gflops = 2.0 * (n as f64).powi(3) / s.mean / 1e9;
-        println!("gemm {n:>5}x{n:<5} {:>14}  {:6.1} GFLOP/s", s.display(), gflops);
+        println!("gemm {n:>5}x{n:<5} {:>14}  {gflops:6.1} GFLOP/s", s.display());
+        shapes.push((format!("gemm_nn_{n}"), gflops));
         report.add_row(format!("gemm_{n}"), vec![("nn".into(), s)]);
     }
 
@@ -49,7 +62,25 @@ fn main() {
             s_nt.display(),
             flops / s_nt.mean / 1e9
         );
+        shapes.push((format!("gemm_tn_{n}"), flops / s_tn.mean / 1e9));
+        shapes.push((format!("gemm_nt_{n}"), flops / s_nt.mean / 1e9));
         report.add_row(format!("gemm_t_{n}"), vec![("tn".into(), s_tn), ("nt".into(), s_nt)]);
+    }
+
+    // Tall-skinny products (1×d · d×d): FastH's per-block H·X inner loop
+    // at mini-batch 1 — the shape the §Perf-9 column-parallel split
+    // targets. GFLOP/s here is bandwidth-ish (B is streamed once), so the
+    // regression gate on these keys watches the split + kernel dispatch.
+    for &d in &[64usize, 256, 1024] {
+        let a = Mat::randn(1, d, &mut rng);
+        let b = Mat::randn(d, d, &mut rng);
+        let s = fasth::util::timing::time_reps_budget(cfg.max_reps, cfg.per_cell_secs, || {
+            gemm::matmul(&a, &b)
+        });
+        let gflops = 2.0 * (d as f64).powi(2) / s.mean / 1e9;
+        println!("gemm-ts 1x{d:<6}   {:>14}  {gflops:6.1} GFLOP/s", s.display());
+        shapes.push((format!("gemm_ts_{d}"), gflops));
+        report.add_row(format!("gemm_ts_{d}"), vec![("nn".into(), s)]);
     }
 
     for &(d, m) in &[(512usize, 32usize), (1024, 32), (2048, 32)] {
@@ -70,6 +101,7 @@ fn main() {
             s.display(),
             flops / s.mean / 1e9
         );
+        shapes.push((format!("wy_block_{d}"), flops / s.mean / 1e9));
         report.add_row(format!("wyblock_{d}"), vec![("apply".into(), s)]);
     }
 
@@ -102,4 +134,27 @@ fn main() {
 
     let path = report.save_csv("microbench_linalg").expect("csv");
     println!("saved {}", path.display());
+
+    // Machine-readable snapshot for the CI regression gate. Keys are the
+    // stable per-shape identifiers `repro bench-compare` diffs on; the
+    // kernel stamp records what dispatch produced the numbers.
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("kernel", Json::str(gemm::active_kernel_name())),
+        ("budget_secs", Json::num(cfg.per_cell_secs)),
+        (
+            "shapes",
+            Json::Obj(shapes.into_iter().map(|(k, v)| (k, Json::num(v))).collect()),
+        ),
+    ]);
+    let json_path = std::path::Path::new("bench_out/BENCH_linalg.json");
+    if let Some(dir) = json_path.parent() {
+        std::fs::create_dir_all(dir).expect("bench_out dir");
+    }
+    std::fs::write(json_path, doc.pretty()).expect("BENCH_linalg.json");
+    println!(
+        "saved {} (kernel dispatch: {})",
+        json_path.display(),
+        gemm::active_kernel_name()
+    );
 }

@@ -30,10 +30,12 @@ fn time<T>(cfg: BudgetCfg, f: impl FnMut() -> T) -> Stats {
 /// tuned-k store (`bench_out/tuned_k.json`, populated by `repro tune-k`)
 /// under the apply variant — the figures time forward-only kernels, so a
 /// step-tuned k (v1 files migrate to the step key) no longer leaks in
-/// here; without an apply measurement we fall back to the √d heuristic.
+/// here. The winning entry across tuned GEMM kernel variants is used
+/// (v3 cache); without an apply measurement we fall back to the √d
+/// heuristic.
 pub fn default_k(d: usize) -> usize {
-    match tune::KCache::global().lookup(d, BATCH_M, tune::KVariant::Apply) {
-        Some(t) => t.k.clamp(1, d.max(1)),
+    match tune::KCache::global().best(d, BATCH_M, tune::KVariant::Apply) {
+        Some((_, t)) => t.k.clamp(1, d.max(1)),
         None => tune::KCache::heuristic(d, BATCH_M).min(d),
     }
 }

@@ -15,6 +15,7 @@
 //! | §3.3 recurrent | [`figures::ablation_rnn`] | `benches/ablation_rnn.rs` |
 
 pub mod figures;
+pub mod regress;
 
 /// The paper's full grid is `d = 64·{1,…,48}`, m = 32. The default bench
 /// grid subsamples it (the trends are dense enough) — pass `--sizes` to

@@ -1,0 +1,228 @@
+//! GFLOP/s regression gate over `BENCH_linalg.json` artifacts.
+//!
+//! `microbench_linalg` writes a machine-readable snapshot of per-shape
+//! GFLOP/s (`{"schema":1,"kernel":"avx2","shapes":{"gemm_nn_512":12.3,…}}`).
+//! CI's bench-smoke job archives each run's snapshot and — via
+//! `repro bench-compare` — fails the build when any tracked shape loses
+//! more than the tolerance (default 10%) against the previous run's
+//! artifact, turning the perf trajectory into a tested invariant instead
+//! of a graph someone has to eyeball.
+//!
+//! The comparison is deliberately one-sided: getting *faster* never
+//! fails, and shapes that appear only in the current run (new coverage)
+//! pass. A tracked shape that *disappears* from the current run is an
+//! error — silently dropping a shape is how regression gates rot.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One snapshot of the linalg microbench: per-shape GFLOP/s plus the
+/// kernel dispatch it was measured under.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchSnapshot {
+    /// Kernel dispatch name stamped by the bench (`"scalar"`/`"avx2"`).
+    pub kernel: String,
+    /// Shape key → GFLOP/s (key order = deterministic report order).
+    pub shapes: BTreeMap<String, f64>,
+}
+
+impl BenchSnapshot {
+    /// Parse a `BENCH_linalg.json` document.
+    pub fn parse(text: &str) -> Result<BenchSnapshot, String> {
+        let doc = Json::parse(text).map_err(|e| e.to_string())?;
+        let kernel = doc.get("kernel").as_str().unwrap_or("unknown").to_string();
+        let obj = doc
+            .get("shapes")
+            .as_obj()
+            .ok_or_else(|| "missing or non-object 'shapes' field".to_string())?;
+        let mut shapes = BTreeMap::new();
+        for (key, v) in obj {
+            let gflops = v
+                .as_f64()
+                .ok_or_else(|| format!("shape '{key}': non-numeric GFLOP/s"))?;
+            if !gflops.is_finite() || gflops < 0.0 {
+                return Err(format!("shape '{key}': bad GFLOP/s {gflops}"));
+            }
+            shapes.insert(key.clone(), gflops);
+        }
+        if shapes.is_empty() {
+            return Err("no shapes in snapshot".to_string());
+        }
+        Ok(BenchSnapshot { kernel, shapes })
+    }
+
+    /// Read and parse a snapshot file.
+    pub fn load(path: &Path) -> Result<BenchSnapshot, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// Outcome of comparing one shape across two snapshots.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShapeVerdict {
+    /// `current ≥ (1 - tol) · baseline` — within tolerance (or faster).
+    Ok { baseline: f64, current: f64 },
+    /// Slower than the gate allows.
+    Regressed { baseline: f64, current: f64, loss_frac: f64 },
+    /// In the baseline, absent from the current run — coverage dropped.
+    Missing { baseline: f64 },
+    /// Only in the current run (new coverage) — passes.
+    New { current: f64 },
+}
+
+/// Full comparison result: per-shape verdicts in key order.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub tol: f64,
+    pub verdicts: Vec<(String, ShapeVerdict)>,
+}
+
+impl Comparison {
+    /// True when no shape regressed or went missing.
+    pub fn passed(&self) -> bool {
+        !self.verdicts.iter().any(|(_, v)| {
+            matches!(v, ShapeVerdict::Regressed { .. } | ShapeVerdict::Missing { .. })
+        })
+    }
+
+    /// Human-readable per-shape report (one line per shape).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (key, v) in &self.verdicts {
+            match v {
+                ShapeVerdict::Ok { baseline, current } => {
+                    let delta = if *baseline > 0.0 { current / baseline - 1.0 } else { 0.0 };
+                    let _ = writeln!(
+                        out,
+                        "  ok        {key:<16} {baseline:>9.3} -> {current:>9.3} GFLOP/s ({:+.1}%)",
+                        delta * 100.0
+                    );
+                }
+                ShapeVerdict::Regressed { baseline, current, loss_frac } => {
+                    let _ = writeln!(
+                        out,
+                        "  REGRESSED {key:<16} {baseline:>9.3} -> {current:>9.3} GFLOP/s \
+                         (-{:.1}% > {:.0}% gate)",
+                        loss_frac * 100.0,
+                        self.tol * 100.0
+                    );
+                }
+                ShapeVerdict::Missing { baseline } => {
+                    let _ = writeln!(
+                        out,
+                        "  MISSING   {key:<16} {baseline:>9.3} GFLOP/s in baseline, \
+                         absent from current run"
+                    );
+                }
+                ShapeVerdict::New { current } => {
+                    let _ =
+                        writeln!(out, "  new       {key:<16} {current:>9.3} GFLOP/s (no baseline)");
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Compare `current` against `baseline` with a fractional tolerance
+/// (`tol = 0.10` fails any shape more than 10% slower than its baseline).
+pub fn compare(baseline: &BenchSnapshot, current: &BenchSnapshot, tol: f64) -> Comparison {
+    let mut verdicts = Vec::new();
+    for (key, &base) in &baseline.shapes {
+        match current.shapes.get(key) {
+            None => verdicts.push((key.clone(), ShapeVerdict::Missing { baseline: base })),
+            Some(&cur) => {
+                if base > 0.0 && cur < (1.0 - tol) * base {
+                    let loss_frac = 1.0 - cur / base;
+                    verdicts.push((
+                        key.clone(),
+                        ShapeVerdict::Regressed { baseline: base, current: cur, loss_frac },
+                    ));
+                } else {
+                    verdicts.push((key.clone(), ShapeVerdict::Ok { baseline: base, current: cur }));
+                }
+            }
+        }
+    }
+    for (key, &cur) in &current.shapes {
+        if !baseline.shapes.contains_key(key) {
+            verdicts.push((key.clone(), ShapeVerdict::New { current: cur }));
+        }
+    }
+    Comparison { tol, verdicts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(pairs: &[(&str, f64)]) -> BenchSnapshot {
+        BenchSnapshot {
+            kernel: "scalar".to_string(),
+            shapes: pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+
+    #[test]
+    fn parses_wellformed_snapshot() {
+        let s = BenchSnapshot::parse(
+            r#"{"schema":1,"kernel":"avx2","shapes":{"gemm_nn_512":12.5,"gemm_ts_1024":3.25}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.kernel, "avx2");
+        assert_eq!(s.shapes.len(), 2);
+        assert!((s.shapes["gemm_nn_512"] - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed_snapshots() {
+        assert!(BenchSnapshot::parse("not json").is_err());
+        assert!(BenchSnapshot::parse(r#"{"kernel":"avx2"}"#).is_err());
+        assert!(BenchSnapshot::parse(r#"{"shapes":{}}"#).is_err());
+        assert!(BenchSnapshot::parse(r#"{"shapes":{"a":"fast"}}"#).is_err());
+        assert!(BenchSnapshot::parse(r#"{"shapes":{"a":-1.0}}"#).is_err());
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = snap(&[("gemm_nn_512", 10.0), ("gemm_ts_1024", 4.0)]);
+        let cur = snap(&[("gemm_nn_512", 9.2), ("gemm_ts_1024", 4.4)]);
+        let cmp = compare(&base, &cur, 0.10);
+        assert!(cmp.passed(), "{}", cmp.report());
+    }
+
+    #[test]
+    fn regression_beyond_gate_fails() {
+        let base = snap(&[("gemm_nn_512", 10.0)]);
+        let cur = snap(&[("gemm_nn_512", 8.9)]);
+        let cmp = compare(&base, &cur, 0.10);
+        assert!(!cmp.passed());
+        assert!(cmp.report().contains("REGRESSED"), "{}", cmp.report());
+        // Exactly at the gate boundary passes (>, not ≥).
+        let cur = snap(&[("gemm_nn_512", 9.0)]);
+        assert!(compare(&base, &cur, 0.10).passed());
+    }
+
+    #[test]
+    fn missing_tracked_shape_fails_new_shape_passes() {
+        let base = snap(&[("gemm_nn_512", 10.0), ("gemm_ts_64", 2.0)]);
+        let cur = snap(&[("gemm_nn_512", 10.0), ("gemm_ts_256", 3.0)]);
+        let cmp = compare(&base, &cur, 0.10);
+        assert!(!cmp.passed(), "dropping a tracked shape must fail the gate");
+        assert!(cmp.report().contains("MISSING"));
+        assert!(cmp.report().contains("new"));
+        let ok = compare(&snap(&[("a", 1.0)]), &snap(&[("a", 1.0), ("b", 2.0)]), 0.1);
+        assert!(ok.passed());
+    }
+
+    #[test]
+    fn faster_never_fails() {
+        let base = snap(&[("gemm_nn_512", 10.0)]);
+        let cur = snap(&[("gemm_nn_512", 50.0)]);
+        assert!(compare(&base, &cur, 0.10).passed());
+    }
+}

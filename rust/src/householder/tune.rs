@@ -8,7 +8,8 @@
 
 use super::vectors::HouseholderVectors;
 use super::Engine;
-use crate::linalg::Mat;
+use crate::linalg::gemm::with_kernel_choice;
+use crate::linalg::{KernelChoice, Mat};
 use crate::util::json::Json;
 use crate::util::timing::time_reps_budget;
 use crate::util::Rng;
@@ -110,18 +111,59 @@ pub fn tune_k_variant(
     best
 }
 
+/// [`tune_k_variant`] with every GEMM under the timed kernel forced to
+/// one [`KernelChoice`] — the measured optimum is then valid for exactly
+/// that kernel (the microkernel changes the arithmetic/traversal ratio,
+/// which moves the k optimum; that is why the cache keys on it).
+pub fn tune_k_kernel(
+    d: usize,
+    m: usize,
+    c: usize,
+    budget_secs: f64,
+    variant: KVariant,
+    kernel: KernelChoice,
+    rng: &mut Rng,
+) -> TunedK {
+    with_kernel_choice(kernel, || tune_k_variant(d, m, c, budget_secs, variant, rng))
+}
+
+/// Sweep every kernel variant that can actually run on this machine
+/// ([`KernelChoice::available`]) for one `(d, m, op-variant)` triple,
+/// splitting the budget evenly. Returns `(kernel, tuned)` per measured
+/// kernel, in [`KernelChoice::all`] order; the caller picks the winner
+/// by `step_secs` (or uses [`KCache::best`] after inserting them all).
+pub fn tune_k_kernels(
+    d: usize,
+    m: usize,
+    c: usize,
+    budget_secs: f64,
+    variant: KVariant,
+    rng: &mut Rng,
+) -> Vec<(KernelChoice, TunedK)> {
+    let kernels: Vec<KernelChoice> =
+        KernelChoice::all().into_iter().filter(|kc| kc.available()).collect();
+    let per = budget_secs / kernels.len().max(1) as f64;
+    kernels.into_iter().map(|kc| (kc, tune_k_kernel(d, m, c, per, variant, kc, rng))).collect()
+}
+
 /// Default location of the persistent tuned-k store (same directory the
 /// bench CSVs land in; override with `FASTH_TUNE_CACHE`).
 pub const DEFAULT_CACHE_PATH: &str = "bench_out/tuned_k.json";
 
+/// Full cache key: problem shape, timed op, and GEMM kernel strategy.
+pub type KCacheKey = (usize, usize, KVariant, KernelChoice);
+
 /// Process-wide cache: "we never need to search for k more than one time"
-/// (§3.3). Keyed by (d, m, [`KVariant`]) — the variant dimension keeps
-/// step-tuned and apply-tuned optima apart. Optionally backed by a JSON
-/// file (schema v2; v1 files migrate on load, see [`load_entries`]) so
-/// the search survives the *process* too — the server and benches
-/// warm-start from earlier runs instead of re-measuring.
+/// (§3.3). Keyed by (d, m, [`KVariant`], [`KernelChoice`]) — the variant
+/// dimension keeps step-tuned and apply-tuned optima apart, and the
+/// kernel dimension keeps per-microkernel optima apart (the AVX2 tile
+/// shifts the arithmetic/traversal balance, which moves the k argmin).
+/// Optionally backed by a JSON file (schema v3; v2 and v1 files migrate
+/// on load, see [`load_entries`]) so the search survives the *process*
+/// too — the server and benches warm-start from earlier runs instead of
+/// re-measuring.
 pub struct KCache {
-    map: Mutex<BTreeMap<(usize, usize, KVariant), TunedK>>,
+    map: Mutex<BTreeMap<KCacheKey, TunedK>>,
     /// Backing JSON file; `None` = in-memory only.
     path: Option<PathBuf>,
 }
@@ -162,13 +204,43 @@ impl KCache {
     }
 
     /// Cache hit without triggering a search.
-    pub fn lookup(&self, d: usize, m: usize, variant: KVariant) -> Option<TunedK> {
-        self.map.lock().unwrap().get(&(d, m, variant)).copied()
+    pub fn lookup(
+        &self,
+        d: usize,
+        m: usize,
+        variant: KVariant,
+        kernel: KernelChoice,
+    ) -> Option<TunedK> {
+        self.map.lock().unwrap().get(&(d, m, variant, kernel)).copied()
+    }
+
+    /// Fastest measured kernel for a `(d, m, variant)` triple across the
+    /// kernel dimension — what non-tuner callers actually want: "give me
+    /// the winning k, whichever kernel won". Returns `None` if nothing
+    /// was ever tuned for the triple.
+    pub fn best(&self, d: usize, m: usize, variant: KVariant) -> Option<(KernelChoice, TunedK)> {
+        let map = self.map.lock().unwrap();
+        KernelChoice::all()
+            .into_iter()
+            .filter_map(|kc| map.get(&(d, m, variant, kc)).map(|&t| (kc, t)))
+            .min_by(|a, b| a.1.step_secs.total_cmp(&b.1.step_secs))
+    }
+
+    /// Snapshot of all entries, in key order (`repro tune-k --report`).
+    pub fn entries(&self) -> Vec<(KCacheKey, TunedK)> {
+        self.map.lock().unwrap().iter().map(|(&k, &v)| (k, v)).collect()
     }
 
     /// Record a tuning result (write-through to the backing file).
-    pub fn insert(&self, d: usize, m: usize, variant: KVariant, tuned: TunedK) {
-        self.map.lock().unwrap().insert((d, m, variant), tuned);
+    pub fn insert(
+        &self,
+        d: usize,
+        m: usize,
+        variant: KVariant,
+        kernel: KernelChoice,
+        tuned: TunedK,
+    ) {
+        self.map.lock().unwrap().insert((d, m, variant, kernel), tuned);
         if let Err(e) = self.save() {
             eprintln!("warning: could not persist tuned-k cache: {e}");
         }
@@ -191,14 +263,22 @@ impl KCache {
     }
 
     /// Fetch the tuned k for a variant, running the search on a miss
-    /// (and persisting the result when file-backed).
+    /// (and persisting the result when file-backed). A miss sweeps every
+    /// kernel available on this machine and records them all; the
+    /// returned value is the overall winner.
     pub fn get_or_tune(&self, d: usize, m: usize, variant: KVariant, rng: &mut Rng) -> TunedK {
-        if let Some(hit) = self.lookup(d, m, variant) {
+        if let Some((_, hit)) = self.best(d, m, variant) {
             return hit;
         }
-        let tuned = tune_k_variant(d, m, 2, 0.5, variant, rng);
-        self.insert(d, m, variant, tuned);
-        tuned
+        let measured = tune_k_kernels(d, m, 2, 0.5, variant, rng);
+        for &(kernel, tuned) in &measured {
+            self.insert(d, m, variant, kernel, tuned);
+        }
+        self.best(d, m, variant).map(|(_, t)| t).unwrap_or_else(|| {
+            // Unreachable in practice (Scalar is always available), but
+            // never panic a serving path over a tuner anomaly.
+            TunedK { k: Self::heuristic(d, m), step_secs: f64::INFINITY }
+        })
     }
 
     /// Heuristic default without measurement: `k = max(m, 2·⌈√d⌉)`.
@@ -220,20 +300,29 @@ impl KCache {
 }
 
 /// On-disk schema version written by [`KCache::save`]. v2 added the
-/// per-entry `variant` field.
-const SCHEMA_VERSION: u64 = 2;
+/// per-entry `variant` field; v3 added the per-entry `kernel` field.
+const SCHEMA_VERSION: u64 = 3;
 
-/// Parse the backing file; malformed entries are skipped, a malformed
-/// document yields `None`.
+/// Parse the backing file; malformed entries are skipped **with a
+/// per-entry warning naming the skipped key** (a silently dropped entry
+/// looks like a cache hit that never happens — the re-tune cost should
+/// be visible in `repro tune-k` output), a malformed document yields
+/// `None`.
 ///
-/// - v2 (`{"version":2,"entries":[{d,m,variant,k,step_secs}]}`):
-///   entries with an unknown variant are dropped.
-/// - v1 (no `version` field, entries without `variant`): migrated in
-///   place to [`KVariant::Step`] — the v1 tuner only ever measured the
-///   fwd+bwd step, so that is the key those numbers are valid for.
-///   Apply-path lookups then miss and fall back to the heuristic until
-///   an apply-variant tune runs. The next save rewrites the file as v2.
-fn load_entries(path: &Path) -> Option<BTreeMap<(usize, usize, KVariant), TunedK>> {
+/// - v3 (`{"version":3,"entries":[{d,m,variant,kernel,k,step_secs}]}`):
+///   entries with an unknown variant or kernel are skipped (warned).
+/// - v2 (entries without `kernel`): migrated in place to
+///   [`KernelChoice::Scalar`] — the v2-era GEMM only had the scalar
+///   autovectorized microkernel, so that is the kernel those timings are
+///   valid for. SIMD/tall-skinny lookups then miss until a v3 tune runs.
+/// - v1 (no `version` field, entries without `variant`): migrated to
+///   ([`KVariant::Step`], [`KernelChoice::Scalar`]) — the v1 tuner only
+///   ever measured the fwd+bwd step on the scalar kernel. Apply-path
+///   lookups then miss and fall back to the heuristic until an
+///   apply-variant tune runs.
+///
+/// Any write-through rewrites the file as v3.
+fn load_entries(path: &Path) -> Option<BTreeMap<KCacheKey, TunedK>> {
     let text = std::fs::read_to_string(path).ok()?;
     let doc = Json::parse(&text).ok()?;
     let version = doc.get("version").as_usize().unwrap_or(1);
@@ -244,29 +333,62 @@ fn load_entries(path: &Path) -> Option<BTreeMap<(usize, usize, KVariant), TunedK
         let k = e.get("k").as_usize().unwrap_or(0);
         let step_secs = e.get("step_secs").as_f64().unwrap_or(f64::INFINITY);
         if d == 0 || k == 0 || k > d {
-            continue; // skip malformed entries (a tampered k could panic us)
+            // A tampered k could panic us downstream, so drop — loudly.
+            eprintln!(
+                "warning: tuned-k cache {}: skipping malformed entry (d={d}, m={m}, k={k})",
+                path.display()
+            );
+            continue;
         }
         let variant = if version >= 2 {
             match e.get("variant").as_str().and_then(KVariant::parse) {
                 Some(v) => v,
-                None => continue, // unknown variant: a future schema's entry
+                None => {
+                    // A future schema's entry (or a typo): this key will
+                    // re-tune from scratch.
+                    eprintln!(
+                        "warning: tuned-k cache {}: skipping entry (d={d}, m={m}) with \
+                         unknown variant {:?}",
+                        path.display(),
+                        e.get("variant").as_str().unwrap_or("<missing>")
+                    );
+                    continue;
+                }
             }
         } else {
             KVariant::Step
         };
-        map.insert((d, m, variant), TunedK { k, step_secs });
+        let kernel = if version >= 3 {
+            match e.get("kernel").as_str().and_then(KernelChoice::parse) {
+                Some(kc) => kc,
+                None => {
+                    eprintln!(
+                        "warning: tuned-k cache {}: skipping entry (d={d}, m={m}, \
+                         variant={}) with unknown kernel {:?}",
+                        path.display(),
+                        variant.name(),
+                        e.get("kernel").as_str().unwrap_or("<missing>")
+                    );
+                    continue;
+                }
+            }
+        } else {
+            KernelChoice::Scalar
+        };
+        map.insert((d, m, variant, kernel), TunedK { k, step_secs });
     }
     Some(map)
 }
 
-fn entries_json(map: &BTreeMap<(usize, usize, KVariant), TunedK>) -> Json {
+fn entries_json(map: &BTreeMap<KCacheKey, TunedK>) -> Json {
     let entries = map
         .iter()
-        .map(|(&(d, m, variant), t)| {
+        .map(|(&(d, m, variant, kernel), t)| {
             Json::obj(vec![
                 ("d", Json::num(d as f64)),
                 ("m", Json::num(m as f64)),
                 ("variant", Json::str(variant.name())),
+                ("kernel", Json::str(kernel.name())),
                 ("k", Json::num(t.k as f64)),
                 ("step_secs", Json::num(t.step_secs)),
             ])
@@ -304,13 +426,36 @@ mod tests {
         let mut rng = Rng::new(122);
         assert!(cache.is_empty());
         let a = cache.get_or_tune(48, 4, KVariant::Step, &mut rng);
-        assert_eq!(cache.len(), 1);
+        // One entry per kernel available on this machine, ≥ 1 (Scalar).
+        let after_step = cache.len();
+        assert!(after_step >= 1);
         let b = cache.get_or_tune(48, 4, KVariant::Step, &mut rng);
         assert_eq!(a, b, "second call must be a cache hit with identical result");
-        assert_eq!(cache.len(), 1);
-        // The apply variant is a distinct key: tuning it adds an entry.
+        assert_eq!(cache.len(), after_step, "a hit must not re-tune");
+        // The apply variant is a distinct key family: tuning it adds the
+        // same number of per-kernel entries again.
         cache.get_or_tune(48, 4, KVariant::Apply, &mut rng);
-        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.len(), 2 * after_step);
+        // best() agrees with what get_or_tune returned.
+        assert_eq!(cache.best(48, 4, KVariant::Step).unwrap().1, a);
+    }
+
+    /// Shorthand for test entries.
+    fn tk(k: usize, step_secs: f64) -> TunedK {
+        TunedK { k, step_secs }
+    }
+
+    #[test]
+    fn best_picks_fastest_kernel() {
+        let cache = KCache::new();
+        cache.insert(64, 8, KVariant::Apply, KernelChoice::Scalar, tk(16, 2e-3));
+        cache.insert(64, 8, KVariant::Apply, KernelChoice::Simd, tk(24, 0.5e-3));
+        cache.insert(64, 8, KVariant::Apply, KernelChoice::TallSkinny, tk(20, 1e-3));
+        let (kc, t) = cache.best(64, 8, KVariant::Apply).unwrap();
+        assert_eq!(kc, KernelChoice::Simd);
+        assert_eq!(t.k, 24);
+        assert_eq!(cache.best(64, 8, KVariant::Step), None);
+        assert_eq!(cache.entries().len(), 3);
     }
 
     fn temp_cache_path(tag: &str) -> std::path::PathBuf {
@@ -324,48 +469,73 @@ mod tests {
         {
             let cache = KCache::persistent(&path);
             assert!(cache.is_empty(), "fresh file must start empty");
-            cache.insert(128, 32, KVariant::Step, TunedK { k: 24, step_secs: 1.5e-3 });
-            cache.insert(128, 32, KVariant::Apply, TunedK { k: 32, step_secs: 0.8e-3 });
-            cache.insert(64, 8, KVariant::Step, TunedK { k: 16, step_secs: 0.5e-3 });
+            cache.insert(128, 32, KVariant::Step, KernelChoice::Scalar, tk(24, 1.5e-3));
+            cache.insert(128, 32, KVariant::Apply, KernelChoice::Scalar, tk(32, 0.8e-3));
+            cache.insert(128, 32, KVariant::Apply, KernelChoice::Simd, tk(40, 0.4e-3));
+            cache.insert(64, 8, KVariant::Step, KernelChoice::Scalar, tk(16, 0.5e-3));
         }
-        // The rewritten file is schema v2.
+        // The rewritten file is schema v3.
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"version\""), "{text}");
         assert!(text.contains("\"variant\""), "{text}");
+        assert!(text.contains("\"kernel\""), "{text}");
         let reloaded = KCache::persistent(&path);
-        assert_eq!(reloaded.len(), 3);
-        let hit = reloaded.lookup(128, 32, KVariant::Step).expect("persisted entry");
+        assert_eq!(reloaded.len(), 4);
+        let hit = reloaded.lookup(128, 32, KVariant::Step, KernelChoice::Scalar).unwrap();
         assert_eq!(hit.k, 24);
         assert!((hit.step_secs - 1.5e-3).abs() < 1e-12);
-        // The two variants of (128, 32) stay distinct across the reload.
-        assert_eq!(reloaded.lookup(128, 32, KVariant::Apply).unwrap().k, 32);
-        assert_eq!(reloaded.lookup(64, 8, KVariant::Step).unwrap().k, 16);
-        assert_eq!(reloaded.lookup(64, 8, KVariant::Apply), None);
-        assert_eq!(reloaded.lookup(256, 32, KVariant::Step), None);
+        // Variant and kernel dimensions stay distinct across the reload.
+        assert_eq!(reloaded.lookup(128, 32, KVariant::Apply, KernelChoice::Scalar).unwrap().k, 32);
+        assert_eq!(reloaded.lookup(128, 32, KVariant::Apply, KernelChoice::Simd).unwrap().k, 40);
+        assert_eq!(reloaded.best(128, 32, KVariant::Apply).unwrap().0, KernelChoice::Simd);
+        assert_eq!(reloaded.lookup(64, 8, KVariant::Apply, KernelChoice::Scalar), None);
+        assert_eq!(reloaded.lookup(256, 32, KVariant::Step, KernelChoice::Scalar), None);
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
-    fn v1_files_migrate_to_step_variant() {
+    fn v1_files_migrate_to_step_variant_scalar_kernel() {
         let path = temp_cache_path("v1migrate");
-        // A pre-versioning file: no "version", no per-entry "variant".
+        // A pre-versioning file: no "version", no "variant", no "kernel".
         let doc = r#"{"entries":[{"d":128,"m":32,"k":24,"step_secs":0.0015},
                       {"d":64,"m":8,"k":16,"step_secs":0.0005}]}"#;
         std::fs::write(&path, doc).unwrap();
         let cache = KCache::persistent(&path);
         assert_eq!(cache.len(), 2);
-        // v1 numbers came from the step tuner, so they land on Step…
-        assert_eq!(cache.lookup(128, 32, KVariant::Step).unwrap().k, 24);
-        // …and apply-path lookups miss (heuristic fallback territory).
-        assert_eq!(cache.lookup(128, 32, KVariant::Apply), None);
-        // Any write-through upgrades the file to v2 with variants.
-        cache.insert(32, 4, KVariant::Apply, TunedK { k: 12, step_secs: 1e-4 });
+        // v1 numbers came from the step tuner on the scalar kernel…
+        assert_eq!(cache.lookup(128, 32, KVariant::Step, KernelChoice::Scalar).unwrap().k, 24);
+        // …and apply-path / SIMD lookups miss (heuristic fallback).
+        assert_eq!(cache.lookup(128, 32, KVariant::Apply, KernelChoice::Scalar), None);
+        assert_eq!(cache.lookup(128, 32, KVariant::Step, KernelChoice::Simd), None);
+        // Any write-through upgrades the file to v3 with both fields.
+        cache.insert(32, 4, KVariant::Apply, KernelChoice::Scalar, tk(12, 1e-4));
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"version\""), "{text}");
+        assert!(text.contains("\"kernel\""), "{text}");
         let reloaded = KCache::persistent(&path);
         assert_eq!(reloaded.len(), 3);
-        assert_eq!(reloaded.lookup(128, 32, KVariant::Step).unwrap().k, 24);
-        assert_eq!(reloaded.lookup(32, 4, KVariant::Apply).unwrap().k, 12);
+        assert_eq!(reloaded.lookup(128, 32, KVariant::Step, KernelChoice::Scalar).unwrap().k, 24);
+        assert_eq!(reloaded.lookup(32, 4, KVariant::Apply, KernelChoice::Scalar).unwrap().k, 12);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v2_files_migrate_to_scalar_kernel() {
+        let path = temp_cache_path("v2migrate");
+        // A PR-8-era v2 file: per-entry variant, no kernel field.
+        let doc = r#"{"version":2,"entries":[
+                      {"d":128,"m":32,"variant":"step","k":24,"step_secs":0.0015},
+                      {"d":128,"m":32,"variant":"apply","k":32,"step_secs":0.0008}]}"#;
+        std::fs::write(&path, doc).unwrap();
+        let cache = KCache::persistent(&path);
+        assert_eq!(cache.len(), 2);
+        // The v2-era GEMM only had the scalar microkernel, so that is
+        // the kernel those timings are valid for.
+        assert_eq!(cache.lookup(128, 32, KVariant::Step, KernelChoice::Scalar).unwrap().k, 24);
+        assert_eq!(cache.lookup(128, 32, KVariant::Apply, KernelChoice::Scalar).unwrap().k, 32);
+        assert_eq!(cache.lookup(128, 32, KVariant::Apply, KernelChoice::Simd), None);
+        // best() still serves the migrated numbers until a re-tune.
+        assert_eq!(cache.best(128, 32, KVariant::Apply).unwrap().0, KernelChoice::Scalar);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -381,7 +551,7 @@ mod tests {
         std::fs::write(&path, doc).unwrap();
         let cache = KCache::persistent(&path);
         assert_eq!(cache.len(), 1);
-        assert_eq!(cache.lookup(32, 16, KVariant::Step).unwrap().k, 8);
+        assert_eq!(cache.lookup(32, 16, KVariant::Step, KernelChoice::Scalar).unwrap().k, 8);
         // A v2 file with an unrecognized variant drops that entry.
         let doc = r#"{"version":2,"entries":[
                       {"d":32,"m":4,"variant":"warp","k":8,"step_secs":1.0},
@@ -389,7 +559,15 @@ mod tests {
         std::fs::write(&path, doc).unwrap();
         let cache = KCache::persistent(&path);
         assert_eq!(cache.len(), 1);
-        assert_eq!(cache.lookup(32, 4, KVariant::Apply).unwrap().k, 8);
+        assert_eq!(cache.lookup(32, 4, KVariant::Apply, KernelChoice::Scalar).unwrap().k, 8);
+        // A v3 file with an unrecognized kernel drops that entry only.
+        let doc = r#"{"version":3,"entries":[
+                      {"d":32,"m":4,"variant":"apply","kernel":"avx512","k":8,"step_secs":1.0},
+                      {"d":32,"m":4,"variant":"apply","kernel":"simd","k":10,"step_secs":1.0}]}"#;
+        std::fs::write(&path, doc).unwrap();
+        let cache = KCache::persistent(&path);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.lookup(32, 4, KVariant::Apply, KernelChoice::Simd).unwrap().k, 10);
         let _ = std::fs::remove_file(&path);
     }
 

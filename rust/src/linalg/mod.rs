@@ -10,6 +10,8 @@
 //!   standard method for the exponential, as in expRNN),
 //! - [`cayley`]: `(I−V)(I+V)⁻¹` via LU solve (standard Cayley map),
 //! - [`qr`]: Householder QR (substrate + random orthogonal generation),
+//! - [`simd`]: explicit AVX2+FMA microkernels behind runtime dispatch
+//!   (the scalar kernel in [`gemm`] is the portable fallback + oracle),
 //! - [`oracle`]: slow, obviously-correct f64 reference implementations
 //!   used only by tests.
 
@@ -20,6 +22,7 @@ pub mod lu;
 pub mod mat;
 pub mod oracle;
 pub mod qr;
+pub mod simd;
 
-pub use gemm::{matmul, matmul_nt, matmul_tn, Gemm};
+pub use gemm::{matmul, matmul_nt, matmul_tn, Gemm, KernelChoice};
 pub use mat::Mat;

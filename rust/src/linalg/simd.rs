@@ -1,0 +1,254 @@
+//! Explicit SIMD microkernels for the packed GEMM (§Perf iteration 9).
+//!
+//! The portable 8×8 microkernel in [`super::gemm`] relies on LLVM
+//! autovectorization, which on the baseline target lowers to 128-bit SSE2
+//! and *separate* mul+add. On any AVX2+FMA machine (every x86_64 CI
+//! runner and every serving box we care about) the same 8×8 f32 tile fits
+//! one ymm register per C row, so the whole kk sweep is 8 fused
+//! multiply-adds per packed B load — double the vector width and half the
+//! instruction count of the autovectorized form.
+//!
+//! Everything here is `unsafe` `core::arch::x86_64` code behind three
+//! fences:
+//!
+//! 1. **Compile fence** — the module body is `#[cfg(target_arch =
+//!    "x86_64")]`; other arches get the `false`/unreachable stubs at the
+//!    bottom, and dispatch falls back to the scalar kernel.
+//! 2. **Runtime fence** — callers must check [`simd_available`]
+//!    (`is_x86_feature_detected!("avx2") && ("fma")`) before calling; the
+//!    result is cached once in the `gemm` dispatcher's `OnceLock`.
+//! 3. **Oracle fence** — the scalar kernel is kept verbatim as the
+//!    property-test oracle: `rust/tests/gemm_microkernel.rs` forces both
+//!    paths over the same inputs and CI's nightly lane toggles
+//!    `FASTH_FORCE_SCALAR` both ways.
+//!
+//! Contract (identical to the scalar kernel): `ap` is a kk-major MR-tall
+//! packed A panel (`kb × MR` floats), `bp` a kk-major NR-wide packed B
+//! panel (`kb × NR`), and the MR×NR `acc` tile receives `Σ_kk a·bᵀ`.
+//! The kk summation order matches the scalar kernel exactly; only the
+//! mul+add rounding differs (FMA keeps the infinite-precision product),
+//! so results agree to ~1 ulp per accumulated term.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use crate::linalg::gemm::{MR, NR};
+    use core::arch::x86_64::*;
+
+    /// True iff the AVX2+FMA kernel may be called on this machine.
+    pub fn simd_available() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    /// Full-tile AVX2+FMA microkernel: 8 ymm accumulators (one per C
+    /// row), one B vector — 9 of 16 ymm registers live, leaving the
+    /// broadcasts to the renamer. Each kk iteration is 1 load + 8
+    /// broadcasts + 8 FMAs; the lookahead `_mm_prefetch` hides the packed
+    /// panels' L2→L1 latency (prefetching past the panel end is a legal
+    /// no-op — prefetch never faults).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available ([`simd_available`]) and
+    /// that `ap.len() == kb * MR`, `bp.len() == kb * NR` for the same kb.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn microkernel_avx2(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+        debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+        let kb = bp.len() / NR;
+        let mut c0 = _mm256_setzero_ps();
+        let mut c1 = _mm256_setzero_ps();
+        let mut c2 = _mm256_setzero_ps();
+        let mut c3 = _mm256_setzero_ps();
+        let mut c4 = _mm256_setzero_ps();
+        let mut c5 = _mm256_setzero_ps();
+        let mut c6 = _mm256_setzero_ps();
+        let mut c7 = _mm256_setzero_ps();
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kb {
+            // ~8 kk iterations ahead ≈ 4 cache lines into each panel.
+            // `wrapping_add`: near the panel end the hint address is out
+            // of bounds, which prefetch tolerates (it never faults) but
+            // `pointer::add`'s in-bounds contract does not.
+            _mm_prefetch(a.wrapping_add(8 * MR) as *const i8, _MM_HINT_T0);
+            _mm_prefetch(b.wrapping_add(8 * NR) as *const i8, _MM_HINT_T0);
+            let bv = _mm256_loadu_ps(b);
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), bv, c0);
+            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), bv, c1);
+            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), bv, c2);
+            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), bv, c3);
+            c4 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(4)), bv, c4);
+            c5 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(5)), bv, c5);
+            c6 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(6)), bv, c6);
+            c7 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(7)), bv, c7);
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+        _mm256_storeu_ps(acc[4].as_mut_ptr(), c4);
+        _mm256_storeu_ps(acc[5].as_mut_ptr(), c5);
+        _mm256_storeu_ps(acc[6].as_mut_ptr(), c6);
+        _mm256_storeu_ps(acc[7].as_mut_ptr(), c7);
+    }
+
+    /// Dedicated ragged-tail kernel: only the first `rows < MR` A lanes
+    /// are live (the packed panel zero-pads the rest), so the full-tile
+    /// kernel would waste `(MR - rows) / MR` of its FMAs. Column padding
+    /// needs no special case — B panels are zero-padded and the driver
+    /// clips the writeback.
+    ///
+    /// # Safety
+    /// Same requirements as [`microkernel_avx2`]; additionally
+    /// `rows <= MR`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn microkernel_avx2_tail(
+        ap: &[f32],
+        bp: &[f32],
+        acc: &mut [[f32; NR]; MR],
+        rows: usize,
+    ) {
+        debug_assert!(rows <= MR);
+        debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+        let kb = bp.len() / NR;
+        let mut c = [_mm256_setzero_ps(); MR];
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kb {
+            _mm_prefetch(a.wrapping_add(8 * MR) as *const i8, _MM_HINT_T0);
+            _mm_prefetch(b.wrapping_add(8 * NR) as *const i8, _MM_HINT_T0);
+            let bv = _mm256_loadu_ps(b);
+            for (r, cr) in c.iter_mut().enumerate().take(rows) {
+                *cr = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(r)), bv, *cr);
+            }
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        for (row, cr) in acc.iter_mut().zip(c.iter()).take(rows) {
+            _mm256_storeu_ps(row.as_mut_ptr(), *cr);
+        }
+    }
+
+    /// Software prefetch of the first `lines` cache lines of the *next*
+    /// packed panel, issued by the driver while the current tile computes.
+    #[inline(always)]
+    pub fn prefetch_panel(panel: &[f32], lines: usize) {
+        // 64-byte line = 16 f32.
+        let end = panel.len().min(lines * 16);
+        let mut i = 0;
+        while i < end {
+            unsafe { _mm_prefetch(panel.as_ptr().add(i) as *const i8, _MM_HINT_T0) };
+            i += 16;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::{microkernel_avx2, microkernel_avx2_tail, prefetch_panel, simd_available};
+
+// Non-x86_64 stubs: detection reports false, so the dispatcher never
+// reaches the kernels; they are still defined (unreachable) so call sites
+// compile unconditionally.
+#[cfg(not(target_arch = "x86_64"))]
+mod portable {
+    use crate::linalg::gemm::{MR, NR};
+
+    pub fn simd_available() -> bool {
+        false
+    }
+
+    /// # Safety
+    /// Never called: [`simd_available`] is `false` on this target, so the
+    /// dispatcher routes to the scalar kernel.
+    pub unsafe fn microkernel_avx2(_ap: &[f32], _bp: &[f32], _acc: &mut [[f32; NR]; MR]) {
+        unreachable!("AVX2 kernel invoked on a non-x86_64 target");
+    }
+
+    /// # Safety
+    /// Never called (see [`microkernel_avx2`]).
+    pub unsafe fn microkernel_avx2_tail(
+        _ap: &[f32],
+        _bp: &[f32],
+        _acc: &mut [[f32; NR]; MR],
+        _rows: usize,
+    ) {
+        unreachable!("AVX2 tail kernel invoked on a non-x86_64 target");
+    }
+
+    #[inline(always)]
+    pub fn prefetch_panel(_panel: &[f32], _lines: usize) {}
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub use portable::{microkernel_avx2, microkernel_avx2_tail, prefetch_panel, simd_available};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{MR, NR};
+    use crate::util::Rng;
+
+    /// Scalar reference over the same packed-panel layout.
+    fn scalar_tile(ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+        let kb = bp.len() / NR;
+        let mut acc = [[0.0f32; NR]; MR];
+        for kk in 0..kb {
+            for r in 0..MR {
+                let ar = ap[kk * MR + r];
+                for c in 0..NR {
+                    acc[r][c] += ar * bp[kk * NR + c];
+                }
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn avx2_tile_matches_scalar_tile() {
+        if !simd_available() {
+            eprintln!("skipping: AVX2+FMA not available on this machine");
+            return;
+        }
+        let mut rng = Rng::new(0x51D);
+        for kb in [1usize, 7, 64, 255, 256, 257] {
+            let ap: Vec<f32> = (0..kb * MR).map(|_| rng.normal_f32()).collect();
+            let bp: Vec<f32> = (0..kb * NR).map(|_| rng.normal_f32()).collect();
+            let want = scalar_tile(&ap, &bp);
+            let mut got = [[0.0f32; NR]; MR];
+            unsafe { microkernel_avx2(&ap, &bp, &mut got) };
+            for r in 0..MR {
+                for c in 0..NR {
+                    let d = (got[r][c] - want[r][c]).abs();
+                    let tol = 1e-5 + 1e-5 * want[r][c].abs();
+                    assert!(d <= tol, "kb={kb} ({r},{c}): {} vs {}", got[r][c], want[r][c]);
+                }
+            }
+            // Tail kernel: partial rows must match, untouched rows stay 0.
+            for rows in [1usize, 3, 7] {
+                let mut tail = [[0.0f32; NR]; MR];
+                unsafe { microkernel_avx2_tail(&ap, &bp, &mut tail, rows) };
+                for (r, row) in tail.iter().enumerate() {
+                    for (c, &v) in row.iter().enumerate() {
+                        if r < rows {
+                            let tol = 1e-5 + 1e-5 * want[r][c].abs();
+                            assert!((v - want[r][c]).abs() <= tol, "rows={rows} ({r},{c})");
+                        } else {
+                            assert_eq!(v, 0.0, "row {r} past the tail must stay zero");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_is_harmless() {
+        // Prefetch must be a pure hint: no observable effect, no panic on
+        // short (or empty) panels.
+        prefetch_panel(&[], 4);
+        prefetch_panel(&[1.0; 5], 4);
+        let v = vec![0.5f32; 1024];
+        prefetch_panel(&v, 4);
+        assert!(v.iter().all(|&x| x == 0.5));
+    }
+}

@@ -9,7 +9,9 @@
 //!   report      aggregate RunRecords into the Table-2 markdown/JSON
 //!   ops         Table-1 numeric equivalence demo at a given d
 //!   lowrank     approximate-SVD frontier: rank vs error vs speedup
-//!   tune-k      §3.3 one-time block-size search
+//!   tune-k      §3.3 one-time block-size search (per kernel variant;
+//!               `--report` prints the chosen kernel per shape)
+//!   bench-compare  GFLOP/s regression gate between two BENCH_linalg.json
 //!   selftest    PJRT artifacts vs native numerics
 //!
 //! (Arg parsing is hand-rolled — no CLI crates in the offline registry.)
@@ -95,6 +97,7 @@ fn run(args: &[String]) -> Result<()> {
         "ops" => cmd_ops(&flags),
         "lowrank" => cmd_lowrank(&flags),
         "tune-k" => cmd_tune_k(&flags),
+        "bench-compare" => cmd_bench_compare(&flags),
         "selftest" => cmd_selftest(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -120,7 +123,8 @@ fn print_usage() {
          report     [--dir bench_out/experiments] [--out bench_out/TABLE2.md]\n\
          ops        [--d 64]\n\
          lowrank    [--d 256] [--ranks 8,16,32,64] [--m 32]\n\
-         tune-k     [--d 784] [--m 32] [--budget secs]\n\
+         tune-k     [--d 784] [--m 32] [--budget secs] [--report]\n\
+         bench-compare --baseline OLD.json --current NEW.json [--tol 0.10]\n\
          selftest   [--artifacts dir]"
     );
 }
@@ -470,6 +474,14 @@ fn cmd_ops(flags: &HashMap<String, String>) -> Result<()> {
     let mut rng = Rng::new(13);
     let wl = fasth::svd::ops::OpWorkload::new(d, 32, &mut rng);
     let k = figures::default_k(d);
+    // CI logs grep this line: it records which GEMM microkernel the
+    // numbers below were produced with (and whether the scalar path was
+    // forced on an AVX2 runner).
+    println!(
+        "gemm kernel dispatch: {} (FASTH_FORCE_SCALAR={})",
+        fasth::linalg::gemm::active_kernel_name(),
+        if fasth::linalg::gemm::force_scalar_env() { "on" } else { "off" }
+    );
     println!("Table 1 numeric equivalence at d = {d} (max |Δ| standard vs SVD route):");
     for op in MatrixOp::ALL {
         let std = fasth::svd::ops::standard_step(op, &wl.w, &wl.x, &wl.g);
@@ -581,32 +593,115 @@ fn cmd_lowrank(flags: &HashMap<String, String>) -> Result<()> {
 // ---------------------------------------------------------------- tune-k
 
 fn cmd_tune_k(flags: &HashMap<String, String>) -> Result<()> {
+    use fasth::householder::tune::{tune_k_kernels, KCache, KVariant};
+    let cache = KCache::global();
+    // `--report`: no tuning — print the chosen kernel variant per
+    // (d, m, op-variant) from the persistent store, the winner first.
+    if flags.contains_key("report") {
+        let entries = cache.entries();
+        if entries.is_empty() {
+            println!("tuned-k cache is empty (run `repro tune-k` to populate it)");
+            return Ok(());
+        }
+        println!("tuned-k cache report ({} entries):", entries.len());
+        println!(
+            "{:>6} {:>6} {:>8} {:>12} {:>6} {:>12} {:>7}",
+            "d", "m", "variant", "kernel", "k", "secs", "chosen"
+        );
+        for ((d, m, variant, kernel), t) in entries {
+            let chosen =
+                cache.best(d, m, variant).map(|(kc, _)| kc == kernel).unwrap_or(false);
+            println!(
+                "{d:>6} {m:>6} {:>8} {:>12} {:>6} {:>12.6} {:>7}",
+                variant.name(),
+                kernel.name(),
+                t.k,
+                t.step_secs,
+                if chosen { "*" } else { "" }
+            );
+        }
+        println!("gemm kernel dispatch: {}", fasth::linalg::gemm::active_kernel_name());
+        if let Some(path) = cache.path() {
+            println!("store: {}", path.display());
+        }
+        return Ok(());
+    }
     let d: usize = flags.get("d").map(|s| s.parse()).transpose()?.unwrap_or(784);
     let m: usize = flags.get("m").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let budget: f64 = flags.get("budget").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
-    use fasth::householder::tune::{tune_k_variant, KCache, KVariant};
     let mut rng = Rng::new(17);
     let t0 = std::time::Instant::now();
-    // Tune both kernels: the training step and the forward-only apply
-    // (each keyed separately in the v2 cache; serving/figures read the
-    // apply entry, training layers read the step entry).
-    let cache = KCache::global();
+    // Tune both op variants — the training step and the forward-only
+    // apply — and, inside each, every GEMM kernel available on this
+    // machine (v3 cache keys on both; serving/figures read the winning
+    // apply entry, training layers the winning step entry).
     for variant in [KVariant::Step, KVariant::Apply] {
-        let tuned = tune_k_variant(d, m, 2, budget / 2.0, variant, &mut rng);
-        println!(
-            "tuned k = {} at d = {d}, m = {m}, variant = {} ({:.3} ms; √d = {:.1})",
-            tuned.k,
-            variant.name(),
-            tuned.step_secs * 1e3,
-            (d as f64).sqrt()
-        );
-        // Persist so later `repro serve` / bench runs warm-start this result.
-        cache.insert(d, m, variant, tuned);
+        let measured = tune_k_kernels(d, m, 2, budget / 2.0, variant, &mut rng);
+        for &(kernel, tuned) in &measured {
+            println!(
+                "  measured k = {:>4} at d = {d}, m = {m}, variant = {}, kernel = {} ({:.3} ms)",
+                tuned.k,
+                variant.name(),
+                kernel.name(),
+                tuned.step_secs * 1e3
+            );
+            cache.insert(d, m, variant, kernel, tuned);
+        }
+        if let Some((kernel, tuned)) = cache.best(d, m, variant) {
+            println!(
+                "tuned k = {} at d = {d}, m = {m}, variant = {} → kernel {} ({:.3} ms; √d = {:.1})",
+                tuned.k,
+                variant.name(),
+                kernel.name(),
+                tuned.step_secs * 1e3,
+                (d as f64).sqrt()
+            );
+        }
     }
     println!("search took {:.2}s", t0.elapsed().as_secs_f64());
     if let Some(path) = cache.path() {
         println!("cached in {} (warm-starts serve/bench k selection)", path.display());
     }
+    Ok(())
+}
+
+// --------------------------------------------------------- bench-compare
+
+/// `repro bench-compare --baseline OLD.json --current NEW.json [--tol 0.10]`
+/// — the CI GFLOP/s regression gate: exit non-zero when any shape tracked
+/// by the baseline `BENCH_linalg.json` is more than `tol` slower in the
+/// current snapshot (or has vanished from it). Getting faster, and shapes
+/// new in the current run, always pass.
+fn cmd_bench_compare(flags: &HashMap<String, String>) -> Result<()> {
+    use fasth::bench_harness::regress::{compare, BenchSnapshot};
+    let baseline_path =
+        flags.get("baseline").context("bench-compare requires --baseline OLD.json")?;
+    let current_path = flags.get("current").context("bench-compare requires --current NEW.json")?;
+    let tol: f64 = flags.get("tol").map(|s| s.parse()).transpose()?.unwrap_or(0.10);
+    if !(0.0..1.0).contains(&tol) {
+        bail!("--tol must be in [0, 1), got {tol}");
+    }
+    let baseline = BenchSnapshot::load(std::path::Path::new(baseline_path))
+        .map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+    let current = BenchSnapshot::load(std::path::Path::new(current_path))
+        .map_err(|e| anyhow::anyhow!("current: {e}"))?;
+    println!(
+        "bench-compare: baseline kernel = {}, current kernel = {}, tol = {:.0}%",
+        baseline.kernel,
+        current.kernel,
+        tol * 100.0
+    );
+    if baseline.kernel != current.kernel {
+        // Not fatal — a runner fleet can mix CPU generations — but the
+        // gate is only meaningful per kernel, so say it loudly.
+        println!("note: kernel dispatch differs between runs; gaps may be dispatch, not code");
+    }
+    let cmp = compare(&baseline, &current, tol);
+    print!("{}", cmp.report());
+    if !cmp.passed() {
+        bail!("GFLOP/s regression gate failed (tolerance {:.0}%)", tol * 100.0);
+    }
+    println!("bench-compare OK ({} shapes checked)", cmp.verdicts.len());
     Ok(())
 }
 

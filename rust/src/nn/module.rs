@@ -192,13 +192,15 @@ pub fn grad_by_key(p: &mut dyn Params, key: &str) -> Option<Vec<f32>> {
 
 /// FastH block size for a `d`-dimensional factor: the tuned value from
 /// the persistent [`KCache`](crate::householder::tune::KCache) when one
-/// was measured for `(d, m_hint)` on the training-step kernel, else the
-/// √d heuristic — the same selection path the serving stack uses.
+/// was measured for `(d, m_hint)` on the training-step kernel — the
+/// fastest across whichever GEMM kernels were tuned (v3 cache keys on
+/// kernel variant) — else the √d heuristic, the same selection path the
+/// serving stack uses.
 pub fn tuned_block_k(d: usize, m_hint: usize) -> usize {
     use crate::householder::tune::{KCache, KVariant};
     KCache::global()
-        .lookup(d, m_hint, KVariant::Step)
-        .map(|t| t.k)
+        .best(d, m_hint, KVariant::Step)
+        .map(|(_, t)| t.k)
         .unwrap_or_else(|| KCache::heuristic(d, m_hint))
         .max(1)
 }

@@ -4,14 +4,28 @@
 //! agreement on the rerouted TN/NT paths, TT honoring the receiver's
 //! config, and a packed-panel-vs-f64-oracle property sweep over all four
 //! transpose combinations with random `alpha`/`beta`.
+//!
+//! Since §Perf iteration 9 this also holds the kernel-dispatch oracle
+//! suite: the AVX2+FMA microkernel forced against the scalar kernel (the
+//! portable fallback doubles as the property oracle) across ragged
+//! edges, transposes, and random `alpha`/`beta`, plus the tall-skinny
+//! column-parallel split checked bit-identical against the serial
+//! driver. SIMD-only assertions self-skip on machines without AVX2/FMA,
+//! so the suite passes on any x86_64 *and* non-x86 runner.
 
-use fasth::linalg::gemm::{matmul, matmul_nt, matmul_tn, Gemm, Trans};
-use fasth::linalg::{oracle, Mat};
+use fasth::linalg::gemm::{matmul, matmul_nt, matmul_tn, Gemm, KernelChoice, Trans};
+use fasth::linalg::{oracle, simd, Mat};
 use fasth::util::prop::{assert_close, check};
 use fasth::util::Rng;
 
 fn serial() -> Gemm {
     Gemm { par_flop_threshold: usize::MAX, ..Default::default() }
+}
+
+/// A config that pins the microkernel regardless of CPU detection or the
+/// `FASTH_FORCE_SCALAR` override.
+fn forced(kernel: KernelChoice) -> Gemm {
+    Gemm { kernel: Some(kernel), ..Default::default() }
 }
 
 fn run_gemm(g: &Gemm, alpha: f32, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f32) -> Mat {
@@ -141,8 +155,8 @@ fn tt_respects_gemm_config() {
     let want = oracle::matmul_f64(&a.t(), &b.t());
     for cfg in [
         serial(),
-        Gemm { kc: 16, nc: 24, mr_chunk: 8, par_flop_threshold: usize::MAX },
-        Gemm { kc: 7, nc: 13, mr_chunk: 8, par_flop_threshold: 0 },
+        Gemm { kc: 16, nc: 24, mr_chunk: 8, ..serial() },
+        Gemm { kc: 7, nc: 13, mr_chunk: 8, par_flop_threshold: 0, ..Default::default() },
     ] {
         let got = run_gemm(&cfg, 1.0, &a, Trans::Yes, &b, Trans::Yes, 0.0);
         assert_close(got.data(), want.data(), 1e-3, 1e-3)
@@ -210,5 +224,97 @@ fn wide_output_parallel_b_pack_threaded_vs_serial() {
         let want = reference(1.0, &a, ta, &b, tb, 0.0, &Mat::zeros(m, n));
         assert_close(threaded.data(), want.data(), 5e-3, 5e-3)
             .unwrap_or_else(|e| panic!("{ta:?}/{tb:?} vs oracle m={m} k={k} n={n}: {e}"));
+    }
+}
+
+#[test]
+fn simd_vs_scalar_ragged_edges() {
+    // Forced SIMD against the forced scalar oracle on the routing and
+    // panel edges: n straddling the skinny→packed boundary (63/64/65),
+    // plus ragged NR widths and K straddling kc (255/256/257). Both
+    // kernels walk the same packed panels in the same kk order; the only
+    // divergence is FMA's single rounding per multiply-add, so the
+    // tolerance is a few hundred ULPs — far below the f64-oracle gate.
+    let mut rng = Rng::new(0xC0);
+    let scalar = forced(KernelChoice::Scalar);
+    let simd_g = forced(KernelChoice::Simd);
+    for &n in &[63usize, 64, 65, 71, 73, 255, 256, 257] {
+        for &k in &[255usize, 256, 257] {
+            let m = 9; // one full MR tile plus a 1-row ragged tail
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let want = oracle::matmul_f64(&a, &b);
+            let s = run_gemm(&scalar, 1.0, &a, Trans::No, &b, Trans::No, 0.0);
+            assert_close(s.data(), want.data(), 2e-3, 2e-3)
+                .unwrap_or_else(|e| panic!("scalar n={n} k={k}: {e}"));
+            if simd::simd_available() {
+                let v = run_gemm(&simd_g, 1.0, &a, Trans::No, &b, Trans::No, 0.0);
+                assert_close(v.data(), want.data(), 2e-3, 2e-3)
+                    .unwrap_or_else(|e| panic!("simd n={n} k={k}: {e}"));
+                assert_close(v.data(), s.data(), 1e-4, 5e-5)
+                    .unwrap_or_else(|e| panic!("simd vs scalar n={n} k={k}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_vs_scalar_property_sweep() {
+    // Random α/β and all four transpose combinations through both forced
+    // kernels: the scalar microkernel is the property oracle for the
+    // AVX2 path, and both must stay inside the f64-oracle gate.
+    if !simd::simd_available() {
+        eprintln!("simd_vs_scalar_property_sweep: no AVX2+FMA on this host, skipping");
+        return;
+    }
+    check("gemm_simd_vs_scalar", 24, |rng| {
+        let m = 1 + rng.below(48);
+        let k = 1 + rng.below(300);
+        let n = 65 + rng.below(200); // force the packed path
+        let alpha = rng.normal_f32();
+        let beta = if rng.below(2) == 0 { 0.0 } else { rng.normal_f32() };
+        let (ta, tb) = match rng.below(4) {
+            0 => (Trans::No, Trans::No),
+            1 => (Trans::Yes, Trans::No),
+            2 => (Trans::No, Trans::Yes),
+            _ => (Trans::Yes, Trans::Yes),
+        };
+        let a = match ta {
+            Trans::No => Mat::randn(m, k, rng),
+            Trans::Yes => Mat::randn(k, m, rng),
+        };
+        let b = match tb {
+            Trans::No => Mat::randn(k, n, rng),
+            Trans::Yes => Mat::randn(n, k, rng),
+        };
+        let c0 = Mat::randn(m, n, rng);
+        let mut s = c0.clone();
+        forced(KernelChoice::Scalar).gemm(alpha, &a, ta, &b, tb, beta, &mut s);
+        let mut v = c0.clone();
+        forced(KernelChoice::Simd).gemm(alpha, &a, ta, &b, tb, beta, &mut v);
+        assert_close(v.data(), s.data(), 1e-4, 5e-5)?;
+        let want = reference(alpha, &a, ta, &b, tb, beta, &c0);
+        assert_close(v.data(), want.data(), 5e-3, 5e-3)
+    });
+}
+
+#[test]
+fn tall_skinny_column_split_matches_serial_bitwise() {
+    // The nc-parallel column split packs the same NR-aligned B panels the
+    // serial driver does and accumulates `alpha·(tile)` per k0 window in
+    // the same ascending-k0 order into a private buffer, so for β = 0 the
+    // threaded result is bit-identical to serial — whichever microkernel
+    // the host dispatches (both runs dispatch the same one).
+    let mut rng = Rng::new(0xC1);
+    let ts_g = forced(KernelChoice::TallSkinny);
+    for &(m, k, n) in &[(1usize, 257usize, 1024usize), (4, 300, 520), (8, 64, 96)] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let ts = run_gemm(&ts_g, 2.0, &a, Trans::No, &b, Trans::No, 0.0);
+        let ser = run_gemm(&serial(), 2.0, &a, Trans::No, &b, Trans::No, 0.0);
+        assert_eq!(ts.data(), ser.data(), "tall-skinny vs serial m={m} k={k} n={n}");
+        let want = reference(2.0, &a, Trans::No, &b, Trans::No, 0.0, &Mat::zeros(m, n));
+        assert_close(ts.data(), want.data(), 5e-3, 5e-3)
+            .unwrap_or_else(|e| panic!("tall-skinny vs oracle m={m} k={k} n={n}: {e}"));
     }
 }
