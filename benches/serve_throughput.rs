@@ -1,5 +1,5 @@
 //! Serving throughput bench: spin up the evented coordinator on
-//! loopback and drive it through four phases —
+//! loopback and drive it through five phases —
 //!
 //!   1. **pipelined throughput**: M concurrent clients with mixed
 //!      square + rect traffic (p50/p99 latency, mean batch size,
@@ -15,7 +15,11 @@
 //!      exactly and at `rank = d/8` through the per-request rank knob;
 //!      reports `rank_speedup` (mean service latency, exact / rank)
 //!      and `rank_rel_err` (Frobenius, vs the exact lane), gated
-//!      against the Eckart–Young tail of the known spectrum.
+//!      against the Eckart–Young tail of the known spectrum,
+//!   5. **trace overhead**: the same fixed workload with tracing off vs
+//!      1-in-64 span sampling (min-of-reps); `trace_overhead_pct` rides
+//!      into the report and CI gates it at ≤ 5%, alongside the per-op
+//!      `queue_wait_p50_us` / `exec_p50_us` attribution.
 //!
 //! Results land in `bench_out/BENCH_serving.json` — the serving leg of
 //! the PR-over-PR perf trajectory (CI's bench-smoke job uploads it).
@@ -24,7 +28,7 @@
 //! env: FASTH_SERVE_CLIENTS (4), FASTH_SERVE_REQUESTS (200 per client),
 //!      FASTH_SERVE_SHARDS (2), FASTH_SERVE_REACTORS (4),
 //!      FASTH_SERVE_CHURN (300), FASTH_SERVE_CONNS (1024),
-//!      FASTH_SERVE_LOWRANK_REQUESTS (256).
+//!      FASTH_SERVE_LOWRANK_REQUESTS (256), FASTH_SERVE_TRACE_REQUESTS (400).
 //! The concurrency phase needs ~3 fds per connection; raise `ulimit -n`
 //! (CI uses 8192) or shrink FASTH_SERVE_CONNS on tight systems.
 
@@ -287,9 +291,56 @@ fn main() {
         "rank_rel_err {rank_rel_err:.4} exceeds 2× Eckart–Young floor {ey_floor:.4}"
     );
 
+    // ---- phase 5: trace overhead --------------------------------------
+    // The observability contract: compiled-in tracing must cost nothing
+    // measurable when off and ≤ 5% at 1-in-64 sampling (CI greps
+    // `trace_overhead_pct`). Same fixed pipelined workload, min-of-reps
+    // per mode to shed scheduler noise; the server runs in-process, so
+    // the sampling modulus can be toggled directly.
+    let trace_requests = env_usize("FASTH_SERVE_TRACE_REQUESTS", 400);
+    let mut trace_client = Client::connect(&addr).expect("trace connect");
+    let mut trace_rng = Rng::new(0x0B5);
+    let mut run_fixed = |client: &mut Client| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let calls: Vec<Call> = (0..trace_requests)
+                .map(|_| {
+                    Call::apply("svd_64", (0..64).map(|_| trace_rng.normal_f32()).collect())
+                })
+                .collect();
+            let t = Instant::now();
+            let rs = client.call_many(calls).expect("trace lane");
+            assert!(rs.iter().all(|r| r.ok), "trace lane had failures");
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        best
+    };
+    fasth::obs::set_sample_every(0);
+    let off_secs = run_fixed(&mut trace_client);
+    fasth::obs::set_sample_every(64);
+    let on_secs = run_fixed(&mut trace_client);
+    fasth::obs::set_sample_every(0);
+    let trace_overhead_pct = ((on_secs / off_secs.max(1e-9) - 1.0) * 100.0).max(0.0);
+    println!(
+        "trace overhead    : off {:.1} ms vs 1/64 sampling {:.1} ms → {trace_overhead_pct:.2}%",
+        off_secs * 1e3,
+        on_secs * 1e3
+    );
+
     let mut admin = Client::connect(&addr).expect("admin connect");
     let stats = admin.admin("stats").expect("stats");
     println!("server stats      : {stats}");
+    // Queue-wait vs execute attribution for the dominant op, from the
+    // always-on per-op histograms (these ride into the report so the
+    // trajectory tracks where serving time goes, not just how much).
+    let stats_j = Json::parse(&stats).expect("stats json");
+    let apply_stats = stats_j.get("per_op").get("apply");
+    let queue_wait_p50_us = apply_stats.get("queue_wait_p50_us").as_f64().unwrap_or(0.0);
+    let exec_p50_us = apply_stats.get("exec_p50_us").as_f64().unwrap_or(0.0);
+    println!(
+        "apply attribution : queue_wait p50 {queue_wait_p50_us:.0} us, \
+         exec p50 {exec_p50_us:.0} us"
+    );
 
     // Fault-health gate: the bench runs a clean config (no FaultPlan),
     // so any worker panic or TTL shed during the run is a real
@@ -324,7 +375,10 @@ fn main() {
         ("rank_speedup", Json::num(rank_speedup)),
         ("rank_rel_err", Json::num(rank_rel_err)),
         ("rank_rel_err_floor", Json::num(ey_floor)),
-        ("server_stats", Json::parse(&stats).expect("stats json")),
+        ("queue_wait_p50_us", Json::num(queue_wait_p50_us)),
+        ("exec_p50_us", Json::num(exec_p50_us)),
+        ("trace_overhead_pct", Json::num(trace_overhead_pct)),
+        ("server_stats", stats_j),
     ]);
     std::fs::create_dir_all("bench_out").expect("bench_out dir");
     let path = std::path::Path::new("bench_out").join("BENCH_serving.json");

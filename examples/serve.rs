@@ -10,7 +10,8 @@
 //! `artifacts/manifest.json` exists (the full AOT path: JAX/Pallas →
 //! HLO text → Rust), otherwise the native FastH engine.
 //!
-//! Run: `cargo run --release --example serve -- [--shards N] [--reactors N] [--adaptive]`
+//! Run: `cargo run --release --example serve -- [--shards N] [--reactors N] [--adaptive]
+//! [--trace-sample N]`
 
 use fasth::coordinator::{Call, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig};
 use fasth::util::Rng;
@@ -22,6 +23,7 @@ fn main() {
     let mut shards = 2usize;
     let mut reactors = 2usize;
     let mut adaptive = false;
+    let mut trace_sample = 0u32;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -37,7 +39,15 @@ fn main() {
                 adaptive = true;
                 i += 1;
             }
-            other => panic!("unknown flag '{other}' (try --shards N / --reactors N / --adaptive)"),
+            "--trace-sample" => {
+                trace_sample =
+                    args.get(i + 1).and_then(|s| s.parse().ok()).expect("--trace-sample N");
+                i += 2;
+            }
+            other => panic!(
+                "unknown flag '{other}' (try --shards N / --reactors N / --adaptive / \
+                 --trace-sample N)"
+            ),
         }
     }
 
@@ -82,6 +92,7 @@ fn main() {
         .max_wait(Duration::from_millis(2))
         .adaptive(adaptive)
         .max_queue_depth(50_000)
+        .trace_sample(trace_sample)
         .build()
         .expect("valid config");
     let server = Server::start(config, registry).expect("server start");
@@ -158,6 +169,10 @@ fn main() {
     let depth_lines: Vec<&str> =
         prom.lines().filter(|l| l.starts_with("orthoserve_shard_queue_depth")).collect();
     println!("per-shard depth gauges:\n{}", depth_lines.join("\n"));
+    if trace_sample > 0 {
+        let spans = admin.trace_json(8).expect("trace");
+        println!("recent stage spans (sampling 1/{trace_sample}): {spans}");
+    }
     server.stop();
     assert!(mean_batch > 1.5, "batching never kicked in");
     println!("\nserve OK");

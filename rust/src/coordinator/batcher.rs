@@ -78,6 +78,10 @@ pub struct Batch {
     /// exact): part of the queue key, so a batch is always uniform.
     pub rank: Option<usize>,
     pub requests: Vec<Request>,
+    /// Submit time of each request, parallel to `requests` — the worker
+    /// turns these into queue-wait attribution (histograms + the
+    /// `timing: true` breakdown) without re-deriving arrival order.
+    pub arrived: Vec<Instant>,
     /// Requests whose `ttl_ms` expired while queued: shed at dequeue,
     /// owed a `deadline_exceeded` error instead of execution.
     pub shed: Vec<Request>,
@@ -338,6 +342,7 @@ impl DynamicBatcher {
         // is picked up by the next flush.
         let now = Instant::now();
         let mut requests = Vec::with_capacity(take);
+        let mut arrived = Vec::with_capacity(take);
         let mut shed = Vec::new();
         for p in queue.drain(..take) {
             let expired = p
@@ -348,13 +353,14 @@ impl DynamicBatcher {
                 shed.push(p.req);
             } else {
                 requests.push(p.req);
+                arrived.push(p.arrived);
             }
         }
         if queue.is_empty() {
             q.by_key.remove(key);
         }
         q.last_served = Some(key.clone());
-        Batch { model: key.0.clone(), op: key.1, rank: key.2, requests, shed, full }
+        Batch { model: key.0.clone(), op: key.1, rank: key.2, requests, arrived, shed, full }
     }
 }
 
@@ -364,7 +370,16 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64, model: &str, op: OpKind) -> Request {
-        Request { id, model: model.into(), op, column: vec![1.0, 2.0], ttl_ms: None, rank: None }
+        Request {
+            id,
+            model: model.into(),
+            op,
+            column: vec![1.0, 2.0],
+            ttl_ms: None,
+            rank: None,
+            timing: false,
+            sampled: false,
+        }
     }
 
     #[test]

@@ -89,11 +89,12 @@ pub struct Call {
     column: Vec<f32>,
     ttl_ms: Option<u64>,
     rank: Option<usize>,
+    timing: bool,
 }
 
 impl Call {
     pub fn new(model: impl Into<String>, op: OpKind, column: Vec<f32>) -> Call {
-        Call { model: model.into(), op, column, ttl_ms: None, rank: None }
+        Call { model: model.into(), op, column, ttl_ms: None, rank: None, timing: false }
     }
 
     /// Attach a queue deadline: if the server cannot start executing
@@ -112,6 +113,15 @@ impl Call {
     /// governed by the model's trailing spectrum (Eckart–Young).
     pub fn rank(mut self, r: usize) -> Call {
         self.rank = Some(r);
+        self
+    }
+
+    /// Ask the server for a per-stage µs breakdown in the response's
+    /// `timing` object (and force the request to be traced regardless of
+    /// the server's sampling rate). Costs a few extra bytes per frame;
+    /// leave off for latency-critical traffic.
+    pub fn timing(mut self) -> Call {
+        self.timing = true;
         self
     }
 
@@ -159,6 +169,11 @@ impl Call {
     /// The requested truncation rank, if any.
     pub fn rank_opt(&self) -> Option<usize> {
         self.rank
+    }
+
+    /// Whether this call asks for the per-stage breakdown.
+    pub fn timing_requested(&self) -> bool {
+        self.timing
     }
 }
 
@@ -294,6 +309,8 @@ impl Client {
             column: call.column.clone(),
             ttl_ms: call.ttl_ms,
             rank: call.rank,
+            timing: call.timing,
+            sampled: false,
         };
         writeln!(self.writer, "{}", req.to_json())?;
         self.writer.flush()?;
@@ -399,6 +416,16 @@ impl Client {
         self.read_line()
     }
 
+    /// The `trace` admin command: the server's most recent stage spans
+    /// (merged across its per-thread ring buffers), at most `max`, as
+    /// the raw one-line JSON reply
+    /// (`{"count":…,"sample_every":…,"spans":[…]}`).
+    pub fn trace_json(&mut self, max: usize) -> Result<String> {
+        writeln!(self.writer, "{{\"cmd\":\"trace\",\"max\":{max}}}")?;
+        self.writer.flush()?;
+        self.read_line()
+    }
+
     /// The `metrics` admin command: returns the Prometheus-ish
     /// exposition text (framed in one JSON line on the wire).
     pub fn metrics_text(&mut self) -> Result<String> {
@@ -429,6 +456,8 @@ mod tests {
         assert_eq!(c.clone().ttl(Duration::from_micros(10)).ttl_ms(), Some(1));
         assert_eq!(c.rank_opt(), None);
         assert_eq!(c.clone().rank(4).rank_opt(), Some(4));
+        assert!(!c.timing_requested());
+        assert!(c.clone().timing().timing_requested());
         assert_eq!(Call::inverse("m", vec![0.0]).op(), OpKind::Inverse);
         assert_eq!(Call::expm("m", vec![0.0]).op(), OpKind::Expm);
         assert_eq!(Call::cayley("m", vec![0.0]).op(), OpKind::Cayley);

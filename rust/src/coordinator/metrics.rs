@@ -9,6 +9,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const LATENCY_BUCKETS_US: [u64; 10] =
     [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 50_000, u64::MAX];
 
+/// Renderable stand-in for the +∞ bucket's `u64::MAX` sentinel: a
+/// percentile that lands in the open-ended bucket reports 10 s instead
+/// of a number JSON consumers would mangle.
+pub const PERCENTILE_CAP_US: u64 = 10_000_000;
+
 /// Index of the histogram bucket that `us` falls into.
 pub fn bucket_index(us: u64) -> usize {
     LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(LATENCY_BUCKETS_US.len() - 1)
@@ -56,6 +61,12 @@ impl LatencyHist {
             }
         }
         u64::MAX
+    }
+
+    /// [`Self::percentile_us`] with the +∞ bucket capped to
+    /// [`PERCENTILE_CAP_US`] — the form every JSON renderer wants.
+    pub fn percentile_capped_us(&self, p: f64) -> u64 {
+        self.percentile_us(p).min(PERCENTILE_CAP_US)
     }
 
     /// Halve every bucket — a decay step for consumers that want the
@@ -112,6 +123,12 @@ pub struct Metrics {
     latency: LatencyHist,
     /// Per-op latency histograms, indexed by [`OpKind::index`].
     per_op: [LatencyHist; OpKind::ALL.len()],
+    /// Per-op queue-wait histograms (submit → worker dequeue), indexed
+    /// by [`OpKind::index`].
+    per_op_queue_wait: [LatencyHist; OpKind::ALL.len()],
+    /// Per-op execution histograms (batch service time inside the
+    /// worker, gather → kernel → scatter), indexed by [`OpKind::index`].
+    per_op_exec: [LatencyHist; OpKind::ALL.len()],
 }
 
 impl Metrics {
@@ -133,6 +150,26 @@ impl Metrics {
     /// The latency histogram of one op (tests / dashboards).
     pub fn op_hist(&self, op: OpKind) -> &LatencyHist {
         &self.per_op[op.index()]
+    }
+
+    /// Record one request's time spent queued before its batch ran.
+    pub fn record_queue_wait_op(&self, op: OpKind, us: u64) {
+        self.per_op_queue_wait[op.index()].record(us);
+    }
+
+    /// Record one batch's in-worker execution time under its op.
+    pub fn record_exec_op(&self, op: OpKind, us: u64) {
+        self.per_op_exec[op.index()].record(us);
+    }
+
+    /// The queue-wait histogram of one op (tests / dashboards).
+    pub fn queue_wait_hist(&self, op: OpKind) -> &LatencyHist {
+        &self.per_op_queue_wait[op.index()]
+    }
+
+    /// The execution-time histogram of one op (tests / dashboards).
+    pub fn exec_hist(&self, op: OpKind) -> &LatencyHist {
+        &self.per_op_exec[op.index()]
     }
 
     /// Count `n` failed responses under `code` (bumps both the per-code
@@ -158,13 +195,11 @@ impl Metrics {
         self.batched_columns.load(Ordering::Relaxed) as f64 / b as f64
     }
 
-    /// Mean latency in µs.
+    /// Mean latency in µs. Divides by the histogram's own count — the
+    /// histogram records error-path latencies too, so `responses_ok`
+    /// would be the wrong denominator.
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.responses_ok.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.mean_us()
     }
 
     /// Approximate latency percentile from the aggregate histogram
@@ -187,6 +222,8 @@ impl Metrics {
         let mut per_op = Vec::new();
         for op in OpKind::ALL {
             let h = self.op_hist(op);
+            let qw = self.queue_wait_hist(op);
+            let ex = self.exec_hist(op);
             let buckets = h.bucket_counts();
             let hist: Vec<Json> = buckets.iter().map(|&c| Json::num(c as f64)).collect();
             per_op.push((
@@ -194,8 +231,14 @@ impl Metrics {
                 Json::obj(vec![
                     ("count", Json::num(h.count() as f64)),
                     ("mean_us", Json::num(h.mean_us())),
-                    ("p50_us", Json::num(h.percentile_us(0.5).min(10_000_000) as f64)),
-                    ("p99_us", Json::num(h.percentile_us(0.99).min(10_000_000) as f64)),
+                    ("p50_us", Json::num(h.percentile_capped_us(0.5) as f64)),
+                    ("p99_us", Json::num(h.percentile_capped_us(0.99) as f64)),
+                    ("queue_wait_count", Json::num(qw.count() as f64)),
+                    ("queue_wait_p50_us", Json::num(qw.percentile_capped_us(0.5) as f64)),
+                    ("queue_wait_p99_us", Json::num(qw.percentile_capped_us(0.99) as f64)),
+                    ("exec_count", Json::num(ex.count() as f64)),
+                    ("exec_p50_us", Json::num(ex.percentile_capped_us(0.5) as f64)),
+                    ("exec_p99_us", Json::num(ex.percentile_capped_us(0.99) as f64)),
                     ("hist", Json::arr(hist)),
                 ]),
             ));
@@ -216,14 +259,8 @@ impl Metrics {
             ("flush_deadline", Json::num(self.flush_deadline.load(Ordering::Relaxed) as f64)),
             ("mean_latency_us", Json::num(self.mean_latency_us())),
             // The +∞ bucket renders as a sentinel cap rather than u64::MAX.
-            (
-                "p50_latency_us",
-                Json::num(self.latency_percentile_us(0.5).min(10_000_000) as f64),
-            ),
-            (
-                "p99_latency_us",
-                Json::num(self.latency_percentile_us(0.99).min(10_000_000) as f64),
-            ),
+            ("p50_latency_us", Json::num(self.latency.percentile_capped_us(0.5) as f64)),
+            ("p99_latency_us", Json::num(self.latency.percentile_capped_us(0.99) as f64)),
             ("shard_depth", Json::arr(depths)),
             ("reactor_conns", Json::arr(reactors)),
             (
@@ -302,34 +339,17 @@ impl Metrics {
         }
         let _ = writeln!(out, "orthoserve_mean_batch_size {}", self.mean_batch_size());
         for op in OpKind::ALL {
-            let h = self.op_hist(op);
-            let mut cum = 0u64;
-            for (i, c) in h.bucket_counts().into_iter().enumerate() {
-                cum += c;
-                let le = if LATENCY_BUCKETS_US[i] == u64::MAX {
-                    "+Inf".to_string()
-                } else {
-                    LATENCY_BUCKETS_US[i].to_string()
-                };
-                let _ = writeln!(
-                    out,
-                    "orthoserve_latency_us_bucket{{op=\"{}\",le=\"{le}\"}} {cum}",
-                    op.name()
-                );
-            }
-            let _ = writeln!(
-                out,
-                "orthoserve_latency_us_count{{op=\"{}\"}} {}",
-                op.name(),
-                h.count()
+            write_prom_hist(&mut out, "orthoserve_latency_us", Some(op.name()), self.op_hist(op));
+            write_prom_hist(
+                &mut out,
+                "orthoserve_queue_wait_us",
+                Some(op.name()),
+                self.queue_wait_hist(op),
             );
-            let _ = writeln!(
-                out,
-                "orthoserve_latency_us_sum{{op=\"{}\"}} {}",
-                op.name(),
-                h.sum_us.load(Ordering::Relaxed)
-            );
+            write_prom_hist(&mut out, "orthoserve_exec_us", Some(op.name()), self.exec_hist(op));
         }
+        // The aggregate (all-op, ok + error paths) latency histogram.
+        write_prom_hist(&mut out, "orthoserve_latency_aggregate_us", None, &self.latency);
         for (s, d) in shard_depths.iter().enumerate() {
             let _ = writeln!(out, "orthoserve_shard_queue_depth{{shard=\"{s}\"}} {d}");
         }
@@ -337,6 +357,40 @@ impl Metrics {
             let _ = writeln!(out, "orthoserve_reactor_connections{{reactor=\"{r}\"}} {c}");
         }
         out
+    }
+}
+
+/// Append one Prometheus histogram family (`_bucket`/`_count`/`_sum`)
+/// with cumulative bucket counts and an optional `op` label.
+fn write_prom_hist(out: &mut String, family: &str, op: Option<&str>, h: &LatencyHist) {
+    use std::fmt::Write;
+    let mut cum = 0u64;
+    for (i, c) in h.bucket_counts().into_iter().enumerate() {
+        cum += c;
+        let le = if LATENCY_BUCKETS_US[i] == u64::MAX {
+            "+Inf".to_string()
+        } else {
+            LATENCY_BUCKETS_US[i].to_string()
+        };
+        match op {
+            Some(o) => {
+                let _ = writeln!(out, "{family}_bucket{{op=\"{o}\",le=\"{le}\"}} {cum}");
+            }
+            None => {
+                let _ = writeln!(out, "{family}_bucket{{le=\"{le}\"}} {cum}");
+            }
+        }
+    }
+    let (count, sum) = (h.count(), h.sum_us.load(Ordering::Relaxed));
+    match op {
+        Some(o) => {
+            let _ = writeln!(out, "{family}_count{{op=\"{o}\"}} {count}");
+            let _ = writeln!(out, "{family}_sum{{op=\"{o}\"}} {sum}");
+        }
+        None => {
+            let _ = writeln!(out, "{family}_count {count}");
+            let _ = writeln!(out, "{family}_sum {sum}");
+        }
     }
 }
 
@@ -377,6 +431,73 @@ mod tests {
         assert_eq!(m.op_hist(OpKind::Expm).percentile_us(0.5), 50_000);
         // Aggregate saw all three.
         assert_eq!(m.latency.count(), 3);
+    }
+
+    #[test]
+    fn mean_latency_counts_error_path_latencies() {
+        let m = Metrics::new();
+        // Two ok responses at 100µs, one error-path latency at 400µs: the
+        // mean must divide by the histogram count (3), not responses_ok.
+        m.responses_ok.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(100);
+        m.record_latency(100);
+        m.record_latency(400);
+        assert_eq!(m.mean_latency_us(), 200.0);
+        // No recorded latencies at all → 0, not NaN.
+        assert_eq!(Metrics::new().mean_latency_us(), 0.0);
+    }
+
+    #[test]
+    fn percentile_capped_us_caps_the_infinity_bucket() {
+        let h = LatencyHist::default();
+        h.record(70_000_000); // lands in the +∞ bucket
+        assert_eq!(h.percentile_us(0.5), u64::MAX);
+        assert_eq!(h.percentile_capped_us(0.5), PERCENTILE_CAP_US);
+        h.record(40); // below the cap, cap must not distort it
+        assert_eq!(h.percentile_capped_us(0.1), 50);
+    }
+
+    #[test]
+    fn queue_wait_and_exec_histograms_render() {
+        let m = Metrics::new();
+        m.record_queue_wait_op(OpKind::Apply, 90);
+        m.record_queue_wait_op(OpKind::Apply, 30);
+        m.record_exec_op(OpKind::Apply, 700);
+        assert_eq!(m.queue_wait_hist(OpKind::Apply).count(), 2);
+        assert_eq!(m.exec_hist(OpKind::Apply).count(), 1);
+        assert_eq!(m.queue_wait_hist(OpKind::Expm).count(), 0);
+        let j = crate::util::json::Json::parse(&m.to_json()).unwrap();
+        let apply = j.get("per_op").get("apply");
+        assert_eq!(apply.get("queue_wait_count").as_usize(), Some(2));
+        assert_eq!(apply.get("queue_wait_p50_us").as_usize(), Some(100));
+        assert_eq!(apply.get("exec_count").as_usize(), Some(1));
+        assert_eq!(apply.get("exec_p50_us").as_usize(), Some(1000));
+        let text = m.to_prometheus(&[], &[]);
+        assert!(
+            text.contains("orthoserve_queue_wait_us_bucket{op=\"apply\",le=\"50\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("orthoserve_queue_wait_us_bucket{op=\"apply\",le=\"100\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("orthoserve_queue_wait_us_count{op=\"apply\"} 2"), "{text}");
+        assert!(text.contains("orthoserve_queue_wait_us_sum{op=\"apply\"} 120"), "{text}");
+        assert!(text.contains("orthoserve_exec_us_bucket{op=\"apply\",le=\"1000\"} 1"), "{text}");
+        assert!(text.contains("orthoserve_exec_us_count{op=\"apply\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn aggregate_latency_histogram_in_prometheus() {
+        let m = Metrics::new();
+        m.record_latency_op(OpKind::Apply, 60);
+        m.record_latency(9); // aggregate-only (error path)
+        let text = m.to_prometheus(&[], &[]);
+        assert!(text.contains("orthoserve_latency_aggregate_us_bucket{le=\"50\"} 1"), "{text}");
+        assert!(text.contains("orthoserve_latency_aggregate_us_bucket{le=\"100\"} 2"), "{text}");
+        assert!(text.contains("orthoserve_latency_aggregate_us_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("orthoserve_latency_aggregate_us_count 2"), "{text}");
+        assert!(text.contains("orthoserve_latency_aggregate_us_sum 69"), "{text}");
     }
 
     #[test]

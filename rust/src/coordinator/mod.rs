@@ -46,7 +46,7 @@ pub mod worker;
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use client::{Call, Client, ClientConfig, RetryPolicy};
 pub use faults::{BatchFault, FaultPlan};
-pub use protocol::{ErrorCode, OpKind, Request, Response, PROTO_VERSION};
+pub use protocol::{ErrorCode, OpKind, Request, Response, StageTiming, PROTO_VERSION};
 pub use reactor::{ConnHandle, FrameDecoder, ResponseTx};
 pub use server::{Server, ServerConfig, ServerConfigBuilder};
 pub use shard::{rendezvous_place, Shard, ShardSet};

@@ -217,6 +217,18 @@ pub mod v1 {
         /// clients — and the serialized bytes of rank-less requests —
         /// are untouched (additive field, same rule as `ttl_ms`).
         pub rank: Option<usize>,
+        /// Optional per-request trace opt-in: when `true` the response
+        /// echoes a server-side per-stage µs breakdown (`timing` object)
+        /// and the request is traced regardless of the server's sampling
+        /// rate. Absent/false ⇒ byte-identical wire (additive field,
+        /// same rule as `ttl_ms`/`rank`).
+        pub timing: bool,
+        /// Server-internal trace flag, set by the reactor at decode time
+        /// (`timing` opt-in or 1-in-N sampling won the toss): sampled
+        /// requests get stage spans recorded along the whole serving
+        /// path. Never serialized — it is not part of the wire contract,
+        /// and [`Request::from_json`] always leaves it `false`.
+        pub sampled: bool,
     }
 
     impl Request {
@@ -235,6 +247,9 @@ pub mod v1 {
             }
             if let Some(rank) = self.rank {
                 fields.push(("rank", Json::num(rank as f64)));
+            }
+            if self.timing {
+                fields.push(("timing", Json::Bool(true)));
             }
             Json::obj(fields).to_string()
         }
@@ -256,7 +271,72 @@ pub mod v1 {
             }
             let ttl_ms = j.get("ttl_ms").as_f64().map(|t| t.max(0.0) as u64);
             let rank = j.get("rank").as_usize();
-            Ok(Request { id, model, op, column, ttl_ms, rank })
+            let timing = j.get("timing").as_bool().unwrap_or(false);
+            Ok(Request { id, model, op, column, ttl_ms, rank, timing, sampled: false })
+        }
+    }
+
+    /// Server-side per-stage µs breakdown echoed inside a response's
+    /// `timing` object when the request asked for it (`timing: true`).
+    ///
+    /// `queue_wait`/`batch_form`/`exec`/`writeback` are disjoint
+    /// sub-intervals of the request's life inside the server, so their
+    /// sum is ≤ `total_us` by construction. `exec_pack`/`exec_kernel`
+    /// attribute time *inside* `exec` to the GEMM pack and microkernel
+    /// phases (plus the FastH block loop folded into `exec_kernel`'s
+    /// complement) and are excluded from the sum contract.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct StageTiming {
+        /// Submit → worker dequeue.
+        pub queue_wait_us: u64,
+        /// Gathering queued columns into the `d×m` batch matrix.
+        pub batch_form_us: u64,
+        /// Engine execution (the whole kernel call for the batch).
+        pub exec_us: u64,
+        /// GEMM packing time inside `exec` (0 when unattributed).
+        pub exec_pack_us: u64,
+        /// GEMM microkernel time inside `exec` (0 when unattributed).
+        pub exec_kernel_us: u64,
+        /// Scattering batch columns back into per-request responses.
+        pub writeback_us: u64,
+        /// Submit → response handoff (the server-side total).
+        pub total_us: u64,
+    }
+
+    impl StageTiming {
+        /// Sum of the four disjoint top-level stages (`exec_pack` /
+        /// `exec_kernel` are sub-stages of `exec` and excluded);
+        /// ≤ [`StageTiming::total_us`] by construction.
+        pub fn stage_sum_us(&self) -> u64 {
+            self.queue_wait_us + self.batch_form_us + self.exec_us + self.writeback_us
+        }
+
+        pub fn to_json(&self) -> Json {
+            Json::obj(vec![
+                ("queue_wait_us", Json::num(self.queue_wait_us as f64)),
+                ("batch_form_us", Json::num(self.batch_form_us as f64)),
+                ("exec_us", Json::num(self.exec_us as f64)),
+                ("exec_pack_us", Json::num(self.exec_pack_us as f64)),
+                ("exec_kernel_us", Json::num(self.exec_kernel_us as f64)),
+                ("writeback_us", Json::num(self.writeback_us as f64)),
+                ("total_us", Json::num(self.total_us as f64)),
+            ])
+        }
+
+        /// Parse from a response's `timing` value; `None` when the field
+        /// is absent (the overwhelmingly common case).
+        pub fn from_json(j: &Json) -> Option<StageTiming> {
+            let us = |k: &str| j.get(k).as_f64().unwrap_or(0.0).max(0.0) as u64;
+            j.get("total_us").as_f64()?;
+            Some(StageTiming {
+                queue_wait_us: us("queue_wait_us"),
+                batch_form_us: us("batch_form_us"),
+                exec_us: us("exec_us"),
+                exec_pack_us: us("exec_pack_us"),
+                exec_kernel_us: us("exec_kernel_us"),
+                writeback_us: us("writeback_us"),
+                total_us: us("total_us"),
+            })
         }
     }
 
@@ -277,6 +357,9 @@ pub mod v1 {
         pub batch_size: usize,
         /// End-to-end service latency.
         pub latency_us: u64,
+        /// Per-stage breakdown, echoed only when the request opted in
+        /// with `timing: true` (absent ⇒ byte-identical wire).
+        pub timing: Option<StageTiming>,
     }
 
     impl Response {
@@ -290,6 +373,7 @@ pub mod v1 {
                 retryable: false,
                 batch_size,
                 latency_us,
+                timing: None,
             }
         }
 
@@ -312,6 +396,7 @@ pub mod v1 {
                 retryable: code.retryable(),
                 batch_size: 0,
                 latency_us: 0,
+                timing: None,
             }
         }
 
@@ -332,6 +417,9 @@ pub mod v1 {
             if let Some(c) = self.code {
                 fields.push(("code", Json::str(c.name())));
                 fields.push(("retryable", Json::Bool(self.retryable)));
+            }
+            if let Some(t) = &self.timing {
+                fields.push(("timing", t.to_json()));
             }
             Json::obj(fields).to_string()
         }
@@ -355,6 +443,7 @@ pub mod v1 {
                 retryable: j.get("retryable").as_bool().unwrap_or(false),
                 batch_size: j.get("batch_size").as_usize().unwrap_or(0),
                 latency_us: j.get("latency_us").as_f64().unwrap_or(0.0) as u64,
+                timing: StageTiming::from_json(j.get("timing")),
             })
         }
     }
@@ -363,7 +452,7 @@ pub mod v1 {
 /// The protocol version this build of the coordinator speaks.
 pub const PROTO_VERSION: u32 = v1::VERSION;
 
-pub use v1::{ErrorCode, Hello, OpKind, Request, Response};
+pub use v1::{ErrorCode, Hello, OpKind, Request, Response, StageTiming};
 
 #[cfg(test)]
 mod tests {
@@ -378,6 +467,8 @@ mod tests {
             column: vec![1.0, -2.5, 3.25],
             ttl_ms: None,
             rank: None,
+            timing: false,
+            sampled: false,
         };
         let back = Request::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
@@ -390,9 +481,38 @@ mod tests {
         // rank follows the same additive rule: rank-less requests are
         // byte-identical to pre-rank traffic, present round-trips.
         assert!(!r.to_json().contains("rank"));
-        let with_rank = Request { rank: Some(4), ..r };
+        let with_rank = Request { rank: Some(4), ..r.clone() };
         let back = Request::from_json(&with_rank.to_json()).unwrap();
         assert_eq!(back, with_rank);
+        // timing too: opt-out requests serialize byte-identically to
+        // pre-timing traffic, opt-in round-trips.
+        assert!(!r.to_json().contains("timing"));
+        let with_timing = Request { timing: true, ..r };
+        assert!(with_timing.to_json().contains("\"timing\":true"));
+        let back = Request::from_json(&with_timing.to_json()).unwrap();
+        assert_eq!(back, with_timing);
+    }
+
+    #[test]
+    fn timing_breakdown_roundtrips_and_stays_off_the_wire() {
+        // Responses without a breakdown never mention timing.
+        let r = Response::ok(7, vec![0.5], 1, 999);
+        assert!(!r.to_json().contains("timing"));
+        let t = StageTiming {
+            queue_wait_us: 10,
+            batch_form_us: 2,
+            exec_us: 30,
+            exec_pack_us: 8,
+            exec_kernel_us: 19,
+            writeback_us: 3,
+            total_us: 50,
+        };
+        assert_eq!(t.stage_sum_us(), 45);
+        assert!(t.stage_sum_us() <= t.total_us);
+        let with = Response { timing: Some(t), ..r };
+        let back = Response::from_json(&with.to_json()).unwrap();
+        assert_eq!(back, with);
+        assert_eq!(back.timing.unwrap().exec_kernel_us, 19);
     }
 
     #[test]

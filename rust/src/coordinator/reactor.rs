@@ -27,6 +27,7 @@ use super::protocol::{ErrorCode, Request, Response, PROTO_VERSION};
 use super::shard::ShardSet;
 use super::state::ModelRegistry;
 use super::sync::lock_or_recover;
+use crate::obs;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -632,6 +633,8 @@ impl Conn {
 
     /// One decoded line: admin command or single-column request.
     fn handle_frame(&mut self, ctx: &ReactorCtx, line: &str) {
+        // Disabled path: one relaxed load + branch, no clock read.
+        let t_decode = obs::enabled().then(obs::start);
         let parsed = Json::parse(line);
         if let Ok(j) = &parsed {
             if let Some(cmd) = j.get("cmd").as_str() {
@@ -644,6 +647,15 @@ impl Conn {
         match Request::from_json(line) {
             Ok(mut req) => {
                 let client_id = req.id & 0xFFFF_FFFF;
+                // One sampling decision per request, made at intake and
+                // carried (server-internally) to the worker. `timing:
+                // true` opts in regardless of the 1-in-N modulus.
+                req.sampled = req.timing || obs::sample();
+                if req.sampled {
+                    if let Some(t) = t_decode {
+                        t.record((self.handle.conn_id << 32) | client_id, obs::Stage::Decode);
+                    }
+                }
                 if ctx.draining.load(Ordering::Relaxed) {
                     // Graceful drain: answer instead of queueing work
                     // that would race server teardown.
@@ -723,6 +735,18 @@ impl Conn {
                 let items = ctx.registry.names().into_iter().map(Json::str);
                 Json::arr(items.collect()).to_string()
             }
+            "trace" => {
+                // Recent spans from every thread's ring, oldest first.
+                // `max` caps the reply size (default 256 spans).
+                let max = j.get("max").as_usize().unwrap_or(256).min(65_536);
+                let spans = obs::recent_spans(max);
+                Json::obj(vec![
+                    ("sample_every", Json::num(obs::sample_every() as f64)),
+                    ("count", Json::num(spans.len() as f64)),
+                    ("spans", Json::arr(spans.iter().map(|s| s.to_json()).collect())),
+                ])
+                .to_string()
+            }
             "shutdown" => {
                 ctx.shutdown.store(true, Ordering::Relaxed);
                 ctx.shards.close();
@@ -746,6 +770,10 @@ impl Conn {
         if self.paused {
             return;
         }
+        // Connection-level read span (client bits zero): covers the
+        // whole pull-and-dispatch pass for this wakeup.
+        let t_read = obs::enabled().then(obs::start);
+        let mut got_bytes = false;
         for _ in 0..16 {
             match self.stream.read(buf) {
                 Ok(0) => {
@@ -753,6 +781,7 @@ impl Conn {
                     break;
                 }
                 Ok(n) => {
+                    got_bytes = true;
                     ctx.metrics.bytes_read.fetch_add(n as u64, Ordering::Relaxed);
                     self.dec.push(&buf[..n]);
                     self.process_pending(ctx);
@@ -766,6 +795,11 @@ impl Conn {
                     self.close_now = true;
                     break;
                 }
+            }
+        }
+        if got_bytes {
+            if let Some(t) = t_read {
+                t.record(self.handle.conn_id << 32, obs::Stage::ReactorRead);
             }
         }
     }
@@ -782,6 +816,9 @@ impl Conn {
                 }
             }
         }
+        // Connection-level write span; only flushes with bytes pending
+        // touch the clock, and only when tracing is on.
+        let t_write = (self.pending_write() > 0 && obs::enabled()).then(obs::start);
         while self.wpos < self.wbuf.len() {
             match self.stream.write(&self.wbuf[self.wpos..]) {
                 Ok(0) => {
@@ -799,6 +836,9 @@ impl Conn {
                     break;
                 }
             }
+        }
+        if let Some(t) = t_write {
+            t.record(self.handle.conn_id << 32, obs::Stage::ReactorWrite);
         }
         if self.wpos == self.wbuf.len() {
             self.wbuf.clear();

@@ -64,6 +64,10 @@ pub struct ServerConfig {
     /// Deterministic fault injection (chaos tests only; `None` serves
     /// clean).
     pub faults: Option<FaultPlan>,
+    /// Background trace sampling: record stage spans for one request in
+    /// N (0 disables; `timing: true` requests are always traced). Set
+    /// process-wide at [`Server::start`] via [`crate::obs`].
+    pub trace_sample: u32,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +85,7 @@ impl Default for ServerConfig {
             sock_buf: None,
             drain_timeout: Duration::from_secs(5),
             faults: None,
+            trace_sample: 0,
         }
     }
 }
@@ -217,6 +222,12 @@ impl ServerConfigBuilder {
         self
     }
 
+    /// Trace one request in `n` (0 = background sampling off).
+    pub fn trace_sample(mut self, n: u32) -> Self {
+        self.config.trace_sample = n;
+        self
+    }
+
     /// Validate and produce the config.
     pub fn build(self) -> Result<ServerConfig> {
         self.config.validate()?;
@@ -251,6 +262,14 @@ impl Server {
             .with_context(|| format!("binding {}", config.addr))?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+
+        // Process-wide sampling modulus. Only a nonzero knob writes it:
+        // the obs state is global, and a default-config server starting
+        // concurrently (tests share one process) must not switch off a
+        // modulus someone else just set.
+        if config.trace_sample != 0 {
+            crate::obs::set_sample_every(config.trace_sample);
+        }
 
         let metrics = Arc::new(Metrics::new());
         let shards = Arc::new(ShardSet::new(config.shards, config.batcher));

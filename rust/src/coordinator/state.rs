@@ -423,7 +423,16 @@ impl ModelRegistry {
         }
         let mut rng = Rng::new(lowrank_seed(name, rank));
         let op = state.as_linop();
+        // A cold-rank sketch inside a traced batch is exec time largely
+        // invisible to the GEMM counters (power iteration glue, small
+        // factorizations), so attribute the whole build to the kernel
+        // bucket — its inner GEMMs overlap the same window, which is
+        // fine: these numbers are attribution, not billing.
+        let t_sketch = crate::obs::compute_active().then(std::time::Instant::now);
         let lr = Arc::new(randomized_svd(&op, rank, &SketchConfig::default(), &mut rng));
+        if let Some(t) = t_sketch {
+            crate::obs::add_kernel_ns(t.elapsed().as_nanos() as u64);
+        }
         cache.insert(key, Arc::clone(&lr));
         Ok((lr, false))
     }

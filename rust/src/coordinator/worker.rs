@@ -14,11 +14,12 @@
 use super::batcher::Batch;
 use super::faults::{BatchFault, FaultPlan};
 use super::metrics::Metrics;
-use super::protocol::{ErrorCode, OpKind, Response};
+use super::protocol::{ErrorCode, OpKind, Response, StageTiming};
 use super::shard::Shard;
 use super::state::ModelRegistry;
 use super::sync::lock_or_recover;
 use crate::linalg::Mat;
+use crate::obs;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -160,6 +161,12 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 
 /// Execute one batch against the registry, producing one response per
 /// request (errors fan out to every member of a failed batch).
+///
+/// Stage attribution: queue wait (`batch.arrived[j]` → entry here) and
+/// batch execution time land on the per-op histograms for every
+/// executed batch; requests that are traced (`timing` opt-in or
+/// reactor-sampled) additionally get stage spans recorded, and `timing`
+/// opt-ins get the [`StageTiming`] breakdown attached to the response.
 pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch) -> Vec<Response> {
     let t0 = Instant::now();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -169,6 +176,19 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
     } else {
         metrics.flush_deadline.fetch_add(1, Ordering::Relaxed);
     }
+    // Per-request queue wait, measured submit → here. Hand-built
+    // batches (unit tests) may omit `arrived`; missing entries read as
+    // zero wait rather than panicking.
+    let queue_wait_us: Vec<u64> = (0..batch.requests.len())
+        .map(|j| {
+            batch
+                .arrived
+                .get(j)
+                .map(|a| t0.saturating_duration_since(*a).as_micros() as u64)
+                .unwrap_or(0)
+        })
+        .collect();
+    let traced = batch.requests.iter().any(|r| r.timing || r.sampled);
 
     let model = match registry.get(&batch.model) {
         Some(m) => m,
@@ -224,15 +244,24 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
 
     // Gather columns → X (d_in×m).
     let m = batch.requests.len();
+    let form_start_us = obs::now_us();
+    let t_form = Instant::now();
     let mut x = Mat::zeros(d_in, m);
     for (j, r) in batch.requests.iter().enumerate() {
         for i in 0..d_in {
             x[(i, j)] = r.column[i];
         }
     }
+    let batch_form_us = t_form.elapsed().as_micros() as u64;
 
     // Rank-truncated batches route through the registry's LowRank cache
     // (sketched on first use); exact batches through the model engine.
+    // Traced batches open a compute scope so the GEMM/FastH hot paths
+    // attribute pack vs microkernel time (a single-branch no-op
+    // otherwise).
+    let scope = traced.then(obs::compute_begin);
+    let exec_start_us = obs::now_us();
+    let t_exec = Instant::now();
     let result = match batch.rank {
         Some(r) => registry.lowrank(&batch.model, r).map(|(lr, hit)| {
             if hit {
@@ -248,11 +277,21 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
         }),
         None => model.execute(batch.op, &x),
     };
+    let exec_us = t_exec.elapsed().as_micros() as u64;
+    let delta = scope.map(|s| s.finish()).unwrap_or_default();
+    // Queue wait lands per request, execution once per batch (it is the
+    // batch's service time, shared by every rider).
+    for &qw in &queue_wait_us {
+        metrics.record_queue_wait_op(batch.op, qw);
+    }
+    metrics.record_exec_op(batch.op, exec_us);
     match result {
         Ok(y) => {
             let us = t0.elapsed().as_micros() as u64;
             metrics.responses_ok.fetch_add(m as u64, Ordering::Relaxed);
-            batch
+            let wb_start_us = obs::now_us();
+            let t_wb = Instant::now();
+            let mut responses: Vec<Response> = batch
                 .requests
                 .iter()
                 .enumerate()
@@ -260,7 +299,44 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
                     metrics.record_latency_op(batch.op, us);
                     Response::ok(r.id, y.col(j), m, us)
                 })
-                .collect()
+                .collect();
+            let writeback_us = t_wb.elapsed().as_micros() as u64;
+            // The FastH block loop counts as kernel time in the
+            // two-field breakdown; spans keep it separate.
+            let exec_kernel_us = delta.kernel_us + delta.fasth_us;
+            for (j, (resp, req)) in responses.iter_mut().zip(&batch.requests).enumerate() {
+                if req.timing {
+                    let total_us = batch
+                        .arrived
+                        .get(j)
+                        .map(|a| a.elapsed().as_micros() as u64)
+                        .unwrap_or(queue_wait_us[j] + us);
+                    resp.timing = Some(StageTiming {
+                        queue_wait_us: queue_wait_us[j],
+                        batch_form_us,
+                        exec_us,
+                        exec_pack_us: delta.pack_us,
+                        exec_kernel_us,
+                        writeback_us,
+                        total_us,
+                    });
+                }
+                if req.timing || req.sampled {
+                    record_worker_spans(
+                        req.id,
+                        form_start_us.saturating_sub(queue_wait_us[j]),
+                        queue_wait_us[j],
+                        form_start_us,
+                        batch_form_us,
+                        exec_start_us,
+                        exec_us,
+                        wb_start_us,
+                        writeback_us,
+                        &delta,
+                    );
+                }
+            }
+            responses
         }
         Err(e) => {
             metrics.count_err_code(ErrorCode::BadRequest, m as u64);
@@ -271,6 +347,62 @@ pub fn execute_batch(registry: &ModelRegistry, metrics: &Metrics, batch: &Batch)
                 .collect()
         }
     }
+}
+
+/// Record the worker-side span chain for one traced request: the four
+/// top-level stages plus the compute sub-stages when the scope captured
+/// any attributed time.
+fn record_worker_spans(
+    id: u64,
+    queue_start_us: u64,
+    queue_wait_us: u64,
+    form_start_us: u64,
+    batch_form_us: u64,
+    exec_start_us: u64,
+    exec_us: u64,
+    wb_start_us: u64,
+    writeback_us: u64,
+    delta: &obs::ComputeDelta,
+) {
+    use obs::{Span, Stage};
+    obs::record(Span {
+        id,
+        stage: Stage::QueueWait,
+        start_us: queue_start_us,
+        dur_us: queue_wait_us,
+    });
+    obs::record(Span {
+        id,
+        stage: Stage::BatchForm,
+        start_us: form_start_us,
+        dur_us: batch_form_us,
+    });
+    obs::record(Span { id, stage: Stage::Exec, start_us: exec_start_us, dur_us: exec_us });
+    if delta.pack_us > 0 {
+        obs::record(Span {
+            id,
+            stage: Stage::ExecPack,
+            start_us: exec_start_us,
+            dur_us: delta.pack_us,
+        });
+    }
+    if delta.kernel_us > 0 {
+        obs::record(Span {
+            id,
+            stage: Stage::ExecKernel,
+            start_us: exec_start_us,
+            dur_us: delta.kernel_us,
+        });
+    }
+    if delta.fasth_us > 0 {
+        obs::record(Span {
+            id,
+            stage: Stage::FasthBlock,
+            start_us: exec_start_us,
+            dur_us: delta.fasth_us,
+        });
+    }
+    obs::record(Span { id, stage: Stage::Writeback, start_us: wb_start_us, dur_us: writeback_us });
 }
 
 #[cfg(test)]
@@ -298,6 +430,7 @@ mod tests {
         rank: Option<usize>,
         cols: Vec<Vec<f32>>,
     ) -> Batch {
+        let n = cols.len();
         Batch {
             model: model.into(),
             op,
@@ -312,8 +445,11 @@ mod tests {
                     column,
                     ttl_ms: None,
                     rank,
+                    timing: false,
+                    sampled: false,
                 })
                 .collect(),
+            arrived: vec![Instant::now(); n],
             shed: vec![],
             full: true,
         }
@@ -345,6 +481,32 @@ mod tests {
         // Latency landed on the op's histogram.
         assert_eq!(metrics.op_hist(OpKind::Apply).count(), 5);
         assert_eq!(metrics.op_hist(OpKind::Inverse).count(), 0);
+    }
+
+    #[test]
+    fn timing_opt_in_gets_breakdown_and_histograms_fill() {
+        let (reg, metrics) = setup();
+        let mut rng = Rng::new(21);
+        let cols: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        let mut batch = make_batch("m8", OpKind::Apply, cols);
+        batch.requests[1].timing = true;
+        let responses = execute_batch(&reg, &metrics, &batch);
+        assert!(responses.iter().all(|r| r.ok));
+        // Only the opted-in request carries the breakdown.
+        assert!(responses[0].timing.is_none());
+        assert!(responses[2].timing.is_none());
+        let t = responses[1].timing.expect("opted-in request gets a breakdown");
+        // Disjoint sub-intervals: the stages can never sum past the
+        // server-side total.
+        assert!(t.stage_sum_us() <= t.total_us, "{t:?}");
+        // Queue wait landed per request, exec once per batch.
+        assert_eq!(metrics.queue_wait_hist(OpKind::Apply).count(), 3);
+        assert_eq!(metrics.exec_hist(OpKind::Apply).count(), 1);
+        assert_eq!(metrics.exec_hist(OpKind::Expm).count(), 0);
+        // The wire stays clean for the silent riders.
+        assert!(!responses[0].to_json().contains("timing"));
+        assert!(responses[1].to_json().contains("timing"));
     }
 
     #[test]

@@ -21,7 +21,9 @@
 use super::vectors::{fused_reflection_backward, HouseholderVectors};
 use super::wy::WyBlock;
 use crate::linalg::Mat;
+use crate::obs;
 use crate::util::parallel::parallel_map;
+use std::time::Instant;
 
 /// Forward-pass byproducts kept for the backward pass: the WY blocks and
 /// the inter-block activations `A_1 … A_{nb+1}` (paper §3.1 Remark: saving
@@ -75,9 +77,13 @@ pub fn fasth_forward(hv: &HouseholderVectors, x: &Mat, k: usize) -> (Mat, FasthC
     acts.push(x.clone()); // temporarily in reverse: acts_rev[0] = A_{nb+1}
     let mut a = x.clone();
     let mut t = Mat::zeros(0, 0);
+    let t_blocks = obs::compute_active().then(Instant::now);
     for i in (0..nb).rev() {
         blocks[i].apply_inplace(&mut a, &mut t);
         acts.push(a.clone());
+    }
+    if let Some(t0) = t_blocks {
+        obs::add_fasth_ns(t0.elapsed().as_nanos() as u64);
     }
     acts.reverse(); // now acts[0] = A_1 … acts[nb] = X.
     (a, FasthCache { blocks, acts, k })
@@ -89,8 +95,14 @@ pub fn fasth_apply(hv: &HouseholderVectors, x: &Mat, k: usize) -> Mat {
     let blocks = build_blocks(hv, k);
     let mut a = x.clone();
     let mut t = Mat::zeros(0, 0);
+    // Block-loop attribution (obs): disabled path is one relaxed load +
+    // one branch — only traced batches read the clock.
+    let t_blocks = obs::compute_active().then(Instant::now);
     for b in blocks.iter().rev() {
         b.apply_inplace(&mut a, &mut t);
+    }
+    if let Some(t0) = t_blocks {
+        obs::add_fasth_ns(t0.elapsed().as_nanos() as u64);
     }
     a
 }
@@ -102,8 +114,12 @@ pub fn fasth_apply_transpose(hv: &HouseholderVectors, x: &Mat, k: usize) -> Mat 
     let blocks = build_blocks(hv, k);
     let mut a = x.clone();
     let mut t = Mat::zeros(0, 0);
+    let t_blocks = obs::compute_active().then(Instant::now);
     for b in blocks.iter() {
         b.apply_transpose_inplace(&mut a, &mut t);
+    }
+    if let Some(t0) = t_blocks {
+        obs::add_fasth_ns(t0.elapsed().as_nanos() as u64);
     }
     a
 }

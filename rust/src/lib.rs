@@ -21,6 +21,7 @@
 //!   training runs, versioned RunRecord artifacts, Table-2 reports,
 //! - [`runtime`] — PJRT loading/execution of JAX/Pallas AOT artifacts,
 //! - [`coordinator`] — the serving layer: router, dynamic batcher, workers,
+//! - [`obs`] — crate-wide tracing: stage spans, sampling, kernel attribution,
 //! - [`bench_harness`] — regenerates every figure/table of the paper.
 
 pub mod bench_harness;
@@ -29,6 +30,7 @@ pub mod experiments;
 pub mod householder;
 pub mod linalg;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod svd;
 pub mod util;

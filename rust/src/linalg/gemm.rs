@@ -49,10 +49,12 @@
 
 use super::mat::Mat;
 use crate::linalg::simd;
+use crate::obs;
 use crate::util::parallel::{num_threads, parallel_map};
 use std::cell::Cell;
 use std::ops::Range;
 use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Transpose flag for [`Gemm::gemm`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -480,19 +482,34 @@ impl Gemm {
             let nb = nc.min(n - j0);
             for k0 in (0..k).step_by(kc) {
                 let kb = kc.min(k - k0);
+                // Pack-vs-kernel attribution (obs): the disabled path is
+                // one relaxed load + branch per window / per slab; only
+                // traced batches (a worker's open ComputeScope) pay the
+                // clock reads. Times are CPU-time summed across workers,
+                // not wall time.
+                let t_pack_b = obs::compute_active().then(Instant::now);
                 if par_pack {
                     pack_b_parallel(b, tb, j0, nb, k0, kb, &mut bbuf);
                 } else {
                     pack_b(b, tb, j0, nb, k0, kb, &mut bbuf);
                 }
+                if let Some(t) = t_pack_b {
+                    obs::add_pack_ns(t.elapsed().as_nanos() as u64);
+                }
                 let bpan = &bbuf[..nb.div_ceil(NR) * NR * kb];
                 let body = |rows: Range<usize>, c_rows: &mut [f32]| {
+                    let trace = obs::compute_active();
                     let mut abuf = PACK_A_BUF.take();
                     let a_need = rows.len().div_ceil(MR) * MR * max_kb;
                     if abuf.len() < a_need {
                         abuf.resize(a_need, 0.0);
                     }
+                    let t_pack_a = trace.then(Instant::now);
                     pack_a(a, ta, rows.clone(), k0, kb, &mut abuf);
+                    let t_kernel = t_pack_a.map(|t| {
+                        obs::add_pack_ns(t.elapsed().as_nanos() as u64);
+                        Instant::now()
+                    });
                     let panels_a = rows.len().div_ceil(MR);
                     for p in 0..panels_a {
                         let i = rows.start + p * MR;
@@ -522,6 +539,9 @@ impl Gemm {
                                 }
                             }
                         }
+                    }
+                    if let Some(t) = t_kernel {
+                        obs::add_kernel_ns(t.elapsed().as_nanos() as u64);
                     }
                     PACK_A_BUF.set(abuf);
                 };
@@ -594,11 +614,17 @@ impl Gemm {
             if bbuf.len() < b_need {
                 bbuf.resize(b_need, 0.0);
             }
+            let trace = obs::compute_active();
             let mut local = vec![0.0f32; m * nb];
             for k0 in (0..k).step_by(kc) {
                 let kb = kc.min(k - k0);
+                let t_pack = trace.then(Instant::now);
                 pack_a(a, ta, 0..m, k0, kb, &mut abuf);
                 pack_b(b, tb, j0, nb, k0, kb, &mut bbuf);
+                let t_kernel = t_pack.map(|t| {
+                    obs::add_pack_ns(t.elapsed().as_nanos() as u64);
+                    Instant::now()
+                });
                 let ap = &abuf[..MR * kb];
                 let bpan = &bbuf[..nb.div_ceil(NR) * NR * kb];
                 for (q, bp) in bpan.chunks_exact(NR * kb).enumerate() {
@@ -615,6 +641,9 @@ impl Gemm {
                             *d += alpha * v;
                         }
                     }
+                }
+                if let Some(t) = t_kernel {
+                    obs::add_kernel_ns(t.elapsed().as_nanos() as u64);
                 }
             }
             PACK_A_BUF.set(abuf);

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   bench       regenerate the paper's figures (1, 3, 4, k, rnn, all)
 //!   serve       start the orthoserve coordinator (native or PJRT engine)
+//!   trace       stage-level serving profile: timing requests + span census
 //!   train       end-to-end training runs (rnn copy-memory / spiral MLP)
 //!   experiment  the Table-2 quality study: run a declarative spec
 //!               (or `all`) at a budget, multi-seed, writing RunRecords
@@ -92,6 +93,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "bench" => cmd_bench(&flags),
         "serve" => cmd_serve(&flags),
+        "trace" => cmd_trace(&flags),
         "train" => cmd_train(&flags),
         "report" => cmd_report(&flags),
         "ops" => cmd_ops(&flags),
@@ -116,6 +118,8 @@ fn print_usage() {
          bench      --fig 1|3|4|k|rnn|all  [--sizes 64,128,...] [--budget secs] [--reps n]\n\
          serve      [--addr host:port] [--d 64] [--engine native|pjrt] [--artifacts dir]\n\
                     [--shards n] [--reactors n] [--adaptive] [--rect ROWSxCOLS[@RANK]]\n\
+                    [--trace-sample n]\n\
+         trace      [--addr host:port] [--model name] [--d 64] [--requests 32] [--max 256]\n\
          train      --task rnn|spiral [--steps n] [--hidden d] [--lr f]\n\
          experiment <name|all> [--budget smoke|paper] [--seed-offset n] [--out dir]\n\
                     [--serial]   (names: char_lm copy_mem flow_d8 flow_d16 flow_d32\n\
@@ -204,6 +208,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let reactors: usize = flags.get("reactors").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let adaptive = flags.contains_key("adaptive");
+    let trace_sample: u32 =
+        flags.get("trace-sample").map(|s| s.parse()).transpose()?.unwrap_or(0);
 
     let registry = Arc::new(ModelRegistry::new());
     let engine = match engine_kind {
@@ -247,13 +253,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .shards(shards)
         .reactors(reactors)
         .adaptive(adaptive)
+        .trace_sample(trace_sample)
         .build()?;
     let server = Server::start(config, registry.clone())?;
     println!(
         "orthoserve listening on {} ({shards} shards, {reactors} reactors, model \
-         svd_{d}{rect_banner}, engine {engine_kind}, adaptive deadline {})",
+         svd_{d}{rect_banner}, engine {engine_kind}, adaptive deadline {}, trace sampling {})",
         server.local_addr,
-        if adaptive { "on" } else { "off" }
+        if adaptive { "on" } else { "off" },
+        if trace_sample == 0 { "off".to_string() } else { format!("1/{trace_sample}") }
     );
     println!("send {{\"cmd\":\"shutdown\"}} to stop.");
     // Keep the process alive until a client asks for shutdown; probe the
@@ -267,6 +275,113 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     server.stop();
+    Ok(())
+}
+
+// ----------------------------------------------------------------- trace
+
+/// `repro trace [--addr host:port] [--model name] [--d 64] [--requests 32]
+/// [--max 256]` — stage-level serving profile. Sends `timing: true`
+/// requests (against a throwaway local server with 1-in-1 sampling unless
+/// `--addr` points at a running one), prints a flame-style per-stage
+/// table from the echoed breakdowns, then drains the server's recent
+/// span buffer (`{"cmd":"trace"}`) for a per-stage census.
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
+    use fasth::coordinator::{Call, StageTiming};
+    use fasth::util::json::Json;
+
+    let n: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let d: usize = flags.get("d").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let max: usize = flags.get("max").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    if n == 0 {
+        bail!("--requests must be >= 1");
+    }
+    let (server, addr, model) = match flags.get("addr") {
+        Some(a) => {
+            let addr: std::net::SocketAddr =
+                a.parse().with_context(|| format!("bad --addr '{a}'"))?;
+            let model = flags.get("model").cloned().unwrap_or_else(|| format!("svd_{d}"));
+            (None, addr, model)
+        }
+        None => {
+            let registry = Arc::new(ModelRegistry::new());
+            let name = format!("svd_{d}");
+            registry.create(&name, d, ExecEngine::Native { k: figures::default_k(d) }, 42);
+            let config = ServerConfig::builder().trace_sample(1).build()?;
+            let server = Server::start(config, registry)?;
+            let addr = server.local_addr;
+            (Some(server), addr, name)
+        }
+    };
+    let mut client = Client::connect(&addr)?;
+    let mut rng = Rng::new(0x7ACE);
+    let mut timings: Vec<StageTiming> = Vec::new();
+    for _ in 0..n {
+        let col: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let r = client.call(Call::apply(&model, col).timing())?;
+        if !r.ok {
+            bail!("request against '{model}' failed: {:?}", r.error);
+        }
+        if let Some(t) = r.timing {
+            timings.push(t);
+        }
+    }
+    if timings.is_empty() {
+        bail!("no timing breakdowns came back (server predates `timing: true`?)");
+    }
+
+    // Flame-style table: per-stage mean/p50/max and share of the mean
+    // end-to-end time. exec_pack/exec_kernel are sub-stages of exec
+    // (attribution, not disjoint intervals), hence the indentation.
+    let agg = |f: &dyn Fn(&StageTiming) -> u64| -> (u64, u64, u64) {
+        let mut v: Vec<u64> = timings.iter().map(f).collect();
+        v.sort_unstable();
+        let mean = v.iter().sum::<u64>() / v.len() as u64;
+        (mean, v[v.len() / 2], *v.last().unwrap())
+    };
+    let rows: [(&str, &dyn Fn(&StageTiming) -> u64); 7] = [
+        ("queue_wait", &|t| t.queue_wait_us),
+        ("batch_form", &|t| t.batch_form_us),
+        ("exec", &|t| t.exec_us),
+        ("  exec_pack", &|t| t.exec_pack_us),
+        ("  exec_kernel", &|t| t.exec_kernel_us),
+        ("writeback", &|t| t.writeback_us),
+        ("total", &|t| t.total_us),
+    ];
+    let (mean_total, _, _) = agg(&|t| t.total_us);
+    println!("repro trace: {} timing requests against '{model}' at {addr}", timings.len());
+    println!("{:<14} {:>9} {:>9} {:>9}  {:>6}", "stage", "mean_us", "p50_us", "max_us", "share");
+    for (name, f) in rows {
+        let (mean, p50, max_us) = agg(f);
+        let share = mean as f64 / mean_total.max(1) as f64;
+        let bar = "#".repeat((share.min(1.0) * 24.0).round() as usize);
+        println!("{name:<14} {mean:>9} {p50:>9} {max_us:>9}  {:>5.1}% {bar}", share * 100.0);
+    }
+
+    // Span census from the server's per-thread rings.
+    let reply = client.trace_json(max)?;
+    let j = Json::parse(&reply).map_err(|e| anyhow::anyhow!("bad trace reply: {e}"))?;
+    let sample_every = j.get("sample_every").as_usize().unwrap_or(0);
+    let spans: &[Json] = j.get("spans").as_arr().unwrap_or(&[]);
+    println!(
+        "\nrecent spans: {} (server sampling {})",
+        spans.len(),
+        if sample_every == 0 { "off".to_string() } else { format!("1/{sample_every}") }
+    );
+    for stage in fasth::obs::Stage::ALL {
+        let durs: Vec<u64> = spans
+            .iter()
+            .filter(|s| s.get("stage").as_str() == Some(stage.name()))
+            .map(|s| s.get("dur_us").as_f64().unwrap_or(0.0).max(0.0) as u64)
+            .collect();
+        if !durs.is_empty() {
+            let total: u64 = durs.iter().sum();
+            println!("  {:<14} {:>6} spans {:>10} us total", stage.name(), durs.len(), total);
+        }
+    }
+    if let Some(server) = server {
+        server.stop();
+    }
     Ok(())
 }
 

@@ -1,0 +1,372 @@
+//! Crate-wide observability: stage-level spans, request sampling, and
+//! compute-kernel attribution.
+//!
+//! The paper's argument is about *where time goes* in `H·X`; the serving
+//! metrics (`coordinator::metrics`) say how slow, never why. This module
+//! supplies the why: a monotonic-clock span recorder with per-thread
+//! lock-free ring buffers ([`ring::SpanRing`], bounded, overwrite-oldest,
+//! drained through a global registry), a fixed stage taxonomy covering
+//! the serving path (`reactor_read` → `decode` → `queue_wait` →
+//! `batch_form` → `exec` → `writeback` → `reactor_write`) and the compute
+//! path (`exec_pack` / `exec_kernel` — GEMM packing vs microkernel sweep
+//! — and `fasth_block`, the WY block-apply loop), and 1-in-N request
+//! sampling with per-request opt-in (`timing: true` on the wire).
+//!
+//! **Overhead contract.** Every instrumentation site in a hot path is
+//! guarded so the disabled path costs one relaxed atomic load and one
+//! branch — no allocation, no lock, no clock read. Tracing defaults off
+//! (`sample_every == 0`); the serving bench gates the *enabled* overhead
+//! at ≤ 5% under 1-in-64 sampling (`benches/serve_throughput.rs`).
+
+mod ring;
+
+pub use ring::{SpanRing, RING_CAPACITY};
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// The fixed stage taxonomy. Serving stages are request-correlated
+/// (keyed by the conn-tagged request id); `ReactorRead` / `ReactorWrite`
+/// are connection-level (id = `conn_id << 32`, client bits zero); the
+/// compute stages attribute time *inside* `Exec` and are also folded
+/// into the `timing: true` response breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    ReactorRead,
+    Decode,
+    QueueWait,
+    BatchForm,
+    Exec,
+    ExecPack,
+    ExecKernel,
+    Writeback,
+    ReactorWrite,
+    FasthBlock,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 10] = [
+        Stage::ReactorRead,
+        Stage::Decode,
+        Stage::QueueWait,
+        Stage::BatchForm,
+        Stage::Exec,
+        Stage::ExecPack,
+        Stage::ExecKernel,
+        Stage::Writeback,
+        Stage::ReactorWrite,
+        Stage::FasthBlock,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::ReactorRead => "reactor_read",
+            Stage::Decode => "decode",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::Exec => "exec",
+            Stage::ExecPack => "exec_pack",
+            Stage::ExecKernel => "exec_kernel",
+            Stage::Writeback => "writeback",
+            Stage::ReactorWrite => "reactor_write",
+            Stage::FasthBlock => "fasth_block",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        Stage::ALL.iter().position(|&s| s == self).unwrap()
+    }
+
+    pub fn from_index(i: usize) -> Option<Stage> {
+        Stage::ALL.get(i).copied()
+    }
+}
+
+/// One recorded interval: `[start_us, start_us + dur_us)` on the shared
+/// monotonic clock, correlated to a request by the conn-tagged id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub id: u64,
+    pub stage: Stage,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Span {
+    /// The trace-admin / `repro trace` JSON shape.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("stage", Json::str(self.stage.name())),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Monotonic clock
+// ---------------------------------------------------------------------
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-wide trace epoch (monotonic).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// A started stage timer; consume with [`Timer::record`] or
+/// [`Timer::elapsed_us`].
+#[derive(Clone, Copy)]
+pub struct Timer {
+    start_us: u64,
+}
+
+pub fn start() -> Timer {
+    Timer { start_us: now_us() }
+}
+
+impl Timer {
+    pub fn elapsed_us(self) -> u64 {
+        now_us().saturating_sub(self.start_us)
+    }
+
+    /// Record the elapsed interval as a span on this thread's ring.
+    pub fn record(self, id: u64, stage: Stage) -> u64 {
+        let dur = self.elapsed_us();
+        record(Span { id, stage, start_us: self.start_us, dur_us: dur });
+        dur
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sampling
+// ---------------------------------------------------------------------
+
+static SAMPLE_EVERY: AtomicU32 = AtomicU32::new(0);
+static SAMPLE_CTR: AtomicU64 = AtomicU64::new(0);
+
+/// Set the global sampling modulus: 0 disables tracing, N samples one
+/// request in N. (`timing: true` requests are always traced regardless.)
+pub fn set_sample_every(n: u32) {
+    SAMPLE_EVERY.store(n, Ordering::Relaxed);
+}
+
+pub fn sample_every() -> u32 {
+    SAMPLE_EVERY.load(Ordering::Relaxed)
+}
+
+/// True when background sampling is on at all — the single-branch guard
+/// for connection-level (non-request) instrumentation sites.
+pub fn enabled() -> bool {
+    SAMPLE_EVERY.load(Ordering::Relaxed) != 0
+}
+
+/// The per-request sampling decision. Disabled path: one relaxed load +
+/// one branch (the counter is only touched when sampling is on).
+pub fn sample() -> bool {
+    let n = SAMPLE_EVERY.load(Ordering::Relaxed);
+    n != 0 && SAMPLE_CTR.fetch_add(1, Ordering::Relaxed) % n as u64 == 0
+}
+
+// ---------------------------------------------------------------------
+// Per-thread rings + global registry
+// ---------------------------------------------------------------------
+
+fn registry() -> &'static Mutex<Vec<Arc<SpanRing>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<SpanRing>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static THREAD_RING: Arc<SpanRing> = {
+        let ring = Arc::new(SpanRing::new(RING_CAPACITY));
+        registry()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(Arc::clone(&ring));
+        ring
+    };
+}
+
+/// Record a span on the calling thread's ring buffer (lock-free after
+/// the thread's first record, which registers the ring globally).
+pub fn record(span: Span) {
+    THREAD_RING.with(|r| r.push(span));
+}
+
+/// Drain a merged view of every thread's resident spans, oldest first,
+/// truncated to the `max` most recent. Snapshotting never blocks
+/// writers; spans mid-overwrite are dropped, not misreported.
+pub fn recent_spans(max: usize) -> Vec<Span> {
+    let rings: Vec<Arc<SpanRing>> =
+        registry().lock().unwrap_or_else(|e| e.into_inner()).iter().cloned().collect();
+    let mut all: Vec<Span> = rings.iter().flat_map(|r| r.snapshot()).collect();
+    all.sort_by_key(|s| (s.start_us, s.id));
+    if all.len() > max {
+        all.drain(..all.len() - max);
+    }
+    all
+}
+
+/// Total spans ever recorded across all threads (overwrites included).
+pub fn total_recorded() -> u64 {
+    registry()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|r| r.pushed())
+        .sum()
+}
+
+// ---------------------------------------------------------------------
+// Compute attribution (GEMM pack vs microkernel, FastH block loop)
+// ---------------------------------------------------------------------
+//
+// The compute kernels fan work across pool threads and know nothing
+// about requests, so per-request attribution goes through global
+// nanosecond accumulators: a worker executing a *traced* batch opens a
+// ComputeScope (raising COMPUTE_ACTIVE), the kernels add their pack /
+// microkernel / block-loop time while any scope is open, and the scope's
+// close reads the deltas. Concurrently traced batches on other workers
+// can bleed into each other's deltas — sampling makes that rare, and the
+// numbers are attribution, not billing (see docs/OBSERVABILITY.md).
+
+static COMPUTE_ACTIVE: AtomicU32 = AtomicU32::new(0);
+static PACK_NS: AtomicU64 = AtomicU64::new(0);
+static KERNEL_NS: AtomicU64 = AtomicU64::new(0);
+static FASTH_NS: AtomicU64 = AtomicU64::new(0);
+
+/// The single-branch guard the GEMM / FastH hot paths check before
+/// touching any clock.
+#[inline(always)]
+pub fn compute_active() -> bool {
+    COMPUTE_ACTIVE.load(Ordering::Relaxed) != 0
+}
+
+pub fn add_pack_ns(ns: u64) {
+    PACK_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+pub fn add_kernel_ns(ns: u64) {
+    KERNEL_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+pub fn add_fasth_ns(ns: u64) {
+    FASTH_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Compute-stage time observed while a [`ComputeScope`] was open.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ComputeDelta {
+    pub pack_us: u64,
+    pub kernel_us: u64,
+    pub fasth_us: u64,
+}
+
+/// An open compute-attribution window (see module note on bleed).
+pub struct ComputeScope {
+    pack0: u64,
+    kernel0: u64,
+    fasth0: u64,
+}
+
+pub fn compute_begin() -> ComputeScope {
+    let scope = ComputeScope {
+        pack0: PACK_NS.load(Ordering::Relaxed),
+        kernel0: KERNEL_NS.load(Ordering::Relaxed),
+        fasth0: FASTH_NS.load(Ordering::Relaxed),
+    };
+    COMPUTE_ACTIVE.fetch_add(1, Ordering::Relaxed);
+    scope
+}
+
+impl ComputeScope {
+    /// Close the window and return the per-stage deltas.
+    pub fn finish(self) -> ComputeDelta {
+        COMPUTE_ACTIVE.fetch_sub(1, Ordering::Relaxed);
+        ComputeDelta {
+            pack_us: PACK_NS.load(Ordering::Relaxed).wrapping_sub(self.pack0) / 1_000,
+            kernel_us: KERNEL_NS.load(Ordering::Relaxed).wrapping_sub(self.kernel0) / 1_000,
+            fasth_us: FASTH_NS.load(Ordering::Relaxed).wrapping_sub(self.fasth0) / 1_000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_roundtrip_indices() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(Stage::from_index(i), Some(*s));
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_index(Stage::ALL.len()), None);
+    }
+
+    #[test]
+    fn sampling_modulus_semantics() {
+        // N = 1 traces everything; 0 traces nothing (and must not touch
+        // the counter — the disabled path is a load + branch).
+        let before = SAMPLE_CTR.load(Ordering::Relaxed);
+        set_sample_every(0);
+        assert!(!enabled());
+        assert!(!sample());
+        assert!(!sample());
+        // Other tests may race this counter; only assert no *local*
+        // increments happened while disabled is impossible globally, so
+        // just check the modulus-1 path.
+        set_sample_every(1);
+        assert!(enabled());
+        assert!(sample());
+        assert!(sample());
+        set_sample_every(0);
+        let _ = before;
+    }
+
+    #[test]
+    fn record_and_drain_through_registry() {
+        let t = start();
+        let id = 0xF00D_0000_0001u64;
+        t.record(id, Stage::QueueWait);
+        record(Span { id, stage: Stage::Exec, start_us: now_us(), dur_us: 3 });
+        let spans = recent_spans(usize::MAX);
+        let mine: Vec<&Span> = spans.iter().filter(|s| s.id == id).collect();
+        assert_eq!(mine.len(), 2);
+        assert!(mine.iter().any(|s| s.stage == Stage::QueueWait));
+        assert!(mine.iter().any(|s| s.stage == Stage::Exec && s.dur_us == 3));
+        assert!(total_recorded() >= 2);
+        // The drain cap keeps the most recent spans.
+        let capped = recent_spans(1);
+        assert_eq!(capped.len(), 1);
+    }
+
+    #[test]
+    fn compute_scope_collects_deltas() {
+        assert!(!compute_active() || COMPUTE_ACTIVE.load(Ordering::Relaxed) > 0);
+        let scope = compute_begin();
+        assert!(compute_active());
+        add_pack_ns(2_000);
+        add_kernel_ns(5_000);
+        add_fasth_ns(1_000);
+        let d = scope.finish();
+        assert!(d.pack_us >= 2);
+        assert!(d.kernel_us >= 5);
+        assert!(d.fasth_us >= 1);
+    }
+
+    #[test]
+    fn span_json_shape() {
+        let s = Span { id: 7, stage: Stage::ExecKernel, start_us: 10, dur_us: 4 };
+        let j = s.to_json().to_string();
+        assert_eq!(j, r#"{"dur_us":4,"id":7,"stage":"exec_kernel","start_us":10}"#);
+    }
+}

@@ -1,0 +1,151 @@
+//! Bounded per-thread span ring buffers.
+//!
+//! One [`SpanRing`] per recording thread, single-writer by construction
+//! (only the owning thread pushes), overwrite-oldest when full. Readers
+//! drain through the global registry in [`super`] without stopping the
+//! writer: the head counter is published with release ordering and slot
+//! fields are individual atomics, so a snapshot never blocks recording.
+//! A snapshot taken *while* the writer is lapping the buffer can observe
+//! a slot mid-overwrite (trace data is best-effort by contract — see
+//! `docs/OBSERVABILITY.md`); quiescent buffers read back exactly.
+
+use super::{Span, Stage};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Spans retained per thread before overwrite-oldest kicks in.
+pub const RING_CAPACITY: usize = 4096;
+
+/// One recorded span slot, field-per-atomic so the drain side needs no
+/// lock. `stage` holds `Stage::index() + 1`; 0 marks a never-written slot.
+struct Slot {
+    id: AtomicU64,
+    stage: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+impl Slot {
+    const fn empty() -> Slot {
+        Slot {
+            id: AtomicU64::new(0),
+            stage: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A bounded single-writer/multi-reader span buffer.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Total spans ever pushed; `head % capacity` is the next write slot.
+    head: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> SpanRing {
+        assert!(capacity > 0);
+        SpanRing {
+            slots: (0..capacity).map(|_| Slot::empty()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spans currently resident (≤ capacity).
+    pub fn len(&self) -> usize {
+        (self.head.load(Ordering::Acquire) as usize).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total spans ever pushed (overwrites included).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Record one span. Single-writer: only the owning thread calls this,
+    /// so a plain load/store pair on `head` is race-free on the write
+    /// side; the release store publishes the slot to drains.
+    pub fn push(&self, span: Span) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % self.slots.len() as u64) as usize];
+        slot.id.store(span.id, Ordering::Relaxed);
+        slot.stage.store(span.stage.index() as u64 + 1, Ordering::Relaxed);
+        slot.start_us.store(span.start_us, Ordering::Relaxed);
+        slot.dur_us.store(span.dur_us, Ordering::Relaxed);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// The resident spans, oldest first. Never-written slots are skipped;
+    /// a slot whose stage tag is torn mid-overwrite is dropped rather
+    /// than misreported.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let lo = head.saturating_sub(cap);
+        let mut out = Vec::with_capacity((head - lo) as usize);
+        for i in lo..head {
+            let slot = &self.slots[(i % cap) as usize];
+            let tag = slot.stage.load(Ordering::Relaxed);
+            let Some(stage) = tag.checked_sub(1).and_then(|t| Stage::from_index(t as usize))
+            else {
+                continue;
+            };
+            out.push(Span {
+                id: slot.id.load(Ordering::Relaxed),
+                stage,
+                start_us: slot.start_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(n: u64) -> Span {
+        Span { id: n, stage: Stage::Exec, start_us: n, dur_us: 1 }
+    }
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let ring = SpanRing::new(8);
+        assert!(ring.is_empty());
+        for n in 0..8 {
+            ring.push(span(n));
+        }
+        assert_eq!(ring.len(), 8);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap[0].id, 0);
+        assert_eq!(snap[7].id, 7);
+        // Lap the ring: the oldest entries fall off, order is preserved.
+        for n in 8..13 {
+            ring.push(span(n));
+        }
+        assert_eq!(ring.len(), 8, "bounded: capacity never exceeded");
+        assert_eq!(ring.pushed(), 13);
+        let snap = ring.snapshot();
+        let ids: Vec<u64> = snap.iter().map(|s| s.id).collect();
+        assert_eq!(ids, (5..13).collect::<Vec<u64>>(), "oldest overwritten first");
+    }
+
+    #[test]
+    fn partial_fill_snapshots_only_written_slots() {
+        let ring = SpanRing::new(16);
+        ring.push(span(1));
+        ring.push(span(2));
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].id, 1);
+    }
+}

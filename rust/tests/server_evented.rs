@@ -17,7 +17,16 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn request_line(id: u64, model: &str, column: Vec<f32>) -> String {
-    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None, rank: None }
+    Request {
+        id,
+        model: model.into(),
+        op: OpKind::Apply,
+        column,
+        ttl_ms: None,
+        rank: None,
+        timing: false,
+        sampled: false,
+    }
         .to_json()
 }
 

@@ -26,7 +26,16 @@ fn chaos_seed() -> u64 {
 }
 
 fn request_line(id: u64, model: &str, column: Vec<f32>) -> String {
-    Request { id, model: model.into(), op: OpKind::Apply, column, ttl_ms: None, rank: None }
+    Request {
+        id,
+        model: model.into(),
+        op: OpKind::Apply,
+        column,
+        ttl_ms: None,
+        rank: None,
+        timing: false,
+        sampled: false,
+    }
         .to_json()
 }
 

@@ -20,6 +20,8 @@ fn req(id: u64, model: &str) -> Request {
         column: vec![1.0, 2.0],
         ttl_ms: None,
         rank: None,
+        timing: false,
+        sampled: false,
     }
 }
 

@@ -1,0 +1,208 @@
+//! Observability properties: span conservation under a pipelined
+//! multi-connection burst, ring overwrite semantics, and Prometheus
+//! cumulative-bucket monotonicity.
+//!
+//! The burst test re-derives its traffic mix (models, ops, burst sizes)
+//! from `FASTH_PROP_SEED` — the nightly trace-sweep lane rotates that
+//! seed so span conservation is checked on a fresh interleaving every
+//! night. Replay a failure locally with:
+//! `FASTH_PROP_SEED=<seed> cargo test -q --test trace_obs`
+
+use fasth::coordinator::metrics::Metrics;
+use fasth::coordinator::{Call, Client, ExecEngine, ModelRegistry, OpKind, Server, ServerConfig};
+use fasth::obs::{self, Span, SpanRing, Stage};
+use fasth::util::json::Json;
+use fasth::util::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn master_seed() -> u64 {
+    // Same convention as util::prop: a fixed master seed keeps CI
+    // deterministic; FASTH_PROP_SEED overrides for the nightly sweep.
+    std::env::var("FASTH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFA57_0B50u64)
+}
+
+/// Span conservation: under a pipelined burst from several concurrent
+/// connections against a trace-everything server, every `timing: true`
+/// request must (a) echo a breakdown whose disjoint stage sum is bounded
+/// by the server-observed total, and (b) leave exactly one complete
+/// QueueWait → BatchForm → Exec → Writeback span chain in the rings,
+/// keyed by its conn-tagged id — no request loses or duplicates a stage
+/// regardless of how batches interleave.
+#[test]
+fn pipelined_burst_conserves_span_chains() {
+    let master = master_seed();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.create("tr_16", 16, ExecEngine::Native { k: 4 }, 91);
+    registry.create("tr_24", 24, ExecEngine::Native { k: 4 }, 92);
+    let config = ServerConfig::builder()
+        .shards(2)
+        .workers(2)
+        .reactors(2)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(1))
+        .max_queue_depth(10_000)
+        .trace_sample(1)
+        .build()
+        .unwrap();
+    let server = Server::start(config, registry).unwrap();
+    let addr = server.local_addr;
+
+    const CONNS: usize = 3;
+    const PER_CONN: usize = 40;
+    let handles: Vec<_> = (0..CONNS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(master.wrapping_add(0xC0 + c as u64));
+                let mut client = Client::connect(&addr).unwrap();
+                let mut done = 0usize;
+                while done < PER_CONN {
+                    let burst = (1 + rng.below(8)).min(PER_CONN - done);
+                    let (model, op, d) = match rng.below(4) {
+                        0 => ("tr_16", OpKind::Apply, 16),
+                        1 => ("tr_16", OpKind::Inverse, 16),
+                        2 => ("tr_24", OpKind::Apply, 24),
+                        _ => ("tr_24", OpKind::Inverse, 24),
+                    };
+                    let calls: Vec<Call> = (0..burst)
+                        .map(|_| {
+                            let col: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                            Call::new(model, op, col).timing()
+                        })
+                        .collect();
+                    for r in client.call_many(calls).unwrap() {
+                        assert!(r.ok, "request failed: {:?}", r.error);
+                        let t = r.timing.expect("timing: true must echo a breakdown");
+                        assert!(
+                            t.stage_sum_us() <= t.total_us,
+                            "stage sum {} exceeds server total {}",
+                            t.stage_sum_us(),
+                            t.total_us
+                        );
+                    }
+                    done += burst;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Conservation over the in-process rings: group request-correlated
+    // spans (client bits nonzero; conn-level reactor spans have them
+    // zero) by id and demand one full worker chain per request sent.
+    let spans = obs::recent_spans(usize::MAX);
+    let mut per_id: HashMap<u64, [u32; Stage::ALL.len()]> = HashMap::new();
+    for s in &spans {
+        if s.id & 0xFFFF_FFFF != 0 {
+            per_id.entry(s.id).or_insert([0; Stage::ALL.len()])[s.stage.index()] += 1;
+        }
+    }
+    let chain = [Stage::QueueWait, Stage::BatchForm, Stage::Exec, Stage::Writeback];
+    let complete = per_id
+        .values()
+        .filter(|counts| chain.iter().all(|st| counts[st.index()] == 1))
+        .count();
+    assert_eq!(
+        complete,
+        CONNS * PER_CONN,
+        "every timing request must leave exactly one complete span chain \
+         ({} ids seen, {} spans total)",
+        per_id.len(),
+        spans.len()
+    );
+    for (id, counts) in &per_id {
+        for st in chain {
+            assert_eq!(
+                counts[st.index()],
+                1,
+                "request {id:#x}: stage {} recorded {} times",
+                st.name(),
+                counts[st.index()]
+            );
+        }
+        assert_eq!(counts[Stage::Decode.index()], 1, "request {id:#x}: missing decode span");
+    }
+
+    // The trace admin command serves the same data over the wire.
+    let mut admin = Client::connect(&addr).unwrap();
+    let reply = admin.trace_json(65_536).unwrap();
+    let j = Json::parse(&reply).unwrap();
+    assert_eq!(j.get("sample_every").as_usize(), Some(1), "{reply}");
+    let wire_spans = j.get("spans").as_arr().expect("spans array");
+    assert!(j.get("count").as_usize().unwrap() >= CONNS * PER_CONN * chain.len());
+    assert_eq!(wire_spans.len(), j.get("count").as_usize().unwrap());
+    for s in wire_spans {
+        let name = s.get("stage").as_str().expect("stage name");
+        assert!(Stage::ALL.iter().any(|st| st.name() == name), "unknown stage '{name}'");
+    }
+    server.stop();
+}
+
+/// Ring overwrite semantics through the public API: a lapped ring stays
+/// bounded at capacity, keeps exactly the most recent pushes oldest
+/// first, and still counts every push ever made.
+#[test]
+fn ring_overwrite_keeps_most_recent_bounded() {
+    let ring = SpanRing::new(32);
+    for n in 0..100u64 {
+        ring.push(Span { id: n, stage: Stage::Exec, start_us: n, dur_us: 1 });
+    }
+    assert_eq!(ring.capacity(), 32);
+    assert_eq!(ring.len(), 32, "bounded: capacity never exceeded");
+    assert_eq!(ring.pushed(), 100, "overwrites still count as pushed");
+    let ids: Vec<u64> = ring.snapshot().iter().map(|s| s.id).collect();
+    assert_eq!(ids, (68..100).collect::<Vec<u64>>(), "most recent survive, oldest first");
+}
+
+/// Every histogram family in the Prometheus exposition must be a valid
+/// cumulative histogram: bucket counts non-decreasing as `le` grows,
+/// closed by a `+Inf` bucket that equals the family's total count.
+#[test]
+fn prometheus_cumulative_buckets_are_monotonic() {
+    let m = Metrics::new();
+    let mut rng = Rng::new(master_seed() ^ 0x9E37);
+    const N: usize = 500;
+    for _ in 0..N {
+        // Spread across the full bucket range, including the open tail.
+        let us = rng.below(2_000_000) as u64;
+        m.record_latency(us);
+        m.record_latency_op(OpKind::Apply, us);
+        m.record_queue_wait_op(OpKind::Apply, us / 3);
+        m.record_exec_op(OpKind::Inverse, us / 2);
+    }
+    let text = m.to_prometheus(&[1, 2], &[3]);
+
+    // Group bucket lines by everything left of the `le` label; within a
+    // family the exposition emits buckets in increasing-`le` order.
+    let mut last: HashMap<String, (u64, bool)> = HashMap::new();
+    for line in text.lines() {
+        let Some(pos) = line.find("le=\"") else { continue };
+        let key = line[..pos].to_string();
+        let le = line[pos + 4..].split('"').next().unwrap();
+        let val: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        let entry = last.entry(key.clone()).or_insert((0, false));
+        assert!(!entry.1, "family {key}: bucket after +Inf");
+        assert!(
+            val >= entry.0,
+            "family {key}: cumulative count decreased ({} -> {val}) at le={le}",
+            entry.0
+        );
+        entry.0 = val;
+        if le == "+Inf" {
+            entry.1 = true;
+        }
+    }
+    assert!(!last.is_empty(), "no histogram buckets in exposition:\n{text}");
+    for (key, (_, saw_inf)) in &last {
+        assert!(saw_inf, "family {key}: missing +Inf bucket");
+    }
+    // The aggregate family's +Inf bucket conserves the total count.
+    let inf_line = format!("orthoserve_latency_aggregate_us_bucket{{le=\"+Inf\"}} {N}");
+    assert!(text.contains(&inf_line), "aggregate +Inf != {N}:\n{text}");
+}
